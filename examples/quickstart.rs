@@ -1,0 +1,62 @@
+//! Quickstart: build a scene (ground + falling bodies + cloth), simulate,
+//! and read back state — the 5-minute tour of the public API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere, unit_box};
+
+fn main() {
+    // 1. Assemble a system: a frozen ground plane, two rigid bodies, and
+    //    a pinned cloth.
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.5, 0.0)));
+    sys.add_rigid(
+        RigidBody::from_mesh(icosphere(0.3, 2), 2.0)
+            .with_position(Vec3::new(1.5, 1.0, 0.0))
+            .with_velocity(Vec3::new(-1.0, 0.0, 0.0)),
+    );
+    let mut cloth = Cloth::from_grid(
+        cloth_grid(10, 10, 2.0, 2.0).translated(Vec3::new(-2.5, 1.2, 0.0)),
+        0.3,
+        2000.0,
+        2.0,
+        1.0,
+    );
+    cloth.pin(0);
+    cloth.pin(10);
+    sys.add_cloth(cloth);
+
+    // 2. Configure and run.
+    let mut sim = Simulation::new(sys, SimConfig { dt: 1.0 / 200.0, ..Default::default() });
+    for step in 0..400 {
+        sim.step();
+        if step % 80 == 0 {
+            let s = &sim.last_stats;
+            println!(
+                "step {step:4}: cube y={:.3}  ball x={:.3}  impacts={}  zones={}  KE={:.3}",
+                sim.sys.rigids[1].translation().y,
+                sim.sys.rigids[2].translation().x,
+                s.impacts,
+                s.zones,
+                sim.sys.kinetic_energy()
+            );
+        }
+    }
+
+    // 3. Inspect final state.
+    println!("\nfinal state:");
+    for (i, b) in sim.sys.rigids.iter().enumerate().skip(1) {
+        println!("  rigid {i}: pos {:?}", b.translation());
+    }
+    let lowest = sim.sys.cloths[0].x.iter().map(|p| p.y).fold(f64::MAX, f64::min);
+    println!("  cloth lowest node: y = {lowest:.3}");
+    assert!((sim.sys.rigids[1].translation().y - 0.5).abs() < 0.05, "cube should rest on ground");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,22 @@
+//! Learning control (paper Fig. 8a): train the paper's MLP controller by
+//! backpropagating through the simulator, and compare with DDPG on the
+//! same budget. Logs the two loss curves.
+//!
+//! Run: `cargo run --release --example train_control [episodes]`
+
+use diffsim::experiments::control::{train_ddpg_sticks, train_ours_sticks};
+
+fn main() {
+    let episodes: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(30);
+    println!("training ours (BPTT through simulator), {episodes} episodes...");
+    let ours = train_ours_sticks(episodes, 11);
+    println!("training DDPG baseline, {episodes} episodes...");
+    let ddpg = train_ddpg_sticks(episodes, 11);
+    println!("\n episode    ours-loss    ddpg-loss");
+    for i in 0..episodes {
+        println!("{i:8}    {:9.4}    {:9.4}", ours[i], ddpg[i]);
+    }
+    let tail = |v: &[f64]| v.iter().rev().take(5).sum::<f64>() / 5.0;
+    println!("\ntail-5 mean: ours {:.4} vs DDPG {:.4}", tail(&ours), tail(&ddpg));
+    println!("train_control OK");
+}

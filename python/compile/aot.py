@@ -1,0 +1,131 @@
+"""AOT export: lower the L2 graphs to HLO *text* and write
+artifacts/manifest.json for the rust runtime.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction-id
+protos, but `HloModuleProto::from_text_file` reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.rigid_transform import TILE
+
+# Exported buckets. The rust coordinator pads work into the smallest
+# fitting bucket; shapes here are the contract (mirrored in manifest.json).
+RIGID_BATCHES = [128, 512, 2048]
+# (n dofs, m constraints, batch) per zone-backward bucket.
+ZONE_BUCKETS = [(6, 8, 16), (12, 16, 16), (24, 32, 8), (48, 64, 4)]
+# Cloth grids (nx, nz).
+CLOTH_GRIDS = [(8, 8), (16, 16)]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big constants (baked index tables!) as '{...}', which the
+    # text parser then silently zero-fills — the computation runs but
+    # gathers garbage.
+    text = comp.as_hlo_text(True)
+    assert "{...}" not in text, "HLO printer elided a large constant"
+    return text
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_json(s):
+    return {"shape": list(s.shape), "dtype": "f32"}
+
+
+def export(outdir):
+    os.makedirs(outdir, exist_ok=True)
+    manifest = []
+
+    def emit(name, fn, specs, outputs_doc):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        manifest.append(
+            {
+                "name": name,
+                "path": path,
+                "inputs": [spec_json(s) for s in specs],
+                "outputs": outputs_doc,
+            }
+        )
+        print(f"  {name}: {len(text) / 1024:.0f} KiB hlo")
+
+    for b in RIGID_BATCHES:
+        emit(
+            f"rigid_transform_b{b}",
+            model.rigid_transform_model,
+            [f32(b, 6), f32(b, 3)],
+            [{"shape": [b, 3], "dtype": "f32"}, {"shape": [b, 18], "dtype": "f32"}],
+        )
+
+    for n, m, b in ZONE_BUCKETS:
+        emit(
+            f"zone_backward_n{n}_m{m}_b{b}",
+            model.zone_backward_model,
+            [f32(b, n, n), f32(b, m, n), f32(b, m), f32(b, n)],
+            [{"shape": [b, n], "dtype": "f32"}],
+        )
+
+    for nx, nz in CLOTH_GRIDS:
+        step = model.make_cloth_step(nx, nz)
+        nv = step.n_verts
+        ns = step.n_springs_padded
+        emit(
+            f"cloth_step_r{nx}x{nz}",
+            step,
+            [
+                f32(nv, 3),  # x
+                f32(nv, 3),  # v
+                f32(nv, 3),  # ext
+                f32(nv),  # pinned (0/1)
+                f32(nv),  # node_mass
+                f32(ns, 1),  # rest lengths
+                f32(1),  # k_stretch
+                f32(1),  # k_bend
+                f32(1),  # damping
+                f32(1),  # h
+                f32(1),  # gy
+            ],
+            [{"shape": [nv, 3], "dtype": "f32"}],
+        )
+
+    meta = {
+        "tile": TILE,
+        "rigid_batches": RIGID_BATCHES,
+        "zone_buckets": ZONE_BUCKETS,
+        "cloth_grids": CLOTH_GRIDS,
+        "artifacts": manifest,
+    }
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {len(manifest)} artifacts + manifest to {outdir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    export(args.outdir)
+
+
+if __name__ == "__main__":
+    main()

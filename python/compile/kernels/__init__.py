@@ -1,0 +1,4 @@
+# L1: Pallas kernels for the engine's compute hot-spots.
+from . import ref  # noqa: F401
+from .rigid_transform import rigid_transform_jac  # noqa: F401
+from .springs import spring_forces  # noqa: F401

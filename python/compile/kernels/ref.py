@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness reference
+pytest sweeps against (and the rust engine mirrors in f64)."""
+
+import jax.numpy as jnp
+
+
+def rotation(r):
+    """R = Rz(psi) Ry(theta) Rx(phi) for r = (phi, theta, psi). (..., 3) -> (..., 3, 3)."""
+    phi, theta, psi = r[..., 0], r[..., 1], r[..., 2]
+    sp, cp = jnp.sin(phi), jnp.cos(phi)
+    st, ct = jnp.sin(theta), jnp.cos(theta)
+    ss, cs = jnp.sin(psi), jnp.cos(psi)
+    rows = [
+        [ct * cs, -cp * ss + sp * st * cs, sp * ss + cp * st * cs],
+        [ct * ss, cp * cs + sp * st * ss, -sp * cs + cp * st * ss],
+        [-st, sp * ct, cp * ct],
+    ]
+    return jnp.stack([jnp.stack(row, axis=-1) for row in rows], axis=-2)
+
+
+def rigid_transform_jac_ref(q, p0, eps=1e-6):
+    """Oracle via jnp rotation + central finite differences for the
+    Jacobian's rotational columns (translation columns are identity).
+    Computed in float64 so the FD truncation/rounding error sits well
+    below the f32 kernel tolerance being verified."""
+    q = q.astype(jnp.float64)
+    p0 = p0.astype(jnp.float64)
+    r, t = q[:, :3], q[:, 3:]
+    x = jnp.einsum("bij,bj->bi", rotation(r), p0) + t
+    cols = []
+    for a in range(3):
+        dr = jnp.zeros_like(r).at[:, a].set(eps)
+        xp = jnp.einsum("bij,bj->bi", rotation(r + dr), p0)
+        xm = jnp.einsum("bij,bj->bi", rotation(r - dr), p0)
+        cols.append((xp - xm) / (2 * eps))
+    dcols = jnp.stack(cols, axis=-1)  # (B, 3, 3): d x / d angles
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=q.dtype), dcols.shape)
+    jac = jnp.concatenate([dcols, eye], axis=-1)  # (B, 3, 6)
+    return x, jac.reshape(q.shape[0], 18)
+
+
+def spring_forces_ref(xi, xj, l0, k):
+    d = xj - xi
+    l = jnp.maximum(jnp.linalg.norm(d, axis=-1, keepdims=True), 1e-12)
+    return k * (l - l0) * d / l
+
+
+def zone_backward_ref(mass, jac, lam, grad_z, active_eps=1e-10, reg=1e-9):
+    """Oracle for the zone implicit-diff backward (numpy, one item):
+    grad_q = g - J_A^T (J_A M^-1 J_A^T + reg I)^-1 J_A M^-1 g over the
+    active rows (lambda > eps). Mirrors diff::implicit on the rust side."""
+    import numpy as np
+
+    mass = np.asarray(mass, dtype=np.float64)
+    jac = np.asarray(jac, dtype=np.float64)
+    lam = np.asarray(lam, dtype=np.float64)
+    g = np.asarray(grad_z, dtype=np.float64)
+    mask = (lam > active_eps).astype(np.float64)
+    ja = jac * mask[:, None]
+    minv_g = np.linalg.solve(mass, g)
+    minv_jat = np.linalg.solve(mass, ja.T)
+    s = ja @ minv_jat + reg * np.eye(jac.shape[0])
+    w = np.linalg.solve(s, ja @ minv_g)
+    return g - ja.T @ w

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: batched rigid vertex transform + Jacobian.
+
+Computes, for a batch of (generalized coordinate, body-frame point) pairs,
+the world position x = R(r)·p0 + t (paper Eq. 23) and the 3x6 Jacobian
+nabla-f (Eq. 24 / Appendix C). This is the innermost op of both constraint
+assembly and implicit differentiation: it runs for every contact vertex,
+every zone-solver iteration, and every backward pass.
+
+TPU mapping (DESIGN.md section 7): the batch dimension is tiled into VMEM
+blocks via BlockSpec; the per-element math is pure VPU elementwise work.
+On this image the kernel runs with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); the lowered HLO is what `aot.py` ships to rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per VMEM tile. 128 aligns with the TPU lane width; the batch is
+# padded to a multiple by the caller (aot.py exports per-bucket shapes).
+TILE = 128
+
+
+def _kernel(q_ref, p0_ref, x_ref, jac_ref):
+    """One (TILE, ...) block: q (TILE, 6), p0 (TILE, 3) ->
+    x (TILE, 3), jac (TILE, 18) [row-major 3x6]."""
+    phi = q_ref[:, 0]
+    theta = q_ref[:, 1]
+    psi = q_ref[:, 2]
+    sp, cp = jnp.sin(phi), jnp.cos(phi)
+    st, ct = jnp.sin(theta), jnp.cos(theta)
+    ss, cs = jnp.sin(psi), jnp.cos(psi)
+    px, py, pz = p0_ref[:, 0], p0_ref[:, 1], p0_ref[:, 2]
+
+    # Rotation matrix R = Rz(psi) Ry(theta) Rx(phi) (Appendix B).
+    r11 = ct * cs
+    r12 = -cp * ss + sp * st * cs
+    r13 = sp * ss + cp * st * cs
+    r21 = ct * ss
+    r22 = cp * cs + sp * st * ss
+    r23 = -sp * cs + cp * st * ss
+    r31 = -st
+    r32 = sp * ct
+    r33 = cp * ct
+
+    x_ref[:, 0] = r11 * px + r12 * py + r13 * pz + q_ref[:, 3]
+    x_ref[:, 1] = r21 * px + r22 * py + r23 * pz + q_ref[:, 4]
+    x_ref[:, 2] = r31 * px + r32 * py + r33 * pz + q_ref[:, 5]
+
+    # dR/dphi = Rz Ry dRx, dR/dtheta = Rz dRy Rx, dR/dpsi = dRz Ry Rx —
+    # expanded analytically (matches euler::rotation_derivs on the rust
+    # side and the finite-difference oracle in ref.py).
+    # --- dR/dphi (only R's phi-dependent entries are columns 2,3) ---
+    dphi_r12 = sp * ss + cp * st * cs
+    dphi_r13 = cp * ss - sp * st * cs
+    dphi_r22 = -sp * cs + cp * st * ss
+    dphi_r23 = -cp * cs - sp * st * ss
+    dphi_r32 = cp * ct
+    dphi_r33 = -sp * ct
+    jx_phi = dphi_r12 * py + dphi_r13 * pz
+    jy_phi = dphi_r22 * py + dphi_r23 * pz
+    jz_phi = dphi_r32 * py + dphi_r33 * pz
+
+    # --- dR/dtheta ---
+    dth_r11 = -st * cs
+    dth_r12 = sp * ct * cs
+    dth_r13 = cp * ct * cs
+    dth_r21 = -st * ss
+    dth_r22 = sp * ct * ss
+    dth_r23 = cp * ct * ss
+    dth_r31 = -ct
+    dth_r32 = -sp * st
+    dth_r33 = -cp * st
+    jx_th = dth_r11 * px + dth_r12 * py + dth_r13 * pz
+    jy_th = dth_r21 * px + dth_r22 * py + dth_r23 * pz
+    jz_th = dth_r31 * px + dth_r32 * py + dth_r33 * pz
+
+    # --- dR/dpsi ---
+    dps_r11 = -ct * ss
+    dps_r12 = -cp * cs - sp * st * ss
+    dps_r13 = sp * cs - cp * st * ss
+    dps_r21 = ct * cs
+    dps_r22 = -cp * ss + sp * st * cs
+    dps_r23 = sp * ss + cp * st * cs
+    jx_ps = dps_r11 * px + dps_r12 * py + dps_r13 * pz
+    jy_ps = dps_r21 * px + dps_r22 * py + dps_r23 * pz
+    jz_ps = 0.0 * px  # dR3k/dpsi = 0
+
+    one = jnp.ones_like(px)
+    zero = jnp.zeros_like(px)
+    # jac rows: x -> [jx_phi jx_th jx_ps 1 0 0], y -> [... 0 1 0], z -> [... 0 0 1]
+    jac_ref[:, 0] = jx_phi
+    jac_ref[:, 1] = jx_th
+    jac_ref[:, 2] = jx_ps
+    jac_ref[:, 3] = one
+    jac_ref[:, 4] = zero
+    jac_ref[:, 5] = zero
+    jac_ref[:, 6] = jy_phi
+    jac_ref[:, 7] = jy_th
+    jac_ref[:, 8] = jy_ps
+    jac_ref[:, 9] = zero
+    jac_ref[:, 10] = one
+    jac_ref[:, 11] = zero
+    jac_ref[:, 12] = jz_phi
+    jac_ref[:, 13] = jz_th
+    jac_ref[:, 14] = jz_ps
+    jac_ref[:, 15] = zero
+    jac_ref[:, 16] = zero
+    jac_ref[:, 17] = one
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rigid_transform_jac(q, p0):
+    """Batched f(q) and nabla-f. q: (B, 6), p0: (B, 3) -> ((B, 3), (B, 18)).
+
+    B must be a multiple of TILE (aot.py exports padded buckets).
+    """
+    b = q.shape[0]
+    assert b % TILE == 0, f"batch {b} not a multiple of {TILE}"
+    grid = (b // TILE,)
+    x, jac = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE, 6), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, 3), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE, 3), lambda i: (i, 0)),
+            pl.BlockSpec((TILE, 18), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 3), q.dtype),
+            jax.ShapeDtypeStruct((b, 18), q.dtype),
+        ],
+        interpret=True,
+    )(q, p0)
+    return x, jac

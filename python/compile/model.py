@@ -1,0 +1,234 @@
+"""L2: the JAX compute graphs that `aot.py` lowers to HLO for the rust
+coordinator. Three entry points:
+
+* `rigid_transform_model` — batched vertex transform + Jacobian (wraps the
+  L1 Pallas kernel): the inner op of constraint assembly (paper Eq. 23/24).
+* `zone_backward_model` — batched implicit-diff backward of the zone
+  projection (paper section 6): active-set Schur complement solved with
+  fixed-iteration CG (pure HLO ops — no LAPACK custom calls, which the
+  standalone PJRT runtime cannot execute).
+* `cloth_step_model` — one implicit-Euler cloth velocity update (Eq. 3)
+  for a fixed grid resolution: spring forces via the L1 Pallas kernel,
+  matrix-free Jacobian products, fixed-iteration CG.
+
+Everything here is shape-static; the rust coordinator pads into the
+exported buckets (see artifacts/manifest.json).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels.rigid_transform import TILE, rigid_transform_jac
+from .kernels.springs import spring_forces
+
+
+def rigid_transform_model(q, p0):
+    """(B, 6), (B, 3) -> ((B, 3), (B, 18)); B multiple of TILE."""
+    return rigid_transform_jac(q, p0)
+
+
+# --------------------------------------------------------------------------
+# Zone backward (paper Eqs. 9/14-15, Schur-complement form).
+# --------------------------------------------------------------------------
+
+CG_ITERS = 96
+ACTIVE_EPS = 1e-8
+REG_REL = 1e-4
+REG_ABS = 1e-7
+
+
+def _cg(matvec, b, iters):
+    """Fixed-iteration conjugate gradients (SPD), shape-static."""
+
+    def body(_, carry):
+        x, r, p, rs = carry
+        ap = matvec(p)
+        denom = jnp.maximum(jnp.vdot(p, ap), 1e-30)
+        alpha = rs / denom
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.vdot(r, r)
+        beta = rs_new / jnp.maximum(rs, 1e-30)
+        p = r + beta * p
+        return x, r, p, rs_new
+
+    x0 = jnp.zeros_like(b)
+    carry = (x0, b, b, jnp.vdot(b, b))
+    x, *_ = lax.fori_loop(0, iters, body, carry)
+    return x
+
+
+def _zone_backward_single(mass, jac, lam, g):
+    m = jac.shape[0]
+    mask = (lam > ACTIVE_EPS).astype(mass.dtype)
+    ja = jac * mask[:, None]
+    msolve = lambda b: _cg(lambda v: mass @ v, b, CG_ITERS)
+    minv_g = msolve(g)
+    # S = Ja M^-1 Ja^T (m x m, small). Conditioning for f32 CG: active
+    # rows get a trace-relative Tikhonov shift (active sets are routinely
+    # rank-deficient); inactive/empty rows are pinned to ~identity scale
+    # so they cannot drive the iteration to NaN.
+    minv_jat = jax.vmap(msolve, in_axes=1, out_axes=1)(ja.T)  # (n, m)
+    s = ja @ minv_jat
+    tr = jnp.trace(s) / m
+    reg = REG_REL * tr + REG_ABS
+    diag = jnp.where(mask > 0.5, reg, 1.0 + tr)
+    s = s + jnp.diag(diag)
+    w = _cg(lambda v: s @ v, ja @ minv_g, CG_ITERS)
+    return g - ja.T @ w
+
+
+def zone_backward_model(mass, jac, lam, g):
+    """Batched zone backward.
+    mass: (B, n, n), jac: (B, m, n), lam: (B, m), g: (B, n) -> (B, n)."""
+    return jax.vmap(_zone_backward_single)(mass, jac, lam, g)
+
+
+# --------------------------------------------------------------------------
+# Cloth implicit-Euler step for a fixed grid (Eq. 3).
+# --------------------------------------------------------------------------
+
+
+def grid_topology(nx, nz):
+    """Mirror of rust `mesh::primitives::cloth_grid` + `build_topology`:
+    vertices (i, k) -> i*(nz+1)+k, alternating diagonals, unique edges,
+    bend pairs (opposite vertices of face-adjacent triangles)."""
+    idx = lambda i, k: i * (nz + 1) + k
+    faces = []
+    for i in range(nx):
+        for k in range(nz):
+            if (i + k) % 2 == 0:
+                faces.append((idx(i, k), idx(i + 1, k), idx(i + 1, k + 1)))
+                faces.append((idx(i, k), idx(i + 1, k + 1), idx(i, k + 1)))
+            else:
+                faces.append((idx(i, k), idx(i + 1, k), idx(i, k + 1)))
+                faces.append((idx(i + 1, k), idx(i + 1, k + 1), idx(i, k + 1)))
+    edge_faces = {}
+    edges = []
+    for fi, f in enumerate(faces):
+        for a, b in ((f[0], f[1]), (f[1], f[2]), (f[2], f[0])):
+            key = (min(a, b), max(a, b))
+            if key not in edge_faces:
+                edge_faces[key] = []
+                edges.append(key)
+            edge_faces[key].append(fi)
+    bend = []
+    for key in edges:
+        fs = edge_faces[key]
+        if len(fs) == 2:
+            opp = []
+            for fi in fs:
+                opp.append(next(v for v in faces[fi] if v not in key))
+            bend.append((opp[0], opp[1]))
+    return np.array(faces), np.array(edges), np.array(bend)
+
+
+def grid_positions(nx, nz, size_x, size_z):
+    verts = np.zeros(((nx + 1) * (nz + 1), 3))
+    vi = 0
+    for i in range(nx + 1):
+        for k in range(nz + 1):
+            verts[vi] = [
+                size_x * (i / nx - 0.5),
+                0.0,
+                size_z * (k / nz - 0.5),
+            ]
+            vi += 1
+    return verts
+
+
+def make_cloth_step(nx, nz, size_x=1.0, size_z=1.0, cg_iters=96):
+    """Build a shape-static cloth step fn for an (nx, nz) grid.
+
+    Returns `step(x, v, ext, pinned, node_mass, k_stretch, k_bend,
+    damping, h, gy) -> dv` with all-array args (scalars as (1,) arrays).
+    """
+    _, edges_np, bend_np = grid_topology(nx, nz)
+    springs_np = np.concatenate([edges_np, bend_np], axis=0)
+    n_edges = len(edges_np)
+    n_springs = len(springs_np)
+    pad = (-n_springs) % TILE
+    nv = (nx + 1) * (nz + 1)
+    del size_x, size_z  # rest lengths are a runtime input (see `step`)
+
+    spr_i = jnp.array(np.concatenate([springs_np[:, 0], np.zeros(pad, np.int64)]))
+    spr_j = jnp.array(np.concatenate([springs_np[:, 1], np.zeros(pad, np.int64)]))
+    # 1 for stretch springs, 0 for bend springs (scaled by k at call time);
+    # padded springs get k = 0 so i == j == 0 contributes nothing.
+    is_stretch = jnp.array(
+        np.concatenate(
+            [np.ones(n_edges), np.zeros(n_springs - n_edges), np.zeros(pad)]
+        ),
+        dtype=jnp.float32,
+    ).reshape(-1, 1)
+    is_bend = jnp.array(
+        np.concatenate(
+            [np.zeros(n_edges), np.ones(n_springs - n_edges), np.zeros(pad)]
+        ),
+        dtype=jnp.float32,
+    ).reshape(-1, 1)
+
+    def spring_k(k_stretch, k_bend):
+        return is_stretch * k_stretch + is_bend * k_bend
+
+    def forces(x, v, ext, pinned, node_mass, rest, ks, kb, damping, gy):
+        xi = x[spr_i]
+        xj = x[spr_j]
+        f_edge = spring_forces(xi, xj, rest, spring_k(ks, kb))
+        f = jnp.zeros_like(x)
+        f = f.at[spr_i].add(f_edge)
+        f = f.at[spr_j].add(-f_edge)
+        grav = jnp.stack(
+            [jnp.zeros_like(node_mass), gy * node_mass, jnp.zeros_like(node_mass)],
+            axis=-1,
+        )
+        f = f + grav + ext - damping * node_mass[:, None] * v
+        return f * (1.0 - pinned)[:, None]
+
+    def jx_product(x, p, pinned, rest, ks, kb):
+        """(SPD-clamped) spring Jacobian times p, matrix-free."""
+        d = x[spr_j] - x[spr_i]
+        l2 = jnp.sum(d * d, axis=-1, keepdims=True)
+        l = jnp.sqrt(jnp.maximum(l2, 1e-24))
+        dn = d / l
+        k = spring_k(ks, kb)
+        pm = p * (1.0 - pinned)[:, None]
+        dp = pm[spr_j] - pm[spr_i]
+        lateral = k * jnp.maximum(1.0 - rest / l, 0.0)
+        along = jnp.sum(dn * dp, axis=-1, keepdims=True) * dn
+        jdp = lateral * (dp - along) + k * along
+        out = jnp.zeros_like(p)
+        out = out.at[spr_i].add(jdp)
+        out = out.at[spr_j].add(-jdp)
+        return out * (1.0 - pinned)[:, None]
+
+    def step(x, v, ext, pinned, node_mass, rest, ks, kb, damping, h, gy):
+        """rest: (S, 1) per-spring rest lengths (S = padded spring count,
+        zeros in the padding)."""
+        ks = ks[0]
+        kb = kb[0]
+        damping = damping[0]
+        h = h[0]
+        gy = gy[0]
+        f0 = forces(x, v, ext, pinned, node_mass, rest, ks, kb, damping, gy)
+        vm = v * (1.0 - pinned)[:, None]
+        jv = jx_product(x, vm, pinned, rest, ks, kb)
+        b = h * (f0 + h * jv) * (1.0 - pinned)[:, None]
+
+        def amat(p):
+            # A p = M p - h (df/dv) p - h^2 Jx p; pinned rows identity.
+            mp = node_mass[:, None] * p
+            drag = -damping * node_mass[:, None] * p
+            out = mp - h * drag - h * h * jx_product(x, p, pinned, rest, ks, kb)
+            return jnp.where(pinned[:, None] > 0.5, p, out)
+
+        flat = lambda a: a.reshape(-1)
+        unflat = lambda a: a.reshape(nv, 3)
+        dv = _cg(lambda pf: flat(amat(unflat(pf))), flat(b), cg_iters)
+        return unflat(dv) * (1.0 - pinned)[:, None]
+
+    step.n_springs_padded = n_springs + pad
+    step.n_verts = nv
+    return step

@@ -1,0 +1,5 @@
+# Enable float64 so the oracles in kernels/ref.py really run in double
+# precision (the kernels themselves keep their explicit f32 dtypes).
+import jax
+
+jax.config.update("jax_enable_x64", True)

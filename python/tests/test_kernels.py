@@ -1,0 +1,121 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (hypothesis sweeps
+shapes and values) — the CORE kernel correctness signal."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    rigid_transform_jac_ref,
+    spring_forces_ref,
+    zone_backward_ref,
+)
+from compile.kernels.rigid_transform import TILE, rigid_transform_jac
+from compile.kernels.springs import spring_forces
+
+
+def rand(rng, *shape, lo=-2.0, hi=2.0):
+    return jnp.asarray(
+        rng.uniform(lo, hi, size=shape).astype(np.float32)
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(tiles=st.integers(1, 3), seed=st.integers(0, 2**31 - 1))
+def test_rigid_transform_matches_ref(tiles, seed):
+    rng = np.random.default_rng(seed)
+    b = tiles * TILE
+    q = rand(rng, b, 6)
+    p0 = rand(rng, b, 3)
+    x, jac = rigid_transform_jac(q, p0)
+    xr, jacr = rigid_transform_jac_ref(q, p0)
+    np.testing.assert_allclose(x, xr, rtol=1e-4, atol=1e-4)
+    # f32 kernel vs f64 FD oracle: tolerance = f32 accuracy class.
+    np.testing.assert_allclose(jac, jacr, rtol=1e-3, atol=1e-3)
+
+
+def test_rigid_transform_identity():
+    q = jnp.zeros((TILE, 6), jnp.float32)
+    p0 = jnp.arange(TILE * 3, dtype=jnp.float32).reshape(TILE, 3) / 100.0
+    x, jac = rigid_transform_jac(q, p0)
+    np.testing.assert_allclose(x, p0, atol=1e-7)
+    jac = jac.reshape(TILE, 3, 6)
+    np.testing.assert_allclose(jac[:, :, 3:], np.broadcast_to(np.eye(3), (TILE, 3, 3)), atol=1e-7)
+
+
+def test_rigid_transform_translation_only():
+    rng = np.random.default_rng(0)
+    q = jnp.concatenate(
+        [jnp.zeros((TILE, 3), jnp.float32), rand(rng, TILE, 3)], axis=1
+    )
+    p0 = rand(rng, TILE, 3)
+    x, _ = rigid_transform_jac(q, p0)
+    np.testing.assert_allclose(x, p0 + q[:, 3:], atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(tiles=st.integers(1, 2), seed=st.integers(0, 2**31 - 1))
+def test_spring_forces_match_ref(tiles, seed):
+    rng = np.random.default_rng(seed)
+    b = tiles * TILE
+    xi = rand(rng, b, 3)
+    xj = rand(rng, b, 3)
+    l0 = rand(rng, b, 1, lo=0.1, hi=2.0)
+    k = rand(rng, b, 1, lo=0.0, hi=100.0)
+    f = spring_forces(xi, xj, l0, k)
+    fr = spring_forces_ref(xi, xj, l0, k)
+    np.testing.assert_allclose(f, fr, rtol=1e-4, atol=1e-4)
+
+
+def test_spring_force_at_rest_is_zero():
+    xi = jnp.zeros((TILE, 3), jnp.float32)
+    xj = jnp.zeros((TILE, 3), jnp.float32).at[:, 0].set(1.0)
+    l0 = jnp.ones((TILE, 1), jnp.float32)
+    k = jnp.full((TILE, 1), 50.0, jnp.float32)
+    f = spring_forces(xi, xj, l0, k)
+    np.testing.assert_allclose(f, 0.0, atol=1e-6)
+
+
+def test_spring_force_direction():
+    # Stretched spring pulls i toward j.
+    xi = jnp.zeros((TILE, 3), jnp.float32)
+    xj = jnp.zeros((TILE, 3), jnp.float32).at[:, 1].set(2.0)
+    l0 = jnp.ones((TILE, 1), jnp.float32)
+    k = jnp.ones((TILE, 1), jnp.float32)
+    f = spring_forces(xi, xj, l0, k)
+    assert float(f[0, 1]) > 0.9  # k (l - l0) = 1.0 toward +y
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_zone_backward_model_matches_ref(seed):
+    """L2 graph (fixed-iteration CG Schur) vs dense numpy oracle."""
+    from compile.model import zone_backward_model
+
+    rng = np.random.default_rng(seed)
+    bsz, n, m = 4, 6, 8
+    base = rng.normal(size=(bsz, n, n)).astype(np.float32)
+    mass = np.einsum("bij,bkj->bik", base, base) + 3.0 * np.eye(n, dtype=np.float32)
+    jac = rng.normal(size=(bsz, m, n)).astype(np.float32)
+    lam = np.abs(rng.normal(size=(bsz, m))).astype(np.float32)
+    lam[:, m // 2 :] = 0.0  # half inactive
+    g = rng.normal(size=(bsz, n)).astype(np.float32)
+    out = np.asarray(zone_backward_model(mass, jac, lam, g))
+    for b in range(bsz):
+        want = zone_backward_ref(mass[b], jac[b], lam[b], g[b])
+        # f32 fixed-iteration CG vs f64 direct solve: loose tolerance.
+        np.testing.assert_allclose(out[b], want, rtol=3e-2, atol=3e-2)
+
+
+def test_zone_backward_no_active_is_identity():
+    from compile.model import zone_backward_model
+
+    rng = np.random.default_rng(3)
+    bsz, n, m = 2, 6, 8
+    mass = np.broadcast_to(np.eye(n, dtype=np.float32), (bsz, n, n)).copy()
+    jac = rng.normal(size=(bsz, m, n)).astype(np.float32)
+    lam = np.zeros((bsz, m), np.float32)
+    g = rng.normal(size=(bsz, n)).astype(np.float32)
+    out = np.asarray(zone_backward_model(mass, jac, lam, g))
+    np.testing.assert_allclose(out, g, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,22 @@
+//! Fig. 3 (top): runtime + memory vs number of objects, ours vs MPM.
+//! Regenerates the paper's series shape: ours linear, MPM cubic → OOM.
+use diffsim::experiments::scalability::{mpm_objects, ours_objects};
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig3_objects");
+    let steps = 20;
+    for n in [20usize, 50, 100, 200] {
+        let (t, mem) = ours_objects(n, steps);
+        b.metric(&format!("ours/n{n}/time"), t, "s");
+        b.metric(&format!("ours/n{n}/mem"), mem as f64 / 1e6, "MB");
+        let (mt, mm, note) = mpm_objects(n, steps, 128);
+        b.metric(
+            &format!("mpm/n{n}/time ({note})"),
+            mt.unwrap_or(f64::NAN),
+            "s",
+        );
+        b.metric(&format!("mpm/n{n}/mem"), mm as f64 / 1e6, "MB");
+    }
+    b.finish();
+}

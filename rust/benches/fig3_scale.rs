@@ -1,0 +1,18 @@
+//! Fig. 3 (bottom): runtime + memory vs cloth:bunny scale ratio.
+//! Ours stays ~constant; the grid-based baseline grows cubically.
+use diffsim::experiments::scalability::{mpm_scale, ours_scale};
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig3_scale");
+    let steps = 20;
+    for r in [1usize, 2, 4, 6, 8, 10] {
+        let (t, mem) = ours_scale(r as f64, steps);
+        b.metric(&format!("ours/ratio{r}/time"), t, "s");
+        b.metric(&format!("ours/ratio{r}/mem"), mem as f64 / 1e6, "MB");
+        let (mt, mm, note) = mpm_scale(r as f64, steps, 160);
+        b.metric(&format!("mpm/ratio{r}/time ({note})"), mt.unwrap_or(f64::NAN), "s");
+        b.metric(&format!("mpm/ratio{r}/mem"), mm as f64 / 1e6, "MB");
+    }
+    b.finish();
+}

@@ -1,0 +1,23 @@
+//! Fig. 7: inverse problem — gradient episodes vs CMA-ES episodes to a
+//! given loss (the sample-efficiency series the paper plots).
+use diffsim::experiments::inverse::{optimize_cmaes, optimize_gradient};
+use diffsim::math::Vec3;
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig7_inverse");
+    let target = Vec3::new(0.4, 0.0, 0.2);
+    let g = optimize_gradient(target, 10);
+    for (i, l) in g.iter().enumerate() {
+        b.metric(&format!("gradient/episode{i}"), *l, "loss");
+    }
+    let c = optimize_cmaes(target, 60, 42);
+    for i in [0usize, 9, 29, 59] {
+        if i < c.len() {
+            b.metric(&format!("cmaes/episode{i}"), c[i], "best loss");
+        }
+    }
+    b.metric("gradient/final", *g.last().unwrap(), "loss");
+    b.metric("cmaes/final", *c.last().unwrap(), "loss");
+    b.finish();
+}

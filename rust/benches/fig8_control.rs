@@ -1,0 +1,21 @@
+//! Fig. 8: learning-control loss curves — ours (BPTT through the
+//! simulator) vs DDPG on the same episode budget.
+use diffsim::experiments::control::{train_ddpg_sticks, train_ours_sticks};
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fig8_control");
+    let episodes = 12;
+    let ours = train_ours_sticks(episodes, 11);
+    let ddpg = train_ddpg_sticks(episodes, 11);
+    for (i, l) in ours.iter().enumerate() {
+        b.metric(&format!("ours/episode{i}"), *l, "final dist^2");
+    }
+    for (i, l) in ddpg.iter().enumerate() {
+        b.metric(&format!("ddpg/episode{i}"), *l, "final dist^2");
+    }
+    let tail = |v: &[f64]| v.iter().rev().take(5).sum::<f64>() / 5.0;
+    b.metric("ours/tail5", tail(&ours), "final dist^2");
+    b.metric("ddpg/tail5", tail(&ddpg), "final dist^2");
+    b.finish();
+}

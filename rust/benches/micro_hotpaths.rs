@@ -1,0 +1,95 @@
+//! Micro-benchmarks of the per-step hot paths (the §Perf working set):
+//! BVH build/refit, CCD narrowphase, zone solve, zone backward (QR vs
+//! dense), cloth implicit solve, and the PJRT call overhead.
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::collision::zones::build_zones;
+use diffsim::collision::{detect, surfaces_from_system};
+use diffsim::diff::implicit::{backward_dense, backward_qr};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere, unit_box};
+use diffsim::solver::implicit_euler::cloth_implicit_step;
+use diffsim::solver::zone_solver::ZoneProblem;
+use diffsim::util::bench::{time, Bench};
+
+fn main() {
+    let mut b = Bench::new("micro_hotpaths");
+
+    // BVH over a 1280-face mesh.
+    let mesh = icosphere(1.0, 3);
+    let aabbs: Vec<_> = (0..mesh.n_faces())
+        .map(|f| {
+            let [i, j, k] = mesh.faces[f];
+            diffsim::collision::aabb::Aabb::from_points(&[
+                mesh.verts[i as usize],
+                mesh.verts[j as usize],
+                mesh.verts[k as usize],
+            ])
+        })
+        .collect();
+    b.report("bvh/build 1280 faces", &time(3, 30, || {
+        std::hint::black_box(diffsim::collision::bvh::Bvh::build(&aabbs));
+    }));
+    let mut bvh = diffsim::collision::bvh::Bvh::build(&aabbs);
+    b.report("bvh/refit 1280 faces", &time(3, 100, || {
+        bvh.refit(&aabbs);
+    }));
+
+    // Full detect() on a 27-cube pile.
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    for k in 0..27 {
+        let (i, j, l) = (k % 3, (k / 3) % 3, k / 9);
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+            1.05 * i as f64,
+            0.505 + 1.02 * l as f64,
+            1.05 * j as f64,
+        )));
+    }
+    let x1: Vec<Vec<Vec3>> = sys.rigids.iter().map(|r| r.world_verts()).collect();
+    b.report("detect/27-cube pile", &time(2, 20, || {
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        std::hint::black_box(detect(&surfs, 1e-3));
+    }));
+
+    // Zone solve + backwards on a realistic zone.
+    let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+    let (impacts, _) = detect(&surfs, 1e-3);
+    let zones = build_zones(&sys, &impacts);
+    let rigid_q: Vec<[f64; 6]> = sys.rigids.iter().map(|r| r.q).collect();
+    if let Some(z) = zones.iter().max_by_key(|z| z.n_dofs()) {
+        let zp = ZoneProblem::build(&sys, z, &rigid_q, &[], 1e-3);
+        b.metric("zone/dofs", zp.n as f64, "n");
+        b.metric("zone/constraints", zp.constraints.len() as f64, "m");
+        b.report("zone/solve", &time(2, 10, || {
+            std::hint::black_box(zp.solve());
+        }));
+        let sol = zp.solve();
+        let g: Vec<f64> = (0..zp.n).map(|i| (i as f64 * 0.37).sin()).collect();
+        b.report("zone/backward-qr", &time(3, 50, || {
+            std::hint::black_box(backward_qr(&zp, &sol, &g));
+        }));
+        b.report("zone/backward-dense", &time(3, 50, || {
+            std::hint::black_box(backward_dense(&zp, &sol, &g));
+        }));
+    }
+
+    // Cloth implicit step, 33×33 grid.
+    let cloth = Cloth::from_grid(cloth_grid(32, 32, 2.0, 2.0), 0.3, 3000.0, 2.0, 1.0);
+    b.report("cloth/implicit step 33x33", &time(2, 10, || {
+        std::hint::black_box(cloth_implicit_step(&cloth, 0.005, Vec3::new(0.0, -9.8, 0.0)));
+    }));
+
+    // PJRT call overhead (if artifacts exist).
+    if let Ok(rt) = diffsim::runtime::Runtime::load_default() {
+        let q = vec![0f32; 128 * 6];
+        let p = vec![0f32; 128 * 3];
+        rt.warmup("rigid_transform_b128").ok();
+        b.report("pjrt/rigid_transform_b128 call", &time(3, 30, || {
+            std::hint::black_box(rt.call_f32("rigid_transform_b128", &[&q, &p]).unwrap());
+        }));
+    }
+    b.finish();
+}

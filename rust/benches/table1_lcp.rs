@@ -1,0 +1,17 @@
+//! Table 1: backprop seconds/step — global LCP-style vs local zones.
+use diffsim::engine::CollisionMode;
+use diffsim::experiments::ablation_lcp::backprop_time;
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table1_lcp");
+    // Paper sizes are 100/200/300; bench defaults stay CI-friendly.
+    for n in [50usize, 100] {
+        let global = backprop_time(n, CollisionMode::Global, 2);
+        let local = backprop_time(n, CollisionMode::LocalZones, 2);
+        b.report(&format!("lcp-global/n{n}"), &global);
+        b.report(&format!("ours-local/n{n}"), &local);
+        b.metric(&format!("speedup/n{n}"), global.mean() / local.mean().max(1e-12), "x");
+    }
+    b.finish();
+}

@@ -1,0 +1,16 @@
+//! Table 2: backprop seconds/step — dense KKT ("W/o FD") vs QR fast diff.
+use diffsim::engine::DiffMode;
+use diffsim::experiments::ablation_fd::backprop_time;
+use diffsim::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("table2_fd");
+    for n in [50usize, 100] {
+        let dense = backprop_time(n, DiffMode::Dense, 2);
+        let qr = backprop_time(n, DiffMode::Qr, 2);
+        b.report(&format!("wofd-dense/n{n}"), &dense);
+        b.report(&format!("ours-qr/n{n}"), &qr);
+        b.metric(&format!("speedup/n{n}"), dense.mean() / qr.mean().max(1e-12), "x");
+    }
+    b.finish();
+}

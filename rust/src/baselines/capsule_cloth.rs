@@ -1,0 +1,245 @@
+//! "MuJoCo-style" cloth: a grid of particles connected by stiff springs
+//! whose collision geometry is SPHERES AT THE NODES ONLY (MuJoCo models
+//! cloth as a 2-D grid of capsule/ellipsoid geoms; collisions happen
+//! against those geoms, not against the continuum surface between them).
+//!
+//! This is the substitute comparator for Fig. 6 (a ball penetrates the
+//! trampoline when the grid is sparse — the representation has holes)
+//! and the non-differentiable "external simulator" of Fig. 10.
+
+use crate::math::Vec3;
+
+pub struct CapsuleClothConfig {
+    pub nx: usize,
+    pub nz: usize,
+    pub size: f64,
+    /// Collision radius of each node geom.
+    pub geom_radius: f64,
+    pub k_spring: f64,
+    pub damping: f64,
+    pub node_mass: f64,
+    pub dt: f64,
+    pub gravity: f64,
+}
+
+impl Default for CapsuleClothConfig {
+    fn default() -> CapsuleClothConfig {
+        CapsuleClothConfig {
+            nx: 8,
+            nz: 8,
+            size: 2.0,
+            geom_radius: 0.05,
+            k_spring: 3000.0,
+            damping: 2.0,
+            node_mass: 0.02,
+            dt: 1.0 / 500.0,
+            gravity: -9.8,
+        }
+    }
+}
+
+/// A rigid ball interacting with the capsule-grid cloth.
+pub struct Ball {
+    pub pos: Vec3,
+    pub vel: Vec3,
+    pub radius: f64,
+    pub mass: f64,
+}
+
+pub struct CapsuleCloth {
+    pub cfg: CapsuleClothConfig,
+    pub x: Vec<Vec3>,
+    pub v: Vec<Vec3>,
+    pub pinned: Vec<bool>,
+    springs: Vec<(u32, u32, f64)>,
+    pub steps: usize,
+}
+
+impl CapsuleCloth {
+    pub fn new(cfg: CapsuleClothConfig, center: Vec3) -> CapsuleCloth {
+        let (nx, nz) = (cfg.nx, cfg.nz);
+        let mut x = Vec::new();
+        for i in 0..=nx {
+            for k in 0..=nz {
+                x.push(
+                    center
+                        + Vec3::new(
+                            cfg.size * (i as f64 / nx as f64 - 0.5),
+                            0.0,
+                            cfg.size * (k as f64 / nz as f64 - 0.5),
+                        ),
+                );
+            }
+        }
+        let idx = |i: usize, k: usize| (i * (nz + 1) + k) as u32;
+        let mut springs = Vec::new();
+        let mut add = |a: u32, b: u32, xs: &[Vec3]| {
+            springs.push((a, b, (xs[a as usize] - xs[b as usize]).norm()));
+        };
+        for i in 0..=nx {
+            for k in 0..=nz {
+                if i < nx {
+                    add(idx(i, k), idx(i + 1, k), &x);
+                }
+                if k < nz {
+                    add(idx(i, k), idx(i, k + 1), &x);
+                }
+                if i < nx && k < nz {
+                    add(idx(i, k), idx(i + 1, k + 1), &x);
+                    add(idx(i + 1, k), idx(i, k + 1), &x);
+                }
+            }
+        }
+        CapsuleCloth {
+            v: vec![Vec3::default(); x.len()],
+            pinned: vec![false; x.len()],
+            x,
+            springs,
+            cfg,
+            steps: 0,
+        }
+    }
+
+    pub fn pin_boundary(&mut self) {
+        let (nx, nz) = (self.cfg.nx, self.cfg.nz);
+        for i in 0..=nx {
+            for k in 0..=nz {
+                if i == 0 || i == nx || k == 0 || k == nz {
+                    self.pinned[i * (nz + 1) + k] = true;
+                }
+            }
+        }
+    }
+
+    /// One symplectic-Euler step with node-sphere vs ball collision —
+    /// the geom-level contact model. The *surface between nodes has no
+    /// collision geometry*: a small ball passes through grid holes.
+    pub fn step(&mut self, ball: &mut Ball) {
+        let cfg = &self.cfg;
+        let mut f = vec![Vec3::new(0.0, cfg.gravity * cfg.node_mass, 0.0); self.x.len()];
+        for &(a, b, l0) in &self.springs {
+            let d = self.x[b as usize] - self.x[a as usize];
+            let l = d.norm().max(1e-9);
+            let fs = d * (cfg.k_spring * (l - l0) / l);
+            f[a as usize] += fs;
+            f[b as usize] -= fs;
+        }
+        for i in 0..self.x.len() {
+            f[i] -= self.v[i] * (cfg.damping * cfg.node_mass);
+        }
+        // Ball vs node geoms: impulse-free penalty push (MuJoCo-ish soft
+        // contact), applied symmetrically.
+        let contact_k = 5e4;
+        let mut fb = Vec3::new(0.0, ball.mass * cfg.gravity, 0.0);
+        for i in 0..self.x.len() {
+            let d = self.x[i] - ball.pos;
+            let dist = d.norm();
+            let min_dist = ball.radius + cfg.geom_radius;
+            if dist < min_dist && dist > 1e-9 {
+                let pen = min_dist - dist;
+                let push = d * (contact_k * pen / dist);
+                f[i] += push;
+                fb -= push;
+            }
+        }
+        for i in 0..self.x.len() {
+            if self.pinned[i] {
+                self.v[i] = Vec3::default();
+                continue;
+            }
+            self.v[i] += f[i] * (cfg.dt / cfg.node_mass);
+            self.x[i] += self.v[i] * cfg.dt;
+        }
+        ball.vel += fb * (cfg.dt / ball.mass);
+        ball.pos += ball.vel * cfg.dt;
+        self.steps += 1;
+    }
+
+    /// Grid hole size: max gap between adjacent node geoms — a ball with
+    /// diameter below this can pass straight through.
+    pub fn hole_size(&self) -> f64 {
+        let spacing = self.cfg.size / self.cfg.nx as f64;
+        (spacing * std::f64::consts::SQRT_2 - 2.0 * self.cfg.geom_radius).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_ball_penetrates_sparse_grid() {
+        // The Fig. 6 failure: ball smaller than the inter-geom hole
+        // passes through the trampoline.
+        let mut cloth = CapsuleCloth::new(
+            CapsuleClothConfig { nx: 8, nz: 8, ..Default::default() },
+            Vec3::new(0.0, 1.0, 0.0),
+        );
+        cloth.pin_boundary();
+        let mut ball = Ball {
+            pos: Vec3::new(0.12, 1.6, 0.12), // aimed at a grid hole
+            vel: Vec3::new(0.0, -2.0, 0.0),
+            radius: 0.08,
+            mass: 0.5,
+        };
+        assert!(2.0 * ball.radius < cloth.hole_size(), "test setup: ball must fit the hole");
+        let mut min_y = f64::MAX;
+        for _ in 0..1500 {
+            cloth.step(&mut ball);
+            min_y = min_y.min(ball.pos.y);
+        }
+        assert!(min_y < 0.5, "ball should have fallen through: min_y = {min_y}");
+    }
+
+    #[test]
+    fn big_ball_is_caught() {
+        // A ball larger than the holes IS caught by the node geoms.
+        let mut cloth = CapsuleCloth::new(
+            CapsuleClothConfig { nx: 8, nz: 8, ..Default::default() },
+            Vec3::new(0.0, 1.0, 0.0),
+        );
+        cloth.pin_boundary();
+        let mut ball = Ball {
+            pos: Vec3::new(0.0, 1.6, 0.0),
+            vel: Vec3::new(0.0, -2.0, 0.0),
+            radius: 0.3,
+            mass: 0.5,
+        };
+        let mut min_y = f64::MAX;
+        for _ in 0..2000 {
+            cloth.step(&mut ball);
+            min_y = min_y.min(ball.pos.y);
+            assert!(ball.pos.is_finite());
+        }
+        assert!(min_y > 0.4, "big ball fell through: min_y = {min_y}");
+    }
+
+    #[test]
+    fn pinned_boundary_stays() {
+        let mut cloth = CapsuleCloth::new(CapsuleClothConfig::default(), Vec3::default());
+        cloth.pin_boundary();
+        let x0 = cloth.x[0];
+        let mut ball =
+            Ball { pos: Vec3::new(9.0, 9.0, 9.0), vel: Vec3::default(), radius: 0.1, mass: 1.0 };
+        for _ in 0..200 {
+            cloth.step(&mut ball);
+        }
+        assert!((cloth.x[0] - x0).norm() < 1e-12);
+        // Interior sags under gravity.
+        let mid = cloth.x[cloth.x.len() / 2];
+        assert!(mid.y < -0.001);
+    }
+
+    #[test]
+    fn hole_size_shrinks_with_resolution() {
+        let sparse = CapsuleCloth::new(
+            CapsuleClothConfig { nx: 6, nz: 6, ..Default::default() },
+            Vec3::default(),
+        );
+        let dense = CapsuleCloth::new(
+            CapsuleClothConfig { nx: 24, nz: 24, ..Default::default() },
+            Vec3::default(),
+        );
+        assert!(dense.hole_size() < sparse.hole_size());
+    }
+}

@@ -1,0 +1,6 @@
+//! Comparator systems built in-repo (DESIGN.md §6 substitutions):
+//! an MLS-MPM particle/grid simulator standing in for ChainQueen /
+//! DiffTaichi (Fig. 3), and a capsule-grid cloth standing in for
+//! MuJoCo's cloth representation (Fig. 6 / Fig. 10).
+pub mod capsule_cloth;
+pub mod mpm;

@@ -1,0 +1,326 @@
+//! Cloth: 3-DOF mesh nodes with stretching and bending internal forces
+//! (paper §4; Narain et al. 2012-style elements simplified to a
+//! mass-spring discretization — edge springs for stretch, opposite-vertex
+//! springs across each interior edge for bending) and analytic force
+//! Jacobians ∂f/∂q, ∂f/∂q̇ for the implicit Euler solve (Eq. 3).
+
+use crate::math::sparse::Triplets;
+use crate::math::Vec3;
+use crate::mesh::topology::{build_topology, Topology};
+use crate::mesh::TriMesh;
+
+#[derive(Clone)]
+pub struct Cloth {
+    /// Node positions (world).
+    pub x: Vec<Vec3>,
+    /// Node velocities.
+    pub v: Vec<Vec3>,
+    pub faces: Vec<[u32; 3]>,
+    pub topo: Topology,
+    /// Rest length per topology edge (stretch springs).
+    pub rest_len: Vec<f64>,
+    /// Rest distance per bend pair (bending springs between opposite
+    /// vertices of adjacent triangles).
+    pub bend_rest: Vec<f64>,
+    pub node_mass: Vec<f64>,
+    pub k_stretch: f64,
+    pub k_bend: f64,
+    /// Mass-proportional drag coefficient (∂f/∂v = −damping·m·I).
+    pub damping: f64,
+    pub pinned: Vec<bool>,
+    /// Per-node external force (control input), cleared each step.
+    pub ext_force: Vec<Vec3>,
+}
+
+impl Cloth {
+    /// Build from a triangle mesh with area density `rho` (kg/m²).
+    pub fn from_grid(mesh: TriMesh, rho: f64, k_stretch: f64, k_bend: f64, damping: f64) -> Cloth {
+        let topo = build_topology(&mesh);
+        let n = mesh.verts.len();
+        let mut node_mass = vec![0.0; n];
+        for f in 0..mesh.faces.len() {
+            let a = mesh.face_area(f) * rho / 3.0;
+            for &vi in &mesh.faces[f] {
+                node_mass[vi as usize] += a;
+            }
+        }
+        let rest_len = topo
+            .edges
+            .iter()
+            .map(|e| (mesh.verts[e.v[0] as usize] - mesh.verts[e.v[1] as usize]).norm())
+            .collect();
+        let bend_rest = topo
+            .bend_pairs
+            .iter()
+            .map(|bp| (mesh.verts[bp.opp[0] as usize] - mesh.verts[bp.opp[1] as usize]).norm())
+            .collect();
+        Cloth {
+            v: vec![Vec3::default(); n],
+            ext_force: vec![Vec3::default(); n],
+            pinned: vec![false; n],
+            x: mesh.verts.clone(),
+            faces: mesh.faces,
+            topo,
+            rest_len,
+            bend_rest,
+            node_mass,
+            k_stretch,
+            k_bend,
+            damping,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn pin(&mut self, node: usize) {
+        self.pinned[node] = true;
+    }
+
+    /// Total force on every node: gravity + stretch + bend + drag + ext.
+    pub fn forces(&self, gravity: Vec3) -> Vec<Vec3> {
+        let mut f: Vec<Vec3> = (0..self.n_nodes())
+            .map(|i| gravity * self.node_mass[i] + self.ext_force[i]
+                - self.v[i] * (self.damping * self.node_mass[i]))
+            .collect();
+        self.accumulate_springs(&mut f);
+        for i in 0..self.n_nodes() {
+            if self.pinned[i] {
+                f[i] = Vec3::default();
+            }
+        }
+        f
+    }
+
+    fn accumulate_springs(&self, f: &mut [Vec3]) {
+        for (e, &l0) in self.topo.edges.iter().zip(&self.rest_len) {
+            spring_force(self.k_stretch, l0, e.v[0] as usize, e.v[1] as usize, &self.x, f);
+        }
+        for (bp, &l0) in self.topo.bend_pairs.iter().zip(&self.bend_rest) {
+            spring_force(self.k_bend, l0, bp.opp[0] as usize, bp.opp[1] as usize, &self.x, f);
+        }
+    }
+
+    /// Assemble ∂f/∂x into `dfdx` (3N×3N triplets at `offset`) and return
+    /// the diagonal ∂f/∂v coefficient per node (drag). Pinned nodes get
+    /// zero rows (their equations are replaced by identity upstream).
+    ///
+    /// With `spd_clamp` the compressed-spring lateral term is clamped at
+    /// zero to keep the implicit-Euler system SPD (Choi & Ko 2002); the
+    /// diff layer passes `false` for the exact Jacobian.
+    pub fn force_jacobian(&self, dfdx: &mut Triplets, offset: usize, spd_clamp: bool) -> Vec<f64> {
+        for (e, &l0) in self.topo.edges.iter().zip(&self.rest_len) {
+            self.spring_jacobian(self.k_stretch, l0, e.v[0] as usize, e.v[1] as usize, dfdx, offset, spd_clamp);
+        }
+        for (bp, &l0) in self.topo.bend_pairs.iter().zip(&self.bend_rest) {
+            self.spring_jacobian(self.k_bend, l0, bp.opp[0] as usize, bp.opp[1] as usize, dfdx, offset, spd_clamp);
+        }
+        (0..self.n_nodes())
+            .map(|i| if self.pinned[i] { 0.0 } else { -self.damping * self.node_mass[i] })
+            .collect()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spring_jacobian(
+        &self,
+        k: f64,
+        l0: f64,
+        i: usize,
+        j: usize,
+        t: &mut Triplets,
+        offset: usize,
+        spd_clamp: bool,
+    ) {
+        let d = self.x[j] - self.x[i];
+        let l = d.norm();
+        if l < 1e-12 {
+            return;
+        }
+        let dir = d / l;
+        // J = k[(1−L0/l)(I − d̂d̂ᵀ) + d̂d̂ᵀ].
+        let mut lateral = k * (1.0 - l0 / l);
+        if spd_clamp {
+            lateral = lateral.max(0.0);
+        }
+        let axial = k;
+        let mut jm = [[0.0; 3]; 3];
+        let o = dir.outer(dir);
+        for r in 0..3 {
+            for c in 0..3 {
+                let id = if r == c { 1.0 } else { 0.0 };
+                jm[r][c] = lateral * (id - o[r][c]) + axial * o[r][c];
+            }
+        }
+        let (pi, pj) = (self.pinned[i], self.pinned[j]);
+        let neg = |m: &[[f64; 3]; 3]| {
+            let mut n = *m;
+            for r in 0..3 {
+                for c in 0..3 {
+                    n[r][c] = -n[r][c];
+                }
+            }
+            n
+        };
+        let (bi, bj) = (offset / 3 + i, offset / 3 + j);
+        if !pi {
+            t.push_block3(bi, bi, &neg(&jm));
+            if !pj {
+                t.push_block3(bi, bj, &jm);
+            }
+        }
+        if !pj {
+            t.push_block3(bj, bj, &neg(&jm));
+            if !pi {
+                t.push_block3(bj, bi, &jm);
+            }
+        }
+    }
+
+    /// Elastic potential energy (for energy-behaviour tests).
+    pub fn elastic_energy(&self) -> f64 {
+        let mut e = 0.0;
+        for (ed, &l0) in self.topo.edges.iter().zip(&self.rest_len) {
+            let l = (self.x[ed.v[1] as usize] - self.x[ed.v[0] as usize]).norm();
+            e += 0.5 * self.k_stretch * (l - l0) * (l - l0);
+        }
+        for (bp, &l0) in self.topo.bend_pairs.iter().zip(&self.bend_rest) {
+            let l = (self.x[bp.opp[1] as usize] - self.x[bp.opp[0] as usize]).norm();
+            e += 0.5 * self.k_bend * (l - l0) * (l - l0);
+        }
+        e
+    }
+
+    pub fn clear_forces(&mut self) {
+        for f in &mut self.ext_force {
+            *f = Vec3::default();
+        }
+    }
+}
+
+fn spring_force(k: f64, l0: f64, i: usize, j: usize, x: &[Vec3], f: &mut [Vec3]) {
+    let d = x[j] - x[i];
+    let l = d.norm();
+    if l < 1e-12 {
+        return;
+    }
+    let fi = d * (k * (l - l0) / l);
+    f[i] += fi;
+    f[j] -= fi;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::cloth_grid;
+    use crate::util::quick::quick;
+
+    fn cloth() -> Cloth {
+        Cloth::from_grid(cloth_grid(3, 3, 1.0, 1.0), 0.5, 200.0, 2.0, 0.0)
+    }
+
+    #[test]
+    fn rest_state_has_no_internal_force() {
+        let c = cloth();
+        let f = c.forces(Vec3::default());
+        for fi in f {
+            assert!(fi.norm() < 1e-10, "{fi:?}");
+        }
+    }
+
+    #[test]
+    fn node_masses_sum_to_total() {
+        let c = cloth();
+        let total: f64 = c.node_mass.iter().sum();
+        assert!((total - 0.5 * 1.0).abs() < 1e-9); // rho × area
+    }
+
+    #[test]
+    fn stretched_edge_pulls_back() {
+        let mut c = cloth();
+        // Move node 0 outward along -x -z.
+        c.x[0] += Vec3::new(-0.3, 0.0, -0.3);
+        let f = c.forces(Vec3::default());
+        // Force on node 0 points back toward the cloth (positive x,z).
+        assert!(f[0].x > 0.0 && f[0].z > 0.0, "{:?}", f[0]);
+    }
+
+    #[test]
+    fn momentum_conservation_of_internal_forces() {
+        quick("cloth-momentum", 30, |g| {
+            let mut c = cloth();
+            for x in &mut c.x {
+                *x += Vec3::new(g.f64(-0.1, 0.1), g.f64(-0.1, 0.1), g.f64(-0.1, 0.1));
+            }
+            let f = c.forces(Vec3::default());
+            let total: Vec3 = f.iter().fold(Vec3::default(), |a, &b| a + b);
+            assert!(total.norm() < 1e-8, "net internal force {total:?}");
+        });
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        quick("cloth-jacobian", 10, |g| {
+            let mut c = cloth();
+            for x in &mut c.x {
+                *x += Vec3::new(g.f64(-0.05, 0.05), g.f64(-0.05, 0.05), g.f64(-0.05, 0.05));
+            }
+            let n = c.n_nodes();
+            // Exact (unclamped) Jacobian vs central finite differences.
+            let mut t = Triplets::new(3 * n, 3 * n);
+            c.force_jacobian(&mut t, 0, false);
+            let jac = t.to_csr().to_dense();
+            let h = 1e-7;
+            for _ in 0..5 {
+                let col = g.usize(0, 3 * n - 1);
+                let (node, comp) = (col / 3, col % 3);
+                if c.pinned[node] {
+                    continue;
+                }
+                let mut cp = c.clone();
+                cp.x[node][comp] += h;
+                let mut cm = c.clone();
+                cm.x[node][comp] -= h;
+                let fp = cp.forces(Vec3::default());
+                let fm = cm.forces(Vec3::default());
+                for row_node in 0..n {
+                    for rc in 0..3 {
+                        let fd = (fp[row_node][rc] - fm[row_node][rc]) / (2.0 * h);
+                        let an = jac[(3 * row_node + rc, col)];
+                        assert!(
+                            (fd - an).abs() < 1e-4 * (1.0 + fd.abs()),
+                            "row {} col {col}: fd={fd} analytic={an}",
+                            3 * row_node + rc
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn pinned_nodes_have_zero_force_rows() {
+        let mut c = cloth();
+        c.pin(0);
+        c.x[0] += Vec3::new(0.5, 0.5, 0.5);
+        let f = c.forces(Vec3::new(0.0, -9.8, 0.0));
+        assert_eq!(f[0], Vec3::default());
+        let n = c.n_nodes();
+        let mut t = Triplets::new(3 * n, 3 * n);
+        c.force_jacobian(&mut t, 0, true);
+        let jac = t.to_csr().to_dense();
+        for col in 0..3 * n {
+            for r in 0..3 {
+                assert_eq!(jac[(r, col)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_energy_zero_at_rest_positive_when_deformed() {
+        let mut c = cloth();
+        assert!(c.elastic_energy() < 1e-12);
+        c.x[5] += Vec3::new(0.1, 0.2, 0.0);
+        assert!(c.elastic_energy() > 1e-4);
+    }
+}

@@ -1,0 +1,246 @@
+//! Dynamic bodies (§4 of the paper): rigid bodies with 6-DOF generalized
+//! coordinates `q = [r, t]` and cloth with 3-DOF nodes, plus the `System`
+//! container that packs all coordinates into one state vector
+//! `q = [q₁ᵀ, …, qₙᵀ]ᵀ`.
+pub mod cloth;
+pub mod rigid;
+
+pub use cloth::Cloth;
+pub use rigid::RigidBody;
+
+use crate::math::Vec3;
+
+/// Identifies one surface node in the system: either a vertex of a rigid
+/// body's mesh or a cloth node. This is the unit of collision handling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeRef {
+    Rigid { body: u32, vert: u32 },
+    Cloth { cloth: u32, node: u32 },
+}
+
+/// The whole simulated system. Rigid body `i` owns global DOFs
+/// `[6i, 6i+6)`; cloth `c`'s node `j` owns `[rigid_dofs + off_c + 3j,
+/// … + 3)`.
+#[derive(Clone, Default)]
+pub struct System {
+    pub rigids: Vec<RigidBody>,
+    pub cloths: Vec<Cloth>,
+}
+
+impl System {
+    pub fn new() -> System {
+        System::default()
+    }
+
+    pub fn add_rigid(&mut self, b: RigidBody) -> usize {
+        self.rigids.push(b);
+        self.rigids.len() - 1
+    }
+
+    pub fn add_cloth(&mut self, c: Cloth) -> usize {
+        self.cloths.push(c);
+        self.cloths.len() - 1
+    }
+
+    pub fn rigid_dofs(&self) -> usize {
+        6 * self.rigids.len()
+    }
+
+    pub fn cloth_dof_offset(&self, cloth: usize) -> usize {
+        let mut off = self.rigid_dofs();
+        for c in 0..cloth {
+            off += 3 * self.cloths[c].x.len();
+        }
+        off
+    }
+
+    pub fn total_dofs(&self) -> usize {
+        self.rigid_dofs() + self.cloths.iter().map(|c| 3 * c.x.len()).sum::<usize>()
+    }
+
+    /// World position of a surface node.
+    pub fn node_pos(&self, n: NodeRef) -> Vec3 {
+        match n {
+            NodeRef::Rigid { body, vert } => self.rigids[body as usize].world_vertex(vert as usize),
+            NodeRef::Cloth { cloth, node } => self.cloths[cloth as usize].x[node as usize],
+        }
+    }
+
+    /// World velocity of a surface node.
+    pub fn node_vel(&self, n: NodeRef) -> Vec3 {
+        match n {
+            NodeRef::Rigid { body, vert } => self.rigids[body as usize].vertex_velocity(vert as usize),
+            NodeRef::Cloth { cloth, node } => self.cloths[cloth as usize].v[node as usize],
+        }
+    }
+
+    /// Is the node attached to an immovable entity (frozen body / pinned
+    /// cloth node)?
+    pub fn node_fixed(&self, n: NodeRef) -> bool {
+        match n {
+            NodeRef::Rigid { body, .. } => self.rigids[body as usize].frozen,
+            NodeRef::Cloth { cloth, node } => self.cloths[cloth as usize].pinned[node as usize],
+        }
+    }
+
+    /// Gather the full generalized state (positions) into a flat vector.
+    pub fn gather_q(&self) -> Vec<f64> {
+        let mut q = Vec::with_capacity(self.total_dofs());
+        for b in &self.rigids {
+            q.extend_from_slice(&b.q);
+        }
+        for c in &self.cloths {
+            for x in &c.x {
+                q.extend_from_slice(&x.to_array());
+            }
+        }
+        q
+    }
+
+    /// Gather velocities.
+    pub fn gather_qdot(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.total_dofs());
+        for b in &self.rigids {
+            v.extend_from_slice(&b.qdot);
+        }
+        for c in &self.cloths {
+            for vv in &c.v {
+                v.extend_from_slice(&vv.to_array());
+            }
+        }
+        v
+    }
+
+    /// Scatter a flat state vector back into the bodies.
+    pub fn scatter_q(&mut self, q: &[f64]) {
+        assert_eq!(q.len(), self.total_dofs());
+        let mut k = 0;
+        for b in &mut self.rigids {
+            b.q.copy_from_slice(&q[k..k + 6]);
+            k += 6;
+        }
+        for c in &mut self.cloths {
+            for x in &mut c.x {
+                *x = Vec3::new(q[k], q[k + 1], q[k + 2]);
+                k += 3;
+            }
+        }
+    }
+
+    pub fn scatter_qdot(&mut self, v: &[f64]) {
+        assert_eq!(v.len(), self.total_dofs());
+        let mut k = 0;
+        for b in &mut self.rigids {
+            b.qdot.copy_from_slice(&v[k..k + 6]);
+            k += 6;
+        }
+        for c in &mut self.cloths {
+            for vv in &mut c.v {
+                *vv = Vec3::new(v[k], v[k + 1], v[k + 2]);
+                k += 3;
+            }
+        }
+    }
+
+    /// Total linear momentum (world frame).
+    pub fn linear_momentum(&self) -> Vec3 {
+        let mut p = Vec3::default();
+        for b in &self.rigids {
+            if !b.frozen {
+                p += b.linear_velocity() * b.mass;
+            }
+        }
+        for c in &self.cloths {
+            for (v, m) in c.v.iter().zip(&c.node_mass) {
+                p += *v * *m;
+            }
+        }
+        p
+    }
+
+    /// Total kinetic energy.
+    pub fn kinetic_energy(&self) -> f64 {
+        let mut e = 0.0;
+        for b in &self.rigids {
+            if !b.frozen {
+                e += b.kinetic_energy();
+            }
+        }
+        for c in &self.cloths {
+            for (v, m) in c.v.iter().zip(&c.node_mass) {
+                e += 0.5 * m * v.norm2();
+            }
+        }
+        e
+    }
+
+    /// Logical bytes held by the state (for the Fig. 3 memory series).
+    pub fn state_bytes(&self) -> usize {
+        let mut b = 0;
+        for r in &self.rigids {
+            b += 8 * 12 + 24 * r.mesh0.verts.len() + 12 * r.mesh0.faces.len();
+        }
+        for c in &self.cloths {
+            b += 48 * c.x.len() + 12 * c.faces.len();
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::{cloth_grid, unit_box};
+
+    fn sample_system() -> System {
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 2.0));
+        sys.add_cloth(Cloth::from_grid(cloth_grid(2, 2, 1.0, 1.0), 0.1, 100.0, 1.0, 0.1));
+        sys
+    }
+
+    #[test]
+    fn dof_bookkeeping() {
+        let sys = sample_system();
+        assert_eq!(sys.rigid_dofs(), 12);
+        assert_eq!(sys.total_dofs(), 12 + 3 * 9);
+        assert_eq!(sys.cloth_dof_offset(0), 12);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut sys = sample_system();
+        sys.rigids[0].q = [0.1, 0.2, 0.3, 1.0, 2.0, 3.0];
+        sys.cloths[0].x[4] = Vec3::new(9.0, 8.0, 7.0);
+        let q = sys.gather_q();
+        let v = sys.gather_qdot();
+        let mut sys2 = sample_system();
+        sys2.scatter_q(&q);
+        sys2.scatter_qdot(&v);
+        assert_eq!(sys2.gather_q(), q);
+        assert_eq!(sys2.gather_qdot(), v);
+        assert_eq!(sys2.rigids[0].q, sys.rigids[0].q);
+        assert!((sys2.cloths[0].x[4] - sys.cloths[0].x[4]).norm() < 1e-15);
+    }
+
+    #[test]
+    fn node_refs_resolve() {
+        let mut sys = sample_system();
+        sys.rigids[1].q[3] = 5.0;
+        let n = NodeRef::Rigid { body: 1, vert: 0 };
+        assert!((sys.node_pos(n).x - (5.0 - 0.5)).abs() < 1e-12);
+        let c = NodeRef::Cloth { cloth: 0, node: 0 };
+        assert!((sys.node_pos(c) - sys.cloths[0].x[0]).norm() < 1e-15);
+    }
+
+    #[test]
+    fn momentum_sums_bodies() {
+        let mut sys = sample_system();
+        sys.rigids[0].qdot[3] = 1.0; // vx = 1, mass 1
+        sys.rigids[1].qdot[4] = 2.0; // vy = 2, mass 2·vol
+        let p = sys.linear_momentum();
+        assert!((p.x - 1.0).abs() < 1e-12);
+        assert!((p.y - 2.0 * sys.rigids[1].mass).abs() < 1e-12);
+    }
+}

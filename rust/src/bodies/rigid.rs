@@ -1,0 +1,286 @@
+//! Rigid body with Euler-angle generalized coordinates (paper §4 +
+//! Appendix A): `q = [φ, θ, ψ, t_x, t_y, t_z]`, generalized mass matrix
+//! M̂ = diag(TᵀI′T, m·I₃), vertex map f(q) = R·p₀ + t.
+
+use crate::math::dense::Mat;
+use crate::math::{euler, Mat3, Vec3};
+use crate::mesh::mass::mass_properties;
+use crate::mesh::TriMesh;
+
+#[derive(Clone, Debug)]
+pub struct RigidBody {
+    /// Mesh in the body frame: COM at origin, reference orientation.
+    pub mesh0: TriMesh,
+    /// Generalized coordinates [φ, θ, ψ, t_x, t_y, t_z].
+    pub q: [f64; 6],
+    /// Generalized velocities [φ̇, θ̇, ψ̇, ṫ_x, ṫ_y, ṫ_z].
+    pub qdot: [f64; 6],
+    pub mass: f64,
+    /// Body-frame inertia about the COM at the reference orientation.
+    pub inertia0: Mat3,
+    /// Accumulated external force (world frame, this step).
+    pub ext_force: Vec3,
+    /// Accumulated external torque about the COM (world frame, this step).
+    pub ext_torque: Vec3,
+    /// Immovable (infinite mass): ground plane, walls, obstacles.
+    pub frozen: bool,
+}
+
+impl RigidBody {
+    /// Build from a closed mesh: computes mass properties and re-centers
+    /// the mesh so the body-frame origin is the COM.
+    pub fn from_mesh(mesh: TriMesh, density: f64) -> RigidBody {
+        let props = mass_properties(&mesh, density);
+        let mesh0 = mesh.translated(-props.com);
+        RigidBody {
+            mesh0,
+            q: [0.0; 6],
+            qdot: [0.0; 6],
+            mass: props.mass,
+            inertia0: props.inertia,
+            ext_force: Vec3::default(),
+            ext_torque: Vec3::default(),
+            frozen: false,
+        }
+    }
+
+    /// An immovable obstacle (infinite mass); mesh is used as-is in world
+    /// coordinates relative to `q`'s translation.
+    pub fn frozen_from_mesh(mesh: TriMesh) -> RigidBody {
+        RigidBody {
+            mesh0: mesh,
+            q: [0.0; 6],
+            qdot: [0.0; 6],
+            mass: f64::INFINITY,
+            inertia0: Mat3::identity(),
+            ext_force: Vec3::default(),
+            ext_torque: Vec3::default(),
+            frozen: true,
+        }
+    }
+
+    pub fn with_position(mut self, t: Vec3) -> RigidBody {
+        self.q[3] = t.x;
+        self.q[4] = t.y;
+        self.q[5] = t.z;
+        self
+    }
+
+    pub fn with_rotation(mut self, r: Vec3) -> RigidBody {
+        self.q[0] = r.x;
+        self.q[1] = r.y;
+        self.q[2] = r.z;
+        self
+    }
+
+    pub fn with_velocity(mut self, v: Vec3) -> RigidBody {
+        self.qdot[3] = v.x;
+        self.qdot[4] = v.y;
+        self.qdot[5] = v.z;
+        self
+    }
+
+    pub fn euler(&self) -> Vec3 {
+        Vec3::new(self.q[0], self.q[1], self.q[2])
+    }
+
+    pub fn translation(&self) -> Vec3 {
+        Vec3::new(self.q[3], self.q[4], self.q[5])
+    }
+
+    pub fn euler_rates(&self) -> Vec3 {
+        Vec3::new(self.qdot[0], self.qdot[1], self.qdot[2])
+    }
+
+    pub fn linear_velocity(&self) -> Vec3 {
+        Vec3::new(self.qdot[3], self.qdot[4], self.qdot[5])
+    }
+
+    pub fn rotation(&self) -> Mat3 {
+        euler::rotation(self.euler())
+    }
+
+    /// World-frame angular velocity ω = T(r)·ṙ (Eq. 20).
+    pub fn omega(&self) -> Vec3 {
+        euler::omega_transform(self.euler()) * self.euler_rates()
+    }
+
+    /// World-frame inertia at the current orientation: I′ = R·I₀·Rᵀ.
+    pub fn inertia_world(&self) -> Mat3 {
+        euler::rotate_inertia(self.euler(), self.inertia0)
+    }
+
+    /// Generalized 6×6 mass matrix M̂ = diag(TᵀI′T, m·I₃) (Eq. 22).
+    pub fn mass_matrix(&self) -> Mat {
+        let ia = euler::angular_inertia(self.euler(), self.inertia_world());
+        let mut m = Mat::zeros(6, 6);
+        for i in 0..3 {
+            for j in 0..3 {
+                m[(i, j)] = ia.m[i][j];
+            }
+            m[(i + 3, i + 3)] = self.mass;
+        }
+        m
+    }
+
+    /// World position of body-frame vertex index `i`.
+    pub fn world_vertex(&self, i: usize) -> Vec3 {
+        euler::transform_point(&self.q, self.mesh0.verts[i])
+    }
+
+    /// All vertices in world coordinates.
+    pub fn world_verts(&self) -> Vec<Vec3> {
+        let r = self.rotation();
+        let t = self.translation();
+        self.mesh0.verts.iter().map(|&p| r * p + t).collect()
+    }
+
+    /// World velocity of vertex `i`: ẋ = ∇f(q)·q̇.
+    pub fn vertex_velocity(&self, i: usize) -> Vec3 {
+        let jac = euler::jacobian(&self.q, self.mesh0.verts[i]);
+        let mut v = Vec3::default();
+        for c in 0..6 {
+            v.x += jac[0][c] * self.qdot[c];
+            v.y += jac[1][c] * self.qdot[c];
+            v.z += jac[2][c] * self.qdot[c];
+        }
+        v
+    }
+
+    /// ∇f at body-frame point p₀ (3×6 Jacobian, Appendix C).
+    pub fn point_jacobian(&self, p0: Vec3) -> [[f64; 6]; 3] {
+        euler::jacobian(&self.q, p0)
+    }
+
+    /// Kinetic energy ½ q̇ᵀ M̂ q̇ = ½ m|v|² + ½ ωᵀI′ω.
+    pub fn kinetic_energy(&self) -> f64 {
+        let v = self.linear_velocity();
+        let w = self.omega();
+        0.5 * self.mass * v.norm2() + 0.5 * w.dot(self.inertia_world() * w)
+    }
+
+    /// Generalized force vector from the accumulated world force/torque:
+    /// Q = [Tᵀ·τ, f] (torque maps through ωᵀτ = ṙᵀTᵀτ).
+    /// `angular_damping` adds τ −= c·I′·ω — a small default keeps
+    /// frictionless resting stacks from accumulating spin creep.
+    pub fn generalized_force_damped(&self, gravity: Vec3, angular_damping: f64) -> [f64; 6] {
+        let t = euler::omega_transform(self.euler());
+        // Gyroscopic torque -ω × (I′ω) treated explicitly.
+        let w = self.omega();
+        let tau_world = self.ext_torque
+            - w.cross(self.inertia_world() * w)
+            - (self.inertia_world() * w) * angular_damping;
+        let tau_gen = t.transpose() * tau_world;
+        let f = self.ext_force + gravity * self.mass;
+        [tau_gen.x, tau_gen.y, tau_gen.z, f.x, f.y, f.z]
+    }
+
+    /// `generalized_force_damped` with zero damping.
+    pub fn generalized_force(&self, gravity: Vec3) -> [f64; 6] {
+        self.generalized_force_damped(gravity, 0.0)
+    }
+
+    pub fn clear_forces(&mut self) {
+        self.ext_force = Vec3::default();
+        self.ext_torque = Vec3::default();
+    }
+
+    /// Near gimbal lock (|θ| → π/2) the Euler parameterization degenerates
+    /// (T loses rank). The stepper re-parameterizes when this is detected.
+    pub fn near_gimbal_lock(&self) -> bool {
+        (self.q[1].abs() - std::f64::consts::FRAC_PI_2).abs() < 0.1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::unit_box;
+    use crate::util::quick::quick;
+
+    fn body() -> RigidBody {
+        RigidBody::from_mesh(unit_box(), 2.0)
+    }
+
+    #[test]
+    fn from_mesh_centers_com() {
+        let shifted = unit_box().translated(Vec3::new(3.0, -1.0, 2.0));
+        let b = RigidBody::from_mesh(shifted, 1.0);
+        let props = mass_properties(&b.mesh0, 1.0);
+        assert!(props.com.norm() < 1e-9);
+        assert!((b.mass - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mass_matrix_at_identity_is_block_diag() {
+        let b = body();
+        let m = b.mass_matrix();
+        // Unit cube, density 2: mass 2, I = m(1+1)/12 = 1/3.
+        for i in 0..3 {
+            assert!((m[(i, i)] - 2.0 / 6.0).abs() < 1e-9);
+            assert!((m[(i + 3, i + 3)] - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kinetic_energy_quadratic_form_consistency() {
+        quick("rigid-ke", 50, |g| {
+            let mut b = body();
+            b.q = [g.f64(-1.0, 1.0), g.f64(-0.9, 0.9), g.f64(-1.0, 1.0), 0.0, 0.0, 0.0];
+            for k in 0..6 {
+                b.qdot[k] = g.f64(-2.0, 2.0);
+            }
+            let m = b.mass_matrix();
+            let qd = b.qdot.to_vec();
+            let e_quad = 0.5 * crate::math::dense::dot(&qd, &m.matvec(&qd));
+            assert!(
+                (e_quad - b.kinetic_energy()).abs() < 1e-9 * (1.0 + e_quad.abs()),
+                "quad={} direct={}",
+                e_quad,
+                b.kinetic_energy()
+            );
+        });
+    }
+
+    #[test]
+    fn vertex_velocity_matches_finite_difference() {
+        quick("rigid-vertvel", 50, |g| {
+            let mut b = body();
+            b.q = [
+                g.f64(-1.0, 1.0),
+                g.f64(-0.9, 0.9),
+                g.f64(-1.0, 1.0),
+                g.f64(-1.0, 1.0),
+                g.f64(-1.0, 1.0),
+                g.f64(-1.0, 1.0),
+            ];
+            for k in 0..6 {
+                b.qdot[k] = g.f64(-1.0, 1.0);
+            }
+            let i = g.usize(0, 7);
+            let v = b.vertex_velocity(i);
+            let h = 1e-6;
+            let mut bf = b.clone();
+            for k in 0..6 {
+                bf.q[k] = b.q[k] + h * b.qdot[k];
+            }
+            let fd = (bf.world_vertex(i) - b.world_vertex(i)) / h;
+            assert!((v - fd).norm() < 1e-4, "v={v:?} fd={fd:?}");
+        });
+    }
+
+    #[test]
+    fn frozen_body_properties() {
+        let g = RigidBody::frozen_from_mesh(unit_box());
+        assert!(g.frozen);
+        assert!(g.mass.is_infinite());
+    }
+
+    #[test]
+    fn generalized_force_gravity_only_affects_translation_at_rest() {
+        let b = body();
+        let f = b.generalized_force(Vec3::new(0.0, -9.8, 0.0));
+        assert_eq!(&f[0..3], &[0.0, 0.0, 0.0]);
+        assert!((f[4] - (-9.8 * 2.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,145 @@
+//! Axis-aligned bounding boxes, including swept boxes over a timestep
+//! (the CCD broadphase bounds motion from x₀ to x₁).
+
+use crate::math::Vec3;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Aabb {
+    pub lo: Vec3,
+    pub hi: Vec3,
+}
+
+impl Aabb {
+    pub fn empty() -> Aabb {
+        Aabb { lo: Vec3::splat(f64::INFINITY), hi: Vec3::splat(f64::NEG_INFINITY) }
+    }
+
+    pub fn point(p: Vec3) -> Aabb {
+        Aabb { lo: p, hi: p }
+    }
+
+    pub fn from_points(ps: &[Vec3]) -> Aabb {
+        let mut b = Aabb::empty();
+        for &p in ps {
+            b.grow(p);
+        }
+        b
+    }
+
+    #[inline]
+    pub fn grow(&mut self, p: Vec3) {
+        self.lo = self.lo.min_c(p);
+        self.hi = self.hi.max_c(p);
+    }
+
+    #[inline]
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        Aabb { lo: self.lo.min_c(o.lo), hi: self.hi.max_c(o.hi) }
+    }
+
+    /// Inflate uniformly by `m` on all sides (collision thickness).
+    pub fn inflated(&self, m: f64) -> Aabb {
+        Aabb { lo: self.lo - Vec3::splat(m), hi: self.hi + Vec3::splat(m) }
+    }
+
+    #[inline]
+    pub fn overlaps(&self, o: &Aabb) -> bool {
+        self.lo.x <= o.hi.x
+            && o.lo.x <= self.hi.x
+            && self.lo.y <= o.hi.y
+            && o.lo.y <= self.hi.y
+            && self.lo.z <= o.hi.z
+            && o.lo.z <= self.hi.z
+    }
+
+    pub fn center(&self) -> Vec3 {
+        (self.lo + self.hi) * 0.5
+    }
+
+    pub fn extent(&self) -> Vec3 {
+        self.hi - self.lo
+    }
+
+    /// Index of the longest axis (0, 1, 2).
+    pub fn longest_axis(&self) -> usize {
+        let e = self.extent();
+        if e.x >= e.y && e.x >= e.z {
+            0
+        } else if e.y >= e.z {
+            1
+        } else {
+            2
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lo.x > self.hi.x
+    }
+
+    /// Swept bounds of a triangle moving linearly from `a0,b0,c0` to
+    /// `a1,b1,c1`, inflated by thickness `m`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn swept_tri(a0: Vec3, b0: Vec3, c0: Vec3, a1: Vec3, b1: Vec3, c1: Vec3, m: f64) -> Aabb {
+        let mut b = Aabb::empty();
+        for p in [a0, b0, c0, a1, b1, c1] {
+            b.grow(p);
+        }
+        b.inflated(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_and_overlap() {
+        let a = Aabb::from_points(&[Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 1.0, 1.0)]);
+        let b = Aabb::from_points(&[Vec3::new(2.0, 0.0, 0.0), Vec3::new(3.0, 1.0, 1.0)]);
+        assert!(!a.overlaps(&b));
+        assert!(!a.inflated(0.4).overlaps(&b)); // gap is 1.0
+        assert!(a.inflated(1.1).overlaps(&b));
+        let u = a.union(&b);
+        assert_eq!(u.lo, Vec3::new(0.0, 0.0, 0.0));
+        assert_eq!(u.hi, Vec3::new(3.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn touching_boxes_overlap() {
+        let a = Aabb::from_points(&[Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 1.0, 1.0)]);
+        let b = Aabb::from_points(&[Vec3::new(1.0, 0.0, 0.0), Vec3::new(2.0, 1.0, 1.0)]);
+        assert!(a.overlaps(&b));
+    }
+
+    #[test]
+    fn longest_axis_and_center() {
+        let a = Aabb::from_points(&[Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 5.0, 2.0)]);
+        assert_eq!(a.longest_axis(), 1);
+        assert_eq!(a.center(), Vec3::new(0.5, 2.5, 1.0));
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let e = Aabb::empty();
+        assert!(e.is_empty());
+        let a = Aabb::point(Vec3::new(1.0, 2.0, 3.0));
+        assert!(!a.is_empty());
+        assert!(!e.overlaps(&a));
+        let u = e.union(&a);
+        assert_eq!(u.lo, u.hi);
+    }
+
+    #[test]
+    fn swept_tri_covers_both_ends() {
+        let b = Aabb::swept_tri(
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, 0.0),
+            Vec3::new(0.0, 0.0, 5.0),
+            Vec3::new(1.0, 0.0, 5.0),
+            Vec3::new(0.0, 1.0, 5.0),
+            0.1,
+        );
+        assert!(b.lo.z <= -0.1 + 1e-15 && b.hi.z >= 5.1 - 1e-15);
+    }
+}

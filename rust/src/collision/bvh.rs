@@ -1,0 +1,307 @@
+//! Binary bounding-volume hierarchy over face AABBs (paper §5: "we employ
+//! a bounding volume hierarchy to localize and accelerate dynamic
+//! collision detection"). Median-split build, in-place refit, pairwise
+//! descent queries (inter-object and self with adjacency filtering).
+
+use super::aabb::Aabb;
+
+#[derive(Clone, Debug)]
+struct Node {
+    aabb: Aabb,
+    /// Leaf: (first, count) into `order`; internal: left child = i+1,
+    /// right child = `right`.
+    right: u32,
+    first: u32,
+    count: u32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Bvh {
+    nodes: Vec<Node>,
+    /// Primitive indices in tree order.
+    order: Vec<u32>,
+    /// Primitive AABBs (exact leaf-level filtering).
+    prim_aabbs: Vec<Aabb>,
+}
+
+const LEAF_SIZE: usize = 4;
+
+impl Bvh {
+    /// Build over one AABB per primitive.
+    pub fn build(aabbs: &[Aabb]) -> Bvh {
+        let n = aabbs.len();
+        let mut bvh = Bvh {
+            nodes: Vec::with_capacity(2 * n.max(1)),
+            order: (0..n as u32).collect(),
+            prim_aabbs: aabbs.to_vec(),
+        };
+        if n == 0 {
+            return bvh;
+        }
+        let centers: Vec<_> = aabbs.iter().map(|b| b.center()).collect();
+        bvh.build_range(aabbs, &centers, 0, n);
+        bvh
+    }
+
+    fn build_range(&mut self, aabbs: &[Aabb], centers: &[crate::math::Vec3], lo: usize, hi: usize) -> usize {
+        let idx = self.nodes.len();
+        let mut bb = Aabb::empty();
+        for &p in &self.order[lo..hi] {
+            bb = bb.union(&aabbs[p as usize]);
+        }
+        self.nodes.push(Node { aabb: bb, right: 0, first: lo as u32, count: 0 });
+        if hi - lo <= LEAF_SIZE {
+            self.nodes[idx].count = (hi - lo) as u32;
+            return idx;
+        }
+        let axis = bb.longest_axis();
+        let mid = (lo + hi) / 2;
+        self.order[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+            centers[a as usize][axis]
+                .partial_cmp(&centers[b as usize][axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        self.build_range(aabbs, centers, lo, mid);
+        let right = self.build_range(aabbs, centers, mid, hi);
+        self.nodes[idx].right = right as u32;
+        idx
+    }
+
+    /// Refit node bounds bottom-up to updated primitive AABBs (topology
+    /// unchanged). O(n), no reallocation — the per-step hot path.
+    pub fn refit(&mut self, aabbs: &[Aabb]) {
+        assert_eq!(aabbs.len(), self.prim_aabbs.len(), "refit with changed topology");
+        self.prim_aabbs.copy_from_slice(aabbs);
+        for i in (0..self.nodes.len()).rev() {
+            let node = &self.nodes[i];
+            let bb = if node.count > 0 {
+                let mut bb = Aabb::empty();
+                for &p in &self.order[node.first as usize..(node.first + node.count) as usize] {
+                    bb = bb.union(&aabbs[p as usize]);
+                }
+                bb
+            } else {
+                self.nodes[i + 1].aabb.union(&self.nodes[node.right as usize].aabb)
+            };
+            self.nodes[i].aabb = bb;
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn root_aabb(&self) -> Aabb {
+        if self.is_empty() {
+            Aabb::empty()
+        } else {
+            self.nodes[0].aabb
+        }
+    }
+
+    fn leaf_prims(&self, node: usize) -> &[u32] {
+        let n = &self.nodes[node];
+        &self.order[n.first as usize..(n.first + n.count) as usize]
+    }
+
+    /// All primitive pairs (a from self, b from other) whose AABBs overlap.
+    pub fn pairs_with(&self, other: &Bvh, out: &mut Vec<(u32, u32)>) {
+        if self.is_empty() || other.is_empty() {
+            return;
+        }
+        let mut stack = vec![(0usize, 0usize)];
+        while let Some((i, j)) = stack.pop() {
+            let (a, b) = (&self.nodes[i], &other.nodes[j]);
+            if !a.aabb.overlaps(&b.aabb) {
+                continue;
+            }
+            match (a.count > 0, b.count > 0) {
+                (true, true) => {
+                    for &pa in self.leaf_prims(i) {
+                        for &pb in other.leaf_prims(j) {
+                            if self.prim_aabbs[pa as usize].overlaps(&other.prim_aabbs[pb as usize]) {
+                                out.push((pa, pb));
+                            }
+                        }
+                    }
+                }
+                (true, false) => {
+                    stack.push((i, j + 1));
+                    stack.push((i, b.right as usize));
+                }
+                (false, true) => {
+                    stack.push((i + 1, j));
+                    stack.push((a.right as usize, j));
+                }
+                (false, false) => {
+                    stack.push((i + 1, j + 1));
+                    stack.push((i + 1, b.right as usize));
+                    stack.push((a.right as usize, j + 1));
+                    stack.push((a.right as usize, b.right as usize));
+                }
+            }
+        }
+    }
+
+    /// All unordered primitive pairs within this BVH whose AABBs overlap
+    /// (cloth self-collision). Pairs are emitted with a < b.
+    pub fn self_pairs(&self, out: &mut Vec<(u32, u32)>) {
+        if self.is_empty() {
+            return;
+        }
+        self.self_pairs_node(0, out);
+    }
+
+    fn self_pairs_node(&self, i: usize, out: &mut Vec<(u32, u32)>) {
+        let n = &self.nodes[i];
+        if n.count > 0 {
+            let prims = self.leaf_prims(i);
+            for a in 0..prims.len() {
+                for b in a + 1..prims.len() {
+                    let (pa, pb) = (prims[a], prims[b]);
+                    if self.prim_aabbs[pa as usize].overlaps(&self.prim_aabbs[pb as usize]) {
+                        out.push((pa.min(pb), pa.max(pb)));
+                    }
+                }
+            }
+            return;
+        }
+        let (l, r) = (i + 1, n.right as usize);
+        self.self_pairs_node(l, out);
+        self.self_pairs_node(r, out);
+        self.cross_pairs(l, r, out);
+    }
+
+    fn cross_pairs(&self, i: usize, j: usize, out: &mut Vec<(u32, u32)>) {
+        let (a, b) = (&self.nodes[i], &self.nodes[j]);
+        if !a.aabb.overlaps(&b.aabb) {
+            return;
+        }
+        match (a.count > 0, b.count > 0) {
+            (true, true) => {
+                for &pa in self.leaf_prims(i) {
+                    for &pb in self.leaf_prims(j) {
+                        if self.prim_aabbs[pa as usize].overlaps(&self.prim_aabbs[pb as usize]) {
+                            out.push((pa.min(pb), pa.max(pb)));
+                        }
+                    }
+                }
+            }
+            (true, false) => {
+                self.cross_pairs(i, j + 1, out);
+                self.cross_pairs(i, b.right as usize, out);
+            }
+            (false, true) => {
+                self.cross_pairs(i + 1, j, out);
+                self.cross_pairs(a.right as usize, j, out);
+            }
+            (false, false) => {
+                self.cross_pairs(i + 1, j + 1, out);
+                self.cross_pairs(i + 1, b.right as usize, out);
+                self.cross_pairs(a.right as usize, j + 1, out);
+                self.cross_pairs(a.right as usize, b.right as usize, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::Vec3;
+    use crate::util::quick::quick;
+    use std::collections::HashSet;
+
+    fn random_aabbs(g: &mut crate::util::quick::Gen, n: usize, extent: f64) -> Vec<Aabb> {
+        (0..n)
+            .map(|_| {
+                let c = Vec3::new(g.f64(-5.0, 5.0), g.f64(-5.0, 5.0), g.f64(-5.0, 5.0));
+                let e = Vec3::new(g.f64(0.01, extent), g.f64(0.01, extent), g.f64(0.01, extent));
+                Aabb { lo: c - e, hi: c + e }
+            })
+            .collect()
+    }
+
+    fn brute_pairs(a: &[Aabb], b: &[Aabb]) -> HashSet<(u32, u32)> {
+        let mut s = HashSet::new();
+        for i in 0..a.len() {
+            for j in 0..b.len() {
+                if a[i].overlaps(&b[j]) {
+                    s.insert((i as u32, j as u32));
+                }
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn pairs_match_brute_force() {
+        quick("bvh-pairs", 25, |g| {
+            let na = g.usize(1, 60);
+            let nb = g.usize(1, 60);
+            let a = random_aabbs(g, na, 1.0);
+            let b = random_aabbs(g, nb, 1.0);
+            let (ba, bb) = (Bvh::build(&a), Bvh::build(&b));
+            let mut out = Vec::new();
+            ba.pairs_with(&bb, &mut out);
+            let got: HashSet<_> = out.into_iter().collect();
+            assert_eq!(got, brute_pairs(&a, &b));
+        });
+    }
+
+    #[test]
+    fn self_pairs_match_brute_force() {
+        quick("bvh-self-pairs", 25, |g| {
+            let na = g.usize(2, 80);
+            let a = random_aabbs(g, na, 0.8);
+            let bvh = Bvh::build(&a);
+            let mut out = Vec::new();
+            bvh.self_pairs(&mut out);
+            let got: HashSet<_> = out.into_iter().collect();
+            let mut want = HashSet::new();
+            for i in 0..a.len() {
+                for j in i + 1..a.len() {
+                    if a[i].overlaps(&a[j]) {
+                        want.insert((i as u32, j as u32));
+                    }
+                }
+            }
+            assert_eq!(got, want);
+        });
+    }
+
+    #[test]
+    fn refit_tracks_motion() {
+        quick("bvh-refit", 10, |g| {
+            let mut a = random_aabbs(g, 40, 0.5);
+            let mut bvh = Bvh::build(&a);
+            // Move everything, refit, and re-query against a fresh build.
+            for bb in &mut a {
+                let d = Vec3::new(g.f64(-3.0, 3.0), g.f64(-3.0, 3.0), g.f64(-3.0, 3.0));
+                bb.lo += d;
+                bb.hi += d;
+            }
+            bvh.refit(&a);
+            let fresh = Bvh::build(&a);
+            let mut o1 = Vec::new();
+            let mut o2 = Vec::new();
+            bvh.self_pairs(&mut o1);
+            fresh.self_pairs(&mut o2);
+            let s1: HashSet<_> = o1.into_iter().collect();
+            let s2: HashSet<_> = o2.into_iter().collect();
+            assert_eq!(s1, s2);
+        });
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = Bvh::build(&[]);
+        assert!(e.is_empty());
+        let one = Bvh::build(&[Aabb::point(Vec3::default())]);
+        let mut out = Vec::new();
+        one.self_pairs(&mut out);
+        assert!(out.is_empty());
+        e.pairs_with(&one, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,489 @@
+//! Continuous collision detection (paper §5): vertex–face and edge–edge
+//! coplanarity tests over linear trajectories (Bridson et al. 2002),
+//! plus static proximity tests used for resting contact. The paper uses
+//! CCD specifically because "naive discrete-time impulse-based collision
+//! response can lead to completely incorrect gradients" (Hu et al. 2020).
+
+use crate::math::Vec3;
+
+/// Roots of c₃t³ + c₂t² + c₁t + c₀ = 0 inside [0, 1], ascending.
+/// Robust bracketed bisection/Newton on monotonic intervals.
+pub fn cubic_roots_01(c3: f64, c2: f64, c1: f64, c0: f64) -> Vec<f64> {
+    let f = |t: f64| ((c3 * t + c2) * t + c1) * t + c0;
+    // Critical points of the cubic: roots of 3c₃t² + 2c₂t + c₁.
+    let mut knots = vec![0.0, 1.0];
+    let (a, b, c) = (3.0 * c3, 2.0 * c2, c1);
+    if a.abs() > 1e-300 {
+        let disc = b * b - 4.0 * a * c;
+        if disc >= 0.0 {
+            let s = disc.sqrt();
+            for r in [(-b - s) / (2.0 * a), (-b + s) / (2.0 * a)] {
+                if r > 0.0 && r < 1.0 {
+                    knots.push(r);
+                }
+            }
+        }
+    } else if b.abs() > 1e-300 {
+        let r = -c / b;
+        if r > 0.0 && r < 1.0 {
+            knots.push(r);
+        }
+    }
+    knots.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mut roots = Vec::new();
+    let eps = 1e-12;
+    for w in knots.windows(2) {
+        let (lo, hi) = (w[0], w[1]);
+        if hi - lo < 1e-15 {
+            continue;
+        }
+        let (flo, fhi) = (f(lo), f(hi));
+        if flo.abs() < eps {
+            push_root(&mut roots, lo);
+            continue;
+        }
+        if fhi.abs() < eps {
+            push_root(&mut roots, hi);
+            continue;
+        }
+        if flo * fhi > 0.0 {
+            continue;
+        }
+        // Bisection (50 iterations ≈ 1e-15 precision on [0,1]).
+        let (mut lo, mut hi, mut flo) = (lo, hi, flo);
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            let fm = f(mid);
+            if fm == 0.0 {
+                lo = mid;
+                hi = mid;
+                break;
+            }
+            if flo * fm < 0.0 {
+                hi = mid;
+            } else {
+                lo = mid;
+                flo = fm;
+            }
+        }
+        push_root(&mut roots, 0.5 * (lo + hi));
+    }
+    roots
+}
+
+fn push_root(roots: &mut Vec<f64>, r: f64) {
+    if !roots.iter().any(|&x| (x - r).abs() < 1e-9) {
+        roots.push(r);
+    }
+}
+
+/// Coplanarity cubic for four linearly-moving points: returns the
+/// coefficients of (p₂×p₃)·p₄ with pᵢ(t) = (xᵢ−x₁) + t(vᵢ−v₁).
+fn coplanarity_cubic(
+    x1: Vec3,
+    x2: Vec3,
+    x3: Vec3,
+    x4: Vec3,
+    v1: Vec3,
+    v2: Vec3,
+    v3: Vec3,
+    v4: Vec3,
+) -> (f64, f64, f64, f64) {
+    let a2 = x2 - x1;
+    let a3 = x3 - x1;
+    let a4 = x4 - x1;
+    let b2 = v2 - v1;
+    let b3 = v3 - v1;
+    let b4 = v4 - v1;
+    let c0 = a2.cross(a3).dot(a4);
+    let c1 = b2.cross(a3).dot(a4) + a2.cross(b3).dot(a4) + a2.cross(a3).dot(b4);
+    let c2 = a2.cross(b3).dot(b4) + b2.cross(a3).dot(b4) + b2.cross(b3).dot(a4);
+    let c3 = b2.cross(b3).dot(b4);
+    (c3, c2, c1, c0)
+}
+
+/// Barycentric coordinates (α₁, α₂, α₃) of the closest point to `p` on
+/// triangle (a, b, c), clamped to the triangle.
+pub fn closest_point_triangle(p: Vec3, a: Vec3, b: Vec3, c: Vec3) -> (f64, f64, f64) {
+    let ab = b - a;
+    let ac = c - a;
+    let ap = p - a;
+    let d1 = ab.dot(ap);
+    let d2 = ac.dot(ap);
+    if d1 <= 0.0 && d2 <= 0.0 {
+        return (1.0, 0.0, 0.0);
+    }
+    let bp = p - b;
+    let d3 = ab.dot(bp);
+    let d4 = ac.dot(bp);
+    if d3 >= 0.0 && d4 <= d3 {
+        return (0.0, 1.0, 0.0);
+    }
+    let vc = d1 * d4 - d3 * d2;
+    if vc <= 0.0 && d1 >= 0.0 && d3 <= 0.0 {
+        let v = d1 / (d1 - d3);
+        return (1.0 - v, v, 0.0);
+    }
+    let cp = p - c;
+    let d5 = ab.dot(cp);
+    let d6 = ac.dot(cp);
+    if d6 >= 0.0 && d5 <= d6 {
+        return (0.0, 0.0, 1.0);
+    }
+    let vb = d5 * d2 - d1 * d6;
+    if vb <= 0.0 && d2 >= 0.0 && d6 <= 0.0 {
+        let w = d2 / (d2 - d6);
+        return (1.0 - w, 0.0, w);
+    }
+    let va = d3 * d6 - d5 * d4;
+    if va <= 0.0 && (d4 - d3) >= 0.0 && (d5 - d6) >= 0.0 {
+        let w = (d4 - d3) / ((d4 - d3) + (d5 - d6));
+        return (0.0, 1.0 - w, w);
+    }
+    let denom = 1.0 / (va + vb + vc);
+    let v = vb * denom;
+    let w = vc * denom;
+    (1.0 - v - w, v, w)
+}
+
+/// Closest-point parameters (s, t) between segments (p1→p2) and (p3→p4),
+/// both clamped to [0,1].
+pub fn closest_segment_segment(p1: Vec3, p2: Vec3, p3: Vec3, p4: Vec3) -> (f64, f64) {
+    let d1 = p2 - p1;
+    let d2 = p4 - p3;
+    let r = p1 - p3;
+    let a = d1.norm2();
+    let e = d2.norm2();
+    let f = d2.dot(r);
+    if a <= 1e-30 && e <= 1e-30 {
+        return (0.0, 0.0);
+    }
+    if a <= 1e-30 {
+        return (0.0, (f / e).clamp(0.0, 1.0));
+    }
+    let c = d1.dot(r);
+    if e <= 1e-30 {
+        return ((-c / a).clamp(0.0, 1.0), 0.0);
+    }
+    let b = d1.dot(d2);
+    let denom = a * e - b * b;
+    let mut s = if denom.abs() > 1e-30 { ((b * f - c * e) / denom).clamp(0.0, 1.0) } else { 0.0 };
+    let mut t = (b * s + f) / e;
+    if t < 0.0 {
+        t = 0.0;
+        s = (-c / a).clamp(0.0, 1.0);
+    } else if t > 1.0 {
+        t = 1.0;
+        s = ((b - c) / a).clamp(0.0, 1.0);
+    }
+    (s, t)
+}
+
+/// A detected contact event, in the geometry of paper Eq. 4.
+#[derive(Clone, Copy, Debug)]
+pub struct Hit {
+    /// Collision time within the step, in [0, 1] (1.0 for proximity).
+    pub t: f64,
+    /// VF: (α₁, α₂, α₃) of the contact point on the face, α₄ = 1 at the
+    /// vertex. EE: (α₁, α₂) on edge 1, (α₃, α₄) on edge 2 packed as
+    /// [α₁, α₂, α₃, α₄].
+    pub alpha: [f64; 4],
+    /// Contact normal, oriented so the constraint C ≥ 0 separates.
+    pub n: Vec3,
+    /// Signed distance along n at the *end* of the step.
+    pub dist_end: f64,
+}
+
+const COPLANAR_TOL: f64 = 1e-6;
+
+/// Continuous vertex–face test: face (x1, x2, x3) and vertex x4, each
+/// moving by `d*` over the step. `thickness` is the contact offset δ.
+pub fn ccd_vertex_face(
+    x: [Vec3; 4],
+    d: [Vec3; 4],
+    thickness: f64,
+) -> Option<Hit> {
+    let (c3, c2, c1, c0) = coplanarity_cubic(x[0], x[1], x[2], x[3], d[0], d[1], d[2], d[3]);
+    for t in cubic_roots_01(c3, c2, c1, c0) {
+        let p: Vec<Vec3> = (0..4).map(|i| x[i] + d[i] * t).collect();
+        let (a1, a2, a3) = closest_point_triangle(p[3], p[0], p[1], p[2]);
+        let proj = p[0] * a1 + p[1] * a2 + p[2] * a3;
+        let gap = (p[3] - proj).norm();
+        // Inside the (slightly inflated) triangle and near the plane?
+        if gap < thickness + COPLANAR_TOL {
+            // Orient the normal toward the vertex's side at t = 0.
+            let nf = (p[1] - p[0]).cross(p[2] - p[0]).normalized();
+            if nf.norm2() < 0.5 {
+                continue; // degenerate face
+            }
+            let side0 = {
+                let (b1, b2, b3) = closest_point_triangle(x[3], x[0], x[1], x[2]);
+                let proj0 = x[0] * b1 + x[1] * b2 + x[2] * b3;
+                let n0 = (x[1] - x[0]).cross(x[2] - x[0]).normalized();
+                n0.dot(x[3] - proj0)
+            };
+            let n = if side0 >= 0.0 { nf } else { -nf };
+            // Signed end-of-step distance for the constraint RHS.
+            let pe: Vec<Vec3> = (0..4).map(|i| x[i] + d[i]).collect();
+            let proj_e = pe[0] * a1 + pe[1] * a2 + pe[2] * a3;
+            let dist_end = n.dot(pe[3] - proj_e);
+            return Some(Hit { t, alpha: [a1, a2, a3, 1.0], n, dist_end });
+        }
+    }
+    None
+}
+
+/// Continuous edge–edge test: edge (x1→x2) and edge (x3→x4).
+pub fn ccd_edge_edge(x: [Vec3; 4], d: [Vec3; 4], thickness: f64) -> Option<Hit> {
+    let (c3, c2, c1, c0) = coplanarity_cubic(x[0], x[1], x[2], x[3], d[0], d[1], d[2], d[3]);
+    for t in cubic_roots_01(c3, c2, c1, c0) {
+        let p: Vec<Vec3> = (0..4).map(|i| x[i] + d[i] * t).collect();
+        let (s, u) = closest_segment_segment(p[0], p[1], p[2], p[3]);
+        // Interior contacts only: endpoint cases are covered by the VF
+        // tests, and their cross-product normals are ill-defined (a
+        // vertical edge grazing a face edge yields junk diagonals that
+        // would wrongly constrain tangential motion).
+        const END: f64 = 1e-4;
+        if !(END..=1.0 - END).contains(&s) || !(END..=1.0 - END).contains(&u) {
+            continue;
+        }
+        let q1 = p[0].lerp(p[1], s);
+        let q2 = p[2].lerp(p[3], u);
+        if (q2 - q1).norm() < thickness + COPLANAR_TOL {
+            let n = (p[1] - p[0]).cross(p[3] - p[2]).normalized();
+            if n.norm2() < 0.5 {
+                // (Near-)parallel edges: the constraint direction is
+                // ill-defined and the contact is covered by VF tests.
+                continue;
+            }
+            let mut n = n;
+            // Orient from edge-1 toward edge-2 at t = 0.
+            let (s0, u0) = closest_segment_segment(x[0], x[1], x[2], x[3]);
+            let w0 = x[2].lerp(x[3], u0) - x[0].lerp(x[1], s0);
+            if n.dot(w0) < 0.0 {
+                n = -n;
+            }
+            let pe: Vec<Vec3> = (0..4).map(|i| x[i] + d[i]).collect();
+            let dist_end =
+                n.dot(pe[2].lerp(pe[3], u) - pe[0].lerp(pe[1], s));
+            return Some(Hit { t, alpha: [1.0 - s, s, 1.0 - u, u], n, dist_end });
+        }
+    }
+    None
+}
+
+/// Static vertex–face proximity at the end-of-step positions; generates
+/// resting/contact constraints before penetration happens.
+pub fn proximity_vertex_face(x: [Vec3; 4], thickness: f64) -> Option<Hit> {
+    let (a1, a2, a3) = closest_point_triangle(x[3], x[0], x[1], x[2]);
+    let proj = x[0] * a1 + x[1] * a2 + x[2] * a3;
+    let delta = x[3] - proj;
+    let gap = delta.norm();
+    if gap >= thickness || gap < 1e-12 {
+        return None;
+    }
+    let nf = (x[1] - x[0]).cross(x[2] - x[0]).normalized();
+    if nf.norm2() < 0.5 {
+        return None;
+    }
+    let n = if nf.dot(delta) >= 0.0 { nf } else { -nf };
+    Some(Hit { t: 1.0, alpha: [a1, a2, a3, 1.0], n, dist_end: n.dot(delta) })
+}
+
+/// Static edge–edge proximity.
+pub fn proximity_edge_edge(x: [Vec3; 4], thickness: f64) -> Option<Hit> {
+    let (s, u) = closest_segment_segment(x[0], x[1], x[2], x[3]);
+    let q1 = x[0].lerp(x[1], s);
+    let q2 = x[2].lerp(x[3], u);
+    let delta = q2 - q1;
+    let gap = delta.norm();
+    if gap >= thickness || gap < 1e-12 {
+        return None;
+    }
+    // Interior contacts only (see ccd_edge_edge): endpoint cases are the
+    // VF tests' job and carry ill-defined normals.
+    const END: f64 = 1e-4;
+    if !(END..=1.0 - END).contains(&s) || !(END..=1.0 - END).contains(&u) {
+        return None;
+    }
+    let mut n = (x[1] - x[0]).cross(x[3] - x[2]).normalized();
+    if n.norm2() < 0.5 {
+        return None; // near-parallel edges: VF covers this contact
+    }
+    if n.dot(delta) < 0.0 {
+        n = -n;
+    }
+    Some(Hit { t: 1.0, alpha: [1.0 - s, s, 1.0 - u, u], n, dist_end: n.dot(delta) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    #[test]
+    fn cubic_roots_known() {
+        // (t-0.25)(t-0.5)(t-0.75) = t³ -1.5t² +0.6875t -0.09375
+        let r = cubic_roots_01(1.0, -1.5, 0.6875, -0.09375);
+        assert_eq!(r.len(), 3);
+        for (got, want) in r.iter().zip([0.25, 0.5, 0.75]) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // No roots in range.
+        assert!(cubic_roots_01(1.0, 0.0, 0.0, 1.0).is_empty());
+        // Linear case.
+        let r = cubic_roots_01(0.0, 0.0, 2.0, -1.0);
+        assert_eq!(r.len(), 1);
+        assert!((r[0] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_roots_random_polys() {
+        quick("cubic-roots", 200, |g| {
+            let roots_true: Vec<f64> = (0..3).map(|_| g.f64(-0.5, 1.5)).collect();
+            let (r1, r2, r3) = (roots_true[0], roots_true[1], roots_true[2]);
+            // (t-r1)(t-r2)(t-r3)
+            let c2 = -(r1 + r2 + r3);
+            let c1 = r1 * r2 + r1 * r3 + r2 * r3;
+            let c0 = -r1 * r2 * r3;
+            let got = cubic_roots_01(1.0, c2, c1, c0);
+            // Every claimed root is a root; every true root in (0,1) is found.
+            let f = |t: f64| ((t + c2) * t + c1) * t + c0;
+            for &r in &got {
+                assert!(f(r).abs() < 1e-7, "f({r}) = {}", f(r));
+            }
+            for &r in &roots_true {
+                if r > 1e-6 && r < 1.0 - 1e-6
+                    && roots_true.iter().all(|&o| o == r || (o - r).abs() > 1e-4)
+                {
+                    assert!(
+                        got.iter().any(|&x| (x - r).abs() < 1e-6),
+                        "missing root {r} in {got:?}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn vertex_falls_onto_triangle() {
+        let x = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.25, 1.0, 0.25),
+        ];
+        let d = [Vec3::default(), Vec3::default(), Vec3::default(), Vec3::new(0.0, -2.0, 0.0)];
+        let hit = ccd_vertex_face(x, d, 1e-4).expect("must hit");
+        assert!((hit.t - 0.5).abs() < 1e-6, "t={}", hit.t);
+        assert!(hit.n.dot(Vec3::new(0.0, 1.0, 0.0)) > 0.99, "n={:?}", hit.n);
+        // Barycentric of (0.25, 0.25) in that triangle.
+        assert!((hit.alpha[0] - 0.5).abs() < 1e-6);
+        assert!((hit.alpha[1] - 0.25).abs() < 1e-6);
+        assert!((hit.alpha[2] - 0.25).abs() < 1e-6);
+        assert!(hit.dist_end < 0.0); // ends up penetrated
+    }
+
+    #[test]
+    fn vertex_missing_triangle_is_none() {
+        let x = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(3.0, 1.0, 3.0), // passes beside the triangle
+        ];
+        let d = [Vec3::default(), Vec3::default(), Vec3::default(), Vec3::new(0.0, -2.0, 0.0)];
+        assert!(ccd_vertex_face(x, d, 1e-4).is_none());
+    }
+
+    #[test]
+    fn edges_crossing() {
+        let x = [
+            Vec3::new(-1.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, -1.0),
+            Vec3::new(0.0, 1.0, 1.0),
+        ];
+        let d = [
+            Vec3::default(),
+            Vec3::default(),
+            Vec3::new(0.0, -2.0, 0.0),
+            Vec3::new(0.0, -2.0, 0.0),
+        ];
+        let hit = ccd_edge_edge(x, d, 1e-4).expect("edges must collide");
+        assert!((hit.t - 0.5).abs() < 1e-6);
+        assert!((hit.alpha[0] - 0.5).abs() < 1e-6); // midpoint of edge 1
+        assert!((hit.alpha[2] - 0.5).abs() < 1e-6); // midpoint of edge 2
+    }
+
+    #[test]
+    fn proximity_tests_fire_inside_thickness() {
+        let x = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.2, 0.005, 0.2),
+        ];
+        let hit = proximity_vertex_face(x, 0.01).expect("within thickness");
+        assert!(hit.dist_end > 0.0 && hit.dist_end < 0.01);
+        assert!(proximity_vertex_face(x, 0.001).is_none());
+    }
+
+    #[test]
+    fn closest_point_triangle_regions() {
+        let (a, b, c) =
+            (Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 0.0, 0.0), Vec3::new(0.0, 1.0, 0.0));
+        // Interior.
+        let (a1, a2, a3) = closest_point_triangle(Vec3::new(0.25, 0.25, 5.0), a, b, c);
+        assert!((a1 - 0.5).abs() < 1e-12 && (a2 - 0.25).abs() < 1e-12 && (a3 - 0.25).abs() < 1e-12);
+        // Vertex region.
+        let (a1, _, _) = closest_point_triangle(Vec3::new(-1.0, -1.0, 0.0), a, b, c);
+        assert_eq!(a1, 1.0);
+        // Edge region.
+        let (a1, a2, a3) = closest_point_triangle(Vec3::new(0.5, -1.0, 0.0), a, b, c);
+        assert!((a1 - 0.5).abs() < 1e-12 && (a2 - 0.5).abs() < 1e-12 && a3 == 0.0);
+    }
+
+    #[test]
+    fn closest_segments_basic() {
+        let (s, t) = closest_segment_segment(
+            Vec3::new(-1.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 1.0, -1.0),
+            Vec3::new(0.0, 1.0, 1.0),
+        );
+        assert!((s - 0.5).abs() < 1e-12);
+        assert!((t - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ccd_agrees_with_dense_sampling() {
+        quick("ccd-vs-sampling", 50, |g| {
+            let x: Vec<Vec3> = (0..4).map(|_| Vec3::from_slice(&g.vec_normal(3))).collect();
+            let d: Vec<Vec3> =
+                (0..4).map(|_| Vec3::from_slice(&g.vec_normal(3)) * 0.8).collect();
+            let x4 = [x[0], x[1], x[2], x[3]];
+            let d4 = [d[0], d[1], d[2], d[3]];
+            let hit = ccd_vertex_face(x4, d4, 1e-5);
+            // Dense sampling of the vertex–plane gap.
+            let mut min_gap = f64::MAX;
+            for k in 0..=400 {
+                let t = k as f64 / 400.0;
+                let p: Vec<Vec3> = (0..4).map(|i| x4[i] + d4[i] * t).collect();
+                let (b1, b2, b3) = closest_point_triangle(p[3], p[0], p[1], p[2]);
+                let proj = p[0] * b1 + p[1] * b2 + p[2] * b3;
+                min_gap = min_gap.min((p[3] - proj).norm());
+            }
+            if let Some(h) = hit {
+                // At the reported time the gap must be tiny.
+                let p: Vec<Vec3> = (0..4).map(|i| x4[i] + d4[i] * h.t).collect();
+                let (b1, b2, b3) = closest_point_triangle(p[3], p[0], p[1], p[2]);
+                let proj = p[0] * b1 + p[1] * b2 + p[2] * b3;
+                assert!((p[3] - proj).norm() < 2e-3, "gap at hit = {}", (p[3] - proj).norm());
+            } else {
+                // No hit ⇒ sampled gap never went below ~thickness.
+                assert!(min_gap > 1e-7, "sampling found contact (gap {min_gap}) but CCD missed");
+            }
+        });
+    }
+}

@@ -1,0 +1,522 @@
+//! Scalable collision handling (paper §5): BVH broadphase over swept face
+//! bounds, continuous + proximity narrowphase producing `Impact`s
+//! (Eq. 4), grouped into independent impact zones (`zones`).
+pub mod aabb;
+pub mod bvh;
+pub mod ccd;
+pub mod zones;
+
+use crate::bodies::{NodeRef, System};
+use crate::math::Vec3;
+use aabb::Aabb;
+use bvh::Bvh;
+use std::collections::HashSet;
+
+/// Which body a surface belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BodyId {
+    Rigid(u32),
+    Cloth(u32),
+}
+
+/// An impact: one VF or EE contact pair (paper Eq. 4), normalized to the
+/// constraint form C(x) = n · Σᵢ wᵢ·xᵢ − δ ≥ 0 over four surface nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Impact {
+    pub nodes: [NodeRef; 4],
+    /// Signed weights: VF ⇒ [−α₁, −α₂, −α₃, 1]; EE ⇒ [−α₁, −α₂, α₃, α₄].
+    pub w: [f64; 4],
+    pub n: Vec3,
+    /// Collision time within the step ([0,1]; 1 for proximity contacts).
+    pub t: f64,
+}
+
+impl Impact {
+    /// Evaluate C(x) + δ = n·Σwᵢxᵢ given node positions.
+    pub fn gap(&self, pos: impl Fn(NodeRef) -> Vec3) -> f64 {
+        let mut s = 0.0;
+        for k in 0..4 {
+            s += self.w[k] * self.n.dot(pos(self.nodes[k]));
+        }
+        s
+    }
+}
+
+/// Per-body surface snapshot used by the collision pass: start-of-step
+/// and candidate end-of-step world positions.
+pub struct Surface {
+    pub body: BodyId,
+    pub faces: Vec<[u32; 3]>,
+    pub edges: Vec<[u32; 2]>,
+    pub x0: Vec<Vec3>,
+    pub x1: Vec<Vec3>,
+    pub fixed: bool,
+    pub bvh: Bvh,
+    aabbs: Vec<Aabb>,
+    /// Edges per face (indices into `edges`) for EE dedup.
+    face_edges: Vec<[u32; 3]>,
+}
+
+impl Surface {
+    pub fn new(
+        body: BodyId,
+        faces: Vec<[u32; 3]>,
+        x0: Vec<Vec3>,
+        x1: Vec<Vec3>,
+        fixed: bool,
+        thickness: f64,
+    ) -> Surface {
+        // Unique edges + face→edge map.
+        let mut edge_map = std::collections::HashMap::new();
+        let mut edges: Vec<[u32; 2]> = Vec::new();
+        let mut face_edges = Vec::with_capacity(faces.len());
+        for f in &faces {
+            let mut fe = [0u32; 3];
+            for k in 0..3 {
+                let (a, b) = (f[k], f[(k + 1) % 3]);
+                let key = if a < b { (a, b) } else { (b, a) };
+                let id = *edge_map.entry(key).or_insert_with(|| {
+                    edges.push([key.0, key.1]);
+                    edges.len() - 1
+                });
+                fe[k] = id as u32;
+            }
+            face_edges.push(fe);
+        }
+        let aabbs: Vec<Aabb> = faces
+            .iter()
+            .map(|f| {
+                Aabb::swept_tri(
+                    x0[f[0] as usize],
+                    x0[f[1] as usize],
+                    x0[f[2] as usize],
+                    x1[f[0] as usize],
+                    x1[f[1] as usize],
+                    x1[f[2] as usize],
+                    thickness,
+                )
+            })
+            .collect();
+        let bvh = Bvh::build(&aabbs);
+        Surface { body, faces, edges, x0, x1, fixed, bvh, aabbs, face_edges }
+    }
+
+    fn node_ref(&self, local: u32) -> NodeRef {
+        match self.body {
+            BodyId::Rigid(b) => NodeRef::Rigid { body: b, vert: local },
+            BodyId::Cloth(c) => NodeRef::Cloth { cloth: c, node: local },
+        }
+    }
+
+    pub fn root_aabb(&self) -> Aabb {
+        self.bvh.root_aabb()
+    }
+
+    /// Update the candidate end-of-step positions and refit the BVH in
+    /// place (topology unchanged) — O(n) instead of a fresh build. The
+    /// per-step hot path: fail-safe passes re-detect after zone solves.
+    pub fn update_candidates(&mut self, x1: Vec<Vec3>, thickness: f64) {
+        assert_eq!(x1.len(), self.x1.len());
+        self.x1 = x1;
+        for (f, bb) in self.faces.iter().zip(self.aabbs.iter_mut()) {
+            *bb = Aabb::swept_tri(
+                self.x0[f[0] as usize],
+                self.x0[f[1] as usize],
+                self.x0[f[2] as usize],
+                self.x1[f[0] as usize],
+                self.x1[f[1] as usize],
+                self.x1[f[2] as usize],
+                thickness,
+            );
+        }
+        self.bvh.refit(&self.aabbs);
+    }
+}
+
+/// Build surfaces from the system: `x1` come from candidate positions
+/// provided per body (same layout as the body's vertices).
+pub fn surfaces_from_system(
+    sys: &System,
+    rigid_x1: &[Vec<Vec3>],
+    cloth_x1: &[Vec<Vec3>],
+    thickness: f64,
+) -> Vec<Surface> {
+    let mut out = Vec::with_capacity(sys.rigids.len() + sys.cloths.len());
+    for (i, b) in sys.rigids.iter().enumerate() {
+        out.push(Surface::new(
+            BodyId::Rigid(i as u32),
+            b.mesh0.faces.clone(),
+            b.world_verts(),
+            rigid_x1[i].clone(),
+            b.frozen,
+            thickness,
+        ));
+    }
+    for (c, cl) in sys.cloths.iter().enumerate() {
+        out.push(Surface::new(
+            BodyId::Cloth(c as u32),
+            cl.faces.clone(),
+            cl.x.clone(),
+            cloth_x1[c].clone(),
+            false,
+            thickness,
+        ));
+    }
+    out
+}
+
+/// Statistics from one detection pass (coordinator metrics / Fig. 2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DetectStats {
+    pub body_pairs: usize,
+    pub face_pairs: usize,
+    pub vf_tests: usize,
+    pub ee_tests: usize,
+    pub impacts: usize,
+}
+
+/// Full collision detection across all surfaces. Returns every VF and EE
+/// impact between distinct bodies, plus cloth self-collisions.
+pub fn detect(surfaces: &[Surface], thickness: f64) -> (Vec<Impact>, DetectStats) {
+    let mut impacts = Vec::new();
+    let mut stats = DetectStats::default();
+    let mut face_pairs: Vec<(u32, u32)> = Vec::new();
+    for i in 0..surfaces.len() {
+        for j in i + 1..surfaces.len() {
+            let (a, b) = (&surfaces[i], &surfaces[j]);
+            if a.fixed && b.fixed {
+                continue;
+            }
+            if !a.root_aabb().overlaps(&b.root_aabb()) {
+                continue;
+            }
+            stats.body_pairs += 1;
+            face_pairs.clear();
+            a.bvh.pairs_with(&b.bvh, &mut face_pairs);
+            stats.face_pairs += face_pairs.len();
+            narrowphase_pair(a, b, &face_pairs, thickness, &mut impacts, &mut stats);
+        }
+    }
+    // Cloth self-collision.
+    for s in surfaces {
+        if let BodyId::Cloth(_) = s.body {
+            face_pairs.clear();
+            s.bvh.self_pairs(&mut face_pairs);
+            let filtered: Vec<(u32, u32)> = face_pairs
+                .iter()
+                .copied()
+                .filter(|&(fa, fb)| {
+                    let (a, b) = (s.faces[fa as usize], s.faces[fb as usize]);
+                    !a.iter().any(|v| b.contains(v))
+                })
+                .collect();
+            stats.face_pairs += filtered.len();
+            narrowphase_pair(s, s, &filtered, thickness, &mut impacts, &mut stats);
+        }
+    }
+    // Deduplicate VF impacts: a vertex near the shared edge of two
+    // coplanar faces of the same body fires against both, producing
+    // duplicated constraint rows that make the zone KKT system singular.
+    // Keep one impact per (vertex, opposing body, quantized normal),
+    // preferring the earliest collision time.
+    let impacts = dedup_vf(impacts);
+    stats.impacts = impacts.len();
+    (impacts, stats)
+}
+
+fn body_of(n: NodeRef) -> BodyId {
+    match n {
+        NodeRef::Rigid { body, .. } => BodyId::Rigid(body),
+        NodeRef::Cloth { cloth, .. } => BodyId::Cloth(cloth),
+    }
+}
+
+/// One VF impact per (vertex, opposing body, ~normal); earliest t wins.
+fn dedup_vf(impacts: Vec<Impact>) -> Vec<Impact> {
+    let mut out: Vec<Impact> = Vec::with_capacity(impacts.len());
+    let mut best: std::collections::HashMap<(NodeRef, BodyId, [i64; 3]), usize> =
+        std::collections::HashMap::new();
+    for im in impacts {
+        let is_vf = im.w[3] == 1.0;
+        if !is_vf {
+            out.push(im);
+            continue;
+        }
+        let nq = [
+            (im.n.x * 1e3).round() as i64,
+            (im.n.y * 1e3).round() as i64,
+            (im.n.z * 1e3).round() as i64,
+        ];
+        let key = (im.nodes[3], body_of(im.nodes[0]), nq);
+        match best.entry(key) {
+            std::collections::hash_map::Entry::Occupied(e) => {
+                let idx = *e.get();
+                if im.t < out[idx].t {
+                    out[idx] = im;
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(out.len());
+                out.push(im);
+            }
+        }
+    }
+    out
+}
+
+fn narrowphase_pair(
+    a: &Surface,
+    b: &Surface,
+    face_pairs: &[(u32, u32)],
+    thickness: f64,
+    impacts: &mut Vec<Impact>,
+    stats: &mut DetectStats,
+) {
+    let same = std::ptr::eq(a, b);
+    let mut vf_seen: HashSet<(u32, u32, bool)> = HashSet::new();
+    let mut ee_seen: HashSet<(u32, u32)> = HashSet::new();
+    for &(fa, fb) in face_pairs {
+        if !a.aabbs[fa as usize].overlaps(&b.aabbs[fb as usize]) {
+            continue;
+        }
+        let tri_a = a.faces[fa as usize];
+        let tri_b = b.faces[fb as usize];
+        // Vertices of B against face of A.
+        for &v in &tri_b {
+            if same && tri_a.contains(&v) {
+                continue;
+            }
+            if vf_seen.insert((fa, v, false)) {
+                stats.vf_tests += 1;
+                test_vf(a, tri_a, b, v, thickness, impacts);
+            }
+        }
+        // Vertices of A against face of B.
+        for &v in &tri_a {
+            if same && tri_b.contains(&v) {
+                continue;
+            }
+            if vf_seen.insert((fb, v, true)) {
+                stats.vf_tests += 1;
+                test_vf(b, tri_b, a, v, thickness, impacts);
+            }
+        }
+        // Edge–edge.
+        for &ea in &a.face_edges[fa as usize] {
+            for &eb in &b.face_edges[fb as usize] {
+                let e1 = a.edges[ea as usize];
+                let e2 = b.edges[eb as usize];
+                if same && (e1.contains(&e2[0]) || e1.contains(&e2[1])) {
+                    continue;
+                }
+                if ee_seen.insert((ea, eb)) {
+                    stats.ee_tests += 1;
+                    test_ee(a, e1, b, e2, thickness, impacts);
+                }
+            }
+        }
+    }
+}
+
+fn test_vf(
+    face_surf: &Surface,
+    tri: [u32; 3],
+    vert_surf: &Surface,
+    v: u32,
+    thickness: f64,
+    impacts: &mut Vec<Impact>,
+) {
+    let x = [
+        face_surf.x0[tri[0] as usize],
+        face_surf.x0[tri[1] as usize],
+        face_surf.x0[tri[2] as usize],
+        vert_surf.x0[v as usize],
+    ];
+    let d = [
+        face_surf.x1[tri[0] as usize] - x[0],
+        face_surf.x1[tri[1] as usize] - x[1],
+        face_surf.x1[tri[2] as usize] - x[2],
+        vert_surf.x1[v as usize] - x[3],
+    ];
+    let hit = ccd::ccd_vertex_face(x, d, thickness).or_else(|| {
+        let xe = [
+            face_surf.x1[tri[0] as usize],
+            face_surf.x1[tri[1] as usize],
+            face_surf.x1[tri[2] as usize],
+            vert_surf.x1[v as usize],
+        ];
+        ccd::proximity_vertex_face(xe, thickness)
+    });
+    if let Some(h) = hit {
+        impacts.push(Impact {
+            nodes: [
+                face_surf.node_ref(tri[0]),
+                face_surf.node_ref(tri[1]),
+                face_surf.node_ref(tri[2]),
+                vert_surf.node_ref(v),
+            ],
+            w: [-h.alpha[0], -h.alpha[1], -h.alpha[2], 1.0],
+            n: h.n,
+            t: h.t,
+        });
+    }
+}
+
+fn test_ee(
+    sa: &Surface,
+    e1: [u32; 2],
+    sb: &Surface,
+    e2: [u32; 2],
+    thickness: f64,
+    impacts: &mut Vec<Impact>,
+) {
+    let x = [
+        sa.x0[e1[0] as usize],
+        sa.x0[e1[1] as usize],
+        sb.x0[e2[0] as usize],
+        sb.x0[e2[1] as usize],
+    ];
+    let d = [
+        sa.x1[e1[0] as usize] - x[0],
+        sa.x1[e1[1] as usize] - x[1],
+        sb.x1[e2[0] as usize] - x[2],
+        sb.x1[e2[1] as usize] - x[3],
+    ];
+    let hit = ccd::ccd_edge_edge(x, d, thickness).or_else(|| {
+        let xe = [
+            sa.x1[e1[0] as usize],
+            sa.x1[e1[1] as usize],
+            sb.x1[e2[0] as usize],
+            sb.x1[e2[1] as usize],
+        ];
+        ccd::proximity_edge_edge(xe, thickness)
+    });
+    if let Some(h) = hit {
+        impacts.push(Impact {
+            nodes: [
+                sa.node_ref(e1[0]),
+                sa.node_ref(e1[1]),
+                sb.node_ref(e2[0]),
+                sb.node_ref(e2[1]),
+            ],
+            w: [-h.alpha[0], -h.alpha[1], h.alpha[2], h.alpha[3]],
+            n: h.n,
+            t: h.t,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::RigidBody;
+    use crate::mesh::primitives::{cloth_grid, unit_box};
+
+    fn falling_box_system(height: f64) -> (System, Vec<Vec<Vec3>>, Vec<Vec<Vec3>>) {
+        let mut sys = System::new();
+        let ground = RigidBody::frozen_from_mesh(
+            crate::mesh::primitives::box_mesh(Vec3::new(5.0, 0.5, 5.0)),
+        )
+        .with_position(Vec3::new(0.0, -0.5, 0.0));
+        sys.add_rigid(ground);
+        let cube = RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, height, 0.0));
+        sys.add_rigid(cube);
+        // Candidate positions: cube moves down by `height` (through floor).
+        let r0 = sys.rigids[0].world_verts();
+        let mut r1 = sys.rigids[1].world_verts();
+        for v in &mut r1 {
+            v.y -= height;
+        }
+        (sys.clone(), vec![r0, sys.rigids[1].world_verts()], vec![sys.rigids[0].world_verts(), r1])
+    }
+
+    #[test]
+    fn falling_cube_hits_ground() {
+        let (sys, _x0, x1) = falling_box_system(1.0);
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, stats) = detect(&surfs, 1e-3);
+        assert!(!impacts.is_empty(), "stats: {stats:?}");
+        // All impacts involve the cube (body 1) and the ground (body 0).
+        for im in &impacts {
+            let bodies: HashSet<_> = im
+                .nodes
+                .iter()
+                .map(|n| match n {
+                    NodeRef::Rigid { body, .. } => *body,
+                    _ => 99,
+                })
+                .collect();
+            assert!(bodies.contains(&1));
+        }
+        // The VF contacts with the ground's top face point up. (EE
+        // impacts at cube corners legitimately have diagonal normals.)
+        let up = impacts.iter().filter(|im| im.n.y > 0.7).count();
+        assert!(up >= 1, "no upward-normal impacts");
+    }
+
+    #[test]
+    fn separated_bodies_no_impacts() {
+        let (sys, _x0, mut x1) = falling_box_system(3.0);
+        // Candidate barely moves: no contact.
+        for v in &mut x1[1] {
+            v.y += 2.9; // ends at 2.9 above ground
+        }
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        assert!(impacts.is_empty(), "found {} impacts", impacts.len());
+    }
+
+    #[test]
+    fn cloth_vertex_hits_rigid_face() {
+        let mut sys = System::new();
+        let cube = RigidBody::frozen_from_mesh(unit_box());
+        sys.add_rigid(cube);
+        let cloth = crate::bodies::Cloth::from_grid(
+            cloth_grid(4, 4, 1.0, 1.0).translated(Vec3::new(0.0, 1.0, 0.0)),
+            0.1,
+            100.0,
+            1.0,
+            0.0,
+        );
+        sys.add_cloth(cloth);
+        let r1 = vec![sys.rigids[0].world_verts()];
+        // Cloth falls 0.6 (through the cube top at y=0.5).
+        let c1: Vec<Vec3> =
+            sys.cloths[0].x.iter().map(|&p| p - Vec3::new(0.0, 0.6, 0.0)).collect();
+        let surfs = surfaces_from_system(&sys, &r1, &[c1], 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        assert!(!impacts.is_empty());
+        let has_cloth = impacts.iter().any(|im| {
+            im.nodes.iter().any(|n| matches!(n, NodeRef::Cloth { .. }))
+        });
+        assert!(has_cloth);
+    }
+
+    #[test]
+    fn impact_gap_sign_convention() {
+        // A VF impact's gap should be positive when the vertex is on the
+        // normal side, negative when penetrated.
+        let (sys, _x0, x1) = falling_box_system(1.0);
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        let im = impacts[0];
+        // Gap at start-of-step (cube above ground): positive.
+        let gap0 = im.gap(|n| sys.node_pos(n));
+        assert!(gap0 > 0.0, "gap0 = {gap0}");
+    }
+
+    #[test]
+    fn fixed_fixed_pairs_skipped() {
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::frozen_from_mesh(unit_box()));
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(unit_box()).with_position(Vec3::new(0.2, 0.0, 0.0)),
+        );
+        let x1 = vec![sys.rigids[0].world_verts(), sys.rigids[1].world_verts()];
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, stats) = detect(&surfs, 1e-3);
+        assert!(impacts.is_empty());
+        assert_eq!(stats.body_pairs, 0);
+    }
+}

@@ -1,0 +1,318 @@
+//! Impact zones (paper §5): "All the impacts in one connected component
+//! are said to form an impact zone. Each impact zone is a local area that
+//! can be treated independently."
+//!
+//! Connectivity is via shared *entities*: a rigid body is one entity (all
+//! its vertices are tied through its 6 DOFs), a cloth node is one entity.
+//! Fixed entities (frozen bodies, pinned nodes) never merge zones — they
+//! contribute constraint geometry but no optimization variables.
+
+use super::Impact;
+use crate::bodies::{NodeRef, System};
+use std::collections::HashMap;
+
+/// Union–find with path compression + union by size.
+#[derive(Clone, Debug, Default)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    size: Vec<u32>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> UnionFind {
+        UnionFind { parent: (0..n as u32).collect(), size: vec![1; n] }
+    }
+
+    pub fn find(&mut self, x: usize) -> usize {
+        let mut root = x;
+        while self.parent[root] as usize != root {
+            root = self.parent[root] as usize;
+        }
+        // Path compression.
+        let mut cur = x;
+        while self.parent[cur] as usize != root {
+            let next = self.parent[cur] as usize;
+            self.parent[cur] = root as u32;
+            cur = next;
+        }
+        root
+    }
+
+    pub fn union(&mut self, a: usize, b: usize) {
+        let (mut ra, mut rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return;
+        }
+        if self.size[ra] < self.size[rb] {
+            std::mem::swap(&mut ra, &mut rb);
+        }
+        self.parent[rb] = ra as u32;
+        self.size[ra] += self.size[rb];
+    }
+
+    pub fn same(&mut self, a: usize, b: usize) -> bool {
+        self.find(a) == self.find(b)
+    }
+}
+
+/// A movable entity participating in zone optimization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Entity {
+    /// Rigid body index — contributes 6 DOFs.
+    Rigid(u32),
+    /// (cloth, node) — contributes 3 DOFs.
+    ClothNode(u32, u32),
+}
+
+impl Entity {
+    pub fn dofs(&self) -> usize {
+        match self {
+            Entity::Rigid(_) => 6,
+            Entity::ClothNode(..) => 3,
+        }
+    }
+}
+
+/// Movable entity owning a surface node (None if fixed).
+pub fn entity_of(sys: &System, n: NodeRef) -> Option<Entity> {
+    match n {
+        NodeRef::Rigid { body, .. } => {
+            if sys.rigids[body as usize].frozen {
+                None
+            } else {
+                Some(Entity::Rigid(body))
+            }
+        }
+        NodeRef::Cloth { cloth, node } => {
+            if sys.cloths[cloth as usize].pinned[node as usize] {
+                None
+            } else {
+                Some(Entity::ClothNode(cloth, node))
+            }
+        }
+    }
+}
+
+/// One independent impact zone: its impacts and the movable entities
+/// whose generalized coordinates are the optimization variables (Eq. 6).
+#[derive(Clone, Debug)]
+pub struct ImpactZone {
+    pub impacts: Vec<Impact>,
+    /// Sorted, deduplicated movable entities.
+    pub entities: Vec<Entity>,
+}
+
+impl ImpactZone {
+    /// Total DOF count n of the zone optimization.
+    pub fn n_dofs(&self) -> usize {
+        self.entities.iter().map(Entity::dofs).sum()
+    }
+
+    /// Constraint count m.
+    pub fn n_constraints(&self) -> usize {
+        self.impacts.len()
+    }
+}
+
+/// Partition impacts into independent zones (union–find over shared
+/// movable entities). Impacts touching only fixed entities are dropped.
+pub fn build_zones(sys: &System, impacts: &[Impact]) -> Vec<ImpactZone> {
+    // Map entity -> dense id.
+    let mut ids: HashMap<Entity, usize> = HashMap::new();
+    let mut ents: Vec<Entity> = Vec::new();
+    let mut impact_entities: Vec<Vec<usize>> = Vec::with_capacity(impacts.len());
+    for im in impacts {
+        let mut list = Vec::with_capacity(4);
+        for &n in &im.nodes {
+            if let Some(e) = entity_of(sys, n) {
+                let id = *ids.entry(e).or_insert_with(|| {
+                    ents.push(e);
+                    ents.len() - 1
+                });
+                if !list.contains(&id) {
+                    list.push(id);
+                }
+            }
+        }
+        impact_entities.push(list);
+    }
+    let mut uf = UnionFind::new(ents.len());
+    for list in &impact_entities {
+        for w in list.windows(2) {
+            uf.union(w[0], w[1]);
+        }
+    }
+    // Group impacts by the root of their first movable entity.
+    let mut zones: HashMap<usize, ImpactZone> = HashMap::new();
+    for (k, im) in impacts.iter().enumerate() {
+        let Some(&first) = impact_entities[k].first() else {
+            continue; // all-fixed impact: nothing to optimize
+        };
+        let root = uf.find(first);
+        let z = zones.entry(root).or_insert_with(|| ImpactZone {
+            impacts: Vec::new(),
+            entities: Vec::new(),
+        });
+        z.impacts.push(*im);
+        for &eid in &impact_entities[k] {
+            z.entities.push(ents[eid]);
+        }
+    }
+    let mut out: Vec<ImpactZone> = zones
+        .into_values()
+        .map(|mut z| {
+            z.entities.sort();
+            z.entities.dedup();
+            z
+        })
+        .collect();
+    // Deterministic order (largest zones first helps the pool balance).
+    out.sort_by(|a, b| {
+        b.impacts
+            .len()
+            .cmp(&a.impacts.len())
+            .then_with(|| a.entities.cmp(&b.entities))
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::{Cloth, RigidBody, System};
+    use crate::math::Vec3;
+    use crate::mesh::primitives::{cloth_grid, unit_box};
+    use crate::util::quick::quick;
+
+    #[test]
+    fn union_find_components() {
+        quick("union-find", 50, |g| {
+            let n = g.usize(2, 100);
+            let mut uf = UnionFind::new(n);
+            let mut naive: Vec<usize> = (0..n).collect();
+            for _ in 0..g.usize(0, 2 * n) {
+                let (a, b) = (g.usize(0, n - 1), g.usize(0, n - 1));
+                uf.union(a, b);
+                // Naive: relabel.
+                let (la, lb) = (naive[a], naive[b]);
+                if la != lb {
+                    for x in naive.iter_mut() {
+                        if *x == lb {
+                            *x = la;
+                        }
+                    }
+                }
+            }
+            for a in 0..n {
+                for b in 0..n {
+                    assert_eq!(uf.same(a, b), naive[a] == naive[b], "{a} {b}");
+                }
+            }
+        });
+    }
+
+    fn make_impact(sys: &System, a: NodeRef, b: NodeRef) -> Impact {
+        let _ = sys;
+        Impact {
+            nodes: [a, a, a, b],
+            w: [-0.4, -0.3, -0.3, 1.0],
+            n: Vec3::new(0.0, 1.0, 0.0),
+            t: 0.5,
+        }
+    }
+
+    #[test]
+    fn zones_separate_disconnected_pairs() {
+        let mut sys = System::new();
+        for k in 0..4 {
+            sys.add_rigid(
+                RigidBody::from_mesh(unit_box(), 1.0)
+                    .with_position(Vec3::new(3.0 * k as f64, 0.0, 0.0)),
+            );
+        }
+        // Impacts: (0,1) and (2,3) — two independent zones.
+        let impacts = vec![
+            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
+            make_impact(&sys, NodeRef::Rigid { body: 2, vert: 0 }, NodeRef::Rigid { body: 3, vert: 0 }),
+        ];
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 2);
+        for z in &zones {
+            assert_eq!(z.entities.len(), 2);
+            assert_eq!(z.n_dofs(), 12);
+            assert_eq!(z.n_constraints(), 1);
+        }
+    }
+
+    #[test]
+    fn chain_merges_into_one_zone() {
+        let mut sys = System::new();
+        for _ in 0..4 {
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        }
+        let impacts = vec![
+            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
+            make_impact(&sys, NodeRef::Rigid { body: 1, vert: 1 }, NodeRef::Rigid { body: 2, vert: 0 }),
+            make_impact(&sys, NodeRef::Rigid { body: 2, vert: 1 }, NodeRef::Rigid { body: 3, vert: 0 }),
+        ];
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 1);
+        assert_eq!(zones[0].entities.len(), 4);
+        assert_eq!(zones[0].n_dofs(), 24);
+        assert_eq!(zones[0].n_constraints(), 3);
+    }
+
+    #[test]
+    fn fixed_entities_do_not_merge() {
+        let mut sys = System::new();
+        let ground = RigidBody::frozen_from_mesh(unit_box());
+        sys.add_rigid(ground);
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        // Both cubes touch only the ground: two zones, not one.
+        let impacts = vec![
+            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
+            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 1 }, NodeRef::Rigid { body: 2, vert: 0 }),
+        ];
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 2);
+        for z in &zones {
+            assert_eq!(z.n_dofs(), 6);
+        }
+    }
+
+    #[test]
+    fn cloth_nodes_are_individual_entities() {
+        let mut sys = System::new();
+        let mut cloth = Cloth::from_grid(cloth_grid(2, 2, 1.0, 1.0), 0.1, 10.0, 1.0, 0.0);
+        cloth.pin(0);
+        sys.add_cloth(cloth);
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        let impacts = vec![
+            // Pinned cloth node (fixed) against rigid 0 → zone of just the body.
+            make_impact(&sys, NodeRef::Cloth { cloth: 0, node: 0 }, NodeRef::Rigid { body: 0, vert: 0 }),
+            // Free cloth node against rigid 0 → merges into the body's zone.
+            make_impact(&sys, NodeRef::Cloth { cloth: 0, node: 4 }, NodeRef::Rigid { body: 0, vert: 1 }),
+        ];
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 1);
+        let z = &zones[0];
+        assert_eq!(z.n_constraints(), 2);
+        assert_eq!(z.n_dofs(), 6 + 3);
+        assert!(z.entities.contains(&Entity::Rigid(0)));
+        assert!(z.entities.contains(&Entity::ClothNode(0, 4)));
+    }
+
+    #[test]
+    fn all_fixed_impacts_dropped() {
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::frozen_from_mesh(unit_box()));
+        sys.add_rigid(RigidBody::frozen_from_mesh(unit_box()));
+        let impacts = vec![make_impact(
+            &sys,
+            NodeRef::Rigid { body: 0, vert: 0 },
+            NodeRef::Rigid { body: 1, vert: 0 },
+        )];
+        assert!(build_zones(&sys, &impacts).is_empty());
+    }
+}

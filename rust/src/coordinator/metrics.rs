@@ -1,0 +1,76 @@
+//! Coordinator telemetry: batching occupancy and fallback counters —
+//! the numbers §7.1's "collisions are sparse" claim is checked against.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, Default)]
+pub struct CoordMetrics {
+    /// PJRT calls made for zone backwards.
+    pub zone_pjrt_calls: usize,
+    /// Real zone items shipped.
+    pub zone_items: usize,
+    /// Total padded slots shipped (occupancy = items / slots).
+    pub zone_slots: usize,
+    /// Zones that ran on the native path (oversize or PJRT failure).
+    pub zone_native_fallback: usize,
+    pub rigid_pjrt_calls: usize,
+    pub rigid_items: usize,
+    pub rigid_slots: usize,
+}
+
+impl CoordMetrics {
+    pub fn zone_occupancy(&self) -> f64 {
+        if self.zone_slots == 0 {
+            0.0
+        } else {
+            self.zone_items as f64 / self.zone_slots as f64
+        }
+    }
+
+    pub fn rigid_occupancy(&self) -> f64 {
+        if self.rigid_slots == 0 {
+            0.0
+        } else {
+            self.rigid_items as f64 / self.rigid_slots as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("zone_pjrt_calls", self.zone_pjrt_calls)
+            .set("zone_items", self.zone_items)
+            .set("zone_slots", self.zone_slots)
+            .set("zone_occupancy", self.zone_occupancy())
+            .set("zone_native_fallback", self.zone_native_fallback)
+            .set("rigid_pjrt_calls", self.rigid_pjrt_calls)
+            .set("rigid_items", self.rigid_items)
+            .set("rigid_occupancy", self.rigid_occupancy());
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_math() {
+        let m = CoordMetrics {
+            zone_items: 12,
+            zone_slots: 16,
+            rigid_items: 100,
+            rigid_slots: 128,
+            ..Default::default()
+        };
+        assert!((m.zone_occupancy() - 0.75).abs() < 1e-12);
+        assert!((m.rigid_occupancy() - 100.0 / 128.0).abs() < 1e-12);
+        assert_eq!(CoordMetrics::default().zone_occupancy(), 0.0);
+    }
+
+    #[test]
+    fn json_dump_has_fields() {
+        let j = CoordMetrics::default().to_json();
+        assert!(j.get("zone_occupancy").is_some());
+        assert!(j.get("rigid_items").is_some());
+    }
+}

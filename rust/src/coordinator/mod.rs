@@ -1,0 +1,229 @@
+//! The L3 coordinator: routes batched numeric work from the engine onto
+//! the AOT-compiled PJRT executables.
+//!
+//! Zone shapes are dynamic but HLO shapes are static, so the coordinator
+//! resolves the mismatch with *size buckets* (pad each zone's (n, m) up
+//! to the smallest exported bucket) and *batching* (all zones sharing a
+//! bucket go out in one PJRT call). Zones exceeding every bucket fall
+//! back to the native rust path. The same strategy a serving router uses
+//! for sequence-length buckets.
+
+pub mod metrics;
+
+use crate::diff::implicit::{backward_dense, backward_qr};
+use crate::runtime::{Runtime, ZoneBucket};
+use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use anyhow::Result;
+use metrics::CoordMetrics;
+use std::sync::{Arc, Mutex};
+
+/// One zone-backward work item.
+pub struct ZoneBwItem<'a> {
+    pub problem: &'a ZoneProblem,
+    pub solution: &'a ZoneSolution,
+    pub grad_z: &'a [f64],
+}
+
+pub struct Coordinator {
+    pub runtime: Arc<Runtime>,
+    pub metrics: Mutex<CoordMetrics>,
+}
+
+impl Coordinator {
+    pub fn new(runtime: Arc<Runtime>) -> Coordinator {
+        Coordinator { runtime, metrics: Mutex::new(CoordMetrics::default()) }
+    }
+
+    /// Smallest exported bucket fitting (n, m), if any.
+    fn bucket_for(&self, n: usize, m: usize) -> Option<ZoneBucket> {
+        self.runtime
+            .zone_buckets
+            .iter()
+            .copied()
+            .filter(|b| b.n >= n && b.m >= m)
+            .min_by_key(|b| (b.n, b.m))
+    }
+
+    /// Batched zone-backward over independent zones: groups by bucket,
+    /// pads, one PJRT call per bucket-batch; oversize zones run native.
+    /// Returns ∂L/∂q per item (same order).
+    pub fn zone_backward_batch(&self, items: &[ZoneBwItem<'_>]) -> Vec<Vec<f64>> {
+        let mut out: Vec<Vec<f64>> = items.iter().map(|_| Vec::new()).collect();
+        // Group item indices by bucket.
+        let mut groups: std::collections::HashMap<(usize, usize), Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, it) in items.iter().enumerate() {
+            let n = it.problem.n;
+            let m = it.problem.constraints.len();
+            match self.bucket_for(n, m) {
+                Some(b) => groups.entry((b.n, b.m)).or_default().push(i),
+                None => {
+                    // Native fallback for oversize zones.
+                    self.metrics.lock().unwrap().zone_native_fallback += 1;
+                    let bw = backward_qr(it.problem, it.solution, it.grad_z);
+                    out[i] = bw.grad_q;
+                }
+            }
+        }
+        for ((bn, bm), idxs) in groups {
+            let bucket = self
+                .runtime
+                .zone_buckets
+                .iter()
+                .copied()
+                .find(|b| b.n == bn && b.m == bm)
+                .expect("bucket vanished");
+            let name = format!("zone_backward_n{}_m{}_b{}", bucket.n, bucket.m, bucket.batch);
+            for chunk in idxs.chunks(bucket.batch) {
+                match self.call_zone_bucket(&name, bucket, chunk, items) {
+                    Ok(grads) => {
+                        for (k, &i) in chunk.iter().enumerate() {
+                            out[i] = grads[k].clone();
+                        }
+                        let mut m = self.metrics.lock().unwrap();
+                        m.zone_pjrt_calls += 1;
+                        m.zone_items += chunk.len();
+                        m.zone_slots += bucket.batch;
+                    }
+                    Err(e) => {
+                        // PJRT trouble: degrade to native, keep running.
+                        crate::warnlog!("pjrt zone backward failed ({e:#}); native fallback");
+                        let mut m = self.metrics.lock().unwrap();
+                        m.zone_native_fallback += chunk.len();
+                        drop(m);
+                        for &i in chunk {
+                            let it = &items[i];
+                            out[i] = backward_qr(it.problem, it.solution, it.grad_z).grad_q;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn call_zone_bucket(
+        &self,
+        name: &str,
+        bucket: ZoneBucket,
+        chunk: &[usize],
+        items: &[ZoneBwItem<'_>],
+    ) -> Result<Vec<Vec<f64>>> {
+        let (bn, bm, bb) = (bucket.n, bucket.m, bucket.batch);
+        let mut mass = vec![0.0f32; bb * bn * bn];
+        let mut jac = vec![0.0f32; bb * bm * bn];
+        let mut lam = vec![0.0f32; bb * bm];
+        let mut g = vec![0.0f32; bb * bn];
+        // Empty batch slots get identity mass so the batched CG stays
+        // well posed.
+        for k in 0..bb {
+            for r in 0..bn {
+                mass[k * bn * bn + r * bn + r] = 1.0;
+            }
+        }
+        for k in chunk.len()..bb {
+            let _ = k; // (slots already identity)
+        }
+        for (k, &i) in chunk.iter().enumerate() {
+            let it = &items[i];
+            let zp = it.problem;
+            let n = zp.n;
+            let m = zp.constraints.len();
+            for r in 0..n {
+                for c in 0..n {
+                    mass[k * bn * bn + r * bn + c] = zp.mass[(r, c)] as f32;
+                }
+                if zp.mass[(r, r)] != 0.0 {
+                    // (diagonal was pre-set to 1; real value overwrites)
+                }
+            }
+            let jrows = zp.jacobian(&it.solution.q);
+            for r in 0..m {
+                for c in 0..n {
+                    jac[k * bm * bn + r * bn + c] = jrows[(r, c)] as f32;
+                }
+                lam[k * bm + r] = it.solution.lambda[r] as f32;
+            }
+            for c in 0..n {
+                g[k * bn + c] = it.grad_z[c] as f32;
+            }
+        }
+        let outs = self.runtime.call_f32(name, &[&mass, &jac, &lam, &g])?;
+        let grad = &outs[0];
+        let mut res = Vec::with_capacity(chunk.len());
+        for (k, &i) in chunk.iter().enumerate() {
+            let n = items[i].problem.n;
+            res.push((0..n).map(|c| grad[k * bn + c] as f64).collect());
+        }
+        Ok(res)
+    }
+
+    /// Batched rigid vertex transform + Jacobian through the Pallas-
+    /// kernel artifact. `q` repeated per vertex, `p0` body-frame points.
+    /// Returns (world positions, 3×6 Jacobians row-major).
+    #[allow(clippy::type_complexity)]
+    pub fn rigid_transform_batch(
+        &self,
+        q: &[[f64; 6]],
+        p0: &[[f64; 3]],
+    ) -> Result<(Vec<[f64; 3]>, Vec<[[f64; 6]; 3]>)> {
+        assert_eq!(q.len(), p0.len());
+        let n = q.len();
+        let bucket = self
+            .runtime
+            .rigid_batches
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| *self.runtime.rigid_batches.iter().max().unwrap_or(&128));
+        let mut xs = Vec::with_capacity(n);
+        let mut jacs = Vec::with_capacity(n);
+        let mut start = 0;
+        while start < n {
+            let take = (n - start).min(bucket);
+            let mut qbuf = vec![0.0f32; bucket * 6];
+            let mut pbuf = vec![0.0f32; bucket * 3];
+            for k in 0..take {
+                for c in 0..6 {
+                    qbuf[k * 6 + c] = q[start + k][c] as f32;
+                }
+                for c in 0..3 {
+                    pbuf[k * 3 + c] = p0[start + k][c] as f32;
+                }
+            }
+            let name = format!("rigid_transform_b{bucket}");
+            let outs = self.runtime.call_f32(&name, &[&qbuf, &pbuf])?;
+            let (xf, jf) = (&outs[0], &outs[1]);
+            for k in 0..take {
+                xs.push([
+                    xf[k * 3] as f64,
+                    xf[k * 3 + 1] as f64,
+                    xf[k * 3 + 2] as f64,
+                ]);
+                let mut j = [[0.0f64; 6]; 3];
+                for r in 0..3 {
+                    for c in 0..6 {
+                        j[r][c] = jf[k * 18 + r * 6 + c] as f64;
+                    }
+                }
+                jacs.push(j);
+            }
+            let mut m = self.metrics.lock().unwrap();
+            m.rigid_pjrt_calls += 1;
+            m.rigid_items += take;
+            m.rigid_slots += bucket;
+            start += take;
+        }
+        Ok((xs, jacs))
+    }
+
+    /// Dense-mode batched backward (the "W/o FD" ablation run through the
+    /// native dense path — exported for parity in experiments).
+    pub fn zone_backward_native_dense(&self, items: &[ZoneBwItem<'_>]) -> Vec<Vec<f64>> {
+        items
+            .iter()
+            .map(|it| backward_dense(it.problem, it.solution, it.grad_z).grad_q)
+            .collect()
+    }
+}

@@ -1,0 +1,57 @@
+//! Adjoint of the implicit-Euler linear solve (paper §6: "gradients for
+//! the sparse linear system in Equation 3 can be computed via implicit
+//! differentiation").
+//!
+//! Forward: A·Δq̇ = b. Backward: given ḡ = ∂L/∂Δq̇, the adjoint u solves
+//! Aᵀ·u = ḡ (A is symmetric here), then ∂L/∂b = u and contributions to
+//! upstream quantities flow through b's dependencies.
+
+use crate::math::cg::pcg_csr;
+use crate::math::sparse::Csr;
+
+/// Solve Aᵀ·u = ḡ for the (symmetric) implicit-Euler operator.
+pub fn adjoint_solve(a: &Csr, grad: &[f64]) -> Vec<f64> {
+    let res = pcg_csr(a, grad, 1e-10, 20 * grad.len().max(10));
+    res.x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::dense::{dot, Mat};
+    use crate::math::sparse::Triplets;
+    use crate::util::quick::{assert_close, quick};
+
+    #[test]
+    fn adjoint_gives_dldb() {
+        // L = gᵀ·x with A·x = b ⇒ ∂L/∂b = A⁻ᵀ·g. Check against FD.
+        quick("adjoint-dldb", 20, |g| {
+            let n = g.usize(2, 12);
+            let base = Mat::from_vec(n, n, g.vec_normal(n * n));
+            let spd = base.transpose().matmul(&base).add(&Mat::identity(n).scale(n as f64));
+            let mut t = Triplets::new(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    t.push(i, j, spd[(i, j)]);
+                }
+            }
+            let a = t.to_csr();
+            let b = g.vec_normal(n);
+            let gv = g.vec_normal(n);
+            let u = adjoint_solve(&a, &gv);
+            // FD on b.
+            let h = 1e-6;
+            let mut fd = vec![0.0; n];
+            for k in 0..n {
+                let mut bp = b.clone();
+                bp[k] += h;
+                let mut bm = b.clone();
+                bm[k] -= h;
+                let xp = spd.chol_solve(&bp).unwrap();
+                let xm = spd.chol_solve(&bm).unwrap();
+                fd[k] = (dot(&gv, &xp) - dot(&gv, &xm)) / (2.0 * h);
+            }
+            assert_close(&u, &fd, 1e-5, 1e-4, "adjoint vs fd");
+        });
+    }
+}

@@ -1,0 +1,23 @@
+//! Differentiation layer (paper §6, "Fast Differentiation").
+//!
+//! Gradients through a simulation step are assembled from three adjoint
+//! primitives, each implemented with implicit differentiation rather than
+//! unrolling the forward solver:
+//!
+//! * [`implicit`] — the zone projection argmin (Eq. 6): KKT implicit
+//!   differentiation (Eqs. 8–9) with two backends: the dense
+//!   (n+m)-system LU solve ("W/o FD" ablation) and the paper's QR
+//!   acceleration (Eqs. 14–15, O(n·m²)).
+//! * [`dynamics_grad`] — the implicit-Euler linear solve (Eq. 3):
+//!   adjoint solve Aᵀu = ḡ.
+//! * [`tape`] — per-step records the engine's backward pass walks.
+//!
+//! Approximations (documented in DESIGN.md §4): constraint geometry
+//! (normals n, barycentric weights α) is treated as locally constant, and
+//! second-order force/mass derivative terms (∂A/∂q contracted with Δq̇)
+//! are dropped — the same Gauss–Newton-style treatment used by Liang et
+//! al. (2019); gradients are validated against finite differences in the
+//! tests at commensurate tolerances.
+pub mod dynamics_grad;
+pub mod implicit;
+pub mod tape;

@@ -1,0 +1,537 @@
+//! Reverse pass over the step tape: backpropagates a loss on the final
+//! state to initial conditions, per-step control forces, and rigid-body
+//! masses — the gradient flows the paper's applications (§7.4) use.
+
+use super::Simulation;
+use crate::diff::dynamics_grad::adjoint_solve;
+use crate::diff::implicit::{backward_dense, backward_qr};
+use crate::diff::tape::Grads;
+use crate::engine::DiffMode;
+use crate::math::Vec3;
+
+/// Seed gradients ∂L/∂(final state).
+#[derive(Clone, Debug, Default)]
+pub struct LossGrad {
+    pub rigid_q: Vec<[f64; 6]>,
+    pub rigid_v: Vec<[f64; 6]>,
+    pub cloth_x: Vec<Vec<Vec3>>,
+    pub cloth_v: Vec<Vec<Vec3>>,
+}
+
+impl LossGrad {
+    /// Zero seed shaped like the system.
+    pub fn zeros(sim: &Simulation) -> LossGrad {
+        LossGrad {
+            rigid_q: vec![[0.0; 6]; sim.sys.rigids.len()],
+            rigid_v: vec![[0.0; 6]; sim.sys.rigids.len()],
+            cloth_x: sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect(),
+            cloth_v: sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect(),
+        }
+    }
+}
+
+/// Run the backward pass over `sim`'s tape.
+pub fn backward(sim: &Simulation, seed: &LossGrad) -> Grads {
+    let nr = sim.sys.rigids.len();
+    let nc = sim.sys.cloths.len();
+    let steps = sim.tape.len();
+    let mut gq_r = seed.rigid_q.clone();
+    let mut gv_r = seed.rigid_v.clone();
+    let mut gx_c: Vec<Vec<Vec3>> = seed.cloth_x.clone();
+    let mut gv_c: Vec<Vec<Vec3>> = seed.cloth_v.clone();
+    let mut out = Grads {
+        rigid_q0: vec![[0.0; 6]; nr],
+        rigid_v0: vec![[0.0; 6]; nr],
+        cloth_x0: sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect(),
+        cloth_v0: gx_c.clone(),
+        rigid_force: vec![vec![Vec3::default(); nr]; steps],
+        cloth_force: (0..steps)
+            .map(|_| sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect())
+            .collect(),
+        rigid_mass: vec![0.0; nr],
+    };
+    // Zero-out grads of fixed DOFs.
+    let clamp_fixed = |gq_r: &mut Vec<[f64; 6]>, gv_r: &mut Vec<[f64; 6]>, gx: &mut Vec<Vec<Vec3>>, gv: &mut Vec<Vec<Vec3>>| {
+        for (b, body) in sim.sys.rigids.iter().enumerate() {
+            if body.frozen {
+                gq_r[b] = [0.0; 6];
+                gv_r[b] = [0.0; 6];
+            }
+        }
+        for (c, cloth) in sim.sys.cloths.iter().enumerate() {
+            for i in 0..cloth.n_nodes() {
+                if cloth.pinned[i] {
+                    gx[c][i] = Vec3::default();
+                    gv[c][i] = Vec3::default();
+                }
+            }
+        }
+    };
+    clamp_fixed(&mut gq_r, &mut gv_r, &mut gx_c, &mut gv_c);
+
+    for (s, rec) in sim.tape.iter().enumerate().rev() {
+        let h = rec.h;
+        // --- Commit adjoint: q₁ = q̄′, v₁ = (q₁ − q₀)/h. ---
+        // ḡ_q̄′ = ḡ_q₁ + ḡ_v₁/h; ḡ_q₀ −= ḡ_v₁/h.
+        let mut gqbar_r: Vec<[f64; 6]> = (0..nr)
+            .map(|b| {
+                let mut g = gq_r[b];
+                for k in 0..6 {
+                    g[k] += gv_r[b][k] / h;
+                }
+                g
+            })
+            .collect();
+        let mut gq0_r: Vec<[f64; 6]> = (0..nr)
+            .map(|b| {
+                let mut g = [0.0; 6];
+                for k in 0..6 {
+                    g[k] = -gv_r[b][k] / h;
+                }
+                g
+            })
+            .collect();
+        let mut gxbar_c: Vec<Vec<Vec3>> = (0..nc)
+            .map(|c| {
+                (0..gx_c[c].len()).map(|i| gx_c[c][i] + gv_c[c][i] / h).collect()
+            })
+            .collect();
+        let mut gx0_c: Vec<Vec<Vec3>> = (0..nc)
+            .map(|c| (0..gx_c[c].len()).map(|i| -gv_c[c][i] / h).collect())
+            .collect();
+
+        // --- Zone resolutions, reversed by fail-safe pass. Zones within
+        // one pass are independent (disjoint entities) so their backwards
+        // can be computed together — which is exactly what the PJRT
+        // coordinator batches. ---
+        let mut hi = rec.zones.len();
+        while hi > 0 {
+            let pass = rec.zones[hi - 1].pass;
+            let mut lo = hi;
+            while lo > 0 && rec.zones[lo - 1].pass == pass {
+                lo -= 1;
+            }
+            let group = &rec.zones[lo..hi];
+            hi = lo;
+            // Gather ∂L/∂z for every zone in the group.
+            let grad_zs: Vec<Vec<f64>> = group
+                .iter()
+                .map(|zr| {
+                    let zp = &zr.problem;
+                    let mut grad_z = vec![0.0; zp.n];
+                    for (k, e) in zp.entities.iter().enumerate() {
+                        let off = zp.offsets[k];
+                        match e {
+                            crate::collision::zones::Entity::Rigid(b) => {
+                                grad_z[off..off + 6].copy_from_slice(&gqbar_r[*b as usize]);
+                            }
+                            crate::collision::zones::Entity::ClothNode(c, i) => {
+                                let g = gxbar_c[*c as usize][*i as usize];
+                                grad_z[off] = g.x;
+                                grad_z[off + 1] = g.y;
+                                grad_z[off + 2] = g.z;
+                            }
+                        }
+                    }
+                    grad_z
+                })
+                .collect();
+            let grads_q: Vec<Vec<f64>> = match sim.cfg.diff_mode {
+                DiffMode::Qr => group
+                    .iter()
+                    .zip(&grad_zs)
+                    .map(|(zr, g)| backward_qr(&zr.problem, &zr.solution, g).grad_q)
+                    .collect(),
+                DiffMode::Dense => group
+                    .iter()
+                    .zip(&grad_zs)
+                    .map(|(zr, g)| backward_dense(&zr.problem, &zr.solution, g).grad_q)
+                    .collect(),
+                DiffMode::Pjrt => {
+                    let coord = sim
+                        .coordinator
+                        .as_ref()
+                        .expect("DiffMode::Pjrt requires Simulation::coordinator");
+                    let items: Vec<crate::coordinator::ZoneBwItem<'_>> = group
+                        .iter()
+                        .zip(&grad_zs)
+                        .map(|(zr, g)| crate::coordinator::ZoneBwItem {
+                            problem: &zr.problem,
+                            solution: &zr.solution,
+                            grad_z: g,
+                        })
+                        .collect();
+                    coord.zone_backward_batch(&items)
+                }
+            };
+            for (zr, grad_q) in group.iter().zip(&grads_q) {
+                let zp = &zr.problem;
+                // Mass-parameter gradient through the zone's M̂ (uniform
+                // density: ∂M̂_b/∂m = M̂_b/m). Using grad_q = M̂·u_z:
+                //   ∂L/∂m += −u_zᵀ·(M̂_b/m)·(z*−q)|_b = −grad_q·(z*−q)|_b / m.
+                for (k, e) in zp.entities.iter().enumerate() {
+                    if let crate::collision::zones::Entity::Rigid(b) = e {
+                        let body = &sim.sys.rigids[*b as usize];
+                        if body.frozen {
+                            continue;
+                        }
+                        let off = zp.offsets[k];
+                        let mut dot = 0.0;
+                        for i in 0..6 {
+                            dot += grad_q[off + i] * (zr.solution.q[off + i] - zp.q0[off + i]);
+                        }
+                        out.rigid_mass[*b as usize] += -dot / body.mass;
+                    }
+                }
+                // Scatter ∂L/∂q back (replacing the entries).
+                for (k, e) in zp.entities.iter().enumerate() {
+                    let off = zp.offsets[k];
+                    match e {
+                        crate::collision::zones::Entity::Rigid(b) => {
+                            gqbar_r[*b as usize].copy_from_slice(&grad_q[off..off + 6]);
+                        }
+                        crate::collision::zones::Entity::ClothNode(c, i) => {
+                            gxbar_c[*c as usize][*i as usize] =
+                                Vec3::new(grad_q[off], grad_q[off + 1], grad_q[off + 2]);
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- Candidate adjoint: q̄ = q₀ + h·(v₀ + Δv). ---
+        let mut gv0_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
+        let mut gdv_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
+        for b in 0..nr {
+            if sim.sys.rigids[b].frozen {
+                continue;
+            }
+            for k in 0..6 {
+                gq0_r[b][k] += gqbar_r[b][k];
+                // v₁ = (q₁−q₀)/h: v₀ and Δv act only through q̄ (gv/h is
+                // already folded into gqbar above).
+                gv0_r[b][k] = h * gqbar_r[b][k];
+                gdv_r[b][k] = h * gqbar_r[b][k];
+            }
+        }
+        let mut gv0_c: Vec<Vec<Vec3>> = (0..nc)
+            .map(|c| vec![Vec3::default(); gx_c[c].len()])
+            .collect();
+        let mut gdv_c: Vec<Vec<Vec3>> = gv0_c.clone();
+        for c in 0..nc {
+            for i in 0..gx_c[c].len() {
+                if sim.sys.cloths[c].pinned[i] {
+                    continue;
+                }
+                gx0_c[c][i] += gxbar_c[c][i];
+                gv0_c[c][i] = gxbar_c[c][i] * h;
+                gdv_c[c][i] = gxbar_c[c][i] * h;
+            }
+        }
+
+        // --- Rigid velocity update adjoint: Δq̇ = h·M̂⁻¹·Q. ---
+        for (b, rs) in rec.rigid_solves.iter().enumerate() {
+            if sim.sys.rigids[b].frozen {
+                continue;
+            }
+            let u = rs
+                .mass
+                .lu_solve(&gdv_r[b])
+                .unwrap_or_else(|| vec![0.0; 6]);
+            // ∂L/∂f_ext (world force): translation rows of ḡ_Q = h·u.
+            out.rigid_force[s][b] = Vec3::new(h * u[3], h * u[4], h * u[5]);
+            // ∂L/∂m: −ḡ_Δq̇·Δq̇/m + h·u·[0; g] (gyro-term/m dropped).
+            let mut d = 0.0;
+            for k in 0..6 {
+                d -= gdv_r[b][k] * rs.dqdot[k];
+            }
+            let g = sim.cfg.gravity;
+            out.rigid_mass[b] +=
+                d / sim.sys.rigids[b].mass + h * (u[3] * g.x + u[4] * g.y + u[5] * g.z);
+        }
+
+        // --- Cloth implicit solve adjoint. ---
+        for (c, cs) in rec.cloth_solves.iter().enumerate() {
+            let nnodes = gx_c[c].len();
+            let mut gflat = vec![0.0; 3 * nnodes];
+            for i in 0..nnodes {
+                gflat[3 * i] = gdv_c[c][i].x;
+                gflat[3 * i + 1] = gdv_c[c][i].y;
+                gflat[3 * i + 2] = gdv_c[c][i].z;
+            }
+            let u = adjoint_solve(&cs.a, &gflat);
+            // b = h·(f₀ + h·Jx·v₀):
+            //   ∂L/∂ext_force_i = h·u_i
+            //   ∂L/∂x₀ += h·Jxᵀ·u   (∂f₀/∂x = Jx; higher-order dropped)
+            //   ∂L/∂v₀ += h·(∂f/∂v)ᵀ·u + h²·Jxᵀ·u
+            let jtu = cs.jx.matvec(&u); // Jx symmetric by construction
+            for i in 0..nnodes {
+                if sim.sys.cloths[c].pinned[i] {
+                    continue;
+                }
+                let ui = Vec3::new(u[3 * i], u[3 * i + 1], u[3 * i + 2]);
+                let jti = Vec3::new(jtu[3 * i], jtu[3 * i + 1], jtu[3 * i + 2]);
+                out.cloth_force[s][c][i] = ui * h;
+                gx0_c[c][i] += jti * h;
+                gv0_c[c][i] += ui * (h * cs.dfdv[i]) + jti * (h * h);
+            }
+        }
+
+        // Roll to the previous step.
+        gq_r = gq0_r;
+        gv_r = gv0_r;
+        gx_c = gx0_c;
+        gv_c = gv0_c;
+        clamp_fixed(&mut gq_r, &mut gv_r, &mut gx_c, &mut gv_c);
+    }
+    out.rigid_q0 = gq_r;
+    out.rigid_v0 = gv_r;
+    out.cloth_x0 = gx_c;
+    out.cloth_v0 = gv_c;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::{Cloth, RigidBody, System};
+    use crate::engine::{SimConfig, Simulation};
+    use crate::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+
+    fn ground() -> RigidBody {
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0))
+    }
+
+    fn taped_cfg() -> SimConfig {
+        SimConfig { record_tape: true, dt: 1.0 / 100.0, ..Default::default() }
+    }
+
+    #[test]
+    fn free_fall_position_gradient_exact() {
+        // y_T = y₀ + Σ v_s·h with v updated by gravity only:
+        // ∂y_T/∂y₀ = 1, ∂y_T/∂v₀ = T·h.
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 50.0, 0.0)));
+        let mut sim = Simulation::new(sys, taped_cfg());
+        let n = 20;
+        sim.run(n);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[0][4] = 1.0; // L = final y
+        let g = backward(&sim, &seed);
+        assert!((g.rigid_q0[0][4] - 1.0).abs() < 1e-10, "dq0 = {}", g.rigid_q0[0][4]);
+        assert!(
+            (g.rigid_v0[0][4] - n as f64 * sim.cfg.dt).abs() < 1e-9,
+            "dv0 = {} want {}",
+            g.rigid_v0[0][4],
+            n as f64 * sim.cfg.dt
+        );
+    }
+
+    #[test]
+    fn control_force_gradient_matches_fd() {
+        // Push a cube horizontally in zero gravity; L = final x.
+        // ∂L/∂f_x at step s = h·(T−s)·h/m (force → Δv → position).
+        let build = |fx: f64| -> f64 {
+            let mut sys = System::new();
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), 2.0));
+            let mut sim = Simulation::new(
+                sys,
+                SimConfig {
+                    record_tape: true,
+                    gravity: Vec3::default(),
+                    dt: 1.0 / 100.0,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..10 {
+                sim.sys.rigids[0].ext_force = Vec3::new(fx, 0.0, 0.0);
+                sim.step();
+            }
+            sim.sys.rigids[0].translation().x
+        };
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 2.0));
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig {
+                record_tape: true,
+                gravity: Vec3::default(),
+                dt: 1.0 / 100.0,
+                ..Default::default()
+            },
+        );
+        for _ in 0..10 {
+            sim.sys.rigids[0].ext_force = Vec3::new(1.0, 0.0, 0.0);
+            sim.step();
+        }
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[0][3] = 1.0;
+        let g = backward(&sim, &seed);
+        // FD over a shared force scale: dL/dscale = Σ_s f·∂L/∂f_s.
+        let eps = 1e-5;
+        let fd = (build(1.0 + eps) - build(1.0 - eps)) / (2.0 * eps);
+        let analytic: f64 = (0..10).map(|s| g.rigid_force[s][0].x).sum();
+        assert!(
+            (analytic - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+            "analytic {analytic} vs fd {fd}"
+        );
+    }
+
+    #[test]
+    fn contact_kills_normal_gradient() {
+        // Cube dropped onto the ground; L = final y. Once resting, the
+        // initial height has (almost) no influence — the contact
+        // projection absorbs it.
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)));
+        let mut sim = Simulation::new(sys, taped_cfg());
+        sim.run(120); // long enough to settle
+        assert!((sim.sys.rigids[1].translation().y - 0.5).abs() < 0.02);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[1][4] = 1.0;
+        let g = backward(&sim, &seed);
+        assert!(
+            g.rigid_q0[1][4].abs() < 0.05,
+            "normal-direction gradient should be absorbed: {}",
+            g.rigid_q0[1][4]
+        );
+    }
+
+    #[test]
+    fn tangential_gradient_survives_contact() {
+        // Same scene, L = final x: frictionless contact leaves
+        // tangential motion unconstrained ⇒ ∂x_T/∂x₀ = 1.
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)));
+        let mut sim = Simulation::new(sys, taped_cfg());
+        sim.run(80);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[1][3] = 1.0;
+        let g = backward(&sim, &seed);
+        assert!(
+            (g.rigid_q0[1][3] - 1.0).abs() < 0.05,
+            "tangential gradient: {}",
+            g.rigid_q0[1][3]
+        );
+    }
+
+    #[test]
+    fn mass_gradient_matches_fd_under_applied_force() {
+        // Zero gravity, constant force: x_T ∝ 1/m, so ∂x_T/∂m < 0.
+        let run = |m_density: f64| -> (Simulation, f64) {
+            let mut sys = System::new();
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), m_density));
+            let mut sim = Simulation::new(
+                sys,
+                SimConfig {
+                    record_tape: true,
+                    gravity: Vec3::default(),
+                    dt: 1.0 / 100.0,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..15 {
+                sim.sys.rigids[0].ext_force = Vec3::new(3.0, 0.0, 0.0);
+                sim.step();
+            }
+            let x = sim.sys.rigids[0].translation().x;
+            (sim, x)
+        };
+        let (sim, _) = run(1.0);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[0][3] = 1.0;
+        let g = backward(&sim, &seed);
+        let eps = 1e-5;
+        let fd = (run(1.0 + eps).1 - run(1.0 - eps).1) / (2.0 * eps);
+        assert!(
+            (g.rigid_mass[0] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+            "mass grad {} vs fd {fd}",
+            g.rigid_mass[0]
+        );
+        assert!(g.rigid_mass[0] < 0.0);
+    }
+
+    #[test]
+    fn cloth_force_gradient_matches_fd() {
+        let run = |scale: f64| -> (Simulation, f64) {
+            let mut sys = System::new();
+            let mut cloth =
+                Cloth::from_grid(cloth_grid(3, 3, 1.0, 1.0), 0.3, 100.0, 1.0, 0.2);
+            cloth.pin(0);
+            cloth.pin(12);
+            sys.add_cloth(cloth);
+            let mut sim = Simulation::new(
+                sys,
+                SimConfig {
+                    record_tape: true,
+                    gravity: Vec3::new(0.0, -2.0, 0.0),
+                    dt: 1.0 / 100.0,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..8 {
+                sim.sys.cloths[0].ext_force[8] = Vec3::new(scale, 0.0, 0.0);
+                sim.step();
+            }
+            let x = sim.sys.cloths[0].x[8].x;
+            (sim, x)
+        };
+        let (sim, _) = run(0.5);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.cloth_x[0][8].x = 1.0;
+        let g = backward(&sim, &seed);
+        let analytic: f64 = (0..8).map(|s| g.cloth_force[s][0][8].x).sum();
+        let eps = 1e-5;
+        let fd = (run(0.5 + eps).1 - run(0.5 - eps).1) / (2.0 * eps);
+        // First-order adjoint drops force-Hessian terms: allow ~1%.
+        assert!(
+            (analytic - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+            "analytic {analytic} vs fd {fd}"
+        );
+    }
+
+    #[test]
+    fn initial_velocity_gradient_through_collision() {
+        // Cube A slides into cube B (zero-g); L = B's final x. ∂L/∂v_A
+        // must be positive (A pushes B further) — checked against FD.
+        let run = |v0: f64| -> (Simulation, f64) {
+            let mut sys = System::new();
+            sys.add_rigid(
+                RigidBody::from_mesh(unit_box(), 1.0)
+                    .with_position(Vec3::new(-1.2, 0.02, 0.05))
+                    .with_velocity(Vec3::new(v0, 0.0, 0.0)),
+            );
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+            let mut sim = Simulation::new(
+                sys,
+                SimConfig {
+                    record_tape: true,
+                    gravity: Vec3::default(),
+                    dt: 1.0 / 100.0,
+                    ..Default::default()
+                },
+            );
+            sim.run(40);
+            let x = sim.sys.rigids[1].translation().x;
+            (sim, x)
+        };
+        let (sim, _) = run(2.0);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[1][3] = 1.0;
+        let g = backward(&sim, &seed);
+        // Wide central difference: the forward map is only piecewise
+        // smooth (contact events shift between runs), so tiny eps
+        // measures event noise rather than the slope.
+        let eps = 2e-2;
+        let fd = (run(2.0 + eps).1 - run(2.0 - eps).1) / (2.0 * eps);
+        assert!(g.rigid_v0[0][3] > 0.01, "gradient should be positive: {}", g.rigid_v0[0][3]);
+        assert!(
+            (g.rigid_v0[0][3] - fd).abs() < 0.25 * (1.0 + fd.abs()),
+            "analytic {} vs fd {fd}",
+            g.rigid_v0[0][3]
+        );
+    }
+}

@@ -1,0 +1,571 @@
+//! The simulation engine (paper §3, Fig. 1): time integration → continuous
+//! collision detection → impact-zone resolution, with a tape for
+//! end-to-end backpropagation.
+pub mod backward;
+pub mod scene;
+
+use crate::bodies::System;
+use crate::collision::zones::build_zones;
+use crate::collision::{detect, surfaces_from_system, DetectStats};
+use crate::diff::tape::{ClothSolveRec, RigidSolveRec, StepRecord, ZoneRec};
+use crate::math::sparse::Triplets;
+use crate::math::{euler, Vec3};
+use crate::solver::implicit_euler::{cloth_implicit_step, rigid_step_damped};
+use crate::solver::lcp::merge_zones;
+use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::util::pool::Pool;
+
+/// How zone-solve backward passes are computed (§6 / Table 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DiffMode {
+    /// The paper's QR fast path (Eqs. 14–15).
+    Qr,
+    /// Dense (n+m)³ KKT solve — the "W/o FD" ablation.
+    Dense,
+    /// Batched through the AOT PJRT artifacts via the coordinator
+    /// (requires `Simulation::coordinator`).
+    Pjrt,
+}
+
+/// Collision-handling strategy (§5 / Table 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollisionMode {
+    /// Localized impact zones (ours).
+    LocalZones,
+    /// Merge everything into one global optimization (LCP-style baseline).
+    Global,
+}
+
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub dt: f64,
+    pub gravity: Vec3,
+    /// Contact thickness δ.
+    pub thickness: f64,
+    pub diff_mode: DiffMode,
+    pub collision_mode: CollisionMode,
+    /// Fail-safe re-detection passes per step.
+    pub max_resolve_passes: usize,
+    pub record_tape: bool,
+    /// Worker threads for independent zone solves.
+    pub workers: usize,
+    /// Rigid-body angular damping (s⁻¹). Small default prevents
+    /// frictionless resting stacks from accumulating spin creep.
+    pub angular_damping: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> SimConfig {
+        SimConfig {
+            dt: 1.0 / 150.0,
+            gravity: Vec3::new(0.0, -9.8, 0.0),
+            thickness: 1e-3,
+            diff_mode: DiffMode::Qr,
+            collision_mode: CollisionMode::LocalZones,
+            max_resolve_passes: 8,
+            record_tape: false,
+            workers: 1,
+            angular_damping: 0.2,
+        }
+    }
+}
+
+/// Per-step metrics (coordinator telemetry; E11).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub impacts: usize,
+    pub zones: usize,
+    pub max_zone_dofs: usize,
+    pub max_zone_constraints: usize,
+    pub resolve_passes: usize,
+    pub detect: DetectStats,
+    pub cg_iters: usize,
+}
+
+/// The simulation: owns the system, steps it forward, records the tape.
+pub struct Simulation {
+    pub sys: System,
+    pub cfg: SimConfig,
+    pub tape: Vec<StepRecord>,
+    pub steps: usize,
+    pub last_stats: StepStats,
+    pool: Pool,
+    /// Optional external zone-solver hook; receives the problems and
+    /// returns solutions (testing / alternative solvers).
+    #[allow(clippy::type_complexity)]
+    pub zone_hook: Option<Box<dyn Fn(&[ZoneProblem]) -> Vec<ZoneSolution> + Send + Sync>>,
+    /// PJRT coordinator (batched zone backwards / vertex transforms).
+    pub coordinator: Option<std::sync::Arc<crate::coordinator::Coordinator>>,
+}
+
+impl Simulation {
+    pub fn new(sys: System, cfg: SimConfig) -> Simulation {
+        let pool = Pool::new(cfg.workers);
+        Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, zone_hook: None, coordinator: None }
+    }
+
+    /// Advance one step of length `cfg.dt`.
+    pub fn step(&mut self) {
+        let h = self.cfg.dt;
+        let g = self.cfg.gravity;
+        let mut stats = StepStats::default();
+
+        // --- 1. Unconstrained velocity update (Eq. 3). ---
+        let mut rigid_recs = Vec::with_capacity(self.sys.rigids.len());
+        let mut rigid_vhalf: Vec<[f64; 6]> = Vec::with_capacity(self.sys.rigids.len());
+        for b in &self.sys.rigids {
+            let dqdot = rigid_step_damped(b, h, g, self.cfg.angular_damping);
+            let mut v = b.qdot;
+            for k in 0..6 {
+                v[k] += dqdot[k];
+            }
+            rigid_vhalf.push(v);
+            if self.cfg.record_tape {
+                rigid_recs.push(RigidSolveRec {
+                    mass: b.mass_matrix(),
+                    dqdot,
+                    q_gen: b.generalized_force(g),
+                    ext_force: b.ext_force,
+                });
+            }
+        }
+        let mut cloth_recs = Vec::with_capacity(self.sys.cloths.len());
+        let mut cloth_vhalf: Vec<Vec<Vec3>> = Vec::with_capacity(self.sys.cloths.len());
+        let mut cloth_ext: Vec<Vec<Vec3>> = Vec::new();
+        for c in &self.sys.cloths {
+            let solve = cloth_implicit_step(c, h, g);
+            stats.cg_iters += solve.iters;
+            let v: Vec<Vec3> = (0..c.n_nodes())
+                .map(|i| if c.pinned[i] { Vec3::default() } else { c.v[i] + solve.dv[i] })
+                .collect();
+            cloth_vhalf.push(v);
+            if self.cfg.record_tape {
+                let dim = 3 * c.n_nodes();
+                let mut jx_t = Triplets::new(dim, dim);
+                let dfdv = c.force_jacobian(&mut jx_t, 0, false);
+                cloth_recs.push(ClothSolveRec { a: solve.a, jx: jx_t.to_csr(), dfdv, dv: solve.dv });
+                cloth_ext.push(c.ext_force.clone());
+            }
+        }
+
+        // --- 2. Candidate positions q̄ = q₀ + h·q̇₁. ---
+        let mut rigid_qbar: Vec<[f64; 6]> = self
+            .sys
+            .rigids
+            .iter()
+            .zip(&rigid_vhalf)
+            .map(|(b, v)| {
+                let mut q = b.q;
+                if !b.frozen {
+                    for k in 0..6 {
+                        q[k] += h * v[k];
+                    }
+                }
+                q
+            })
+            .collect();
+        let mut cloth_xbar: Vec<Vec<Vec3>> = self
+            .sys
+            .cloths
+            .iter()
+            .zip(&cloth_vhalf)
+            .map(|(c, v)| {
+                (0..c.n_nodes())
+                    .map(|i| if c.pinned[i] { c.x[i] } else { c.x[i] + v[i] * h })
+                    .collect()
+            })
+            .collect();
+
+        // --- 3. Fail-safe collision resolution over impact zones. ---
+        // Surfaces are built once per step; later passes only update the
+        // candidate positions and refit the BVHs (perf: §Perf L3-1).
+        let mut zone_recs: Vec<ZoneRec> = Vec::new();
+        let mut surfs: Option<Vec<crate::collision::Surface>> = None;
+        for pass in 0..self.cfg.max_resolve_passes {
+            let rigid_x1: Vec<Vec<Vec3>> = self
+                .sys
+                .rigids
+                .iter()
+                .zip(&rigid_qbar)
+                .map(|(b, q)| {
+                    let r = euler::rotation(Vec3::new(q[0], q[1], q[2]));
+                    let t = Vec3::new(q[3], q[4], q[5]);
+                    b.mesh0.verts.iter().map(|&p| r * p + t).collect()
+                })
+                .collect();
+            let surfs = match surfs.as_mut() {
+                None => {
+                    surfs = Some(surfaces_from_system(
+                        &self.sys,
+                        &rigid_x1,
+                        &cloth_xbar,
+                        self.cfg.thickness,
+                    ));
+                    surfs.as_mut().unwrap()
+                }
+                Some(ss) => {
+                    let nr = self.sys.rigids.len();
+                    for (i, x1) in rigid_x1.into_iter().enumerate() {
+                        ss[i].update_candidates(x1, self.cfg.thickness);
+                    }
+                    for (c, x1) in cloth_xbar.iter().enumerate() {
+                        ss[nr + c].update_candidates(x1.clone(), self.cfg.thickness);
+                    }
+                    ss
+                }
+            };
+            let (impacts, dstats) = detect(surfs, self.cfg.thickness);
+            if pass == 0 {
+                stats.detect = dstats;
+                stats.impacts = impacts.len();
+            }
+            let mut zones = build_zones(&self.sys, &impacts);
+            if self.cfg.collision_mode == CollisionMode::Global {
+                zones = merge_zones(&zones).into_iter().collect();
+            }
+            if zones.is_empty() {
+                break;
+            }
+            stats.resolve_passes = pass + 1;
+            if pass == 0 {
+                stats.zones = zones.len();
+                stats.max_zone_dofs = zones.iter().map(|z| z.n_dofs()).max().unwrap_or(0);
+                stats.max_zone_constraints =
+                    zones.iter().map(|z| z.n_constraints()).max().unwrap_or(0);
+            }
+            // Build problems, solve independently (coordinator hook or
+            // the thread pool), then scatter sequentially.
+            let problems: Vec<ZoneProblem> = zones
+                .iter()
+                .map(|z| ZoneProblem::build(&self.sys, z, &rigid_qbar, &cloth_xbar, self.cfg.thickness))
+                .collect();
+            let solutions: Vec<ZoneSolution> = if let Some(hook) = &self.zone_hook {
+                hook(&problems)
+            } else {
+                self.pool.map(problems.len(), |i| problems[i].solve())
+            };
+            let mut max_disp: f64 = 0.0;
+            for (zp, sol) in problems.into_iter().zip(solutions) {
+                for (a, b) in sol.q.iter().zip(&zp.q0) {
+                    max_disp = max_disp.max((a - b).abs());
+                }
+                zp.scatter(&sol, &mut rigid_qbar, &mut cloth_xbar);
+                if self.cfg.record_tape {
+                    zone_recs.push(ZoneRec { problem: zp, solution: sol, pass });
+                }
+            }
+            // Proximity contacts re-fire at gap ≈ δ with negligible
+            // corrections; don't burn the remaining passes on no-ops.
+            if max_disp < 1e-9 {
+                break;
+            }
+        }
+
+        // --- 4. Commit: q₁ = q̄′, q̇₁ = (q₁ − q₀)/h, with an inelastic
+        // energy clamp on the resolution's velocity correction.
+        //
+        // The projection is position-level; committing v = (q₁−q₀)/h can
+        // *inject* kinetic energy when deep corrections route through
+        // rotation (cheap in the mass metric — e.g. a sphere picking up
+        // violent spin from a single-vertex contact). The impact-zone
+        // response is inelastic: post-resolution KE must not exceed
+        // pre-resolution KE, so Δ = v_new − v_half is scaled back when it
+        // would. (Not applied while taping: the clamp is off the gradient
+        // chain; taped episodes use gentle contacts.)
+        let ke_of = |sys: &System, rv: &[[f64; 6]], cv: &[Vec<Vec3>]| -> f64 {
+            let mut e = 0.0;
+            for (i, b) in sys.rigids.iter().enumerate() {
+                if b.frozen {
+                    continue;
+                }
+                let m = b.mass_matrix();
+                let v = rv[i].to_vec();
+                e += 0.5 * crate::math::dense::dot(&v, &m.matvec(&v));
+            }
+            for (c, cl) in sys.cloths.iter().enumerate() {
+                for i in 0..cl.n_nodes() {
+                    if !cl.pinned[i] {
+                        e += 0.5 * cl.node_mass[i] * cv[c][i].norm2();
+                    }
+                }
+            }
+            e
+        };
+        let rigid_vnew: Vec<[f64; 6]> = self
+            .sys
+            .rigids
+            .iter()
+            .enumerate()
+            .map(|(i, b)| {
+                let mut v = [0.0; 6];
+                if !b.frozen {
+                    for k in 0..6 {
+                        v[k] = (rigid_qbar[i][k] - b.q[k]) / h;
+                    }
+                }
+                v
+            })
+            .collect();
+        let cloth_vnew: Vec<Vec<Vec3>> = self
+            .sys
+            .cloths
+            .iter()
+            .enumerate()
+            .map(|(c, cl)| {
+                (0..cl.n_nodes())
+                    .map(|i| {
+                        if cl.pinned[i] {
+                            Vec3::default()
+                        } else {
+                            (cloth_xbar[c][i] - cl.x[i]) / h
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut scale = 1.0;
+        if stats.resolve_passes > 0 && !self.cfg.record_tape {
+            let ke_half = ke_of(&self.sys, &rigid_vhalf, &cloth_vhalf);
+            let ke_new = ke_of(&self.sys, &rigid_vnew, &cloth_vnew);
+            if ke_new > ke_half * (1.0 + 1e-9) + 1e-12 {
+                // KE(v_half + s·Δ) is quadratic in s: bisect on [0,1].
+                let ke_at = |s: f64| {
+                    let rv: Vec<[f64; 6]> = rigid_vhalf
+                        .iter()
+                        .zip(&rigid_vnew)
+                        .map(|(a, b)| {
+                            let mut v = [0.0; 6];
+                            for k in 0..6 {
+                                v[k] = a[k] + s * (b[k] - a[k]);
+                            }
+                            v
+                        })
+                        .collect();
+                    let cv: Vec<Vec<Vec3>> = cloth_vhalf
+                        .iter()
+                        .zip(&cloth_vnew)
+                        .map(|(a, b)| a.iter().zip(b).map(|(x, y)| x.lerp(*y, s)).collect())
+                        .collect();
+                    ke_of(&self.sys, &rv, &cv)
+                };
+                let (mut lo, mut hi) = (0.0, 1.0);
+                for _ in 0..30 {
+                    let mid = 0.5 * (lo + hi);
+                    if ke_at(mid) > ke_half {
+                        hi = mid;
+                    } else {
+                        lo = mid;
+                    }
+                }
+                scale = lo;
+            }
+        }
+        for (i, b) in self.sys.rigids.iter_mut().enumerate() {
+            if b.frozen {
+                continue;
+            }
+            for k in 0..6 {
+                b.qdot[k] = rigid_vhalf[i][k] + scale * (rigid_vnew[i][k] - rigid_vhalf[i][k]);
+            }
+            b.q = rigid_qbar[i];
+            b.clear_forces();
+        }
+        for (ci, c) in self.sys.cloths.iter_mut().enumerate() {
+            for i in 0..c.n_nodes() {
+                if !c.pinned[i] {
+                    c.v[i] =
+                        cloth_vhalf[ci][i] + scale * (cloth_vnew[ci][i] - cloth_vhalf[ci][i]);
+                    c.x[i] = cloth_xbar[ci][i];
+                }
+            }
+            c.clear_forces();
+        }
+        // Re-parameterize any rigid body drifting toward gimbal lock.
+        // (Not done while taping: re-basing would break the gradient
+        // chain; taped episodes are short and rotation-bounded.)
+        if !self.cfg.record_tape {
+            for b in &mut self.sys.rigids {
+                if !b.frozen && b.near_gimbal_lock() {
+                    canonicalize_rotation(b);
+                }
+            }
+        }
+
+        if self.cfg.record_tape {
+            let mut rec = StepRecord {
+                h,
+                rigid_solves: rigid_recs,
+                cloth_solves: cloth_recs,
+                cloth_ext,
+                zones: zone_recs,
+                bytes: 0,
+            };
+            rec.bytes = rec.estimate_bytes();
+            self.tape.push(rec);
+        }
+        self.steps += 1;
+        self.last_stats = stats;
+    }
+
+    /// Run `n` steps.
+    pub fn run(&mut self, n: usize) {
+        for _ in 0..n {
+            self.step();
+        }
+    }
+
+    /// Total bytes retained by the tape (Fig. 3 memory accounting).
+    pub fn tape_bytes(&self) -> usize {
+        self.tape.iter().map(|r| r.bytes).sum()
+    }
+
+    pub fn clear_tape(&mut self) {
+        self.tape.clear();
+    }
+}
+
+/// Re-express a body's orientation with a canonical Euler triple
+/// (|θ| ≤ π/2) preserving the rotation matrix and world angular velocity.
+fn canonicalize_rotation(b: &mut crate::bodies::RigidBody) {
+    let rm = b.rotation();
+    let omega = b.omega();
+    let m = rm.m;
+    // R = Rz(ψ)Ry(θ)Rx(φ) ⇒ θ = −asin(R₃₁), ψ = atan2(R₂₁,R₁₁), φ = atan2(R₃₂,R₃₃).
+    let theta = (-m[2][0]).clamp(-1.0, 1.0).asin();
+    let psi = m[1][0].atan2(m[0][0]);
+    let phi = m[2][1].atan2(m[2][2]);
+    b.q[0] = phi;
+    b.q[1] = theta;
+    b.q[2] = psi;
+    // ṙ = T⁻¹ ω.
+    let t = euler::omega_transform(Vec3::new(phi, theta, psi));
+    let rdot = t.inverse() * omega;
+    b.qdot[0] = rdot.x;
+    b.qdot[1] = rdot.y;
+    b.qdot[2] = rdot.z;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::{Cloth, RigidBody};
+    use crate::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+
+    fn ground() -> RigidBody {
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0))
+    }
+
+    #[test]
+    fn cube_falls_and_rests_on_ground() {
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+        let mut sim = Simulation::new(sys, SimConfig::default());
+        sim.run(300);
+        let b = &sim.sys.rigids[1];
+        // Settles with bottom at the ground (center at ~0.5 + δ).
+        assert!((b.translation().y - 0.5).abs() < 0.02, "y = {}", b.translation().y);
+        assert!(b.linear_velocity().norm() < 0.1, "v = {:?}", b.linear_velocity());
+        // Never penetrated.
+        let ymin = b.world_verts().iter().map(|p| p.y).fold(f64::MAX, f64::min);
+        assert!(ymin > -5e-3, "penetration: ymin = {ymin}");
+    }
+
+    #[test]
+    fn two_cubes_stack() {
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.6, 0.0)));
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.07, 1.9, 0.03)));
+        let mut sim = Simulation::new(sys, SimConfig::default());
+        sim.run(400);
+        let y1 = sim.sys.rigids[1].translation().y;
+        let y2 = sim.sys.rigids[2].translation().y;
+        assert!((y1 - 0.5).abs() < 0.03, "bottom cube y = {y1}");
+        assert!((y2 - 1.5).abs() < 0.08, "top cube y = {y2}");
+    }
+
+    #[test]
+    fn cloth_drapes_on_cube_without_penetrating() {
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::frozen_from_mesh(unit_box()));
+        let cloth = Cloth::from_grid(
+            cloth_grid(8, 8, 2.0, 2.0).translated(Vec3::new(0.0, 0.8, 0.0)),
+            0.2,
+            1000.0,
+            1.0,
+            2.0,
+        );
+        sys.add_cloth(cloth);
+        let mut sim = Simulation::new(sys, SimConfig { dt: 1.0 / 200.0, ..Default::default() });
+        sim.run(200);
+        // The cloth's center region must stay on/above the cube top.
+        let c = &sim.sys.cloths[0];
+        let center = c.x[c.x.len() / 2];
+        assert!(center.y > 0.49, "cloth center fell through: {center:?}");
+        for p in &c.x {
+            assert!(p.is_finite());
+            // Nothing deep inside the cube.
+            let inside = p.x.abs() < 0.45 && p.y < 0.45 && p.y > -0.45 && p.z.abs() < 0.45;
+            assert!(!inside, "cloth node inside cube: {p:?}");
+        }
+    }
+
+    #[test]
+    fn momentum_conserved_in_free_collision() {
+        // Two equal cubes colliding head-on in zero gravity: the zone
+        // projection conserves linear momentum.
+        let mut sys = System::new();
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0)
+                .with_position(Vec3::new(-1.0, 0.0, 0.0))
+                .with_velocity(Vec3::new(2.0, 0.0, 0.0)),
+        );
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 3.0)
+                .with_position(Vec3::new(1.0, 0.04, 0.06))
+                .with_velocity(Vec3::new(-2.0, 0.0, 0.0)),
+        );
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig { gravity: Vec3::default(), dt: 1.0 / 100.0, ..Default::default() },
+        );
+        let p0 = sim.sys.linear_momentum();
+        sim.run(120);
+        let p1 = sim.sys.linear_momentum();
+        assert!((p1 - p0).norm() < 1e-3 * (1.0 + p0.norm()), "Δp = {:?}", p1 - p0);
+        // They did collide (velocities changed).
+        assert!((sim.sys.rigids[0].linear_velocity().x - 2.0).abs() > 0.5);
+    }
+
+    #[test]
+    fn tape_records_steps_and_bytes() {
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.55, 0.0)));
+        let mut sim = Simulation::new(sys, SimConfig { record_tape: true, ..Default::default() });
+        sim.run(20);
+        assert_eq!(sim.tape.len(), 20);
+        assert!(sim.tape_bytes() > 0);
+        // Contact steps recorded zones.
+        assert!(sim.tape.iter().any(|r| !r.zones.is_empty()));
+    }
+
+    #[test]
+    fn canonicalize_preserves_rotation_and_omega() {
+        let mut b = RigidBody::from_mesh(unit_box(), 1.0);
+        b.q[0] = 2.8;
+        b.q[1] = 1.2;
+        b.q[2] = -2.1;
+        b.qdot[0] = 0.5;
+        b.qdot[1] = -0.3;
+        b.qdot[2] = 0.7;
+        let r0 = b.rotation();
+        let w0 = b.omega();
+        canonicalize_rotation(&mut b);
+        assert!((b.rotation() - r0).fro() < 1e-9);
+        assert!((b.omega() - w0).norm() < 1e-9);
+        assert!(b.q[1].abs() <= std::f64::consts::FRAC_PI_2 + 1e-9);
+    }
+}

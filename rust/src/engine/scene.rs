@@ -1,0 +1,217 @@
+//! Scene construction from JSON configs — the engine's config system.
+//!
+//! ```json
+//! {
+//!   "dt": 0.00667, "gravity": [0, -9.8, 0], "thickness": 0.001,
+//!   "bodies": [
+//!     {"type": "ground", "y": 0.0, "half_extent": 10.0},
+//!     {"type": "box", "half": [0.5, 0.5, 0.5], "pos": [0, 1, 0],
+//!      "density": 1.0, "vel": [0, 0, 0]},
+//!     {"type": "sphere", "radius": 0.3, "pos": [0, 2, 0], "subdiv": 2},
+//!     {"type": "bunny", "radius": 0.5, "pos": [0, 1, 0]},
+//!     {"type": "cloth", "res": [16, 16], "size": [2, 2], "pos": [0, 1, 0],
+//!      "density": 0.2, "k_stretch": 1000, "k_bend": 1, "damping": 1,
+//!      "pins": [0, 16]}
+//!   ]
+//! }
+//! ```
+
+use crate::bodies::{Cloth, RigidBody, System};
+use crate::engine::{SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+fn vec3_of(j: Option<&Json>, default: Vec3) -> Vec3 {
+    match j.and_then(Json::as_arr) {
+        Some(a) if a.len() == 3 => Vec3::new(
+            a[0].as_f64().unwrap_or(default.x),
+            a[1].as_f64().unwrap_or(default.y),
+            a[2].as_f64().unwrap_or(default.z),
+        ),
+        _ => default,
+    }
+}
+
+/// Build a `Simulation` from a JSON scene description.
+pub fn build_scene(config: &Json) -> Result<Simulation> {
+    let mut cfg = SimConfig {
+        dt: config.f64_or("dt", 1.0 / 150.0),
+        thickness: config.f64_or("thickness", 1e-3),
+        gravity: vec3_of(config.get("gravity"), Vec3::new(0.0, -9.8, 0.0)),
+        record_tape: config.bool_or("record_tape", false),
+        workers: config.usize_or("workers", 1),
+        ..Default::default()
+    };
+    if config.str_or("diff_mode", "qr") == "dense" {
+        cfg.diff_mode = crate::engine::DiffMode::Dense;
+    }
+    if config.str_or("collision_mode", "local") == "global" {
+        cfg.collision_mode = crate::engine::CollisionMode::Global;
+    }
+    let mut sys = System::new();
+    let bodies = config
+        .get("bodies")
+        .and_then(Json::as_arr)
+        .context("scene config needs a 'bodies' array")?;
+    for (i, b) in bodies.iter().enumerate() {
+        let ty = b.str_or("type", "?").to_string();
+        let pos = vec3_of(b.get("pos"), Vec3::default());
+        let vel = vec3_of(b.get("vel"), Vec3::default());
+        let density = b.f64_or("density", 1.0);
+        match ty.as_str() {
+            "ground" => {
+                let he = b.f64_or("half_extent", 10.0);
+                let body = RigidBody::frozen_from_mesh(primitives::box_mesh(Vec3::new(
+                    he,
+                    0.5,
+                    he,
+                )))
+                .with_position(Vec3::new(0.0, b.f64_or("y", 0.0) - 0.5, 0.0));
+                sys.add_rigid(body);
+            }
+            "box" => {
+                let half = vec3_of(b.get("half"), Vec3::splat(0.5));
+                let mut body = RigidBody::from_mesh(primitives::box_mesh(half), density)
+                    .with_position(pos)
+                    .with_velocity(vel)
+                    .with_rotation(vec3_of(b.get("rot"), Vec3::default()));
+                body.frozen = b.bool_or("frozen", false);
+                sys.add_rigid(body);
+            }
+            "sphere" => {
+                let body = RigidBody::from_mesh(
+                    primitives::icosphere(b.f64_or("radius", 0.5), b.usize_or("subdiv", 2)),
+                    density,
+                )
+                .with_position(pos)
+                .with_velocity(vel);
+                sys.add_rigid(body);
+            }
+            "cylinder" => {
+                let body = RigidBody::from_mesh(
+                    primitives::cylinder(
+                        b.f64_or("radius", 0.1),
+                        b.f64_or("height", 1.0),
+                        b.usize_or("segments", 12),
+                    ),
+                    density,
+                )
+                .with_position(pos)
+                .with_velocity(vel);
+                sys.add_rigid(body);
+            }
+            "bunny" | "armadillo" => {
+                let mesh = if ty == "bunny" {
+                    primitives::bunny(b.f64_or("radius", 0.5), b.usize_or("subdiv", 2))
+                } else {
+                    primitives::armadillo(b.f64_or("radius", 0.5), b.usize_or("subdiv", 2))
+                };
+                let body =
+                    RigidBody::from_mesh(mesh, density).with_position(pos).with_velocity(vel);
+                sys.add_rigid(body);
+            }
+            "obj" => {
+                let path = b.str_or("path", "");
+                let mesh = crate::mesh::obj::load_obj(std::path::Path::new(path))?;
+                let body =
+                    RigidBody::from_mesh(mesh, density).with_position(pos).with_velocity(vel);
+                sys.add_rigid(body);
+            }
+            "cloth" => {
+                let res = b.get("res").and_then(Json::as_arr);
+                let (nx, nz) = match res {
+                    Some(r) if r.len() == 2 => (
+                        r[0].as_usize().unwrap_or(8),
+                        r[1].as_usize().unwrap_or(8),
+                    ),
+                    _ => (8, 8),
+                };
+                let size = b.get("size").and_then(Json::as_arr);
+                let (sx, sz) = match size {
+                    Some(s) if s.len() == 2 => {
+                        (s[0].as_f64().unwrap_or(1.0), s[1].as_f64().unwrap_or(1.0))
+                    }
+                    _ => (1.0, 1.0),
+                };
+                let mesh = primitives::cloth_grid(nx, nz, sx, sz).translated(pos);
+                let mut cloth = Cloth::from_grid(
+                    mesh,
+                    b.f64_or("density", 0.2),
+                    b.f64_or("k_stretch", 1000.0),
+                    b.f64_or("k_bend", 1.0),
+                    b.f64_or("damping", 1.0),
+                );
+                if let Some(pins) = b.get("pins").and_then(Json::as_arr) {
+                    for p in pins {
+                        if let Some(i) = p.as_usize() {
+                            cloth.pin(i);
+                        }
+                    }
+                }
+                sys.add_cloth(cloth);
+            }
+            other => bail!("body {i}: unknown type '{other}'"),
+        }
+    }
+    Ok(Simulation::new(sys, cfg))
+}
+
+/// Parse and build from a JSON string.
+pub fn build_scene_str(text: &str) -> Result<Simulation> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("scene json: {e}"))?;
+    build_scene(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_mixed_scene() {
+        let sim = build_scene_str(
+            r#"{
+              "dt": 0.01, "gravity": [0, -5, 0],
+              "bodies": [
+                {"type": "ground"},
+                {"type": "box", "pos": [0, 1, 0], "density": 2.0},
+                {"type": "sphere", "radius": 0.3, "pos": [2, 1, 0]},
+                {"type": "cloth", "res": [4, 4], "size": [1, 1], "pos": [0, 2, 0],
+                 "pins": [0, 4]}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(sim.sys.rigids.len(), 3);
+        assert_eq!(sim.sys.cloths.len(), 1);
+        assert!(sim.sys.rigids[0].frozen);
+        assert_eq!(sim.cfg.dt, 0.01);
+        assert_eq!(sim.cfg.gravity.y, -5.0);
+        assert!(sim.sys.cloths[0].pinned[0]);
+        assert!(sim.sys.cloths[0].pinned[4]);
+    }
+
+    #[test]
+    fn rejects_unknown_body() {
+        assert!(build_scene_str(r#"{"bodies": [{"type": "wormhole"}]}"#).is_err());
+        assert!(build_scene_str(r#"{"no_bodies": 1}"#).is_err());
+    }
+
+    #[test]
+    fn figurines_and_modes() {
+        let sim = build_scene_str(
+            r#"{
+              "diff_mode": "dense", "collision_mode": "global",
+              "bodies": [
+                {"type": "bunny", "radius": 0.4, "pos": [0, 1, 0], "subdiv": 1},
+                {"type": "armadillo", "radius": 0.4, "pos": [2, 1, 0], "subdiv": 1}
+              ]
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(sim.cfg.diff_mode, crate::engine::DiffMode::Dense);
+        assert_eq!(sim.cfg.collision_mode, crate::engine::CollisionMode::Global);
+        assert_eq!(sim.sys.rigids.len(), 2);
+    }
+}

@@ -1,0 +1,132 @@
+//! E4 — Table 2: backpropagation cost without vs with the fast
+//! differentiation scheme (§6). N cubes densely stacked in two layers
+//! form ONE connected impact zone, so every constraint lands in a single
+//! KKT system: the dense (n+m)³ solve ("W/o FD") vs the QR path.
+
+use super::{dump_json, print_table};
+use crate::bodies::{RigidBody, System};
+use crate::engine::backward::{backward, LossGrad};
+use crate::engine::{CollisionMode, DiffMode, SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives::{box_mesh, unit_box};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::timer::{Stats, Timer};
+use anyhow::Result;
+
+/// N cubes packed in two tight layers (one connected component),
+/// stepped briefly with tape. The expensive global forward is built ONCE;
+/// both diff modes are then timed on the same tape (fair comparison, and
+/// the forward cost is excluded as in the paper's "runtime of
+/// backpropagation").
+pub fn backprop_time_both(n: usize, trials: usize) -> (Stats, Stats) {
+    let per_layer = n.div_ceil(2);
+    let side = (per_layer as f64).sqrt().ceil() as usize;
+    let mut dense_stats = Stats::new();
+    let mut qr_stats = Stats::new();
+    for trial in 0..trials {
+        let mut sys = System::new();
+        let extent = side as f64 * 1.1 + 4.0;
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(box_mesh(Vec3::new(extent, 0.5, extent)))
+                .with_position(Vec3::new(0.0, -0.5, 0.0)),
+        );
+        let mut placed = 0;
+        'outer: for layer in 0..2 {
+            for k in 0..per_layer {
+                if placed >= n {
+                    break 'outer;
+                }
+                let (i, j) = (k % side, k / side);
+                sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+                    1.02 * (i as f64 - side as f64 / 2.0) + 0.3 * layer as f64,
+                    0.505 + 1.01 * layer as f64 + 0.001 * (trial + 1) as f64,
+                    1.02 * (j as f64 - side as f64 / 2.0) + 0.3 * layer as f64,
+                )));
+                placed += 1;
+            }
+        }
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig {
+                record_tape: false,
+                collision_mode: CollisionMode::LocalZones,
+                dt: 1.0 / 150.0,
+                ..Default::default()
+            },
+        );
+        sim.run(15);
+        // One global zone ≙ "one big connected component": both diff
+        // modes face identical KKT sizes during measurement.
+        sim.cfg.collision_mode = CollisionMode::Global;
+        sim.cfg.record_tape = true;
+        let meas_steps = 1;
+        sim.run(meas_steps);
+        let mut seed = LossGrad::zeros(&sim);
+        for b in 1..=placed {
+            seed.rigid_q[b][4] = 1.0;
+        }
+        sim.cfg.diff_mode = DiffMode::Dense;
+        let t = Timer::start();
+        let _ = backward(&sim, &seed);
+        dense_stats.push(t.seconds() / meas_steps as f64);
+        sim.cfg.diff_mode = DiffMode::Qr;
+        let t = Timer::start();
+        let _ = backward(&sim, &seed);
+        qr_stats.push(t.seconds() / meas_steps as f64);
+    }
+    (dense_stats, qr_stats)
+}
+
+/// Back-compat wrapper used by benches/tests.
+pub fn backprop_time(n: usize, mode: DiffMode, trials: usize) -> Stats {
+    let (d, q) = backprop_time_both(n, trials);
+    match mode {
+        DiffMode::Dense => d,
+        _ => q,
+    }
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let sizes = args.usize_list_or("sizes", &[100, 200, 300]);
+    let trials = args.usize_or("trials", 3);
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for &n in &sizes {
+        let (wofd, ours) = backprop_time_both(n, trials);
+        let speedup = wofd.mean() / ours.mean().max(1e-12);
+        let mut j = Json::obj();
+        j.set("n", n)
+            .set("wofd_mean_s", wofd.mean())
+            .set("wofd_std_s", wofd.std())
+            .set("ours_mean_s", ours.mean())
+            .set("ours_std_s", ours.std())
+            .set("speedup", speedup);
+        jrows.push(j);
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.4}s ± {:.4}s", wofd.mean(), wofd.std()),
+            format!("{:.4}s ± {:.4}s", ours.mean(), ours.std()),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    print_table(
+        "Table 2: backprop seconds/step — W/o FD (dense KKT) vs ours (QR)",
+        &["# of cubes", "W/o FD", "Ours", "speedup"],
+        &rows,
+    );
+    let mut out = Json::obj();
+    out.set("experiment", "table2").set("rows", Json::Arr(jrows));
+    dump_json("table2_fd", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qr_beats_dense_on_connected_stacks() {
+        let (dense, qr) = backprop_time_both(24, 1);
+        assert!(qr.mean() < dense.mean(), "qr {} vs dense {}", qr.mean(), dense.mean());
+    }
+}

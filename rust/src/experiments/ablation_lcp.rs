@@ -1,0 +1,116 @@
+//! E3 — Table 1: backpropagation cost with the global LCP-style solver
+//! (one optimization over all contacts, de Avila Belbute-Peres 2018) vs
+//! localized impact zones. N cubes are dropped on the ground; contacts
+//! are pairwise-independent, so the local method scales linearly while
+//! the global one pays the full (ΣN, ΣM) system.
+
+use super::{dump_json, print_table};
+use crate::bodies::{RigidBody, System};
+use crate::engine::backward::{backward, LossGrad};
+use crate::engine::{CollisionMode, SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives::{box_mesh, unit_box};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::timer::{Stats, Timer};
+use anyhow::Result;
+
+/// Build N settled-ish cubes (small drop) and run `meas_steps` taped
+/// steps + backward per trial; returns per-step backprop seconds stats.
+pub fn backprop_time(n: usize, mode: CollisionMode, trials: usize) -> Stats {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let mut stats = Stats::new();
+    for trial in 0..trials {
+        let mut sys = System::new();
+        let extent = side as f64 * 1.5 + 4.0;
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(box_mesh(Vec3::new(extent, 0.5, extent)))
+                .with_position(Vec3::new(0.0, -0.5, 0.0)),
+        );
+        for k in 0..n {
+            let (i, j) = (k % side, k / side);
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+                1.5 * (i as f64 - side as f64 / 2.0) + 0.01 * (trial as f64 + 1.0),
+                0.502,
+                1.5 * (j as f64 - side as f64 / 2.0),
+            )));
+        }
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig {
+                record_tape: false,
+                // Settle in local mode (identical physics, cheaper), then
+                // measure in the requested mode.
+                collision_mode: CollisionMode::LocalZones,
+                dt: 1.0 / 150.0,
+                ..Default::default()
+            },
+        );
+        sim.run(15);
+        assert!(sim.last_stats.impacts > 0, "no contacts to measure");
+        sim.cfg.collision_mode = mode;
+        sim.cfg.record_tape = true;
+        let meas_steps = 3;
+        sim.run(meas_steps);
+        let mut seed = LossGrad::zeros(&sim);
+        for b in 1..=n {
+            seed.rigid_q[b][3] = 1.0;
+            seed.rigid_q[b][4] = 1.0;
+        }
+        let t = Timer::start();
+        let _ = backward(&sim, &seed);
+        stats.push(t.seconds() / meas_steps as f64);
+    }
+    stats
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let sizes = args.usize_list_or("sizes", &[100, 200, 300]);
+    let trials = args.usize_or("trials", 3);
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for &n in &sizes {
+        let global = backprop_time(n, CollisionMode::Global, trials);
+        let local = backprop_time(n, CollisionMode::LocalZones, trials);
+        let speedup = global.mean() / local.mean().max(1e-12);
+        let mut j = Json::obj();
+        j.set("n", n)
+            .set("global_mean_s", global.mean())
+            .set("global_std_s", global.std())
+            .set("local_mean_s", local.mean())
+            .set("local_std_s", local.std())
+            .set("speedup", speedup);
+        jrows.push(j);
+        rows.push(vec![
+            n.to_string(),
+            format!("{:.4}s ± {:.4}s", global.mean(), global.std()),
+            format!("{:.4}s ± {:.4}s", local.mean(), local.std()),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    print_table(
+        "Table 1: backprop seconds/step — global LCP-style vs local zones (ours)",
+        &["# of cubes", "LCP (global)", "Ours (local)", "speedup"],
+        &rows,
+    );
+    let mut out = Json::obj();
+    out.set("experiment", "table1").set("rows", Json::Arr(jrows));
+    dump_json("table1_lcp", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_beats_global_and_gap_widens() {
+        let g1 = backprop_time(9, CollisionMode::Global, 1).mean();
+        let l1 = backprop_time(9, CollisionMode::LocalZones, 1).mean();
+        let g2 = backprop_time(36, CollisionMode::Global, 1).mean();
+        let l2 = backprop_time(36, CollisionMode::LocalZones, 1).mean();
+        assert!(l1 < g1, "local {l1} vs global {g1} at n=9");
+        assert!(l2 < g2, "local {l2} vs global {g2} at n=36");
+        // The paper's headline: the gap widens with scene complexity.
+        assert!(g2 / l2 > g1 / l1 * 0.8, "speedup should (roughly) widen: {} -> {}", g1 / l1, g2 / l2);
+    }
+}

@@ -1,0 +1,113 @@
+//! E9 — Fig. 9: parameter estimation. Two cubes collide head-on with
+//! velocities ±v; estimate the left cube's mass so the post-collision
+//! total momentum matches a target (paper: p = (3,0,0), m₁ → 5.4 after
+//! 90 gradient steps).
+
+use super::{dump_json, print_table};
+use crate::bodies::{RigidBody, System};
+use crate::engine::backward::{backward, LossGrad};
+use crate::engine::{SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives::unit_box;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Simulate the collision with left-cube mass `m1`; returns
+/// (total momentum x, sim-with-tape).
+fn collide(m1: f64, record: bool) -> (f64, Simulation) {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), m1)
+            .with_position(Vec3::new(-1.2, 0.02, 0.05))
+            .with_velocity(Vec3::new(1.0, 0.0, 0.0)),
+    );
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, 0.0, 0.0))
+            .with_velocity(Vec3::new(-1.0, 0.0, 0.0)),
+    );
+    let mut sim = Simulation::new(
+        sys,
+        SimConfig {
+            record_tape: record,
+            gravity: Vec3::default(),
+            dt: 1.0 / 100.0,
+            ..Default::default()
+        },
+    );
+    sim.run(60);
+    (sim.sys.linear_momentum().x, sim)
+}
+
+/// Gradient-descent mass estimation; returns (mass history, loss history).
+pub fn estimate(p_target: f64, iters: usize, lr: f64) -> (Vec<f64>, Vec<f64>) {
+    let mut m1: f64 = 1.0;
+    let mut ms = vec![m1];
+    let mut losses = Vec::new();
+    for _ in 0..iters {
+        let (p, sim) = collide(m1, true);
+        let loss = (p - p_target) * (p - p_target);
+        losses.push(loss);
+        // L = (p − p*)², p = m₁·v₁' + m₂·v₂' ⇒ seeds on final velocities
+        // (scaled by each body's mass) + the explicit ∂p/∂m₁ = v₁' term.
+        let d = 2.0 * (p - p_target);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_v[0][3] = d * sim.sys.rigids[0].mass;
+        seed.rigid_v[1][3] = d * sim.sys.rigids[1].mass;
+        let g = backward(&sim, &seed);
+        let grad = g.rigid_mass[0] + d * sim.sys.rigids[0].qdot[3];
+        m1 = (m1 - lr * grad).max(0.05);
+        ms.push(m1);
+    }
+    (ms, losses)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let p_target = args.f64_or("p-target", 3.0);
+    let iters = args.usize_or("iters", 90);
+    let lr = args.f64_or("lr", 0.15);
+    let (ms, losses) = estimate(p_target, iters, lr);
+    let m_final = *ms.last().unwrap();
+    let (p_final, _) = collide(m_final, false);
+    let mut rows = Vec::new();
+    for i in [0, 9, 29, 59, iters - 1] {
+        if i < losses.len() {
+            rows.push(vec![
+                format!("{}", i + 1),
+                format!("{:.4}", ms[i + 1]),
+                format!("{:.5}", losses[i]),
+            ]);
+        }
+    }
+    print_table("Fig 9: mass estimation (target p_x)", &["iter", "m1", "loss"], &rows);
+    println!("estimated m1 = {m_final:.3}; achieved momentum {p_final:.3} (target {p_target})");
+    let mut out = Json::obj();
+    out.set("experiment", "fig9")
+        .set("p_target", p_target)
+        .set("m1_final", m_final)
+        .set("p_final", p_final)
+        .set("m1_curve", Json::Arr(ms.iter().map(|&m| Json::Num(m)).collect()))
+        .set("loss_curve", Json::Arr(losses.iter().map(|&l| Json::Num(l)).collect()));
+    dump_json("fig9_estimation", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_momentum_matching_mass() {
+        // Head-on inelastic collision conserves momentum:
+        // p = m₁·1 + 1·(−1) ⇒ m₁* = p* + 1.
+        let p_target = 1.5;
+        let (ms, losses) = estimate(p_target, 40, 0.3);
+        let m_final = *ms.last().unwrap();
+        assert!(
+            (m_final - (p_target + 1.0)).abs() < 0.15,
+            "m1 = {m_final}, want ≈ {}",
+            p_target + 1.0
+        );
+        assert!(losses.last().unwrap() < &0.01, "loss {:?}", losses.last());
+    }
+}

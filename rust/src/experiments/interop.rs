@@ -1,0 +1,160 @@
+//! E10 — Fig. 10: interoperability. Three cubes on smooth ground; apply
+//! forces so they end up stuck together while minimizing force. The LOSS
+//! is evaluated in an *external, non-differentiable* simulator (a simple
+//! impulse-based rigid integrator standing in for MuJoCo), while the
+//! GRADIENT is evaluated in DiffSim — demonstrating that states and
+//! control signals transfer across engines.
+
+use super::{dump_json, print_table};
+use crate::bodies::{RigidBody, System};
+use crate::engine::backward::{backward, LossGrad};
+use crate::engine::{SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives::{box_mesh, unit_box};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use anyhow::Result;
+
+pub const STEPS: usize = 30;
+const FORCE_REG: f64 = 1e-6;
+const X0: [f64; 3] = [-1.4, 0.0, 1.4];
+
+/// External simulator: cubes as 1-D point masses with inelastic pairwise
+/// collision (diameter 1), symplectic Euler. Deliberately independent of
+/// the engine — the "MuJoCo" of this experiment.
+pub fn external_sim(forces: &[f64]) -> [f64; 3] {
+    let mut x = X0;
+    let mut v = [0.0f64; 3];
+    let h = 1.0 / 100.0;
+    for s in 0..STEPS {
+        for k in 0..3 {
+            v[k] += h * forces[3 * s + k];
+            x[k] += h * v[k];
+        }
+        // Inelastic pairwise resolution (sorted order is preserved).
+        for _ in 0..3 {
+            for k in 0..2 {
+                if x[k + 1] - x[k] < 1.0 {
+                    let mid = 0.5 * (x[k] + x[k + 1]);
+                    x[k] = mid - 0.5;
+                    x[k + 1] = mid + 0.5;
+                    let vm = 0.5 * (v[k] + v[k + 1]);
+                    v[k] = vm;
+                    v[k + 1] = vm;
+                }
+            }
+        }
+    }
+    x
+}
+
+/// Loss in the external simulator: squared gaps between neighbors +
+/// force regularizer ("stick together while minimizing applied force").
+pub fn external_loss(forces: &[f64]) -> f64 {
+    let x = external_sim(forces);
+    let g1 = x[1] - x[0] - 1.0;
+    let g2 = x[2] - x[1] - 1.0;
+    g1 * g1 + g2 * g2 + FORCE_REG * forces.iter().map(|f| f * f).sum::<f64>()
+}
+
+/// Gradient from DiffSim: run the same controls in the mesh engine and
+/// backpropagate the same objective through it.
+pub fn diffsim_grad(forces: &[f64]) -> Vec<f64> {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    for &x in &X0 {
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(x, 0.501, 0.0)));
+    }
+    let mut sim = Simulation::new(
+        sys,
+        SimConfig { record_tape: true, dt: 1.0 / 100.0, ..Default::default() },
+    );
+    for s in 0..STEPS {
+        for k in 0..3 {
+            sim.sys.rigids[k + 1].ext_force = Vec3::new(forces[3 * s + k], 0.0, 0.0);
+        }
+        sim.step();
+    }
+    let xs: Vec<f64> = (1..4).map(|b| sim.sys.rigids[b].translation().x).collect();
+    let g1 = xs[1] - xs[0] - 1.0;
+    let g2 = xs[2] - xs[1] - 1.0;
+    let mut seed = LossGrad::zeros(&sim);
+    seed.rigid_q[1][3] = -2.0 * g1;
+    seed.rigid_q[2][3] = 2.0 * g1 - 2.0 * g2;
+    seed.rigid_q[3][3] = 2.0 * g2;
+    let g = backward(&sim, &seed);
+    let mut grad = vec![0.0; forces.len()];
+    for s in 0..STEPS {
+        for k in 0..3 {
+            grad[3 * s + k] = g.rigid_force[s][k + 1].x + 2.0 * FORCE_REG * forces[3 * s + k];
+        }
+    }
+    grad
+}
+
+/// Cross-simulator optimization loop; returns external-sim loss curve.
+/// Adam handles the poor scaling of per-step force parameters.
+pub fn optimize(iters: usize, lr: f64) -> Vec<f64> {
+    let mut forces = vec![0.0; 3 * STEPS];
+    let mut opt = crate::ml::adam::Adam::new(forces.len(), lr);
+    let mut curve = Vec::new();
+    for _ in 0..iters {
+        curve.push(external_loss(&forces));
+        let grad = diffsim_grad(&forces);
+        opt.step(&mut forces, &grad);
+    }
+    curve.push(external_loss(&forces));
+    curve
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let iters = args.usize_or("iters", 10);
+    let lr = args.f64_or("lr", 2.0);
+    let curve = optimize(iters, lr);
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .enumerate()
+        .map(|(i, l)| vec![i.to_string(), format!("{l:.5}")])
+        .collect();
+    print_table(
+        "Fig 10: interop — loss in EXTERNAL sim, gradients from DiffSim",
+        &["gradient step", "external loss"],
+        &rows,
+    );
+    let mut out = Json::obj();
+    out.set("experiment", "fig10")
+        .set("curve", Json::Arr(curve.iter().map(|&l| Json::Num(l)).collect()));
+    dump_json("fig10_interop", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn external_sim_sticks_on_contact() {
+        // Push outer cubes inward hard: all three should end adjacent.
+        let mut forces = vec![0.0; 3 * STEPS];
+        for s in 0..STEPS {
+            forces[3 * s] = 16.0;
+            forces[3 * s + 2] = -16.0;
+        }
+        let x = external_sim(&forces);
+        assert!((x[1] - x[0] - 1.0).abs() < 0.05, "{x:?}");
+        assert!((x[2] - x[1] - 1.0).abs() < 0.05, "{x:?}");
+    }
+
+    #[test]
+    fn cross_simulator_gradients_reduce_external_loss() {
+        let curve = optimize(12, 2.0);
+        let first = curve[0];
+        let last = *curve.last().unwrap();
+        assert!(
+            last < 0.3 * first,
+            "external loss did not drop: {first} -> {last} ({curve:?})"
+        );
+    }
+}

@@ -1,0 +1,94 @@
+//! Experiment drivers — one per table/figure of the paper's §7.
+//! See DESIGN.md §5 for the experiment index (E1–E11).
+
+use crate::util::cli::Args;
+use anyhow::{bail, Result};
+
+/// (id, summary) of every registered experiment.
+pub fn registry() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig3-objects", "Fig 3 top: runtime+memory vs #objects (ours vs MPM)"),
+        ("fig3-scale", "Fig 3 bottom: runtime+memory vs cloth:bunny scale ratio"),
+        ("table1", "Table 1: backprop s/step, global LCP vs local zones"),
+        ("table2", "Table 2: backprop s/step, W/o FD vs QR fast diff"),
+        ("fig5", "Fig 5/11: two-way coupling (lift + dominoes) metrics"),
+        ("fig6", "Fig 6: trampoline — capsule-cloth baseline vs ours"),
+        ("fig7", "Fig 7: inverse problem, gradient vs CMA-ES"),
+        ("fig8", "Fig 8: learning control, ours vs DDPG"),
+        ("fig9", "Fig 9: mass parameter estimation"),
+        ("fig10", "Fig 10: interoperability with an external simulator"),
+    ]
+}
+
+pub fn registry_help() -> String {
+    registry()
+        .iter()
+        .map(|(id, s)| format!("  {id:<14} {s}"))
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Dispatch `diffsim experiment <id> ...`.
+pub fn run_from_cli(args: &Args) -> Result<()> {
+    let id = args.positional.get(1).map(String::as_str).unwrap_or("");
+    match id {
+        "fig3-objects" => scalability::run_objects(args),
+        "fig3-scale" => scalability::run_scale(args),
+        "table1" => ablation_lcp::run(args),
+        "table2" => ablation_fd::run(args),
+        "fig5" => coupling::run(args),
+        "fig6" => trampoline::run(args),
+        "fig7" => inverse::run(args),
+        "fig8" => control::run(args),
+        "fig9" => estimation::run(args),
+        "fig10" => interop::run(args),
+        other => bail!("unknown experiment '{other}'; available:\n{}", registry_help()),
+    }
+}
+
+pub mod ablation_fd;
+pub mod ablation_lcp;
+pub mod control;
+pub mod coupling;
+pub mod estimation;
+pub mod inverse;
+pub mod interop;
+pub mod scalability;
+pub mod trampoline;
+
+/// Shared table printer: fixed-width rows matching the paper's layout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n=== {title} ===");
+    let widths: Vec<usize> = header
+        .iter()
+        .enumerate()
+        .map(|(i, h)| {
+            rows.iter()
+                .map(|r| r.get(i).map(String::len).unwrap_or(0))
+                .chain(std::iter::once(h.len()))
+                .max()
+                .unwrap_or(8)
+        })
+        .collect();
+    let line = |cells: Vec<String>| {
+        let mut s = String::new();
+        for (i, c) in cells.iter().enumerate() {
+            s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+        }
+        println!("{}", s.trim_end());
+    };
+    line(header.iter().map(|s| s.to_string()).collect());
+    line(widths.iter().map(|w| "-".repeat(*w)).collect());
+    for r in rows {
+        line(r.clone());
+    }
+}
+
+/// Write experiment output JSON under bench_output/.
+pub fn dump_json(name: &str, j: &crate::util::json::Json) -> Result<()> {
+    std::fs::create_dir_all("bench_output")?;
+    let path = format!("bench_output/{name}.json");
+    std::fs::write(&path, j.pretty())?;
+    println!("[wrote {path}]");
+    Ok(())
+}

@@ -1,0 +1,270 @@
+//! E1/E2 — Fig. 3: runtime and memory vs scene complexity, ours (mesh +
+//! local zones) against the MPM particle/grid baseline.
+//!
+//! Top row: the number of falling objects grows (20 → 1000 in the paper)
+//! with constant stride, so the scene's spatial extent grows with N. Our
+//! cost is linear in N; MPM's grid must cover the extent → cubic blow-up
+//! until OOM (the paper's baseline dies at 200 objects / 640³).
+//!
+//! Bottom row: a rigid bunny strikes a cloth whose relative scale grows
+//! 1:1 → 10:1. Our cost is constant (resolution-independent); MPM must
+//! keep its dx fine enough for the bunny over a growing domain.
+
+use super::{dump_json, print_table};
+use crate::baselines::mpm::{Mpm, MpmConfig};
+use crate::bodies::{Cloth, RigidBody, System};
+use crate::engine::backward::{backward, LossGrad};
+use crate::engine::{SimConfig, Simulation};
+use crate::math::Vec3;
+use crate::mesh::primitives::{box_mesh, bunny, cloth_grid, unit_box};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Ours: N cubes falling on a ground plane with stride 2.5, simulated
+/// `steps` steps with the tape recorded, then one backward pass.
+/// Returns (seconds, logical bytes).
+pub fn ours_objects(n: usize, steps: usize) -> (f64, usize) {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let stride = 2.5;
+    let mut sys = System::new();
+    let extent = side as f64 * stride + 4.0;
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(extent, 0.5, extent)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    for k in 0..n {
+        let (i, j) = (k % side, k / side);
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+            stride * i as f64 - stride * side as f64 / 2.0,
+            0.7 + 0.02 * ((k * 7919) % 13) as f64,
+            stride * j as f64 - stride * side as f64 / 2.0,
+        )));
+    }
+    let mut sim = Simulation::new(
+        sys,
+        SimConfig { record_tape: true, workers: 4, dt: 1.0 / 150.0, ..Default::default() },
+    );
+    let t = Timer::start();
+    sim.run(steps);
+    let mut seed = LossGrad::zeros(&sim);
+    for b in 1..=n {
+        seed.rigid_q[b][4] = 1.0;
+    }
+    let _ = backward(&sim, &seed);
+    let time = t.seconds();
+    let mem = sim.tape_bytes() + sim.sys.state_bytes();
+    (time, mem)
+}
+
+/// MPM baseline: same N objects as particle boxes. The domain edge grows
+/// with the scene and the grid must keep dx fine enough to resolve a
+/// unit cube → n_grid ∝ side·stride. Beyond `max_grid` the baseline
+/// "OOMs" (like the paper's at 640³) and the would-be memory is
+/// reported instead. Returns (time?, tape bytes, note).
+pub fn mpm_objects(n: usize, steps: usize, max_grid: usize) -> (Option<f64>, usize, String) {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let stride = 2.5;
+    let extent = side as f64 * stride + 4.0;
+    let n_grid = (extent / 0.125).ceil() as usize; // 8 cells per unit cube
+    if n_grid > max_grid {
+        let would_bytes =
+            n_grid * n_grid * n_grid * 4 * 8 * steps + n * 4096 * 24 * 8 * steps;
+        return (None, would_bytes, format!("OOM (needs {n_grid}^3 grid)"));
+    }
+    let mut m = Mpm::new(MpmConfig { n_grid, extent, dt: 2e-4, ..Default::default() });
+    for k in 0..n {
+        let (i, j) = (k % side, k / side);
+        let cx = extent / 2.0 + stride * (i as f64 - side as f64 / 2.0);
+        let cz = extent / 2.0 + stride * (j as f64 - side as f64 / 2.0);
+        m.add_box(
+            Vec3::new(cx - 0.5, 1.0, cz - 0.5),
+            Vec3::new(cx + 0.5, 2.0, cz + 0.5),
+            Vec3::default(),
+        );
+    }
+    let t = Timer::start();
+    for _ in 0..steps {
+        m.step();
+    }
+    (
+        Some(t.seconds()),
+        m.tape_bytes(),
+        format!("{n_grid}^3 grid, {} particles", m.n_particles()),
+    )
+}
+
+/// Ours, Fig. 3 bottom: bunny dropped on a cloth of relative scale
+/// `ratio` (cloth mesh resolution FIXED — mesh cost tracks features,
+/// not spatial extent).
+pub fn ours_scale(ratio: f64, steps: usize) -> (f64, usize) {
+    let mut sys = System::new();
+    let mut cloth = Cloth::from_grid(
+        cloth_grid(16, 16, 2.0 * ratio, 2.0 * ratio),
+        0.3,
+        3000.0,
+        2.0,
+        1.0,
+    );
+    for &c in &[0usize, 16, 16 * 17, 17 * 17 - 1] {
+        cloth.pin(c);
+    }
+    sys.add_cloth(cloth);
+    sys.add_rigid(
+        RigidBody::from_mesh(bunny(0.4, 2), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)),
+    );
+    let mut sim = Simulation::new(
+        sys,
+        SimConfig { record_tape: true, dt: 1.0 / 200.0, ..Default::default() },
+    );
+    let t = Timer::start();
+    sim.run(steps);
+    let mut seed = LossGrad::zeros(&sim);
+    seed.rigid_q[0][4] = 1.0;
+    let _ = backward(&sim, &seed);
+    (t.seconds(), sim.tape_bytes() + sim.sys.state_bytes())
+}
+
+/// MPM, Fig. 3 bottom: the domain must cover the scaled cloth while the
+/// grid dx keeps the bunny resolved → n_grid ∝ ratio.
+pub fn mpm_scale(ratio: f64, steps: usize, max_grid: usize) -> (Option<f64>, usize, String) {
+    let extent = 2.0 * ratio + 2.0;
+    let n_grid = (extent / 0.05).ceil() as usize;
+    if n_grid > max_grid {
+        let would = n_grid * n_grid * n_grid * 4 * 8 * steps;
+        return (None, would, format!("OOM (needs {n_grid}^3 grid)"));
+    }
+    let mut m = Mpm::new(MpmConfig { n_grid, extent, dt: 2e-4, ..Default::default() });
+    let c = extent / 2.0;
+    // Bunny as a particle blob + cloth as a thin particle sheet.
+    m.add_box(
+        Vec3::new(c - 0.4, c + 0.5, c - 0.4),
+        Vec3::new(c + 0.4, c + 1.3, c + 0.4),
+        Vec3::default(),
+    );
+    m.add_box(
+        Vec3::new(c - ratio, c, c - ratio),
+        Vec3::new(c + ratio, c + 0.08, c + ratio),
+        Vec3::default(),
+    );
+    let t = Timer::start();
+    for _ in 0..steps {
+        m.step();
+    }
+    (
+        Some(t.seconds()),
+        m.tape_bytes(),
+        format!("{n_grid}^3 grid, {} particles", m.n_particles()),
+    )
+}
+
+pub fn run_objects(args: &Args) -> Result<()> {
+    let sizes = args.usize_list_or("sizes", &[20, 50, 100, 200]);
+    let steps = args.usize_or("steps", 30);
+    let max_grid = args.usize_or("max-grid", 128);
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for &n in &sizes {
+        let (ot, om) = ours_objects(n, steps);
+        let (mt, mm, note) = mpm_objects(n, steps, max_grid);
+        let mut j = Json::obj();
+        j.set("n", n)
+            .set("ours_time_s", ot)
+            .set("ours_mem_bytes", om)
+            .set("mpm_time_s", mt.unwrap_or(-1.0))
+            .set("mpm_mem_bytes", mm)
+            .set("mpm_note", note.clone());
+        jrows.push(j);
+        rows.push(vec![
+            n.to_string(),
+            format!("{ot:.2}s"),
+            crate::util::memory::fmt_bytes(om),
+            mt.map(|t| format!("{t:.2}s")).unwrap_or_else(|| "—".into()),
+            crate::util::memory::fmt_bytes(mm),
+            note,
+        ]);
+    }
+    print_table(
+        &format!("Fig 3 (top): objects sweep, {steps} simulated steps (fwd+bwd)"),
+        &["#objects", "ours time", "ours mem", "MPM time", "MPM mem", "MPM status"],
+        &rows,
+    );
+    let mut out = Json::obj();
+    out.set("experiment", "fig3-objects").set("steps", steps).set("rows", Json::Arr(jrows));
+    dump_json("fig3_objects", &out)
+}
+
+pub fn run_scale(args: &Args) -> Result<()> {
+    let ratios = args.usize_list_or("ratios", &[1, 2, 4, 6, 8, 10]);
+    let steps = args.usize_or("steps", 30);
+    let max_grid = args.usize_or("max-grid", 160);
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    for &r in &ratios {
+        let ratio = r as f64;
+        let (ot, om) = ours_scale(ratio, steps);
+        let (mt, mm, note) = mpm_scale(ratio, steps, max_grid);
+        let mut j = Json::obj();
+        j.set("ratio", r)
+            .set("ours_time_s", ot)
+            .set("ours_mem_bytes", om)
+            .set("mpm_time_s", mt.unwrap_or(-1.0))
+            .set("mpm_mem_bytes", mm)
+            .set("mpm_note", note.clone());
+        jrows.push(j);
+        rows.push(vec![
+            format!("{r}:1"),
+            format!("{ot:.2}s"),
+            crate::util::memory::fmt_bytes(om),
+            mt.map(|t| format!("{t:.2}s")).unwrap_or_else(|| "—".into()),
+            crate::util::memory::fmt_bytes(mm),
+            note,
+        ]);
+    }
+    print_table(
+        &format!("Fig 3 (bottom): cloth:bunny scale sweep, {steps} steps"),
+        &["scale", "ours time", "ours mem", "MPM time", "MPM mem", "MPM status"],
+        &rows,
+    );
+    let mut out = Json::obj();
+    out.set("experiment", "fig3-scale").set("steps", steps).set("rows", Json::Arr(jrows));
+    dump_json("fig3_scale", &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ours_scales_roughly_linearly() {
+        let (t20, m20) = ours_objects(8, 6);
+        let (t80, m80) = ours_objects(32, 6);
+        // 4× objects: time within ~linear±, memory likewise (generous CI
+        // bounds; the bench reports the real series).
+        assert!(t80 < t20 * 20.0, "t: {t20} -> {t80}");
+        assert!(m80 > m20, "mem should grow");
+        assert!(m80 < m20 * 16, "mem superlinear: {m20} -> {m80}");
+    }
+
+    #[test]
+    fn mpm_objects_hits_oom_wall() {
+        let (t, mem, note) = mpm_objects(200, 5, 64);
+        assert!(t.is_none(), "should OOM");
+        assert!(note.contains("OOM"));
+        assert!(mem > (1 << 30), "projected memory should be huge: {mem}");
+    }
+
+    #[test]
+    fn ours_scale_constant_mpm_grows() {
+        let (_, m1) = ours_scale(1.0, 4);
+        let (_, m4) = ours_scale(4.0, 4);
+        assert!(
+            m4 < 2 * m1,
+            "our memory should be ~scale-independent: {m1} -> {m4}"
+        );
+        let (_, g1, _) = mpm_scale(1.0, 2, 512);
+        let (_, g2, _) = mpm_scale(2.0, 2, 512);
+        assert!(g2 > 2 * g1, "MPM memory should blow up: {g1} -> {g2}");
+    }
+}

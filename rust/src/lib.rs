@@ -1,0 +1,14 @@
+//! DiffSim: scalable differentiable physics (ICML 2020 reproduction).
+pub mod baselines;
+pub mod bodies;
+pub mod collision;
+pub mod coordinator;
+pub mod diff;
+pub mod engine;
+pub mod experiments;
+pub mod math;
+pub mod mesh;
+pub mod ml;
+pub mod runtime;
+pub mod solver;
+pub mod util;

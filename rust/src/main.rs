@@ -1,0 +1,106 @@
+//! DiffSim CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! diffsim run --scene scene.json [--steps N] [--pjrt] [--print-every K]
+//! diffsim experiment <id> [options]    # see experiments::registry
+//! diffsim info                         # artifact + build info
+//! ```
+
+use anyhow::{Context, Result};
+use diffsim::engine::scene::build_scene;
+use diffsim::util::cli::Args;
+use diffsim::util::json::Json;
+use diffsim::util::memory;
+use diffsim::util::timer::Timer;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(String::as_str) {
+        Some("run") => cmd_run(&args),
+        Some("experiment") => diffsim::experiments::run_from_cli(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "diffsim — scalable differentiable physics (ICML 2020 reproduction)\n\n\
+         USAGE:\n  diffsim run --scene <file.json> [--steps N] [--pjrt]\n  \
+         diffsim experiment <id> [--sizes a,b,c] [--out file.json]\n  \
+         diffsim info\n\nEXPERIMENTS:\n{}",
+        diffsim::experiments::registry_help()
+    );
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let scene_path = args.get("scene").context("--scene <file.json> required")?;
+    let text = std::fs::read_to_string(scene_path)
+        .with_context(|| format!("reading scene {scene_path}"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("scene json: {e}"))?;
+    let mut sim = build_scene(&j)?;
+    if args.flag("pjrt") {
+        let rt = diffsim::runtime::Runtime::load_default()?;
+        sim.coordinator = Some(std::sync::Arc::new(diffsim::coordinator::Coordinator::new(
+            std::sync::Arc::new(rt),
+        )));
+        sim.cfg.diff_mode = diffsim::engine::DiffMode::Pjrt;
+    }
+    let steps = args.usize_or("steps", 300);
+    let print_every = args.usize_or("print-every", 50);
+    let t = Timer::start();
+    for s in 0..steps {
+        sim.step();
+        if print_every > 0 && (s + 1) % print_every == 0 {
+            let st = &sim.last_stats;
+            println!(
+                "step {:5}  impacts {:5}  zones {:4}  maxdofs {:4}  ke {:.4}",
+                s + 1,
+                st.impacts,
+                st.zones,
+                st.max_zone_dofs,
+                sim.sys.kinetic_energy()
+            );
+        }
+    }
+    println!(
+        "done: {} steps in {:.2}s ({:.1} steps/s), peak rss {}",
+        steps,
+        t.seconds(),
+        steps as f64 / t.seconds(),
+        memory::fmt_bytes(memory::peak_rss_bytes())
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("diffsim {} ({} workers available)", env!("CARGO_PKG_VERSION"),
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+    match diffsim::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            println!("artifacts:");
+            for name in rt.artifact_names() {
+                let spec = rt.spec(&name).unwrap();
+                println!("  {name}: inputs {:?}", spec.inputs);
+            }
+        }
+        Err(e) => {
+            println!("artifacts: unavailable ({e:#})");
+            println!("run `make artifacts` first for the PJRT path");
+        }
+    }
+    if std::path::Path::new("/proc/self/status").exists() {
+        println!("rss now: {}", memory::fmt_bytes(memory::current_rss_bytes()));
+    }
+    Ok(())
+}

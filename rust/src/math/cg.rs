@@ -1,0 +1,179 @@
+//! Conjugate-gradient solvers for the implicit-Euler system (Eq. 3).
+//!
+//! Two entry points: a matrix-free CG over a linear operator closure
+//! (used by the diff layer's adjoint solves) and a Jacobi-preconditioned
+//! CG over a CSR matrix (the cloth stepper's hot path).
+
+use super::dense::{axpy, dot, norm};
+use super::sparse::Csr;
+
+/// Result of a CG solve.
+#[derive(Clone, Debug)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub residual: f64,
+    pub converged: bool,
+}
+
+/// Matrix-free CG: solves A·x = b for SPD operator `apply(x, out)`.
+pub fn cg_operator<F>(apply: F, b: &[f64], tol: f64, max_iter: usize) -> CgResult
+where
+    F: Fn(&[f64], &mut [f64]),
+{
+    let n = b.len();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut ap = vec![0.0; n];
+    let bnorm = norm(b).max(1e-300);
+    let mut rs = dot(&r, &r);
+    if rs.sqrt() / bnorm <= tol {
+        return CgResult { x, iters: 0, residual: rs.sqrt() / bnorm, converged: true };
+    }
+    for it in 0..max_iter {
+        apply(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap.abs() < 1e-300 {
+            return CgResult { x, iters: it, residual: rs.sqrt() / bnorm, converged: false };
+        }
+        let alpha = rs / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() / bnorm <= tol {
+            return CgResult { x, iters: it + 1, residual: rs_new.sqrt() / bnorm, converged: true };
+        }
+        let beta = rs_new / rs;
+        rs = rs_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+    }
+    CgResult { x, iters: max_iter, residual: rs.sqrt() / bnorm, converged: false }
+}
+
+/// Jacobi-preconditioned CG over a CSR matrix.
+pub fn pcg_csr(a: &Csr, b: &[f64], tol: f64, max_iter: usize) -> CgResult {
+    let n = b.len();
+    assert_eq!(a.rows, n);
+    let diag = a.diagonal();
+    let minv: Vec<f64> = diag
+        .iter()
+        .map(|&d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 })
+        .collect();
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut p = z.clone();
+    let mut ap = vec![0.0; n];
+    let bnorm = norm(b).max(1e-300);
+    let mut rz = dot(&r, &z);
+    if norm(&r) / bnorm <= tol {
+        return CgResult { x, iters: 0, residual: norm(&r) / bnorm, converged: true };
+    }
+    for it in 0..max_iter {
+        a.matvec_into(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap.abs() < 1e-300 {
+            return CgResult { x, iters: it, residual: norm(&r) / bnorm, converged: false };
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rnorm = norm(&r);
+        if rnorm / bnorm <= tol {
+            return CgResult { x, iters: it + 1, residual: rnorm / bnorm, converged: true };
+        }
+        for i in 0..n {
+            z[i] = r[i] * minv[i];
+        }
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for i in 0..n {
+            p[i] = z[i] + beta * p[i];
+        }
+    }
+    CgResult { x, iters: max_iter, residual: norm(&r) / bnorm, converged: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::dense::Mat;
+    use crate::math::sparse::Triplets;
+    use crate::util::quick::{assert_close, quick};
+
+    fn random_spd(g: &mut crate::util::quick::Gen, n: usize) -> Mat {
+        let b = Mat::from_vec(n, n, g.vec_normal(n * n));
+        b.transpose().matmul(&b).add(&Mat::identity(n).scale(n as f64))
+    }
+
+    #[test]
+    fn cg_operator_solves_spd() {
+        quick("cg-operator", 50, |g| {
+            let n = g.usize(1, 25);
+            let a = random_spd(g, n);
+            let xtrue = g.vec_normal(n);
+            let b = a.matvec(&xtrue);
+            let res = cg_operator(
+                |x, out| out.copy_from_slice(&a.matvec(x)),
+                &b,
+                1e-12,
+                10 * n + 10,
+            );
+            assert!(res.converged, "residual {}", res.residual);
+            assert_close(&res.x, &xtrue, 1e-6, 1e-5, "cg solution");
+        });
+    }
+
+    #[test]
+    fn pcg_csr_solves_laplacian() {
+        // 1-D Poisson: tridiag(-1, 2+eps, -1), SPD.
+        let n = 64;
+        let mut t = Triplets::new(n, n);
+        for i in 0..n {
+            t.push(i, i, 2.1);
+            if i > 0 {
+                t.push(i, i - 1, -1.0);
+            }
+            if i + 1 < n {
+                t.push(i, i + 1, -1.0);
+            }
+        }
+        let a = t.to_csr();
+        let xtrue: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let b = a.matvec(&xtrue);
+        let res = pcg_csr(&a, &b, 1e-12, 1000);
+        assert!(res.converged);
+        assert_close(&res.x, &xtrue, 1e-7, 1e-7, "pcg solution");
+    }
+
+    #[test]
+    fn cg_zero_rhs_converges_instantly() {
+        let res = cg_operator(|x, out| out.copy_from_slice(x), &[0.0, 0.0], 1e-10, 5);
+        assert!(res.converged);
+        assert_eq!(res.iters, 0);
+        assert_eq!(res.x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn pcg_matches_direct_solver() {
+        quick("pcg-vs-direct", 30, |g| {
+            let n = g.usize(2, 20);
+            let dense = random_spd(g, n);
+            let mut t = Triplets::new(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    t.push(i, j, dense[(i, j)]);
+                }
+            }
+            let a = t.to_csr();
+            let b = g.vec_normal(n);
+            let direct = dense.chol_solve(&b).unwrap();
+            let iterative = pcg_csr(&a, &b, 1e-13, 100 * n).x;
+            assert_close(&iterative, &direct, 1e-6, 1e-5, "pcg vs chol");
+        });
+    }
+}

@@ -1,0 +1,530 @@
+//! Dense matrix substrate: row-major `Mat` with LU (partial pivoting),
+//! Cholesky, and thin Householder QR — the three factorizations the
+//! differentiation layer needs (§6 of the paper: the "W/o FD" baseline
+//! solves the (n+m) KKT system by LU; the fast path QR-factors
+//! √M̂⁻¹·∇fᵀ·Gᵀ).
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Mat {
+        let r = rows.len();
+        let c = if r > 0 { rows[0].len() } else { 0 };
+        let mut m = Mat::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c);
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn diag(d: &[f64]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut s = 0.0;
+            for j in 0..self.cols {
+                s += row[j] * x[j];
+            }
+            y[i] = s;
+        }
+        y
+    }
+
+    /// Transposed matrix–vector product Aᵀx.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let xi = x[i];
+            for j in 0..self.cols {
+                y[j] += row[j] * xi;
+            }
+        }
+        y
+    }
+
+    pub fn matmul(&self, o: &Mat) -> Mat {
+        assert_eq!(self.cols, o.rows);
+        let mut r = Mat::zeros(self.rows, o.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(i, k)];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = o.row(k);
+                let rrow = r.row_mut(i);
+                for j in 0..o.cols {
+                    rrow[j] += a * orow[j];
+                }
+            }
+        }
+        r
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn add(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&o.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    pub fn sub(&self, o: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (o.rows, o.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&o.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn fro(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Solve A·x = b by LU with partial pivoting. A must be square and
+    /// nonsingular; returns None if (numerically) singular.
+    pub fn lu_solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(self.cols, n);
+        assert_eq!(b.len(), n);
+        let mut a = self.data.clone();
+        let mut x = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for k in 0..n {
+            // Pivot.
+            let mut pmax = a[piv[k] * n + k].abs();
+            let mut prow = k;
+            for i in k + 1..n {
+                let v = a[piv[i] * n + k].abs();
+                if v > pmax {
+                    pmax = v;
+                    prow = i;
+                }
+            }
+            if pmax < 1e-300 {
+                return None;
+            }
+            piv.swap(k, prow);
+            let pk = piv[k];
+            let akk = a[pk * n + k];
+            for i in k + 1..n {
+                let pi = piv[i];
+                let l = a[pi * n + k] / akk;
+                a[pi * n + k] = l;
+                for j in k + 1..n {
+                    a[pi * n + j] -= l * a[pk * n + j];
+                }
+            }
+        }
+        // Forward substitution (L has unit diagonal).
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let pi = piv[i];
+            let mut s = x[pi];
+            for j in 0..i {
+                s -= a[pi * n + j] * y[j];
+            }
+            y[i] = s;
+        }
+        // Back substitution.
+        for i in (0..n).rev() {
+            let pi = piv[i];
+            let mut s = y[i];
+            for j in i + 1..n {
+                s -= a[pi * n + j] * x[j];
+            }
+            x[i] = s / a[pi * n + i];
+        }
+        Some(x)
+    }
+
+    /// Cholesky factor L (lower) with A = L·Lᵀ. Returns None if not SPD.
+    pub fn cholesky(&self) -> Option<Mat> {
+        let n = self.rows;
+        assert_eq!(self.cols, n);
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return None;
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Some(l)
+    }
+
+    /// Solve A·x = b for SPD A via Cholesky.
+    pub fn chol_solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let l = self.cholesky()?;
+        let n = self.rows;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= l[(i, k)] * y[k];
+            }
+            y[i] = s / l[(i, i)];
+        }
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= l[(k, i)] * x[k];
+            }
+            x[i] = s / l[(i, i)];
+        }
+        Some(x)
+    }
+
+    /// Thin Householder QR of an `rows × cols` matrix with rows ≥ cols:
+    /// returns (Q: rows×cols with orthonormal columns, R: cols×cols upper
+    /// triangular) such that A = Q·R. Cost O(rows·cols²) — this is the
+    /// paper's §6 acceleration workhorse.
+    pub fn qr_thin(&self) -> (Mat, Mat) {
+        let (m, n) = (self.rows, self.cols);
+        assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
+        let mut r = self.clone();
+        // Householder vectors stored per column.
+        let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+        for k in 0..n {
+            // Build the Householder vector for column k.
+            let mut norm = 0.0;
+            for i in k..m {
+                norm += r[(i, k)] * r[(i, k)];
+            }
+            let norm = norm.sqrt();
+            let mut v = vec![0.0; m - k];
+            if norm < 1e-300 {
+                vs.push(v); // zero column: skip reflection
+                continue;
+            }
+            let alpha = if r[(k, k)] >= 0.0 { -norm } else { norm };
+            for i in k..m {
+                v[i - k] = r[(i, k)];
+            }
+            v[0] -= alpha;
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 < 1e-300 {
+                vs.push(vec![0.0; m - k]);
+                continue;
+            }
+            // Apply H = I - 2 v vᵀ / (vᵀv) to R[k.., k..].
+            for j in k..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * r[(i, j)];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    r[(i, j)] -= f * v[i - k];
+                }
+            }
+            vs.push(v);
+        }
+        // Extract upper-triangular R (n×n).
+        let mut rr = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                rr[(i, j)] = r[(i, j)];
+            }
+        }
+        // Form thin Q by applying reflections to the first n columns of I.
+        let mut q = Mat::zeros(m, n);
+        for j in 0..n {
+            q[(j, j)] = 1.0;
+        }
+        for k in (0..n).rev() {
+            let v = &vs[k];
+            let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+            if vnorm2 < 1e-300 {
+                continue;
+            }
+            for j in 0..n {
+                let mut dot = 0.0;
+                for i in k..m {
+                    dot += v[i - k] * q[(i, j)];
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in k..m {
+                    q[(i, j)] -= f * v[i - k];
+                }
+            }
+        }
+        (q, rr)
+    }
+
+    /// Solve R·x = b with R upper triangular (from `qr_thin`).
+    pub fn upper_solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(self.cols, n);
+        let mut x = b.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for j in i + 1..n {
+                s -= self[(i, j)] * x[j];
+            }
+            let d = self[(i, i)];
+            if d.abs() < 1e-300 {
+                return None;
+            }
+            x[i] = s / d;
+        }
+        Some(x)
+    }
+
+    /// Solve Rᵀ·x = b with R upper triangular.
+    pub fn upper_t_solve(&self, b: &[f64]) -> Option<Vec<f64>> {
+        let n = self.rows;
+        assert_eq!(self.cols, n);
+        let mut x = b.to_vec();
+        for i in 0..n {
+            let mut s = x[i];
+            for j in 0..i {
+                s -= self[(j, i)] * x[j];
+            }
+            let d = self[(i, i)];
+            if d.abs() < 1e-300 {
+                return None;
+            }
+            x[i] = s / d;
+        }
+        Some(x)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product helper.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{assert_close, quick};
+
+    fn random_mat(g: &mut crate::util::quick::Gen, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, g.vec_normal(r * c))
+    }
+
+    #[test]
+    fn matmul_identity_and_assoc() {
+        quick("dense-matmul", 50, |g| {
+            let n = g.usize(1, 8);
+            let a = random_mat(g, n, n);
+            let b = random_mat(g, n, n);
+            let c = random_mat(g, n, n);
+            assert!(a.matmul(&Mat::identity(n)).sub(&a).fro() < 1e-12);
+            let lhs = a.matmul(&b).matmul(&c);
+            let rhs = a.matmul(&b.matmul(&c));
+            assert!(lhs.sub(&rhs).fro() < 1e-9 * (1.0 + lhs.fro()));
+        });
+    }
+
+    #[test]
+    fn lu_solves_random_systems() {
+        quick("dense-lu", 100, |g| {
+            let n = g.usize(1, 20);
+            let a = random_mat(g, n, n).add(&Mat::identity(n).scale(3.0));
+            let x: Vec<f64> = g.vec_normal(n);
+            let b = a.matvec(&x);
+            let xs = a.lu_solve(&b).expect("solvable");
+            assert_close(&xs, &x, 1e-7, 1e-7, "lu solution");
+        });
+    }
+
+    #[test]
+    fn lu_detects_singular() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(a.lu_solve(&[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn cholesky_spd_roundtrip() {
+        quick("dense-chol", 100, |g| {
+            let n = g.usize(1, 15);
+            let b = random_mat(g, n, n);
+            let a = b.transpose().matmul(&b).add(&Mat::identity(n).scale(0.5));
+            let l = a.cholesky().expect("spd");
+            let rec = l.matmul(&l.transpose());
+            assert!(rec.sub(&a).fro() < 1e-9 * (1.0 + a.fro()));
+            let x: Vec<f64> = g.vec_normal(n);
+            let rhs = a.matvec(&x);
+            let xs = a.chol_solve(&rhs).unwrap();
+            assert_close(&xs, &x, 1e-7, 1e-6, "chol solution");
+        });
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(a.cholesky().is_none());
+    }
+
+    #[test]
+    fn qr_reconstructs_and_is_orthonormal() {
+        quick("dense-qr", 100, |g| {
+            let n = g.usize(1, 10);
+            let m = n + g.usize(0, 10);
+            let a = random_mat(g, m, n);
+            let (q, r) = a.qr_thin();
+            // A = QR
+            assert!(q.matmul(&r).sub(&a).fro() < 1e-9 * (1.0 + a.fro()));
+            // QᵀQ = I
+            let qtq = q.transpose().matmul(&q);
+            assert!(qtq.sub(&Mat::identity(n)).fro() < 1e-10);
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    assert!(r[(i, j)].abs() < 1e-12);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn qr_handles_zero_columns() {
+        let a = Mat::from_rows(&[&[0.0, 1.0], &[0.0, 2.0], &[0.0, 2.0]]);
+        let (q, r) = a.qr_thin();
+        assert!(q.matmul(&r).sub(&a).fro() < 1e-12);
+    }
+
+    #[test]
+    fn triangular_solves() {
+        quick("dense-tri", 100, |g| {
+            let n = g.usize(1, 12);
+            let a = random_mat(g, n + 2, n);
+            let (_, r) = a.qr_thin();
+            // Make sure diagonal is well away from zero.
+            let mut r = r;
+            for i in 0..n {
+                if r[(i, i)].abs() < 0.1 {
+                    r[(i, i)] += 1.0;
+                }
+            }
+            let x: Vec<f64> = g.vec_normal(n);
+            let b = r.matvec(&x);
+            assert_close(&r.upper_solve(&b).unwrap(), &x, 1e-6, 1e-5, "upper");
+            let bt = r.transpose().matvec(&x);
+            assert_close(&r.upper_t_solve(&bt).unwrap(), &x, 1e-6, 1e-5, "upper-t");
+        });
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose() {
+        quick("dense-matvec-t", 50, |g| {
+            let (m, n) = (g.usize(1, 10), g.usize(1, 10));
+            let a = random_mat(g, m, n);
+            let x: Vec<f64> = g.vec_normal(m);
+            assert_close(&a.matvec_t(&x), &a.transpose().matvec(&x), 1e-12, 1e-12, "At x");
+        });
+    }
+
+    #[test]
+    fn blas1_helpers() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(2.0, &[1.0, 0.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, 2.0, 1.0]);
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+}

@@ -1,0 +1,228 @@
+//! RPY Euler-angle kinematics from the paper's appendices.
+//!
+//! Convention (Appendix A): with r = (φ, θ, ψ), the body rotates about Z
+//! by ψ, then about the new Y′ by θ, then the new X″ by φ — i.e. the
+//! world-frame rotation matrix is R = Rz(ψ) · Ry(θ) · Rx(φ) (Appendix B).
+//!
+//! This module provides R, its per-angle derivatives (Appendix C, derived
+//! analytically from the product structure rather than transcribing the
+//! appendix, whose formulas contain typos), the angular-velocity transform
+//! ω = T(r)·ṙ (Eq. 20), the generalized mass matrix M̂ (Eq. 22), and the
+//! vertex map f(q) = R·p₀ + t with its 3×6 Jacobian ∇f (Eq. 24).
+
+use super::mat3::Mat3;
+use super::vec3::Vec3;
+
+fn rx(phi: f64) -> Mat3 {
+    let (s, c) = phi.sin_cos();
+    Mat3::new([[1.0, 0.0, 0.0], [0.0, c, -s], [0.0, s, c]])
+}
+
+fn ry(theta: f64) -> Mat3 {
+    let (s, c) = theta.sin_cos();
+    Mat3::new([[c, 0.0, s], [0.0, 1.0, 0.0], [-s, 0.0, c]])
+}
+
+fn rz(psi: f64) -> Mat3 {
+    let (s, c) = psi.sin_cos();
+    Mat3::new([[c, -s, 0.0], [s, c, 0.0], [0.0, 0.0, 1.0]])
+}
+
+fn drx(phi: f64) -> Mat3 {
+    let (s, c) = phi.sin_cos();
+    Mat3::new([[0.0, 0.0, 0.0], [0.0, -s, -c], [0.0, c, -s]])
+}
+
+fn dry(theta: f64) -> Mat3 {
+    let (s, c) = theta.sin_cos();
+    Mat3::new([[-s, 0.0, c], [0.0, 0.0, 0.0], [-c, 0.0, -s]])
+}
+
+fn drz(psi: f64) -> Mat3 {
+    let (s, c) = psi.sin_cos();
+    Mat3::new([[-s, -c, 0.0], [c, -s, 0.0], [0.0, 0.0, 0.0]])
+}
+
+/// World-frame rotation matrix R(r) = Rz(ψ)·Ry(θ)·Rx(φ) (Appendix B).
+pub fn rotation(r: Vec3) -> Mat3 {
+    rz(r.z) * ry(r.y) * rx(r.x)
+}
+
+/// Per-angle derivatives [∂R/∂φ, ∂R/∂θ, ∂R/∂ψ].
+pub fn rotation_derivs(r: Vec3) -> [Mat3; 3] {
+    let (rxm, rym, rzm) = (rx(r.x), ry(r.y), rz(r.z));
+    [rzm * rym * drx(r.x), rzm * dry(r.y) * rxm, drz(r.z) * rym * rxm]
+}
+
+/// T(r) with ω_world = T·ṙ (Eq. 20).
+pub fn omega_transform(r: Vec3) -> Mat3 {
+    let (st, ct) = r.y.sin_cos();
+    let (sp, cp) = r.z.sin_cos();
+    Mat3::new([[ct * cp, -sp, 0.0], [ct * sp, cp, 0.0], [-st, 0.0, 1.0]])
+}
+
+/// Euler-coordinate angular inertia Iₐ = Tᵀ·I′·T (Eq. 21), where I′ is
+/// the world-frame inertia tensor.
+pub fn angular_inertia(r: Vec3, i_world: Mat3) -> Mat3 {
+    let t = omega_transform(r);
+    t.transpose() * i_world * t
+}
+
+/// f(q): map a body-frame point p₀ to world coordinates (Eq. 23).
+/// `q = [φ, θ, ψ, t_x, t_y, t_z]`.
+pub fn transform_point(q: &[f64; 6], p0: Vec3) -> Vec3 {
+    let r = rotation(Vec3::new(q[0], q[1], q[2]));
+    r * p0 + Vec3::new(q[3], q[4], q[5])
+}
+
+/// ∇f: 3×6 Jacobian of `transform_point` w.r.t. q (Eq. 24 / Appendix C).
+/// Rows = (x, y, z), columns = (φ, θ, ψ, t_x, t_y, t_z).
+pub fn jacobian(q: &[f64; 6], p0: Vec3) -> [[f64; 6]; 3] {
+    let derivs = rotation_derivs(Vec3::new(q[0], q[1], q[2]));
+    let mut j = [[0.0; 6]; 3];
+    for (a, d) in derivs.iter().enumerate() {
+        let col = *d * p0;
+        j[0][a] = col.x;
+        j[1][a] = col.y;
+        j[2][a] = col.z;
+    }
+    j[0][3] = 1.0;
+    j[1][4] = 1.0;
+    j[2][5] = 1.0;
+    j
+}
+
+/// Rotate a world-frame inertia tensor taken at the reference orientation
+/// into the current orientation: I′(r) = R I₀ Rᵀ.
+pub fn rotate_inertia(r: Vec3, i_ref: Mat3) -> Mat3 {
+    let rm = rotation(r);
+    rm * i_ref * rm.transpose()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        quick("euler-orthonormal", 200, |g| {
+            let r = Vec3::new(g.f64(-3.0, 3.0), g.f64(-1.4, 1.4), g.f64(-3.0, 3.0));
+            let m = rotation(r);
+            let should_be_i = m * m.transpose();
+            assert!((should_be_i - Mat3::identity()).fro() < 1e-12);
+            assert!((m.det() - 1.0).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn rotation_matches_appendix_b_entries() {
+        quick("euler-appendix-b", 100, |g| {
+            let (phi, theta, psi) = (g.f64(-3.0, 3.0), g.f64(-1.4, 1.4), g.f64(-3.0, 3.0));
+            let m = rotation(Vec3::new(phi, theta, psi)).m;
+            let (sp, cp) = phi.sin_cos();
+            let (st, ct) = theta.sin_cos();
+            let (ss, cs) = psi.sin_cos();
+            let expect = [
+                [ct * cs, -cp * ss + sp * st * cs, sp * ss + cp * st * cs],
+                [ct * ss, cp * cs + sp * st * ss, -sp * cs + cp * st * ss],
+                [-st, sp * ct, cp * ct],
+            ];
+            for i in 0..3 {
+                for j in 0..3 {
+                    assert!((m[i][j] - expect[i][j]).abs() < 1e-12, "({i},{j})");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rotation_derivs_match_finite_differences() {
+        quick("euler-dR", 100, |g| {
+            let r = Vec3::new(g.f64(-3.0, 3.0), g.f64(-1.4, 1.4), g.f64(-3.0, 3.0));
+            let d = rotation_derivs(r);
+            let h = 1e-6;
+            for a in 0..3 {
+                let mut rp = r;
+                let mut rm = r;
+                rp[a] += h;
+                rm[a] -= h;
+                let fd = (rotation(rp) - rotation(rm)) * (0.5 / h);
+                assert!((fd - d[a]).fro() < 1e-7, "angle {a}: err={}", (fd - d[a]).fro());
+            }
+        });
+    }
+
+    #[test]
+    fn omega_transform_matches_fd_of_rotation() {
+        // ω× = Ṙ Rᵀ with Ṙ = Σ ∂R/∂rᵢ ṙᵢ must equal skew(T·ṙ).
+        quick("euler-omega", 100, |g| {
+            let r = Vec3::new(g.f64(-3.0, 3.0), g.f64(-1.2, 1.2), g.f64(-3.0, 3.0));
+            let rdot = Vec3::from_slice(&g.vec_normal(3));
+            let d = rotation_derivs(r);
+            let rdot_mat = d[0] * rdot.x + d[1] * rdot.y + d[2] * rdot.z;
+            let omega_skew = rdot_mat * rotation(r).transpose();
+            let omega = omega_transform(r) * rdot;
+            assert!((omega_skew - Mat3::skew(omega)).fro() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        quick("euler-jacobian", 200, |g| {
+            let q = [
+                g.f64(-3.0, 3.0),
+                g.f64(-1.4, 1.4),
+                g.f64(-3.0, 3.0),
+                g.f64(-2.0, 2.0),
+                g.f64(-2.0, 2.0),
+                g.f64(-2.0, 2.0),
+            ];
+            let p0 = Vec3::from_slice(&g.vec_normal(3));
+            let jac = jacobian(&q, p0);
+            let h = 1e-6;
+            for c in 0..6 {
+                let mut qp = q;
+                let mut qm = q;
+                qp[c] += h;
+                qm[c] -= h;
+                let fd = (transform_point(&qp, p0) - transform_point(&qm, p0)) * (0.5 / h);
+                for row in 0..3 {
+                    assert!(
+                        (fd[row] - jac[row][c]).abs() < 1e-6,
+                        "row {row} col {c}: fd={} analytic={}",
+                        fd[row],
+                        jac[row][c]
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn angular_inertia_is_symmetric_psd() {
+        quick("euler-inertia", 100, |g| {
+            let r = Vec3::new(g.f64(-3.0, 3.0), g.f64(-1.2, 1.2), g.f64(-3.0, 3.0));
+            // Random SPD world inertia.
+            let v = g.vec_normal(9);
+            let a = Mat3::new([[v[0], v[1], v[2]], [v[3], v[4], v[5]], [v[6], v[7], v[8]]]);
+            let iw = a.transpose() * a + Mat3::identity() * 0.5;
+            let ia = angular_inertia(r, iw);
+            assert!((ia - ia.transpose()).fro() < 1e-10);
+            // x^T Ia x > 0 for random x.
+            let x = Vec3::from_slice(&g.vec_normal(3));
+            if x.norm() > 1e-6 {
+                assert!(x.dot(ia * x) > 0.0);
+            }
+        });
+    }
+
+    #[test]
+    fn identity_rotation_at_zero() {
+        let m = rotation(Vec3::new(0.0, 0.0, 0.0));
+        assert!((m - Mat3::identity()).fro() < 1e-15);
+        let q = [0.0; 6];
+        let p = Vec3::new(1.0, 2.0, 3.0);
+        assert!((transform_point(&q, p) - p).norm() < 1e-15);
+    }
+}

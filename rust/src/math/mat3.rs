@@ -1,0 +1,231 @@
+//! 3×3 matrix (row-major) for rotations and inertia tensors.
+
+use super::vec3::Vec3;
+use std::ops::{Add, Mul, Sub};
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat3 {
+    pub m: [[f64; 3]; 3],
+}
+
+impl Mat3 {
+    pub const fn new(m: [[f64; 3]; 3]) -> Mat3 {
+        Mat3 { m }
+    }
+
+    pub fn zeros() -> Mat3 {
+        Mat3::new([[0.0; 3]; 3])
+    }
+
+    pub fn identity() -> Mat3 {
+        Mat3::new([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]])
+    }
+
+    pub fn diag(d: Vec3) -> Mat3 {
+        Mat3::new([[d.x, 0.0, 0.0], [0.0, d.y, 0.0], [0.0, 0.0, d.z]])
+    }
+
+    pub fn from_outer(o: [[f64; 3]; 3]) -> Mat3 {
+        Mat3::new(o)
+    }
+
+    pub fn col(&self, j: usize) -> Vec3 {
+        Vec3::new(self.m[0][j], self.m[1][j], self.m[2][j])
+    }
+
+    pub fn row(&self, i: usize) -> Vec3 {
+        Vec3::new(self.m[i][0], self.m[i][1], self.m[i][2])
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        let m = &self.m;
+        Mat3::new([
+            [m[0][0], m[1][0], m[2][0]],
+            [m[0][1], m[1][1], m[2][1]],
+            [m[0][2], m[1][2], m[2][2]],
+        ])
+    }
+
+    pub fn det(&self) -> f64 {
+        let m = &self.m;
+        m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+            - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+            + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+    }
+
+    pub fn inverse(&self) -> Mat3 {
+        let d = self.det();
+        assert!(d.abs() > 1e-300, "Mat3::inverse of singular matrix");
+        let m = &self.m;
+        let inv = |a: f64, b: f64, c: f64, e: f64| (a * e - b * c) / d;
+        Mat3::new([
+            [
+                inv(m[1][1], m[1][2], m[2][1], m[2][2]),
+                inv(m[0][2], m[0][1], m[2][2], m[2][1]),
+                inv(m[0][1], m[0][2], m[1][1], m[1][2]),
+            ],
+            [
+                inv(m[1][2], m[1][0], m[2][2], m[2][0]),
+                inv(m[0][0], m[0][2], m[2][0], m[2][2]),
+                inv(m[0][2], m[0][0], m[1][2], m[1][0]),
+            ],
+            [
+                inv(m[1][0], m[1][1], m[2][0], m[2][1]),
+                inv(m[0][1], m[0][0], m[2][1], m[2][0]),
+                inv(m[0][0], m[0][1], m[1][0], m[1][1]),
+            ],
+        ])
+    }
+
+    /// Skew-symmetric cross-product matrix: skew(v) · w = v × w.
+    pub fn skew(v: Vec3) -> Mat3 {
+        Mat3::new([[0.0, -v.z, v.y], [v.z, 0.0, -v.x], [-v.y, v.x, 0.0]])
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.m[0][0] + self.m[1][1] + self.m[2][2]
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.m.iter().flatten().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Solve 3×3 system A x = b via the explicit inverse (well-conditioned
+    /// inertia blocks only).
+    pub fn solve(&self, b: Vec3) -> Vec3 {
+        self.inverse() * b
+    }
+}
+
+impl Mul<Vec3> for Mat3 {
+    type Output = Vec3;
+    fn mul(self, v: Vec3) -> Vec3 {
+        Vec3::new(self.row(0).dot(v), self.row(1).dot(v), self.row(2).dot(v))
+    }
+}
+
+impl Mul<Mat3> for Mat3 {
+    type Output = Mat3;
+    fn mul(self, o: Mat3) -> Mat3 {
+        let mut r = Mat3::zeros();
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.m[i][k] * o.m[k][j];
+                }
+                r.m[i][j] = s;
+            }
+        }
+        r
+    }
+}
+
+impl Mul<f64> for Mat3 {
+    type Output = Mat3;
+    fn mul(self, s: f64) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] *= s;
+            }
+        }
+        r
+    }
+}
+
+impl Add for Mat3 {
+    type Output = Mat3;
+    fn add(self, o: Mat3) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] += o.m[i][j];
+            }
+        }
+        r
+    }
+}
+
+impl Sub for Mat3 {
+    type Output = Mat3;
+    fn sub(self, o: Mat3) -> Mat3 {
+        let mut r = self;
+        for i in 0..3 {
+            for j in 0..3 {
+                r.m[i][j] -= o.m[i][j];
+            }
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    fn random_mat(g: &mut crate::util::quick::Gen) -> Mat3 {
+        let v = g.vec_normal(9);
+        Mat3::new([[v[0], v[1], v[2]], [v[3], v[4], v[5]], [v[6], v[7], v[8]]])
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        quick("mat3-identity", 50, |g| {
+            let a = random_mat(g);
+            let i = Mat3::identity();
+            assert!(((a * i) - a).fro() < 1e-12);
+            assert!(((i * a) - a).fro() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        quick("mat3-inverse", 100, |g| {
+            let a = random_mat(g) + Mat3::identity() * 3.0; // keep well-conditioned
+            if a.det().abs() > 1e-3 {
+                let prod = a * a.inverse();
+                assert!((prod - Mat3::identity()).fro() < 1e-8, "fro={}", (prod - Mat3::identity()).fro());
+            }
+        });
+    }
+
+    #[test]
+    fn skew_matches_cross() {
+        quick("mat3-skew", 100, |g| {
+            let v = Vec3::from_slice(&g.vec_normal(3));
+            let w = Vec3::from_slice(&g.vec_normal(3));
+            let lhs = Mat3::skew(v) * w;
+            let rhs = v.cross(w);
+            assert!((lhs - rhs).norm() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn transpose_of_product() {
+        quick("mat3-transpose", 50, |g| {
+            let a = random_mat(g);
+            let b = random_mat(g);
+            let lhs = (a * b).transpose();
+            let rhs = b.transpose() * a.transpose();
+            assert!((lhs - rhs).fro() < 1e-10);
+        });
+    }
+
+    #[test]
+    fn det_of_diag() {
+        let d = Mat3::diag(Vec3::new(2.0, 3.0, 4.0));
+        assert!((d.det() - 24.0).abs() < 1e-12);
+        assert!((d.trace() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_small_system() {
+        let a = Mat3::new([[4.0, 1.0, 0.0], [1.0, 3.0, 1.0], [0.0, 1.0, 2.0]]);
+        let x = Vec3::new(1.0, -2.0, 3.0);
+        let b = a * x;
+        assert!((a.solve(b) - x).norm() < 1e-10);
+    }
+}

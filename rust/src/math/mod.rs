@@ -1,0 +1,16 @@
+//! Numerical substrates: small fixed-size linear algebra, dense
+//! factorizations (LU, Cholesky, Householder QR), CSR sparse matrices,
+//! conjugate gradients, and the RPY Euler-angle kinematics from the
+//! paper's appendices A–C.
+pub mod cg;
+pub mod dense;
+pub mod euler;
+pub mod mat3;
+pub mod sparse;
+pub mod vec3;
+
+pub use mat3::Mat3;
+pub use vec3::Vec3;
+
+/// Machine-ish tolerance used across solvers.
+pub const EPS: f64 = 1e-12;

@@ -1,0 +1,202 @@
+//! CSR sparse matrix substrate for the implicit-Euler system (Eq. 3):
+//! the cloth force Jacobians ∂f/∂q, ∂f/∂q̇ are sparse (stencil = mesh
+//! adjacency), so the h⁻¹M − ∂f/∂q̇ − h·∂f/∂q operator is assembled as a
+//! CSR matrix and solved with (preconditioned) conjugate gradients.
+
+/// Triplet accumulator; duplicates are summed on conversion.
+#[derive(Clone, Debug, Default)]
+pub struct Triplets {
+    pub rows: usize,
+    pub cols: usize,
+    entries: Vec<(u32, u32, f64)>,
+}
+
+impl Triplets {
+    pub fn new(rows: usize, cols: usize) -> Triplets {
+        Triplets { rows, cols, entries: Vec::new() }
+    }
+
+    #[inline]
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        if v != 0.0 {
+            self.entries.push((i as u32, j as u32, v));
+        }
+    }
+
+    /// Add a 3×3 block at block coordinates (bi, bj).
+    pub fn push_block3(&mut self, bi: usize, bj: usize, b: &[[f64; 3]; 3]) {
+        for r in 0..3 {
+            for c in 0..3 {
+                self.push(3 * bi + r, 3 * bj + c, b[r][c]);
+            }
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn to_csr(mut self) -> Csr {
+        self.entries
+            .sort_unstable_by_key(|&(i, j, _)| ((i as u64) << 32) | j as u64);
+        let mut indices: Vec<u32> = Vec::with_capacity(self.entries.len());
+        let mut data: Vec<f64> = Vec::with_capacity(self.entries.len());
+        let mut row_counts = vec![0usize; self.rows];
+        let mut iter = self.entries.drain(..).peekable();
+        while let Some((i, j, mut v)) = iter.next() {
+            // Merge consecutive duplicates (same i, j).
+            while let Some(&(i2, j2, v2)) = iter.peek() {
+                if i2 == i && j2 == j {
+                    v += v2;
+                    iter.next();
+                } else {
+                    break;
+                }
+            }
+            indices.push(j);
+            data.push(v);
+            row_counts[i as usize] += 1;
+        }
+        let mut indptr = vec![0usize; self.rows + 1];
+        for i in 0..self.rows {
+            indptr[i + 1] = indptr[i] + row_counts[i];
+        }
+        Csr { rows: self.rows, cols: self.cols, indptr, indices, data }
+    }
+}
+
+/// Compressed sparse row matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// y = A·x
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// y = A·x written into a caller buffer (hot path: no allocation).
+    pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let mut s = 0.0;
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                s += self.data[k] * x[self.indices[k] as usize];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Diagonal entries (0 where structurally missing) — Jacobi
+    /// preconditioner for CG.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                if self.indices[k] as usize == i {
+                    d[i] += self.data[k];
+                }
+            }
+        }
+        d
+    }
+
+    /// Dense conversion (tests / small systems only).
+    pub fn to_dense(&self) -> super::dense::Mat {
+        let mut m = super::dense::Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for k in self.indptr[i]..self.indptr[i + 1] {
+                m[(i, self.indices[k] as usize)] += self.data[k];
+            }
+        }
+        m
+    }
+
+    /// Estimated bytes held (for the memory experiments).
+    pub fn bytes(&self) -> usize {
+        self.indptr.len() * 8 + self.indices.len() * 4 + self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::{assert_close, quick};
+
+    #[test]
+    fn triplets_merge_duplicates() {
+        let mut t = Triplets::new(3, 3);
+        t.push(0, 0, 1.0);
+        t.push(0, 0, 2.0);
+        t.push(1, 2, 5.0);
+        t.push(2, 1, -1.0);
+        let a = t.to_csr();
+        assert_eq!(a.nnz(), 3);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 0)], 3.0);
+        assert_eq!(d[(1, 2)], 5.0);
+        assert_eq!(d[(2, 1)], -1.0);
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let mut t = Triplets::new(4, 4);
+        t.push(3, 0, 2.0);
+        let a = t.to_csr();
+        assert_eq!(a.matvec(&[1.0, 0.0, 0.0, 0.0]), vec![0.0, 0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        quick("csr-matvec", 100, |g| {
+            let n = g.usize(1, 30);
+            let m = g.usize(1, 30);
+            let mut t = Triplets::new(n, m);
+            let nnz = g.usize(0, n * m);
+            for _ in 0..nnz {
+                t.push(g.usize(0, n - 1), g.usize(0, m - 1), g.f64(-2.0, 2.0));
+            }
+            let a = t.to_csr();
+            let x = g.vec_normal(m);
+            let want = a.to_dense().matvec(&x);
+            assert_close(&a.matvec(&x), &want, 1e-10, 1e-10, "csr matvec");
+        });
+    }
+
+    #[test]
+    fn block3_assembly() {
+        let mut t = Triplets::new(6, 6);
+        let b = [[1.0, 2.0, 3.0], [4.0, 5.0, 6.0], [7.0, 8.0, 9.0]];
+        t.push_block3(1, 0, &b);
+        let a = t.to_csr().to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(a[(3 + r, c)], b[r][c]);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_extraction() {
+        let mut t = Triplets::new(3, 3);
+        t.push(0, 0, 4.0);
+        t.push(1, 1, 5.0);
+        t.push(1, 0, 9.0);
+        let a = t.to_csr();
+        assert_eq!(a.diagonal(), vec![4.0, 5.0, 0.0]);
+    }
+}

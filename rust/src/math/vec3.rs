@@ -1,0 +1,216 @@
+//! 3-vector used for mesh vertices, velocities, normals.
+
+use std::ops::{Add, AddAssign, Div, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+pub const ZERO3: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+impl Vec3 {
+    pub const fn new(x: f64, y: f64, z: f64) -> Vec3 {
+        Vec3 { x, y, z }
+    }
+
+    pub fn splat(v: f64) -> Vec3 {
+        Vec3::new(v, v, v)
+    }
+
+    pub fn from_slice(s: &[f64]) -> Vec3 {
+        Vec3::new(s[0], s[1], s[2])
+    }
+
+    pub fn to_array(self) -> [f64; 3] {
+        [self.x, self.y, self.z]
+    }
+
+    pub fn dot(self, o: Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        Vec3::new(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    pub fn norm2(self) -> f64 {
+        self.dot(self)
+    }
+
+    pub fn norm(self) -> f64 {
+        self.norm2().sqrt()
+    }
+
+    /// Unit vector; zero vector maps to zero (callers guard).
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        if n <= 1e-30 {
+            ZERO3
+        } else {
+            self / n
+        }
+    }
+
+    pub fn min_c(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    pub fn max_c(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    pub fn abs(self) -> Vec3 {
+        Vec3::new(self.x.abs(), self.y.abs(), self.z.abs())
+    }
+
+    pub fn max_component(self) -> f64 {
+        self.x.max(self.y).max(self.z)
+    }
+
+    pub fn lerp(self, o: Vec3, t: f64) -> Vec3 {
+        self + (o - self) * t
+    }
+
+    pub fn is_finite(self) -> bool {
+        self.x.is_finite() && self.y.is_finite() && self.z.is_finite()
+    }
+
+    /// Outer product self · oᵀ as a row-major 3×3.
+    pub fn outer(self, o: Vec3) -> [[f64; 3]; 3] {
+        [
+            [self.x * o.x, self.x * o.y, self.x * o.z],
+            [self.y * o.x, self.y * o.y, self.y * o.z],
+            [self.z * o.x, self.z * o.y, self.z * o.z],
+        ]
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+impl Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+impl Mul<f64> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f64) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+impl Mul<Vec3> for f64 {
+    type Output = Vec3;
+    fn mul(self, v: Vec3) -> Vec3 {
+        v * self
+    }
+}
+impl Div<f64> for Vec3 {
+    type Output = Vec3;
+    fn div(self, s: f64) -> Vec3 {
+        Vec3::new(self.x / s, self.y / s, self.z / s)
+    }
+}
+impl AddAssign for Vec3 {
+    fn add_assign(&mut self, o: Vec3) {
+        *self = *self + o;
+    }
+}
+impl SubAssign for Vec3 {
+    fn sub_assign(&mut self, o: Vec3) {
+        *self = *self - o;
+    }
+}
+impl Index<usize> for Vec3 {
+    type Output = f64;
+    fn index(&self, i: usize) -> &f64 {
+        match i {
+            0 => &self.x,
+            1 => &self.y,
+            2 => &self.z,
+            _ => panic!("Vec3 index {i}"),
+        }
+    }
+}
+impl IndexMut<usize> for Vec3 {
+    fn index_mut(&mut self, i: usize) -> &mut f64 {
+        match i {
+            0 => &mut self.x,
+            1 => &mut self.y,
+            2 => &mut self.z,
+            _ => panic!("Vec3 index {i}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    #[test]
+    fn basic_algebra() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, -5.0, 6.0);
+        assert_eq!(a + b, Vec3::new(5.0, -3.0, 9.0));
+        assert_eq!(a.dot(b), 12.0);
+        assert_eq!((a * 2.0).norm2(), 4.0 * 14.0);
+    }
+
+    #[test]
+    fn cross_is_orthogonal_and_anticommutative() {
+        quick("cross", 100, |g| {
+            let a = Vec3::from_slice(&g.vec_normal(3));
+            let b = Vec3::from_slice(&g.vec_normal(3));
+            let c = a.cross(b);
+            assert!(c.dot(a).abs() < 1e-9 * (1.0 + a.norm() * b.norm() * a.norm()));
+            assert!((c + b.cross(a)).norm() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn normalized_has_unit_length() {
+        quick("normalized", 100, |g| {
+            let a = Vec3::from_slice(&g.vec_normal(3)) * g.f64(0.1, 10.0);
+            if a.norm() > 1e-6 {
+                assert!((a.normalized().norm() - 1.0).abs() < 1e-12);
+            }
+        });
+        assert_eq!(ZERO3.normalized(), ZERO3);
+    }
+
+    #[test]
+    fn lerp_endpoints() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(-1.0, 0.0, 5.0);
+        assert_eq!(a.lerp(b, 0.0), a);
+        assert_eq!(a.lerp(b, 1.0), b);
+        assert_eq!(a.lerp(b, 0.5), Vec3::new(0.0, 1.0, 4.0));
+    }
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut a = Vec3::new(1.0, 2.0, 3.0);
+        a[1] = 7.0;
+        assert_eq!(a[0], 1.0);
+        assert_eq!(a[1], 7.0);
+        assert_eq!(a[2], 3.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Mass properties of closed triangle meshes by signed-tetrahedron volume
+//! integrals (Mirtich-style): mass, center of mass, and the inertia tensor
+//! I′ about the COM — the ingredients of the paper's generalized mass
+//! matrix M̂ (Appendix A).
+
+use super::TriMesh;
+use crate::math::{Mat3, Vec3};
+
+#[derive(Clone, Copy, Debug)]
+pub struct MassProperties {
+    pub mass: f64,
+    pub com: Vec3,
+    /// Inertia tensor about the COM, in the mesh's own frame.
+    pub inertia: Mat3,
+}
+
+/// Integrate over signed tetrahedra (origin, v0, v1, v2) per face.
+/// Requires a closed, consistently-oriented (outward CCW) mesh.
+pub fn mass_properties(mesh: &TriMesh, density: f64) -> MassProperties {
+    let mut volume = 0.0;
+    let mut com = Vec3::default();
+    // Second moments accumulated about the origin.
+    let (mut ixx, mut iyy, mut izz, mut ixy, mut ixz, mut iyz) =
+        (0.0, 0.0, 0.0, 0.0, 0.0, 0.0);
+    for f in &mesh.faces {
+        let a = mesh.verts[f[0] as usize];
+        let b = mesh.verts[f[1] as usize];
+        let c = mesh.verts[f[2] as usize];
+        let det = a.dot(b.cross(c)); // 6 × signed tet volume
+        volume += det / 6.0;
+        com += (a + b + c) * (det / 24.0);
+        // Canonical tetrahedron second-moment integrals (about origin):
+        // ∫ x² dV over tet = det/60 · (ax²+bx²+cx² + ax·bx + ax·cx + bx·cx)
+        let sq = |pa: f64, pb: f64, pc: f64| {
+            pa * pa + pb * pb + pc * pc + pa * pb + pa * pc + pb * pc
+        };
+        let mix = |pa: f64, pb: f64, pc: f64, qa: f64, qb: f64, qc: f64| {
+            2.0 * (pa * qa + pb * qb + pc * qc)
+                + pa * qb
+                + pa * qc
+                + pb * qa
+                + pb * qc
+                + pc * qa
+                + pc * qb
+        };
+        ixx += det / 60.0 * sq(a.x, b.x, c.x);
+        iyy += det / 60.0 * sq(a.y, b.y, c.y);
+        izz += det / 60.0 * sq(a.z, b.z, c.z);
+        ixy += det / 120.0 * mix(a.x, b.x, c.x, a.y, b.y, c.y);
+        ixz += det / 120.0 * mix(a.x, b.x, c.x, a.z, b.z, c.z);
+        iyz += det / 120.0 * mix(a.y, b.y, c.y, a.z, b.z, c.z);
+    }
+    assert!(volume > 1e-12, "mass_properties: mesh not closed/oriented (volume={volume})");
+    let mass = density * volume;
+    let com = com / volume;
+    // Inertia about origin: I = ρ [ ∫(y²+z²), -∫xy, ... ]
+    let i_origin = Mat3::new([
+        [density * (iyy + izz), -density * ixy, -density * ixz],
+        [-density * ixy, density * (ixx + izz), -density * iyz],
+        [-density * ixz, -density * iyz, density * (ixx + iyy)],
+    ]);
+    // Parallel axis: shift to COM.
+    let d = com;
+    let shift = Mat3::new([
+        [d.y * d.y + d.z * d.z, -d.x * d.y, -d.x * d.z],
+        [-d.x * d.y, d.x * d.x + d.z * d.z, -d.y * d.z],
+        [-d.x * d.z, -d.y * d.z, d.x * d.x + d.y * d.y],
+    ]) * mass;
+    let inertia = i_origin - shift;
+    MassProperties { mass, com, inertia }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::{box_mesh, icosphere, unit_box};
+    use crate::util::quick::quick;
+
+    #[test]
+    fn unit_cube_analytic() {
+        let p = mass_properties(&unit_box(), 3.0);
+        assert!((p.mass - 3.0).abs() < 1e-12);
+        assert!(p.com.norm() < 1e-12);
+        // Cube inertia: m/12 (a²+b²) = 3/12 * 2 * 0.5... for unit cube
+        // I = m/6 for a unit cube? I = m (b²+c²)/12 = 3·(1+1)/12 = 0.5.
+        let want = 3.0 * (1.0 + 1.0) / 12.0;
+        for i in 0..3 {
+            assert!((p.inertia.m[i][i] - want).abs() < 1e-12);
+            for j in 0..3 {
+                if i != j {
+                    assert!(p.inertia.m[i][j].abs() < 1e-12);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sphere_analytic() {
+        let r = 1.3;
+        let m = icosphere(r, 3);
+        let p = mass_properties(&m, 2.0);
+        let vol_exact = 4.0 / 3.0 * std::f64::consts::PI * r * r * r;
+        assert!((p.mass / (2.0 * vol_exact) - 1.0).abs() < 0.01, "mass={}", p.mass);
+        let i_exact = 0.4 * p.mass * r * r;
+        for i in 0..3 {
+            assert!((p.inertia.m[i][i] / i_exact - 1.0).abs() < 0.02);
+        }
+    }
+
+    #[test]
+    fn translation_moves_com_keeps_inertia() {
+        quick("mass-shift", 25, |g| {
+            let h = Vec3::new(g.f64(0.2, 1.0), g.f64(0.2, 1.0), g.f64(0.2, 1.0));
+            let d = Vec3::new(g.f64(-2.0, 2.0), g.f64(-2.0, 2.0), g.f64(-2.0, 2.0));
+            let m0 = box_mesh(h);
+            let m1 = m0.translated(d);
+            let p0 = mass_properties(&m0, 1.0);
+            let p1 = mass_properties(&m1, 1.0);
+            assert!((p0.mass - p1.mass).abs() < 1e-9);
+            assert!((p1.com - (p0.com + d)).norm() < 1e-9);
+            assert!((p1.inertia - p0.inertia).fro() < 1e-8);
+        });
+    }
+
+    #[test]
+    fn box_inertia_formula() {
+        let (a, b, c) = (0.8, 1.4, 2.2); // full extents
+        let m = box_mesh(Vec3::new(a / 2.0, b / 2.0, c / 2.0));
+        let p = mass_properties(&m, 1.0);
+        let mass = a * b * c;
+        let want = [
+            mass * (b * b + c * c) / 12.0,
+            mass * (a * a + c * c) / 12.0,
+            mass * (a * a + b * b) / 12.0,
+        ];
+        for i in 0..3 {
+            assert!((p.inertia.m[i][i] - want[i]).abs() < 1e-9, "{i}");
+        }
+    }
+}

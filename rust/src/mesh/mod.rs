@@ -1,0 +1,158 @@
+//! Triangle-mesh representation — the paper's core object representation
+//! (§3: "we adopt meshes as a general representation of objects").
+pub mod mass;
+pub mod obj;
+pub mod primitives;
+pub mod topology;
+
+use crate::math::Vec3;
+
+/// Indexed triangle mesh.
+#[derive(Clone, Debug, Default)]
+pub struct TriMesh {
+    pub verts: Vec<Vec3>,
+    pub faces: Vec<[u32; 3]>,
+}
+
+impl TriMesh {
+    pub fn new(verts: Vec<Vec3>, faces: Vec<[u32; 3]>) -> TriMesh {
+        let m = TriMesh { verts, faces };
+        debug_assert!(m.validate().is_ok(), "{:?}", m.validate());
+        m
+    }
+
+    pub fn n_verts(&self) -> usize {
+        self.verts.len()
+    }
+
+    pub fn n_faces(&self) -> usize {
+        self.faces.len()
+    }
+
+    /// Structural sanity: indices in range, no degenerate index triples.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.verts.len() as u32;
+        for (fi, f) in self.faces.iter().enumerate() {
+            for &v in f {
+                if v >= n {
+                    return Err(format!("face {fi} references vertex {v} >= {n}"));
+                }
+            }
+            if f[0] == f[1] || f[1] == f[2] || f[0] == f[2] {
+                return Err(format!("face {fi} is degenerate: {f:?}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Face normal (unnormalized = 2·area·n̂).
+    pub fn face_normal_raw(&self, f: usize) -> Vec3 {
+        let [a, b, c] = self.faces[f];
+        let (pa, pb, pc) =
+            (self.verts[a as usize], self.verts[b as usize], self.verts[c as usize]);
+        (pb - pa).cross(pc - pa)
+    }
+
+    pub fn face_normal(&self, f: usize) -> Vec3 {
+        self.face_normal_raw(f).normalized()
+    }
+
+    pub fn face_area(&self, f: usize) -> f64 {
+        0.5 * self.face_normal_raw(f).norm()
+    }
+
+    pub fn face_centroid(&self, f: usize) -> Vec3 {
+        let [a, b, c] = self.faces[f];
+        (self.verts[a as usize] + self.verts[b as usize] + self.verts[c as usize]) / 3.0
+    }
+
+    pub fn surface_area(&self) -> f64 {
+        (0..self.faces.len()).map(|f| self.face_area(f)).sum()
+    }
+
+    /// Axis-aligned bounds (min, max).
+    pub fn bounds(&self) -> (Vec3, Vec3) {
+        let mut lo = Vec3::splat(f64::INFINITY);
+        let mut hi = Vec3::splat(f64::NEG_INFINITY);
+        for v in &self.verts {
+            lo = lo.min_c(*v);
+            hi = hi.max_c(*v);
+        }
+        (lo, hi)
+    }
+
+    /// Translate all vertices.
+    pub fn translated(&self, d: Vec3) -> TriMesh {
+        TriMesh {
+            verts: self.verts.iter().map(|&v| v + d).collect(),
+            faces: self.faces.clone(),
+        }
+    }
+
+    /// Uniformly scale about the origin.
+    pub fn scaled(&self, s: f64) -> TriMesh {
+        TriMesh {
+            verts: self.verts.iter().map(|&v| v * s).collect(),
+            faces: self.faces.clone(),
+        }
+    }
+
+    /// Non-uniform scale about the origin.
+    pub fn scaled3(&self, s: Vec3) -> TriMesh {
+        TriMesh {
+            verts: self
+                .verts
+                .iter()
+                .map(|&v| Vec3::new(v.x * s.x, v.y * s.y, v.z * s.z))
+                .collect(),
+            faces: self.faces.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use primitives::unit_box;
+
+    #[test]
+    fn box_mesh_is_valid_closed_surface() {
+        let m = unit_box();
+        assert_eq!(m.n_verts(), 8);
+        assert_eq!(m.n_faces(), 12);
+        assert!(m.validate().is_ok());
+        // Surface area of unit cube = 6.
+        assert!((m.surface_area() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bounds_and_transforms() {
+        let m = unit_box();
+        let (lo, hi) = m.bounds();
+        assert_eq!(lo, Vec3::splat(-0.5));
+        assert_eq!(hi, Vec3::splat(0.5));
+        let t = m.translated(Vec3::new(1.0, 0.0, 0.0)).scaled(2.0);
+        let (lo2, hi2) = t.bounds();
+        assert_eq!(lo2, Vec3::new(1.0, -1.0, -1.0));
+        assert_eq!(hi2, Vec3::new(3.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn validate_catches_bad_indices() {
+        let bad = TriMesh { verts: vec![Vec3::default(); 2], faces: vec![[0, 1, 5]] };
+        assert!(bad.validate().is_err());
+        let degen = TriMesh { verts: vec![Vec3::default(); 3], faces: vec![[0, 1, 1]] };
+        assert!(degen.validate().is_err());
+    }
+
+    #[test]
+    fn outward_normals_for_box() {
+        let m = unit_box();
+        for f in 0..m.n_faces() {
+            let n = m.face_normal(f);
+            let c = m.face_centroid(f);
+            // Outward: normal points away from the center (origin).
+            assert!(n.dot(c) > 0.0, "face {f} normal {n:?} centroid {c:?}");
+        }
+    }
+}

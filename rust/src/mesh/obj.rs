@@ -1,0 +1,138 @@
+//! Wavefront OBJ load/save (v/f records only) so users can feed real
+//! meshes (e.g. the actual Stanford bunny) to the engine.
+
+use super::TriMesh;
+use crate::math::Vec3;
+use anyhow::{bail, Context, Result};
+
+/// Parse OBJ text. Polygonal faces are fan-triangulated; `v/vt/vn` index
+/// forms are accepted (only the vertex index is used). Indices may be
+/// negative (relative) per the OBJ spec.
+pub fn parse_obj(text: &str) -> Result<TriMesh> {
+    let mut verts: Vec<Vec3> = Vec::new();
+    let mut faces: Vec<[u32; 3]> = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("v") => {
+                let mut c = [0.0f64; 3];
+                for x in c.iter_mut() {
+                    *x = it
+                        .next()
+                        .with_context(|| format!("line {}: short vertex", ln + 1))?
+                        .parse()
+                        .with_context(|| format!("line {}: bad vertex coord", ln + 1))?;
+                }
+                verts.push(Vec3::new(c[0], c[1], c[2]));
+            }
+            Some("f") => {
+                let idxs: Vec<u32> = it
+                    .map(|tok| parse_face_index(tok, verts.len(), ln + 1))
+                    .collect::<Result<_>>()?;
+                if idxs.len() < 3 {
+                    bail!("line {}: face with <3 vertices", ln + 1);
+                }
+                for k in 1..idxs.len() - 1 {
+                    faces.push([idxs[0], idxs[k], idxs[k + 1]]);
+                }
+            }
+            _ => {} // vn, vt, o, g, s, usemtl, mtllib ... ignored
+        }
+    }
+    let mesh = TriMesh { verts, faces };
+    mesh.validate().map_err(|e| anyhow::anyhow!("invalid obj mesh: {e}"))?;
+    Ok(mesh)
+}
+
+fn parse_face_index(tok: &str, n_verts: usize, line: usize) -> Result<u32> {
+    let first = tok.split('/').next().unwrap_or("");
+    let i: i64 = first.parse().with_context(|| format!("line {line}: bad face index '{tok}'"))?;
+    let idx = if i > 0 {
+        i - 1
+    } else if i < 0 {
+        n_verts as i64 + i
+    } else {
+        bail!("line {line}: obj indices are 1-based, got 0");
+    };
+    if idx < 0 || idx as usize >= n_verts {
+        bail!("line {line}: face index {i} out of range ({n_verts} verts)");
+    }
+    Ok(idx as u32)
+}
+
+/// Serialize to OBJ text.
+pub fn write_obj(mesh: &TriMesh) -> String {
+    let mut s = String::with_capacity(mesh.n_verts() * 32 + mesh.n_faces() * 16);
+    s.push_str("# diffsim mesh\n");
+    for v in &mesh.verts {
+        s.push_str(&format!("v {} {} {}\n", v.x, v.y, v.z));
+    }
+    for f in &mesh.faces {
+        s.push_str(&format!("f {} {} {}\n", f[0] + 1, f[1] + 1, f[2] + 1));
+    }
+    s
+}
+
+pub fn load_obj(path: &std::path::Path) -> Result<TriMesh> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading obj {}", path.display()))?;
+    parse_obj(&text)
+}
+
+pub fn save_obj(path: &std::path::Path, mesh: &TriMesh) -> Result<()> {
+    std::fs::write(path, write_obj(mesh))
+        .with_context(|| format!("writing obj {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::{icosphere, unit_box};
+
+    #[test]
+    fn roundtrip_box() {
+        let m = unit_box();
+        let text = write_obj(&m);
+        let m2 = parse_obj(&text).unwrap();
+        assert_eq!(m.n_verts(), m2.n_verts());
+        assert_eq!(m.faces, m2.faces);
+        for (a, b) in m.verts.iter().zip(&m2.verts) {
+            assert!((*a - *b).norm() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parses_slash_forms_and_quads() {
+        let text = "v 0 0 0\nv 1 0 0\nv 1 1 0\nv 0 1 0\nf 1/1/1 2/2/2 3/3/3 4/4/4\n";
+        let m = parse_obj(text).unwrap();
+        assert_eq!(m.n_verts(), 4);
+        assert_eq!(m.n_faces(), 2); // fan-triangulated quad
+    }
+
+    #[test]
+    fn negative_indices() {
+        let text = "v 0 0 0\nv 1 0 0\nv 0 1 0\nf -3 -2 -1\n";
+        let m = parse_obj(text).unwrap();
+        assert_eq!(m.faces, vec![[0, 1, 2]]);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_obj("f 1 2 3\n").is_err()); // no verts
+        assert!(parse_obj("v 0 0\n").is_err()); // short vertex
+        assert!(parse_obj("v 0 0 0\nf 0 1 2\n").is_err()); // 0-based
+    }
+
+    #[test]
+    fn roundtrip_preserves_volume() {
+        use crate::mesh::mass::mass_properties;
+        let m = icosphere(1.0, 2);
+        let m2 = parse_obj(&write_obj(&m)).unwrap();
+        let (p, p2) = (mass_properties(&m, 1.0), mass_properties(&m2, 1.0));
+        assert!((p.mass - p2.mass).abs() < 1e-9);
+    }
+}

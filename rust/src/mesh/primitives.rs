@@ -1,0 +1,301 @@
+//! Procedural mesh primitives. The paper's scenes use cubes, cloth grids,
+//! sticks (cylinders), a marble (sphere), dominoes (thin boxes), and two
+//! "complex" figurines (bunny, armadillo). The figurines here are
+//! procedural stand-ins (DESIGN.md §6 substitutions): nonconvex,
+//! irregular genus-0 meshes built by displacing icospheres — experiments
+//! only rely on "complex nonconvex mesh with many vertices".
+
+use super::TriMesh;
+use crate::math::Vec3;
+use crate::util::rng::Pcg32;
+
+/// Axis-aligned box centered at the origin with half-extents `h`.
+pub fn box_mesh(h: Vec3) -> TriMesh {
+    let verts = vec![
+        Vec3::new(-h.x, -h.y, -h.z),
+        Vec3::new(h.x, -h.y, -h.z),
+        Vec3::new(h.x, h.y, -h.z),
+        Vec3::new(-h.x, h.y, -h.z),
+        Vec3::new(-h.x, -h.y, h.z),
+        Vec3::new(h.x, -h.y, h.z),
+        Vec3::new(h.x, h.y, h.z),
+        Vec3::new(-h.x, h.y, h.z),
+    ];
+    // CCW when viewed from outside.
+    let faces = vec![
+        [0, 2, 1],
+        [0, 3, 2], // z = -h
+        [4, 5, 6],
+        [4, 6, 7], // z = +h
+        [0, 1, 5],
+        [0, 5, 4], // y = -h
+        [3, 6, 2],
+        [3, 7, 6], // y = +h
+        [0, 7, 3],
+        [0, 4, 7], // x = -h
+        [1, 2, 6],
+        [1, 6, 5], // x = +h
+    ];
+    TriMesh::new(verts, faces)
+}
+
+/// Unit cube (edge length 1) centered at the origin.
+pub fn unit_box() -> TriMesh {
+    box_mesh(Vec3::splat(0.5))
+}
+
+/// Icosphere with the given radius and subdivision level (0 = icosahedron,
+/// 20 faces; each level ×4).
+pub fn icosphere(radius: f64, subdivisions: usize) -> TriMesh {
+    let t = (1.0 + 5.0f64.sqrt()) / 2.0;
+    let mut verts = vec![
+        Vec3::new(-1.0, t, 0.0),
+        Vec3::new(1.0, t, 0.0),
+        Vec3::new(-1.0, -t, 0.0),
+        Vec3::new(1.0, -t, 0.0),
+        Vec3::new(0.0, -1.0, t),
+        Vec3::new(0.0, 1.0, t),
+        Vec3::new(0.0, -1.0, -t),
+        Vec3::new(0.0, 1.0, -t),
+        Vec3::new(t, 0.0, -1.0),
+        Vec3::new(t, 0.0, 1.0),
+        Vec3::new(-t, 0.0, -1.0),
+        Vec3::new(-t, 0.0, 1.0),
+    ];
+    for v in &mut verts {
+        *v = v.normalized();
+    }
+    let mut faces: Vec<[u32; 3]> = vec![
+        [0, 11, 5],
+        [0, 5, 1],
+        [0, 1, 7],
+        [0, 7, 10],
+        [0, 10, 11],
+        [1, 5, 9],
+        [5, 11, 4],
+        [11, 10, 2],
+        [10, 7, 6],
+        [7, 1, 8],
+        [3, 9, 4],
+        [3, 4, 2],
+        [3, 2, 6],
+        [3, 6, 8],
+        [3, 8, 9],
+        [4, 9, 5],
+        [2, 4, 11],
+        [6, 2, 10],
+        [8, 6, 7],
+        [9, 8, 1],
+    ];
+    for _ in 0..subdivisions {
+        let mut midpoint_cache: std::collections::HashMap<(u32, u32), u32> =
+            std::collections::HashMap::new();
+        let mut new_faces = Vec::with_capacity(faces.len() * 4);
+        let mut midpoint = |a: u32, b: u32, verts: &mut Vec<Vec3>| -> u32 {
+            let key = if a < b { (a, b) } else { (b, a) };
+            *midpoint_cache.entry(key).or_insert_with(|| {
+                let m = (verts[a as usize] + verts[b as usize]).normalized();
+                verts.push(m);
+                (verts.len() - 1) as u32
+            })
+        };
+        for [a, b, c] in faces {
+            let ab = midpoint(a, b, &mut verts);
+            let bc = midpoint(b, c, &mut verts);
+            let ca = midpoint(c, a, &mut verts);
+            new_faces.push([a, ab, ca]);
+            new_faces.push([b, bc, ab]);
+            new_faces.push([c, ca, bc]);
+            new_faces.push([ab, bc, ca]);
+        }
+        faces = new_faces;
+    }
+    for v in &mut verts {
+        *v = *v * radius;
+    }
+    TriMesh::new(verts, faces)
+}
+
+/// Rectangular cloth grid in the XZ plane at y = 0: `(nx+1)·(nz+1)`
+/// vertices spanning `size_x × size_z`, centered at the origin.
+/// Returns the mesh; vertex (i, k) has index `i·(nz+1) + k`.
+pub fn cloth_grid(nx: usize, nz: usize, size_x: f64, size_z: f64) -> TriMesh {
+    assert!(nx >= 1 && nz >= 1);
+    let mut verts = Vec::with_capacity((nx + 1) * (nz + 1));
+    for i in 0..=nx {
+        for k in 0..=nz {
+            verts.push(Vec3::new(
+                size_x * (i as f64 / nx as f64 - 0.5),
+                0.0,
+                size_z * (k as f64 / nz as f64 - 0.5),
+            ));
+        }
+    }
+    let idx = |i: usize, k: usize| (i * (nz + 1) + k) as u32;
+    let mut faces = Vec::with_capacity(nx * nz * 2);
+    for i in 0..nx {
+        for k in 0..nz {
+            // Alternate the diagonal for isotropy.
+            if (i + k) % 2 == 0 {
+                faces.push([idx(i, k), idx(i + 1, k), idx(i + 1, k + 1)]);
+                faces.push([idx(i, k), idx(i + 1, k + 1), idx(i, k + 1)]);
+            } else {
+                faces.push([idx(i, k), idx(i + 1, k), idx(i, k + 1)]);
+                faces.push([idx(i + 1, k), idx(i + 1, k + 1), idx(i, k + 1)]);
+            }
+        }
+    }
+    TriMesh::new(verts, faces)
+}
+
+/// Closed cylinder along +Y with given radius/height ("stick" manipulator
+/// in Fig. 8a). `segments` around the circumference.
+pub fn cylinder(radius: f64, height: f64, segments: usize) -> TriMesh {
+    assert!(segments >= 3);
+    let mut verts = Vec::new();
+    let h2 = height / 2.0;
+    for ring in [-h2, h2] {
+        for s in 0..segments {
+            let a = 2.0 * std::f64::consts::PI * s as f64 / segments as f64;
+            verts.push(Vec3::new(radius * a.cos(), ring, radius * a.sin()));
+        }
+    }
+    let bottom_center = verts.len() as u32;
+    verts.push(Vec3::new(0.0, -h2, 0.0));
+    let top_center = verts.len() as u32;
+    verts.push(Vec3::new(0.0, h2, 0.0));
+    let mut faces = Vec::new();
+    let n = segments as u32;
+    for s in 0..n {
+        let s1 = (s + 1) % n;
+        // Side quad (bottom ring s..s1, top ring n+s..n+s1).
+        faces.push([s, n + s, n + s1]);
+        faces.push([s, n + s1, s1]);
+        // Caps (outward: −y for bottom, +y for top).
+        faces.push([bottom_center, s, s1]);
+        faces.push([top_center, n + s1, n + s]);
+    }
+    TriMesh::new(verts, faces)
+}
+
+/// Procedural "bunny": icosphere displaced by deterministic lumpy noise +
+/// two ear protrusions. Nonconvex, irregular, genus 0.
+pub fn bunny(radius: f64, subdivisions: usize) -> TriMesh {
+    figurine(radius, subdivisions, 0xb0_b0, &[(Vec3::new(0.35, 0.9, 0.0), 0.45, 1.1), (
+        Vec3::new(-0.35, 0.9, 0.0),
+        0.45,
+        1.1,
+    )])
+}
+
+/// Procedural "armadillo": icosphere with four limb bumps and a tail.
+pub fn armadillo(radius: f64, subdivisions: usize) -> TriMesh {
+    figurine(
+        radius,
+        subdivisions,
+        0xa4_a4,
+        &[
+            (Vec3::new(0.7, -0.6, 0.0), 0.5, 0.8),
+            (Vec3::new(-0.7, -0.6, 0.0), 0.5, 0.8),
+            (Vec3::new(0.6, 0.55, 0.3), 0.45, 0.7),
+            (Vec3::new(-0.6, 0.55, 0.3), 0.45, 0.7),
+            (Vec3::new(0.0, -0.3, -0.95), 0.4, 0.9),
+        ],
+    )
+}
+
+fn figurine(
+    radius: f64,
+    subdivisions: usize,
+    seed: u64,
+    bumps: &[(Vec3, f64, f64)],
+) -> TriMesh {
+    let mut m = icosphere(1.0, subdivisions);
+    let mut rng = Pcg32::new(seed);
+    // Low-frequency lumpy displacement (deterministic per-seed harmonics).
+    let h: Vec<(Vec3, f64, f64)> = (0..6)
+        .map(|_| {
+            (
+                Vec3::new(rng.normal(), rng.normal(), rng.normal()).normalized(),
+                rng.range(1.0, 3.0),
+                rng.range(0.03, 0.08),
+            )
+        })
+        .collect();
+    for v in &mut m.verts {
+        let dir = v.normalized();
+        let mut disp = 0.0;
+        for (axis, freq, amp) in &h {
+            disp += amp * (freq * dir.dot(*axis) * 3.0).sin();
+        }
+        for (center, width, amp) in bumps {
+            let d2 = (dir - center.normalized()).norm2();
+            disp += amp * (-d2 / (width * width)).exp();
+        }
+        *v = dir * (1.0 + disp);
+    }
+    m = m.scaled(radius);
+    debug_assert!(m.validate().is_ok());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::mass::mass_properties;
+
+    #[test]
+    fn icosphere_vertices_on_sphere() {
+        let m = icosphere(2.0, 2);
+        assert_eq!(m.n_faces(), 20 * 16);
+        for v in &m.verts {
+            assert!((v.norm() - 2.0).abs() < 1e-12);
+        }
+        // Surface area approaches 4πr² from below.
+        let area = m.surface_area();
+        let exact = 4.0 * std::f64::consts::PI * 4.0;
+        assert!(area < exact && area > 0.95 * exact, "area={area} exact={exact}");
+    }
+
+    #[test]
+    fn cloth_grid_counts_and_flatness() {
+        let m = cloth_grid(8, 5, 2.0, 1.0);
+        assert_eq!(m.n_verts(), 9 * 6);
+        assert_eq!(m.n_faces(), 8 * 5 * 2);
+        for v in &m.verts {
+            assert_eq!(v.y, 0.0);
+        }
+        // Total area = size_x * size_z.
+        assert!((m.surface_area() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cylinder_is_closed_and_right_volume() {
+        let m = cylinder(0.5, 2.0, 24);
+        let props = mass_properties(&m, 1.0);
+        let exact = std::f64::consts::PI * 0.25 * 2.0;
+        assert!((props.mass - exact).abs() / exact < 0.02, "vol={} exact={exact}", props.mass);
+    }
+
+    #[test]
+    fn figurines_are_valid_and_nonconvex() {
+        for m in [bunny(1.0, 2), armadillo(1.0, 2)] {
+            assert!(m.validate().is_ok());
+            let props = mass_properties(&m, 1.0);
+            assert!(props.mass > 0.1);
+            // Nonconvex: some vertex is much closer to centroid than max.
+            let c = props.com;
+            let ds: Vec<f64> = m.verts.iter().map(|v| (*v - c).norm()).collect();
+            let (mn, mx) = ds.iter().fold((f64::MAX, 0.0f64), |(a, b), &d| (a.min(d), b.max(d)));
+            assert!(mx / mn > 1.3, "figurine looks too spherical: {mn} {mx}");
+        }
+    }
+
+    #[test]
+    fn box_volume_via_mass_properties() {
+        let m = box_mesh(Vec3::new(0.5, 1.0, 1.5));
+        let p = mass_properties(&m, 2.0);
+        assert!((p.mass - 2.0 * 1.0 * 2.0 * 3.0).abs() < 1e-9);
+        assert!(p.com.norm() < 1e-12);
+    }
+}

@@ -1,0 +1,116 @@
+//! Mesh topology: unique edges, edge→face adjacency, and bending pairs
+//! (the two vertices opposite a shared edge) for the cloth bending model.
+
+use super::TriMesh;
+use std::collections::HashMap;
+
+/// A unique undirected edge with its incident faces.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub v: [u32; 2],
+    /// Incident faces (u32::MAX if boundary).
+    pub faces: [u32; 2],
+}
+
+/// Bending element: two triangles sharing edge (v0, v1) with opposite
+/// vertices (v2, v3).
+#[derive(Clone, Copy, Debug)]
+pub struct BendPair {
+    pub edge: [u32; 2],
+    pub opp: [u32; 2],
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub edges: Vec<Edge>,
+    pub bend_pairs: Vec<BendPair>,
+}
+
+pub fn build_topology(mesh: &TriMesh) -> Topology {
+    let mut edge_map: HashMap<(u32, u32), usize> = HashMap::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    for (fi, f) in mesh.faces.iter().enumerate() {
+        for k in 0..3 {
+            let (a, b) = (f[k], f[(k + 1) % 3]);
+            let key = if a < b { (a, b) } else { (b, a) };
+            match edge_map.get(&key) {
+                Some(&ei) => {
+                    let e = &mut edges[ei];
+                    if e.faces[1] == u32::MAX {
+                        e.faces[1] = fi as u32;
+                    }
+                }
+                None => {
+                    edge_map.insert(key, edges.len());
+                    edges.push(Edge { v: [key.0, key.1], faces: [fi as u32, u32::MAX] });
+                }
+            }
+        }
+    }
+    // Bending pairs from interior edges.
+    let mut bend_pairs = Vec::new();
+    for e in &edges {
+        if e.faces[1] == u32::MAX {
+            continue;
+        }
+        let opp = |fi: u32| -> u32 {
+            let f = mesh.faces[fi as usize];
+            *f.iter().find(|&&v| v != e.v[0] && v != e.v[1]).expect("triangle has 3 verts")
+        };
+        bend_pairs.push(BendPair { edge: e.v, opp: [opp(e.faces[0]), opp(e.faces[1])] });
+    }
+    Topology { edges, bend_pairs }
+}
+
+/// Number of boundary edges (for validation: closed meshes have zero).
+pub fn boundary_edge_count(topo: &Topology) -> usize {
+    topo.edges.iter().filter(|e| e.faces[1] == u32::MAX).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::primitives::{cloth_grid, icosphere, unit_box};
+
+    #[test]
+    fn cube_euler_formula() {
+        let m = unit_box();
+        let t = build_topology(&m);
+        // V - E + F = 2 for genus 0: 8 - 18 + 12 = 2.
+        assert_eq!(t.edges.len(), 18);
+        assert_eq!(boundary_edge_count(&t), 0);
+        assert_eq!(t.bend_pairs.len(), 18);
+    }
+
+    #[test]
+    fn icosphere_closed() {
+        let m = icosphere(1.0, 2);
+        let t = build_topology(&m);
+        assert_eq!(boundary_edge_count(&t), 0);
+        let (v, e, f) = (m.n_verts() as i64, t.edges.len() as i64, m.n_faces() as i64);
+        assert_eq!(v - e + f, 2);
+    }
+
+    #[test]
+    fn cloth_grid_boundary() {
+        let m = cloth_grid(4, 3, 1.0, 1.0);
+        let t = build_topology(&m);
+        // Boundary edges = perimeter segments = 2*(4+3) = 14.
+        assert_eq!(boundary_edge_count(&t), 14);
+        // Interior edges have valid bend pairs.
+        for bp in &t.bend_pairs {
+            assert_ne!(bp.opp[0], bp.opp[1]);
+            assert!(!bp.edge.contains(&bp.opp[0]));
+            assert!(!bp.edge.contains(&bp.opp[1]));
+        }
+    }
+
+    #[test]
+    fn every_interior_edge_has_two_distinct_faces() {
+        let m = icosphere(1.0, 1);
+        let t = build_topology(&m);
+        for e in &t.edges {
+            assert_ne!(e.faces[0], e.faces[1]);
+        }
+    }
+}

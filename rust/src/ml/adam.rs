@@ -1,0 +1,78 @@
+//! First-order optimizers: Adam (Kingma & Ba) and plain SGD.
+
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f64) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grad.len(), self.m.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / bc1;
+            let vhat = self.v[i] / bc2;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+}
+
+pub struct Sgd {
+    pub lr: f64,
+}
+
+impl Sgd {
+    pub fn step(&self, params: &mut [f64], grad: &[f64]) {
+        for (p, g) in params.iter_mut().zip(grad) {
+            *p -= self.lr * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // f(x) = Σ (x_i − i)², badly scaled.
+        let mut x = vec![0.0; 5];
+        let mut opt = Adam::new(5, 0.1);
+        for _ in 0..1500 {
+            let grad: Vec<f64> = x
+                .iter()
+                .enumerate()
+                .map(|(i, &xi)| 2.0 * (i + 1) as f64 * (xi - i as f64))
+                .collect();
+            opt.step(&mut x, &grad);
+        }
+        for (i, xi) in x.iter().enumerate() {
+            assert!((xi - i as f64).abs() < 1e-2, "x[{i}] = {xi}");
+        }
+    }
+
+    #[test]
+    fn sgd_descends() {
+        let mut x = vec![10.0];
+        let opt = Sgd { lr: 0.1 };
+        for _ in 0..100 {
+            let g = vec![2.0 * x[0]];
+            opt.step(&mut x, &g);
+        }
+        assert!(x[0].abs() < 1e-4);
+    }
+}

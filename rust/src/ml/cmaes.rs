@@ -1,0 +1,237 @@
+//! CMA-ES (Hansen 2016 tutorial, (μ/μ_w, λ) with rank-μ update) — the
+//! derivative-free baseline of the paper's Fig. 7 inverse problem.
+
+use crate::math::dense::Mat;
+use crate::util::rng::Pcg32;
+
+pub struct CmaEs {
+    pub dim: usize,
+    pub mean: Vec<f64>,
+    pub sigma: f64,
+    pub lambda: usize,
+    #[allow(dead_code)]
+    mu: usize,
+    weights: Vec<f64>,
+    mueff: f64,
+    cc: f64,
+    cs: f64,
+    c1: f64,
+    cmu: f64,
+    damps: f64,
+    pc: Vec<f64>,
+    ps: Vec<f64>,
+    /// Covariance (full matrix; dims here are small).
+    c: Mat,
+    /// Eigen-ish factor: we use Cholesky of C for sampling (refreshed
+    /// each update; adequate for the modest generation counts used).
+    a: Mat,
+    pub generation: usize,
+    chi_n: f64,
+}
+
+impl CmaEs {
+    pub fn new(x0: &[f64], sigma: f64) -> CmaEs {
+        let dim = x0.len();
+        let lambda = 4 + (3.0 * (dim as f64).ln()).floor() as usize;
+        Self::with_lambda(x0, sigma, lambda)
+    }
+
+    pub fn with_lambda(x0: &[f64], sigma: f64, lambda: usize) -> CmaEs {
+        let dim = x0.len();
+        let n = dim as f64;
+        let mu = lambda / 2;
+        let mut weights: Vec<f64> =
+            (0..mu).map(|i| ((lambda as f64 + 1.0) / 2.0).ln() - ((i + 1) as f64).ln()).collect();
+        let sum: f64 = weights.iter().sum();
+        for w in &mut weights {
+            *w /= sum;
+        }
+        let mueff = 1.0 / weights.iter().map(|w| w * w).sum::<f64>();
+        let cc = (4.0 + mueff / n) / (n + 4.0 + 2.0 * mueff / n);
+        let cs = (mueff + 2.0) / (n + mueff + 5.0);
+        let c1 = 2.0 / ((n + 1.3) * (n + 1.3) + mueff);
+        let cmu = (1.0 - c1)
+            .min(2.0 * (mueff - 2.0 + 1.0 / mueff) / ((n + 2.0) * (n + 2.0) + mueff));
+        let damps = 1.0 + 2.0 * (0.0f64).max(((mueff - 1.0) / (n + 1.0)).sqrt() - 1.0) + cs;
+        CmaEs {
+            dim,
+            mean: x0.to_vec(),
+            sigma,
+            lambda,
+            mu,
+            weights,
+            mueff,
+            cc,
+            cs,
+            c1,
+            cmu,
+            damps,
+            pc: vec![0.0; dim],
+            ps: vec![0.0; dim],
+            c: Mat::identity(dim),
+            a: Mat::identity(dim),
+            generation: 0,
+            chi_n: n.sqrt() * (1.0 - 1.0 / (4.0 * n) + 1.0 / (21.0 * n * n)),
+        }
+    }
+
+    /// Sample a population of λ candidates.
+    pub fn ask(&mut self, rng: &mut Pcg32) -> Vec<Vec<f64>> {
+        (0..self.lambda)
+            .map(|_| {
+                let z: Vec<f64> = rng.normal_vec(self.dim);
+                let az = self.a.matvec(&z);
+                (0..self.dim).map(|i| self.mean[i] + self.sigma * az[i]).collect()
+            })
+            .collect()
+    }
+
+    /// Update from (candidate, fitness) pairs; LOWER fitness is better.
+    pub fn tell(&mut self, mut scored: Vec<(Vec<f64>, f64)>) {
+        assert_eq!(scored.len(), self.lambda);
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let old_mean = self.mean.clone();
+        // New mean.
+        let mut new_mean = vec![0.0; self.dim];
+        for (k, w) in self.weights.iter().enumerate() {
+            for i in 0..self.dim {
+                new_mean[i] += w * scored[k].0[i];
+            }
+        }
+        // Evolution paths.
+        let y: Vec<f64> =
+            (0..self.dim).map(|i| (new_mean[i] - old_mean[i]) / self.sigma).collect();
+        // C^{-1/2} y approximated via A⁻¹ y (A lower-triangular Cholesky).
+        let cinv_y = lower_solve(&self.a, &y);
+        let n = self.dim as f64;
+        for i in 0..self.dim {
+            self.ps[i] = (1.0 - self.cs) * self.ps[i]
+                + (self.cs * (2.0 - self.cs) * self.mueff).sqrt() * cinv_y[i];
+        }
+        let ps_norm = self.ps.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let hsig = ps_norm
+            / (1.0 - (1.0 - self.cs).powi(2 * (self.generation as i32 + 1))).sqrt()
+            / self.chi_n
+            < 1.4 + 2.0 / (n + 1.0);
+        let h = if hsig { 1.0 } else { 0.0 };
+        for i in 0..self.dim {
+            self.pc[i] = (1.0 - self.cc) * self.pc[i]
+                + h * (self.cc * (2.0 - self.cc) * self.mueff).sqrt() * y[i];
+        }
+        // Covariance update (rank-1 + rank-μ).
+        let mut cnew = self.c.scale(1.0 - self.c1 - self.cmu);
+        for i in 0..self.dim {
+            for j in 0..self.dim {
+                cnew[(i, j)] += self.c1 * self.pc[i] * self.pc[j];
+            }
+        }
+        for (k, w) in self.weights.iter().enumerate() {
+            let yk: Vec<f64> = (0..self.dim)
+                .map(|i| (scored[k].0[i] - old_mean[i]) / self.sigma)
+                .collect();
+            for i in 0..self.dim {
+                for j in 0..self.dim {
+                    cnew[(i, j)] += self.cmu * w * yk[i] * yk[j];
+                }
+            }
+        }
+        self.c = cnew;
+        // Step size.
+        self.sigma *= ((self.cs / self.damps) * (ps_norm / self.chi_n - 1.0)).exp();
+        self.sigma = self.sigma.clamp(1e-12, 1e6);
+        self.mean = new_mean;
+        self.generation += 1;
+        // Refresh sampling factor (regularize if needed).
+        self.a = match self.c.cholesky() {
+            Some(a) => a,
+            None => {
+                let mut cr = self.c.clone();
+                for i in 0..self.dim {
+                    cr[(i, i)] += 1e-10 + 1e-8 * cr[(i, i)].abs();
+                }
+                cr.cholesky().unwrap_or_else(|| Mat::identity(self.dim))
+            }
+        };
+    }
+}
+
+fn lower_solve(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l[(i, j)] * y[j];
+        }
+        let d = l[(i, i)];
+        y[i] = if d.abs() > 1e-300 { s / d } else { 0.0 };
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn optimize<F: Fn(&[f64]) -> f64>(f: F, x0: &[f64], gens: usize) -> (Vec<f64>, f64) {
+        let mut rng = Pcg32::new(3);
+        let mut es = CmaEs::new(x0, 0.5);
+        let mut best = (x0.to_vec(), f64::MAX);
+        for _ in 0..gens {
+            let pop = es.ask(&mut rng);
+            let scored: Vec<(Vec<f64>, f64)> =
+                pop.into_iter().map(|x| {
+                    let v = f(&x);
+                    (x, v)
+                }).collect();
+            for (x, v) in &scored {
+                if *v < best.1 {
+                    best = (x.clone(), *v);
+                }
+            }
+            es.tell(scored);
+        }
+        best
+    }
+
+    #[test]
+    fn solves_sphere() {
+        let (x, v) = optimize(
+            |x| x.iter().map(|a| a * a).sum(),
+            &[2.0, -1.5, 3.0],
+            120,
+        );
+        assert!(v < 1e-8, "best {v} at {x:?}");
+    }
+
+    #[test]
+    fn solves_rosenbrock_2d() {
+        let (x, v) = optimize(
+            |x| {
+                let (a, b) = (x[0], x[1]);
+                (1.0 - a) * (1.0 - a) + 100.0 * (b - a * a) * (b - a * a)
+            },
+            &[-1.0, 1.0],
+            400,
+        );
+        assert!(v < 1e-4, "best {v} at {x:?}");
+    }
+
+    #[test]
+    fn sigma_shrinks_near_optimum() {
+        let mut rng = Pcg32::new(5);
+        let mut es = CmaEs::new(&[0.01, -0.01], 0.3);
+        for _ in 0..80 {
+            let pop = es.ask(&mut rng);
+            let scored = pop
+                .into_iter()
+                .map(|x| {
+                    let v = x.iter().map(|a| a * a).sum();
+                    (x, v)
+                })
+                .collect();
+            es.tell(scored);
+        }
+        assert!(es.sigma < 0.3, "sigma did not adapt: {}", es.sigma);
+    }
+}

@@ -1,0 +1,203 @@
+//! Multi-layer perceptron with manual reverse-mode — the controller
+//! network of Fig. 8 ("an MLP with 50 nodes in the first layer and 200
+//! nodes in the second, with ReLU activations"), trained end-to-end
+//! through the differentiable simulator.
+
+use crate::util::rng::Pcg32;
+
+/// Fully-connected network with ReLU hidden activations and linear
+/// output. Parameters are stored flat for optimizer simplicity.
+#[derive(Clone)]
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+    /// Flat parameters: for each layer, weights (out×in) then biases.
+    pub params: Vec<f64>,
+}
+
+/// Cached activations from a forward pass (needed for backward).
+pub struct MlpTrace {
+    /// Pre-activation inputs per layer (x, h1, h2, …).
+    acts: Vec<Vec<f64>>,
+}
+
+impl Mlp {
+    pub fn new(sizes: &[usize], rng: &mut Pcg32) -> Mlp {
+        assert!(sizes.len() >= 2);
+        let mut params = Vec::new();
+        for l in 0..sizes.len() - 1 {
+            let (fan_in, fan_out) = (sizes[l], sizes[l + 1]);
+            let scale = (2.0 / fan_in as f64).sqrt(); // He init for ReLU
+            for _ in 0..fan_in * fan_out {
+                params.push(rng.normal() * scale);
+            }
+            for _ in 0..fan_out {
+                params.push(0.0);
+            }
+        }
+        Mlp { sizes: sizes.to_vec(), params }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    fn layer_offsets(&self) -> Vec<(usize, usize, usize)> {
+        // (offset, fan_in, fan_out) per layer.
+        let mut offs = Vec::new();
+        let mut off = 0;
+        for l in 0..self.sizes.len() - 1 {
+            offs.push((off, self.sizes[l], self.sizes[l + 1]));
+            off += self.sizes[l] * self.sizes[l + 1] + self.sizes[l + 1];
+        }
+        offs
+    }
+
+    /// Forward pass; returns output and the trace for backward.
+    pub fn forward(&self, x: &[f64]) -> (Vec<f64>, MlpTrace) {
+        assert_eq!(x.len(), self.sizes[0]);
+        let mut acts = vec![x.to_vec()];
+        let offs = self.layer_offsets();
+        let last = offs.len() - 1;
+        for (l, &(off, fin, fout)) in offs.iter().enumerate() {
+            let input = acts.last().unwrap().clone();
+            let w = &self.params[off..off + fin * fout];
+            let b = &self.params[off + fin * fout..off + fin * fout + fout];
+            let mut out = vec![0.0; fout];
+            for o in 0..fout {
+                let mut s = b[o];
+                for i in 0..fin {
+                    s += w[o * fin + i] * input[i];
+                }
+                out[o] = if l < last { s.max(0.0) } else { s };
+            }
+            acts.push(out);
+        }
+        (acts.last().unwrap().clone(), MlpTrace { acts })
+    }
+
+    /// Backward pass: given ∂L/∂output, accumulate parameter gradients
+    /// into `grad` (same layout as params) and return ∂L/∂input.
+    pub fn backward(&self, trace: &MlpTrace, gout: &[f64], grad: &mut [f64]) -> Vec<f64> {
+        assert_eq!(grad.len(), self.params.len());
+        let offs = self.layer_offsets();
+        let last = offs.len() - 1;
+        let mut delta = gout.to_vec();
+        for (l, &(off, fin, fout)) in offs.iter().enumerate().rev() {
+            let input = &trace.acts[l];
+            let output = &trace.acts[l + 1];
+            // ReLU mask on hidden layers (output layer is linear).
+            let mut d = delta.clone();
+            if l < last {
+                for o in 0..fout {
+                    if output[o] <= 0.0 {
+                        d[o] = 0.0;
+                    }
+                }
+            }
+            let w = &self.params[off..off + fin * fout];
+            // Parameter grads.
+            for o in 0..fout {
+                for i in 0..fin {
+                    grad[off + o * fin + i] += d[o] * input[i];
+                }
+                grad[off + fin * fout + o] += d[o];
+            }
+            // Input grads.
+            let mut din = vec![0.0; fin];
+            for o in 0..fout {
+                for i in 0..fin {
+                    din[i] += w[o * fin + i] * d[o];
+                }
+            }
+            delta = din;
+        }
+        delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    #[test]
+    fn forward_shapes_and_relu() {
+        let mut rng = Pcg32::new(1);
+        let net = Mlp::new(&[3, 5, 2], &mut rng);
+        let (y, tr) = net.forward(&[0.1, -0.2, 0.3]);
+        assert_eq!(y.len(), 2);
+        assert_eq!(tr.acts.len(), 3);
+        for h in &tr.acts[1] {
+            assert!(*h >= 0.0);
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        quick("mlp-grad", 10, |g| {
+            let mut rng = Pcg32::new(g.rng.next_u64());
+            let net = Mlp::new(&[4, 8, 6, 2], &mut rng);
+            let x: Vec<f64> = rng.normal_vec(4);
+            let gout: Vec<f64> = rng.normal_vec(2);
+            let (_, tr) = net.forward(&x);
+            let mut grad = vec![0.0; net.n_params()];
+            let gin = net.backward(&tr, &gout, &mut grad);
+            // Loss = gout · output. FD on a few random params + inputs.
+            let loss = |n: &Mlp, xx: &[f64]| -> f64 {
+                let (y, _) = n.forward(xx);
+                y.iter().zip(&gout).map(|(a, b)| a * b).sum()
+            };
+            let h = 1e-6;
+            for _ in 0..10 {
+                let k = rng.below(net.n_params());
+                let mut np = net.clone();
+                np.params[k] += h;
+                let mut nm = net.clone();
+                nm.params[k] -= h;
+                let fd = (loss(&np, &x) - loss(&nm, &x)) / (2.0 * h);
+                assert!(
+                    (fd - grad[k]).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "param {k}: fd {fd} analytic {}",
+                    grad[k]
+                );
+            }
+            for k in 0..4 {
+                let mut xp = x.clone();
+                xp[k] += h;
+                let mut xm = x.clone();
+                xm[k] -= h;
+                let fd = (loss(&net, &xp) - loss(&net, &xm)) / (2.0 * h);
+                assert!(
+                    (fd - gin[k]).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "input {k}: fd {fd} analytic {}",
+                    gin[k]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn can_fit_a_toy_function() {
+        // Regression sanity: fit y = sin(2x) on [-1, 1] with Adam.
+        use crate::ml::adam::Adam;
+        let mut rng = Pcg32::new(7);
+        let mut net = Mlp::new(&[1, 32, 32, 1], &mut rng);
+        let mut opt = Adam::new(net.n_params(), 3e-3);
+        let mut final_loss = f64::MAX;
+        for _ in 0..800 {
+            let mut grad = vec![0.0; net.n_params()];
+            let mut loss = 0.0;
+            for _ in 0..16 {
+                let x = rng.range(-1.0, 1.0);
+                let target = (2.0 * x).sin();
+                let (y, tr) = net.forward(&[x]);
+                let err = y[0] - target;
+                loss += err * err;
+                net.backward(&tr, &[2.0 * err / 16.0], &mut grad);
+            }
+            final_loss = loss / 16.0;
+            opt.step(&mut net.params, &grad);
+        }
+        assert!(final_loss < 0.01, "did not fit: loss {final_loss}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Learning components for the paper's §7.4 applications: a hand-rolled
+//! MLP (the controller network of Fig. 8), Adam/SGD, and the two
+//! baselines the paper compares against — CMA-ES (derivative-free,
+//! Fig. 7) and DDPG (model-free RL, Fig. 8).
+pub mod adam;
+pub mod cmaes;
+pub mod ddpg;
+pub mod mlp;

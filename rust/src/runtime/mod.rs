@@ -1,0 +1,224 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (`python/compile/aot.py` → HLO text + manifest.json), compiles them on
+//! the PJRT CPU client once, and exposes a typed call interface. This is
+//! the only place the `xla` crate is touched; Python is never on the
+//! request path.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Shape/dtype contract of one artifact (from manifest.json).
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Zone-backward bucket exported by aot.py: (n dofs, m constraints, batch).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ZoneBucket {
+    pub n: usize,
+    pub m: usize,
+    pub batch: usize,
+}
+
+/// The compiled-executable store.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    pub rigid_batches: Vec<usize>,
+    pub zone_buckets: Vec<ZoneBucket>,
+    pub cloth_grids: Vec<(usize, usize)>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Executed-call counter per artifact (coordinator metrics).
+    pub calls: Mutex<HashMap<String, usize>>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client. Compilation is
+    /// lazy (first call per artifact) and cached.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut specs = HashMap::new();
+        for a in j.get("artifacts").and_then(Json::as_arr).context("manifest: artifacts[]")? {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                a.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|arr| {
+                        arr.iter()
+                            .map(|io| {
+                                io.get("shape")
+                                    .and_then(Json::as_arr)
+                                    .map(|s| s.iter().filter_map(Json::as_usize).collect())
+                                    .unwrap_or_default()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let spec = ArtifactSpec {
+                name: a.str_or("name", "").to_string(),
+                path: a.str_or("path", "").to_string(),
+                inputs: shapes("inputs"),
+                outputs: shapes("outputs"),
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        let rigid_batches = j
+            .get("rigid_batches")
+            .and_then(Json::as_arr)
+            .map(|v| v.iter().filter_map(Json::as_usize).collect())
+            .unwrap_or_default();
+        let zone_buckets = j
+            .get("zone_buckets")
+            .and_then(Json::as_arr)
+            .map(|v| {
+                v.iter()
+                    .filter_map(|b| {
+                        let b = b.as_arr()?;
+                        Some(ZoneBucket {
+                            n: b[0].as_usize()?,
+                            m: b[1].as_usize()?,
+                            batch: b[2].as_usize()?,
+                        })
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let cloth_grids = j
+            .get("cloth_grids")
+            .and_then(Json::as_arr)
+            .map(|v| {
+                v.iter()
+                    .filter_map(|g| {
+                        let g = g.as_arr()?;
+                        Some((g[0].as_usize()?, g[1].as_usize()?))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            specs,
+            rigid_batches,
+            zone_buckets,
+            cloth_grids,
+            cache: Mutex::new(HashMap::new()),
+            calls: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load from the conventional `artifacts/` directory.
+    pub fn load_default() -> Result<Runtime> {
+        Runtime::load(Path::new("artifacts"))
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.specs.contains_key(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.specs.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
+        let path = self.dir.join(&spec.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (warmup).
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        self.executable(name).map(|_| ())
+    }
+
+    /// Execute artifact `name` with f32 inputs shaped per the manifest.
+    /// Returns the flattened outputs in manifest order.
+    pub fn call_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let spec = self.specs.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
+        if inputs.len() != spec.inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (k, (&data, shape)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let want: usize = shape.iter().product();
+            if data.len() != want {
+                bail!("{name}: input {k} has {} elements, want {want} {shape:?}", data.len());
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("{name}: reshape input {k}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("{name}: execute: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name}: fetch: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        let parts = out.to_tuple().map_err(|e| anyhow!("{name}: tuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(parts.len());
+        for (k, p) in parts.into_iter().enumerate() {
+            vecs.push(
+                p.to_vec::<f32>()
+                    .map_err(|e| anyhow!("{name}: output {k} to_vec: {e:?}"))?,
+            );
+        }
+        *self.calls.lock().unwrap().entry(name.to_string()).or_insert(0) += 1;
+        Ok(vecs)
+    }
+
+    /// Total PJRT calls made (metrics).
+    pub fn total_calls(&self) -> usize {
+        self.calls.lock().unwrap().values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Tests needing real artifacts live in rust/tests/integration_runtime.rs
+    // (they require `make artifacts` to have run).
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_clean_error() {
+        match Runtime::load(Path::new("/nonexistent/dir")) {
+            Ok(_) => panic!("should fail"),
+            Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Global LCP-style baseline (paper §7.2, Table 1): instead of resolving
+//! each impact zone independently, merge every zone into ONE optimization
+//! over all contacting bodies — the de Avila Belbute-Peres (2018)
+//! formulation the paper ablates against. Forward cost and (especially)
+//! implicit-diff backward cost then scale with the *total* DOF/constraint
+//! count rather than per-zone sizes.
+//!
+//! Also provides a classic projected Gauss–Seidel velocity-level LCP used
+//! as a cross-check on contact impulses.
+
+use crate::collision::zones::ImpactZone;
+use crate::math::dense::Mat;
+
+/// Merge all impact zones into a single global zone (the baseline's
+/// "one big optimization problem").
+pub fn merge_zones(zones: &[ImpactZone]) -> Option<ImpactZone> {
+    if zones.is_empty() {
+        return None;
+    }
+    let mut impacts = Vec::new();
+    let mut entities = Vec::new();
+    for z in zones {
+        impacts.extend(z.impacts.iter().copied());
+        entities.extend(z.entities.iter().copied());
+    }
+    entities.sort();
+    entities.dedup();
+    Some(ImpactZone { impacts, entities })
+}
+
+/// Projected Gauss–Seidel on the velocity-level LCP:
+///   w = B·λ + b ≥ 0, λ ≥ 0, λᵀw = 0,  with B = J·M⁻¹·Jᵀ.
+/// Returns λ. `b` is typically J·v (normal approach velocities).
+pub fn pgs_lcp(bmat: &Mat, b: &[f64], iters: usize) -> Vec<f64> {
+    let m = b.len();
+    assert_eq!(bmat.rows, m);
+    let mut lambda = vec![0.0; m];
+    for _ in 0..iters {
+        for i in 0..m {
+            let bii = bmat[(i, i)];
+            if bii.abs() < 1e-300 {
+                continue;
+            }
+            let mut s = b[i];
+            for j in 0..m {
+                if j != i {
+                    s += bmat[(i, j)] * lambda[j];
+                }
+            }
+            lambda[i] = (-s / bii).max(0.0);
+        }
+    }
+    lambda
+}
+
+/// LCP residual: max over i of |min(λᵢ, (Bλ+b)ᵢ)| (complementarity).
+pub fn lcp_residual(bmat: &Mat, b: &[f64], lambda: &[f64]) -> f64 {
+    let w = {
+        let mut w = bmat.matvec(lambda);
+        for i in 0..w.len() {
+            w[i] += b[i];
+        }
+        w
+    };
+    lambda
+        .iter()
+        .zip(&w)
+        .map(|(&l, &wi)| l.min(wi).abs().max((-l).max(0.0)).max((-wi).max(0.0)))
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick::quick;
+
+    #[test]
+    fn pgs_solves_diagonal_lcp() {
+        // B = I: λ = max(0, −b).
+        let b = vec![1.0, -2.0, 0.5, -0.25];
+        let bmat = Mat::identity(4);
+        let l = pgs_lcp(&bmat, &b, 50);
+        let want = [0.0, 2.0, 0.0, 0.25];
+        for (got, w) in l.iter().zip(want) {
+            assert!((got - w).abs() < 1e-9, "{got} vs {w}");
+        }
+    }
+
+    #[test]
+    fn pgs_satisfies_complementarity_on_random_spd() {
+        quick("pgs-lcp", 40, |g| {
+            let m = g.usize(1, 12);
+            let a = Mat::from_vec(m, m, g.vec_normal(m * m));
+            let bmat = a.transpose().matmul(&a).add(&Mat::identity(m).scale(m as f64));
+            let b = g.vec_normal(m);
+            let l = pgs_lcp(&bmat, &b, 2000);
+            assert!(
+                lcp_residual(&bmat, &b, &l) < 1e-6,
+                "residual {}",
+                lcp_residual(&bmat, &b, &l)
+            );
+        });
+    }
+
+    #[test]
+    fn merge_zones_unions_entities() {
+        use crate::bodies::{RigidBody, System};
+        use crate::collision::zones::{build_zones, Entity};
+        use crate::collision::Impact;
+        use crate::bodies::NodeRef;
+        use crate::math::Vec3;
+        use crate::mesh::primitives::unit_box;
+        let mut sys = System::new();
+        for _ in 0..4 {
+            sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        }
+        let mk = |a: u32, b: u32| Impact {
+            nodes: [
+                NodeRef::Rigid { body: a, vert: 0 },
+                NodeRef::Rigid { body: a, vert: 1 },
+                NodeRef::Rigid { body: a, vert: 2 },
+                NodeRef::Rigid { body: b, vert: 0 },
+            ],
+            w: [-0.3, -0.3, -0.4, 1.0],
+            n: Vec3::new(0.0, 1.0, 0.0),
+            t: 0.5,
+        };
+        let impacts = vec![mk(0, 1), mk(2, 3)];
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 2);
+        let merged = merge_zones(&zones).unwrap();
+        assert_eq!(merged.impacts.len(), 2);
+        assert_eq!(merged.entities.len(), 4);
+        assert_eq!(merged.n_dofs(), 24);
+        for b in 0..4 {
+            assert!(merged.entities.contains(&Entity::Rigid(b)));
+        }
+        assert!(merge_zones(&[]).is_none());
+    }
+}

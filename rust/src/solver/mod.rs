@@ -1,0 +1,6 @@
+//! Numerical solvers: implicit Euler time integration (paper Eq. 3), the
+//! per-zone nonlinearly-constrained projection (Eq. 6), and the global
+//! LCP-style baseline used by the Table-1 ablation.
+pub mod implicit_euler;
+pub mod lcp;
+pub mod zone_solver;

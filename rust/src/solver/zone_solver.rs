@@ -1,0 +1,550 @@
+//! Per-zone collision resolution (paper §5, Eq. 6):
+//!
+//!   minimize ½·(q−q′)ᵀ·M̂·(q−q′)   subject to   C(q′) ≥ 0,
+//!
+//! where q stacks the zone's generalized coordinates (6 per rigid body,
+//! 3 per cloth node) and each constraint is a VF/EE non-penetration gap
+//! C_j(q′) = n_j · Σ_k w_jk·x_k(q′) − δ (Eq. 4) with x_k = f(q′) for
+//! rigid vertices — *nonlinear* through the rotation (the reason the
+//! paper extends Liang et al.'s linear-constraint differentiation, §6).
+//!
+//! Solved with an augmented-Lagrangian Gauss–Newton: robust, produces the
+//! KKT multipliers λ* that the implicit-differentiation backward (§6)
+//! needs.
+
+use crate::bodies::{NodeRef, System};
+use crate::collision::zones::{entity_of, Entity, ImpactZone};
+use crate::collision::Impact;
+use crate::math::dense::Mat;
+use crate::math::{euler, Vec3};
+
+/// One term of a constraint row: how one of the four impact nodes maps
+/// to zone DOFs. Fixed nodes fold into the constant part.
+#[derive(Clone, Copy, Debug)]
+pub enum Term {
+    /// Vertex of a movable rigid body in the zone: x = f(q_ent, p0).
+    RigidVert { ent: usize, w: f64, p0: Vec3 },
+    /// Movable cloth node: x = q_ent directly.
+    ClothNode { ent: usize, w: f64 },
+}
+
+/// A non-penetration constraint C(q′) = const + Σ terms − δ ≥ 0.
+#[derive(Clone, Debug)]
+pub struct Constraint {
+    pub n: Vec3,
+    pub terms: Vec<Term>,
+    /// n·Σ_{fixed k} w_k·x_k — contribution of immovable nodes.
+    pub fixed_part: f64,
+    /// Contact offset δ.
+    pub delta: f64,
+}
+
+/// The zone optimization problem (Eq. 6) in stacked coordinates.
+pub struct ZoneProblem {
+    pub entities: Vec<Entity>,
+    /// DOF offset per entity.
+    pub offsets: Vec<usize>,
+    /// Total DOFs n.
+    pub n: usize,
+    /// Stacked pre-projection coordinates q (candidate state).
+    pub q0: Vec<f64>,
+    /// Block-diagonal M̂ (dense; zones are small by construction).
+    pub mass: Mat,
+    pub constraints: Vec<Constraint>,
+}
+
+/// Result of a zone solve.
+#[derive(Clone, Debug)]
+pub struct ZoneSolution {
+    /// Resolved coordinates q′ (stacked like `q0`).
+    pub q: Vec<f64>,
+    /// KKT multipliers λ* ≥ 0, one per constraint.
+    pub lambda: Vec<f64>,
+    pub converged: bool,
+    pub outer_iters: usize,
+    /// max(0, −C_j) at the solution.
+    pub max_violation: f64,
+}
+
+impl ZoneProblem {
+    /// Build from an impact zone. `rigid_q` / `cloth_x` hold *candidate*
+    /// (post-dynamics, pre-resolution) coordinates for every body.
+    pub fn build(
+        sys: &System,
+        zone: &ImpactZone,
+        rigid_q: &[[f64; 6]],
+        cloth_x: &[Vec<Vec3>],
+        delta: f64,
+    ) -> ZoneProblem {
+        let mut offsets = Vec::with_capacity(zone.entities.len());
+        let mut n = 0;
+        for e in &zone.entities {
+            offsets.push(n);
+            n += e.dofs();
+        }
+        let slot = |e: &Entity| zone.entities.iter().position(|x| x == e).unwrap();
+        // Stacked q0 and block mass.
+        let mut q0 = vec![0.0; n];
+        let mut mass = Mat::zeros(n, n);
+        for (k, e) in zone.entities.iter().enumerate() {
+            let off = offsets[k];
+            match e {
+                Entity::Rigid(b) => {
+                    let body = &sys.rigids[*b as usize];
+                    q0[off..off + 6].copy_from_slice(&rigid_q[*b as usize]);
+                    // M̂ evaluated at the candidate orientation.
+                    let mut tmp = body.clone();
+                    tmp.q = rigid_q[*b as usize];
+                    let mm = tmp.mass_matrix();
+                    for i in 0..6 {
+                        for j in 0..6 {
+                            mass[(off + i, off + j)] = mm[(i, j)];
+                        }
+                    }
+                    // Regularize the Euler block for near-degenerate T.
+                    for i in 0..3 {
+                        mass[(off + i, off + i)] += 1e-9;
+                    }
+                }
+                Entity::ClothNode(c, nd) => {
+                    let x = cloth_x[*c as usize][*nd as usize];
+                    q0[off] = x.x;
+                    q0[off + 1] = x.y;
+                    q0[off + 2] = x.z;
+                    let m = sys.cloths[*c as usize].node_mass[*nd as usize];
+                    for i in 0..3 {
+                        mass[(off + i, off + i)] = m;
+                    }
+                }
+            }
+        }
+        // Constraints from impacts.
+        let constraints = zone
+            .impacts
+            .iter()
+            .map(|im| constraint_from_impact(sys, im, &slot, rigid_q, cloth_x, delta))
+            .collect();
+        ZoneProblem { entities: zone.entities.clone(), offsets, n, q0, mass, constraints }
+    }
+
+    /// Evaluate all constraints at stacked coordinates `q`.
+    pub fn eval(&self, q: &[f64]) -> Vec<f64> {
+        self.constraints
+            .iter()
+            .map(|c| {
+                let mut v = c.fixed_part - c.delta;
+                for t in &c.terms {
+                    match *t {
+                        Term::RigidVert { ent, w, p0 } => {
+                            let off = self.offsets[ent];
+                            let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
+                            v += w * c.n.dot(euler::transform_point(&qb, p0));
+                        }
+                        Term::ClothNode { ent, w } => {
+                            let off = self.offsets[ent];
+                            v += w * c.n.dot(Vec3::new(q[off], q[off + 1], q[off + 2]));
+                        }
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+
+    /// Constraint Jacobian ∇C (m×n) at `q` — the paper's G·∇f.
+    pub fn jacobian(&self, q: &[f64]) -> Mat {
+        let m = self.constraints.len();
+        let mut jac = Mat::zeros(m, self.n);
+        for (j, c) in self.constraints.iter().enumerate() {
+            for t in &c.terms {
+                match *t {
+                    Term::RigidVert { ent, w, p0 } => {
+                        let off = self.offsets[ent];
+                        let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
+                        let jf = euler::jacobian(&qb, p0);
+                        for col in 0..6 {
+                            jac[(j, off + col)] += w
+                                * (c.n.x * jf[0][col] + c.n.y * jf[1][col] + c.n.z * jf[2][col]);
+                        }
+                    }
+                    Term::ClothNode { ent, w } => {
+                        let off = self.offsets[ent];
+                        jac[(j, off)] += w * c.n.x;
+                        jac[(j, off + 1)] += w * c.n.y;
+                        jac[(j, off + 2)] += w * c.n.z;
+                    }
+                }
+            }
+        }
+        jac
+    }
+
+    /// Augmented-Lagrangian Gauss–Newton solve of Eq. 6.
+    pub fn solve(&self) -> ZoneSolution {
+        let m = self.constraints.len();
+        let mut q = self.q0.clone();
+        let mut lambda = vec![0.0; m];
+        let mut mu = 10.0 * self.mass_scale();
+        let mut prev_viol = f64::MAX;
+        let tol = 1e-10;
+        let max_outer = 40;
+        for outer in 0..max_outer {
+            // Inner Gauss–Newton minimization of the AL function.
+            for _ in 0..25 {
+                let c = self.eval(&q);
+                let jac = self.jacobian(&q);
+                // grad = M(q−q0) − Jᵀ·max(0, λ − μ·c)
+                let mut dq: Vec<f64> = q.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
+                let mut grad = self.mass.matvec(&dq);
+                let mut active = vec![false; m];
+                for j in 0..m {
+                    let force = (lambda[j] - mu * c[j]).max(0.0);
+                    if force > 0.0 {
+                        active[j] = true;
+                        for col in 0..self.n {
+                            grad[col] -= jac[(j, col)] * force;
+                        }
+                    }
+                }
+                // H = M + μ·Σ_active JᵀJ
+                let mut h = self.mass.clone();
+                for j in 0..m {
+                    if active[j] {
+                        for a in 0..self.n {
+                            let ja = jac[(j, a)];
+                            if ja == 0.0 {
+                                continue;
+                            }
+                            for b in 0..self.n {
+                                h[(a, b)] += mu * ja * jac[(j, b)];
+                            }
+                        }
+                    }
+                }
+                let neg_grad: Vec<f64> = grad.iter().map(|g| -g).collect();
+                let step = match h.chol_solve(&neg_grad) {
+                    Some(s) => s,
+                    None => h.lu_solve(&neg_grad).unwrap_or_else(|| vec![0.0; self.n]),
+                };
+                // Backtracking line search on the AL merit function —
+                // Gauss–Newton steps through the rotation nonlinearity
+                // can otherwise overshoot wildly.
+                let merit = |qq: &[f64]| -> f64 {
+                    let cs = self.eval(qq);
+                    let d: Vec<f64> = qq.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
+                    let mut val = 0.5 * crate::math::dense::dot(&d, &self.mass.matvec(&d));
+                    for (j, &cj) in cs.iter().enumerate() {
+                        let t = lambda[j] - mu * cj;
+                        if t > 0.0 {
+                            val += (t * t - lambda[j] * lambda[j]) / (2.0 * mu);
+                        } else {
+                            val -= lambda[j] * lambda[j] / (2.0 * mu);
+                        }
+                    }
+                    val
+                };
+                let m0 = merit(&q);
+                let mut alpha = 1.0;
+                let mut accepted = false;
+                for _ in 0..12 {
+                    let trial: Vec<f64> =
+                        q.iter().zip(&step).map(|(qi, si)| qi + alpha * si).collect();
+                    if merit(&trial) <= m0 + 1e-12 * m0.abs() {
+                        q = trial;
+                        accepted = true;
+                        break;
+                    }
+                    alpha *= 0.5;
+                }
+                if !accepted {
+                    break; // stationary for this μ
+                }
+                let step_norm = alpha * crate::math::dense::norm(&step);
+                dq.clear();
+                if step_norm < 1e-12 * (1.0 + crate::math::dense::norm(&q)) {
+                    break;
+                }
+            }
+            // Multiplier update + convergence check.
+            let c = self.eval(&q);
+            let mut viol: f64 = 0.0;
+            for j in 0..m {
+                lambda[j] = (lambda[j] - mu * c[j]).max(0.0);
+                viol = viol.max(-c[j]);
+            }
+            let comp: f64 = (0..m).map(|j| (lambda[j] * c[j]).abs()).fold(0.0, f64::max);
+            if viol < tol && comp < 1e-8 * (1.0 + self.mass_scale()) {
+                return ZoneSolution {
+                    q,
+                    lambda,
+                    converged: true,
+                    outer_iters: outer + 1,
+                    max_violation: viol,
+                };
+            }
+            if viol > 0.5 * prev_viol {
+                // Cap μ: unbounded growth on (temporarily) infeasible
+                // constraint sets drives the solution arbitrarily far
+                // from q — accepting a small residual violation is the
+                // fail-safe loop's job, not the penalty's.
+                mu = (mu * 4.0).min(1e7 * self.mass_scale());
+            }
+            prev_viol = viol;
+        }
+        let c = self.eval(&q);
+        let viol = c.iter().map(|&x| (-x).max(0.0)).fold(0.0, f64::max);
+        ZoneSolution { q, lambda, converged: viol < 1e-6, outer_iters: max_outer, max_violation: viol }
+    }
+
+    /// Characteristic mass for scaling penalties/tolerances.
+    fn mass_scale(&self) -> f64 {
+        let mut s = 0.0;
+        let mut k = 0;
+        for i in 0..self.n {
+            s += self.mass[(i, i)];
+            k += 1;
+        }
+        if k == 0 {
+            1.0
+        } else {
+            s / k as f64
+        }
+    }
+
+    /// KKT stationarity residual ‖M(q′−q) − Jᵀλ‖ (diagnostics / tests).
+    pub fn kkt_residual(&self, sol: &ZoneSolution) -> f64 {
+        let dq: Vec<f64> = sol.q.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
+        let mut r = self.mass.matvec(&dq);
+        let jac = self.jacobian(&sol.q);
+        for j in 0..self.constraints.len() {
+            for col in 0..self.n {
+                r[col] -= jac[(j, col)] * sol.lambda[j];
+            }
+        }
+        crate::math::dense::norm(&r)
+    }
+
+    /// Write the resolved coordinates back into per-body candidate state.
+    pub fn scatter(
+        &self,
+        sol: &ZoneSolution,
+        rigid_q: &mut [[f64; 6]],
+        cloth_x: &mut [Vec<Vec3>],
+    ) {
+        for (k, e) in self.entities.iter().enumerate() {
+            let off = self.offsets[k];
+            match e {
+                Entity::Rigid(b) => {
+                    rigid_q[*b as usize].copy_from_slice(&sol.q[off..off + 6]);
+                }
+                Entity::ClothNode(c, nd) => {
+                    cloth_x[*c as usize][*nd as usize] =
+                        Vec3::new(sol.q[off], sol.q[off + 1], sol.q[off + 2]);
+                }
+            }
+        }
+    }
+}
+
+fn constraint_from_impact(
+    sys: &System,
+    im: &Impact,
+    slot: &dyn Fn(&Entity) -> usize,
+    rigid_q: &[[f64; 6]],
+    cloth_x: &[Vec<Vec3>],
+    delta: f64,
+) -> Constraint {
+    let mut terms = Vec::with_capacity(4);
+    let mut fixed_part = 0.0;
+    for k in 0..4 {
+        let node = im.nodes[k];
+        let w = im.w[k];
+        match entity_of(sys, node) {
+            Some(e @ Entity::Rigid(b)) => {
+                let vert = match node {
+                    NodeRef::Rigid { vert, .. } => vert as usize,
+                    _ => unreachable!(),
+                };
+                terms.push(Term::RigidVert {
+                    ent: slot(&e),
+                    w,
+                    p0: sys.rigids[b as usize].mesh0.verts[vert],
+                });
+            }
+            Some(e @ Entity::ClothNode(..)) => {
+                terms.push(Term::ClothNode { ent: slot(&e), w });
+            }
+            None => {
+                // Fixed node: fold its (candidate) position into the
+                // constant part.
+                let x = match node {
+                    NodeRef::Rigid { body, vert } => {
+                        let qb = rigid_q[body as usize];
+                        euler::transform_point(&qb, sys.rigids[body as usize].mesh0.verts[vert as usize])
+                    }
+                    NodeRef::Cloth { cloth, node } => cloth_x[cloth as usize][node as usize],
+                };
+                fixed_part += w * im.n.dot(x);
+            }
+        }
+    }
+    Constraint { n: im.n, terms, fixed_part, delta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::{Cloth, RigidBody, System};
+    use crate::collision::zones::build_zones;
+    use crate::collision::{detect, surfaces_from_system};
+    use crate::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+
+    /// Cube pushed 0.2 below a frozen ground plane; the zone solve must
+    /// lift it back out with an (almost) pure translation.
+    fn penetrating_cube_problem() -> (System, ZoneProblem) {
+        let mut sys = System::new();
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(box_mesh(Vec3::new(5.0, 0.5, 5.0)))
+                .with_position(Vec3::new(0.0, -0.5, 0.0)),
+        );
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+        // Candidate: cube sunk to y = 0.3 (bottom at -0.2 → 0.2 below ground).
+        let mut rigid_q = [[0.0f64; 6]; 2].to_vec();
+        rigid_q[0] = sys.rigids[0].q;
+        rigid_q[1] = sys.rigids[1].q;
+        rigid_q[1][4] = 0.3;
+        let x1: Vec<Vec<Vec3>> = (0..2)
+            .map(|b| {
+                let mut tmp = sys.rigids[b].clone();
+                tmp.q = rigid_q[b];
+                tmp.world_verts()
+            })
+            .collect();
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        assert!(!impacts.is_empty());
+        let zones = build_zones(&sys, &impacts);
+        assert_eq!(zones.len(), 1);
+        let zp = ZoneProblem::build(&sys, &zones[0], &rigid_q, &[], 1e-3);
+        (sys, zp)
+    }
+
+    #[test]
+    fn cube_pushed_out_of_ground() {
+        let (_sys, zp) = penetrating_cube_problem();
+        let sol = zp.solve();
+        assert!(sol.converged, "violation {}", sol.max_violation);
+        // All constraints satisfied.
+        let c = zp.eval(&sol.q);
+        for (j, cj) in c.iter().enumerate() {
+            assert!(*cj > -1e-8, "constraint {j}: {cj}");
+        }
+        // The cube rose: its y translation ≈ 0.5 (bottom at ground + δ).
+        let ent_y = zp
+            .entities
+            .iter()
+            .position(|e| matches!(e, Entity::Rigid(1)))
+            .unwrap();
+        let y = sol.q[zp.offsets[ent_y] + 4];
+        assert!(y > 0.49 && y < 0.52, "resolved y = {y}");
+        // Minimal-displacement: rotation stays tiny.
+        for a in 0..3 {
+            assert!(sol.q[zp.offsets[ent_y] + a].abs() < 1e-3, "rotated");
+        }
+        // Multipliers: at least one active contact, all nonnegative.
+        assert!(sol.lambda.iter().any(|&l| l > 0.0));
+        assert!(sol.lambda.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn kkt_residual_small_at_solution() {
+        let (_sys, zp) = penetrating_cube_problem();
+        let sol = zp.solve();
+        let r = zp.kkt_residual(&sol);
+        assert!(r < 1e-5 * (1.0 + zp.mass_scale()), "KKT residual {r}");
+    }
+
+    #[test]
+    fn no_violation_means_no_motion() {
+        // Candidate already satisfies all constraints → q′ = q, λ = 0.
+        let (_sys, mut zp) = penetrating_cube_problem();
+        // Shift candidate up so nothing penetrates.
+        let ent = zp.entities.iter().position(|e| matches!(e, Entity::Rigid(1))).unwrap();
+        zp.q0[zp.offsets[ent] + 4] = 0.7;
+        let sol = zp.solve();
+        assert!(sol.converged);
+        for (a, b) in sol.q.iter().zip(&zp.q0) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(sol.lambda.iter().all(|&l| l < 1e-9));
+    }
+
+    #[test]
+    fn heavier_body_moves_less() {
+        // Two cubes overlapping: light vs heavy — resolution shifts the
+        // light one further (mass-weighted minimal displacement).
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 10.0).with_position(Vec3::new(0.0, 1.2, 0.0)),
+        );
+        // Candidate: the heavy cube moves down to y = 0.9 (0.1 overlap).
+        let mut rigid_q: Vec<[f64; 6]> = sys.rigids.iter().map(|b| b.q).collect();
+        rigid_q[1][4] = 0.9;
+        let x1: Vec<Vec<Vec3>> = (0..2)
+            .map(|b| {
+                let mut tmp = sys.rigids[b].clone();
+                tmp.q = rigid_q[b];
+                tmp.world_verts()
+            })
+            .collect();
+        let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        assert!(!impacts.is_empty(), "cubes should overlap");
+        let zones = build_zones(&sys, &impacts);
+        let zp = ZoneProblem::build(&sys, &zones[0], &rigid_q, &[], 1e-3);
+        let sol = zp.solve();
+        assert!(sol.converged, "viol={}", sol.max_violation);
+        let i_light = zp.entities.iter().position(|e| *e == Entity::Rigid(0)).unwrap();
+        let i_heavy = zp.entities.iter().position(|e| *e == Entity::Rigid(1)).unwrap();
+        let dy_light = (sol.q[zp.offsets[i_light] + 4] - zp.q0[zp.offsets[i_light] + 4]).abs();
+        let dy_heavy = (sol.q[zp.offsets[i_heavy] + 4] - zp.q0[zp.offsets[i_heavy] + 4]).abs();
+        assert!(
+            dy_light > 3.0 * dy_heavy,
+            "light moved {dy_light}, heavy moved {dy_heavy}"
+        );
+    }
+
+    #[test]
+    fn cloth_node_resolved_against_rigid() {
+        let mut sys = System::new();
+        sys.add_rigid(RigidBody::frozen_from_mesh(unit_box()));
+        let cloth = Cloth::from_grid(
+            cloth_grid(2, 2, 0.6, 0.6).translated(Vec3::new(0.0, 0.55, 0.0)),
+            0.2,
+            100.0,
+            1.0,
+            0.0,
+        );
+        sys.add_cloth(cloth);
+        let rigid_q: Vec<[f64; 6]> = sys.rigids.iter().map(|b| b.q).collect();
+        // Candidate: center node moves down through the cube's top face
+        // (0.55 → 0.45, face at y = 0.5) — caught by CCD.
+        let mut cloth_x = vec![sys.cloths[0].x.clone()];
+        cloth_x[0][4].y = 0.45;
+        let surfs = surfaces_from_system(&sys, &[sys.rigids[0].world_verts()], &cloth_x, 1e-3);
+        let (impacts, _) = detect(&surfs, 1e-3);
+        assert!(!impacts.is_empty());
+        let zones = build_zones(&sys, &impacts);
+        let zp = ZoneProblem::build(&sys, &zones[0], &rigid_q, &cloth_x, 1e-3);
+        let sol = zp.solve();
+        assert!(sol.converged);
+        let c = zp.eval(&sol.q);
+        assert!(c.iter().all(|&x| x > -1e-8));
+        // The cloth node ends at/above the cube top.
+        let mut rq = rigid_q.clone();
+        let mut cx = cloth_x.clone();
+        zp.scatter(&sol, &mut rq, &mut cx);
+        assert!(cx[0][4].y >= 0.5 - 1e-6, "node y = {}", cx[0][4].y);
+    }
+}

@@ -1,0 +1,90 @@
+//! Benchmark harness substrate (no `criterion` offline): warmup +
+//! measured iterations with mean ± σ, a table printer, and JSON dumps to
+//! `bench_output/`. Used by every `[[bench]]` target (harness = false).
+
+use crate::util::json::Json;
+use crate::util::timer::{Stats, Timer};
+
+/// Time `f` with `warmup` unmeasured calls and `iters` measured calls.
+pub fn time<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    for _ in 0..iters.max(1) {
+        let t = Timer::start();
+        f();
+        stats.push(t.seconds());
+    }
+    stats
+}
+
+pub struct Bench {
+    pub name: String,
+    rows: Vec<(String, Json)>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Bench {
+        println!("\n==== bench: {name} ====");
+        Bench { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Record and print one named measurement.
+    pub fn report(&mut self, label: &str, stats: &Stats) {
+        println!(
+            "{label:<40} {:>12} ± {:<10} (n={})",
+            crate::util::timer::fmt_secs(stats.mean()),
+            crate::util::timer::fmt_secs(stats.std()),
+            stats.n
+        );
+        let mut j = Json::obj();
+        j.set("mean_s", stats.mean()).set("std_s", stats.std()).set("n", stats.n);
+        self.rows.push((label.to_string(), j));
+    }
+
+    /// Record and print a scalar metric (memory, ratio, count).
+    pub fn metric(&mut self, label: &str, value: f64, unit: &str) {
+        println!("{label:<40} {value:>12.4} {unit}");
+        let mut j = Json::obj();
+        j.set("value", value).set("unit", unit);
+        self.rows.push((label.to_string(), j));
+    }
+
+    /// Write all recorded rows to bench_output/<name>.json.
+    pub fn finish(self) {
+        let mut obj = Json::obj();
+        for (k, v) in self.rows {
+            obj.set(&k, v);
+        }
+        let _ = std::fs::create_dir_all("bench_output");
+        let path = format!("bench_output/{}.json", self.name);
+        if std::fs::write(&path, obj.pretty()).is_ok() {
+            println!("[wrote {path}]");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_right_count_and_positive() {
+        let s = time(1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn bench_report_roundtrip() {
+        let mut b = Bench::new("selftest");
+        let s = time(0, 2, || {});
+        b.report("noop", &s);
+        b.metric("answer", 42.0, "units");
+        // finish() writes to bench_output; tolerate sandboxed CWD.
+        b.finish();
+    }
+}

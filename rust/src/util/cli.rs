@@ -1,0 +1,143 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments, with typed getters and a usage printer.
+
+use std::collections::BTreeMap;
+
+/// Declarative option spec used for `--help` output.
+#[derive(Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub program: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (first element = program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut it = raw.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args { program, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.options.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn parse() -> Args {
+        Args::parse_from(std::env::args())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.get(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 100,200,300`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .filter_map(|s| s.trim().parse().ok())
+                .collect(),
+            None => default.to_vec(),
+        }
+    }
+}
+
+/// Print a formatted usage block.
+pub fn print_usage(program: &str, about: &str, specs: &[OptSpec]) {
+    println!("{about}\n\nUSAGE:\n  {program} [OPTIONS]\n\nOPTIONS:");
+    for s in specs {
+        let def = s.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        println!("  --{:<18} {}{}", s.name, s.help, def);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(
+            std::iter::once("prog".to_string()).chain(s.split_whitespace().map(String::from)),
+        )
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("--n 10 --dt=0.02 run");
+        assert_eq!(a.usize_or("n", 0), 10);
+        assert_eq!(a.f64_or("dt", 0.0), 0.02);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = parse("--verbose --n 5");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.str_or("backend", "native"), "native");
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--sizes 100,200,300");
+        assert_eq!(a.usize_list_or("sizes", &[]), vec![100, 200, 300]);
+        assert_eq!(a.usize_list_or("other", &[7]), vec![7]);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_positional() {
+        let a = parse("--check");
+        assert!(a.flag("check"));
+        assert!(a.positional.is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure substrates. The offline image vendors only the `xla`
+//! crate and its dependencies, so the usual ecosystem crates (rand, serde,
+//! clap, tokio, criterion, proptest) are re-implemented here at the scale
+//! this engine needs.
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod memory;
+pub mod pool;
+pub mod quick;
+pub mod rng;
+pub mod timer;

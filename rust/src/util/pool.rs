@@ -1,0 +1,164 @@
+//! Thread-pool substrate (no tokio offline): scoped parallel map with an
+//! atomic work-stealing cursor. The coordinator uses it to solve
+//! independent impact zones in parallel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Fixed-size worker pool. Work is submitted as a parallel indexed map —
+/// the dominant pattern in the engine (N independent zones / bodies).
+pub struct Pool {
+    workers: usize,
+}
+
+impl Pool {
+    pub fn new(workers: usize) -> Pool {
+        Pool { workers: workers.max(1) }
+    }
+
+    /// Pool sized to the machine, capped (zone solves are memory-bound
+    /// beyond a few cores).
+    pub fn default_for_machine() -> Pool {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Pool::new(n.min(16))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel map over `0..n`; results returned in index order.
+    /// Work-stealing via an atomic cursor keeps unequal zone sizes
+    /// balanced across workers.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers == 1 || n == 1 {
+            return (0..n).map(&f).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..self.workers.min(n))
+                .map(|_| {
+                    let cursor = &cursor;
+                    let f = &f;
+                    scope.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, f(i)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+        });
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for part in parts {
+            for (i, v) in part {
+                out[i] = Some(v);
+            }
+        }
+        out.into_iter().map(|o| o.expect("pool: missing result")).collect()
+    }
+}
+
+/// Run `f` over `0..n` in parallel for side effects (e.g. writes into
+/// disjoint pre-partitioned storage guarded by interior mutability).
+pub fn parallel_for<F>(workers: usize, n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn map_returns_in_order() {
+        let p = Pool::new(4);
+        let out = p.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let p = Pool::new(4);
+        assert!(p.map(0, |i| i).is_empty());
+        assert_eq!(p.map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn single_worker_pool() {
+        let p = Pool::new(1);
+        assert_eq!(p.map(10, |i| i), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_for_visits_every_index_once() {
+        let seen = Mutex::new(vec![0usize; 1000]);
+        parallel_for(8, 1000, |i| {
+            let mut s = seen.lock().unwrap();
+            s[i] += 1;
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn map_with_uneven_work() {
+        let p = Pool::default_for_machine();
+        let out = p.map(64, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i as u64 * 997) {
+                acc = acc.wrapping_add(k ^ i as u64);
+            }
+            acc
+        });
+        assert_eq!(out.len(), 64);
+        // Deterministic irrespective of scheduling.
+        let seq: Vec<u64> = (0..64)
+            .map(|i| {
+                let mut acc = 0u64;
+                for k in 0..(i as u64 * 997) {
+                    acc = acc.wrapping_add(k ^ i as u64);
+                }
+                acc
+            })
+            .collect();
+        assert_eq!(out, seq);
+    }
+}

@@ -1,0 +1,134 @@
+//! Property-testing mini-framework substrate (no `proptest` offline).
+//!
+//! `quick(name, cases, |g| { ... })` runs a closure `cases` times with a
+//! seeded [`Gen`]; assertion failures report the case's seed so it can be
+//! replayed deterministically with `QUICK_SEED`.
+
+use crate::util::rng::Pcg32;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    pub rng: Pcg32,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u32() & 1 == 1
+    }
+
+    /// Vector of uniform f64s.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        self.rng.uniform_vec(n, lo, hi)
+    }
+
+    /// Vector of standard normals (well-conditioned random matrices).
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        self.rng.normal_vec(n)
+    }
+
+    /// Unit 3-vector.
+    pub fn unit3(&mut self) -> [f64; 3] {
+        loop {
+            let v = [self.rng.normal(), self.rng.normal(), self.rng.normal()];
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if n > 1e-6 {
+                return [v[0] / n, v[1] / n, v[2] / n];
+            }
+        }
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Run `cases` random cases of property `prop`. Panics (failing the test)
+/// with the case index and seed on the first violated assertion inside.
+pub fn quick<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    let base_seed: u64 = std::env::var("QUICK_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5eed_0000);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64);
+        let mut g = Gen { rng: Pcg32::new(seed), case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay with QUICK_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert |a-b| <= atol + rtol*|b| elementwise.
+pub fn assert_close(a: &[f64], b: &[f64], atol: f64, rtol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch {} vs {}", a.len(), b.len());
+    for i in 0..a.len() {
+        let tol = atol + rtol * b[i].abs();
+        assert!(
+            (a[i] - b[i]).abs() <= tol,
+            "{what}: element {i} differs: {} vs {} (tol {tol})",
+            a[i],
+            b[i]
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_runs_all_cases() {
+        let mut count = 0;
+        quick("counter", 50, |_g| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn quick_reports_failures_with_seed() {
+        quick("fails", 10, |g| {
+            let x = g.f64(0.0, 1.0);
+            assert!(x < 2.0); // passes
+            if g.case == 7 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn unit3_is_unit() {
+        quick("unit3", 100, |g| {
+            let v = g.unit3();
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            assert!((n - 1.0).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn assert_close_accepts_and_rejects() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-9, 2.0], 1e-6, 0.0, "ok");
+        let r = std::panic::catch_unwind(|| {
+            assert_close(&[1.0], &[1.1], 1e-6, 0.0, "bad");
+        });
+        assert!(r.is_err());
+    }
+}

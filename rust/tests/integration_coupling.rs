@@ -1,0 +1,121 @@
+//! Two-way coupling integration (paper §7.3): rigid↔cloth interaction in
+//! both directions, the capability "no prior differentiable simulation
+//! framework" had.
+
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere};
+
+#[test]
+fn trampoline_ball_bounces_back_without_penetrating() {
+    // Fig. 6 scenario: ball dropped on a pinned trampoline must deflect
+    // it, never pass through, and be pushed back upward.
+    let mut sys = System::new();
+    let mut cloth = Cloth::from_grid(
+        cloth_grid(12, 12, 2.0, 2.0).translated(Vec3::new(0.0, 1.0, 0.0)),
+        0.3,
+        5000.0,
+        2.0,
+        0.5,
+    );
+    // Pin the whole boundary ring.
+    for i in 0..=12 {
+        for k in 0..=12 {
+            if i == 0 || i == 12 || k == 0 || k == 12 {
+                cloth.pin(i * 13 + k);
+            }
+        }
+    }
+    sys.add_cloth(cloth);
+    sys.add_rigid(
+        RigidBody::from_mesh(icosphere(0.25, 2), 2.0)
+            .with_position(Vec3::new(0.0, 1.8, 0.0))
+            .with_velocity(Vec3::new(0.0, -2.0, 0.0)),
+    );
+    let mut sim = Simulation::new(sys, SimConfig { dt: 1.0 / 250.0, ..Default::default() });
+    let mut min_ball_y = f64::MAX;
+    let mut max_upward_v: f64 = f64::MIN;
+    for _ in 0..600 {
+        sim.step();
+        let b = &sim.sys.rigids[0];
+        min_ball_y = min_ball_y.min(b.translation().y);
+        max_upward_v = max_upward_v.max(b.linear_velocity().y);
+        // Ball center must never go below the trampoline by more than
+        // its radius (i.e., no tunnelling through the sheet).
+        assert!(b.translation().y > 0.3, "ball tunnelled: y = {}", b.translation().y);
+    }
+    // It dipped (cloth deformed) ...
+    assert!(min_ball_y < 1.35, "ball never deflected the sheet: {min_ball_y}");
+    // ... and was pushed back up by the sheet's elasticity.
+    assert!(max_upward_v > 0.1, "no rebound: max v_y = {max_upward_v}");
+}
+
+#[test]
+fn cloth_lifts_rigid_body() {
+    // Fig. 5a scenario in miniature: lifting a cloth's pinned corners
+    // upward carries a block sitting on the cloth (cloth → rigid force).
+    let mut sys = System::new();
+    let mut cloth = Cloth::from_grid(
+        cloth_grid(10, 10, 1.6, 1.6).translated(Vec3::new(0.0, 0.5, 0.0)),
+        0.3,
+        4000.0,
+        2.0,
+        1.0,
+    );
+    let corners = [0usize, 10, 110, 120];
+    for &c in &corners {
+        cloth.pin(c);
+    }
+    sys.add_cloth(cloth);
+    sys.add_rigid(
+        RigidBody::from_mesh(box_mesh(Vec3::splat(0.15)), 0.4)
+            .with_position(Vec3::new(0.0, 0.68, 0.0)),
+    );
+    let mut sim = Simulation::new(sys, SimConfig { dt: 1.0 / 400.0, ..Default::default() });
+    // Let the block settle into the cloth.
+    sim.run(200);
+    let y_settled = sim.sys.rigids[0].translation().y;
+    // Raise the pinned corners slowly (quasi-static lift).
+    for _ in 0..800 {
+        for &c in &corners {
+            sim.sys.cloths[0].x[c].y += 0.0006;
+        }
+        sim.step();
+    }
+    let y_end = sim.sys.rigids[0].translation().y;
+    assert!(
+        y_end > y_settled + 0.2,
+        "block was not lifted: {y_settled} -> {y_end}"
+    );
+    assert!(sim.sys.rigids[0].translation().is_finite());
+}
+
+#[test]
+fn rigid_body_drags_cloth() {
+    // Rigid → cloth force direction: a heavy ball dropped on a free
+    // cloth carries the center nodes down with it.
+    let mut sys = System::new();
+    let mut cloth = Cloth::from_grid(
+        cloth_grid(10, 10, 2.0, 2.0).translated(Vec3::new(0.0, 1.0, 0.0)),
+        0.3,
+        2000.0,
+        2.0,
+        0.5,
+    );
+    for &c in &[0usize, 10, 110, 120] {
+        cloth.pin(c);
+    }
+    sys.add_cloth(cloth);
+    sys.add_rigid(
+        RigidBody::from_mesh(icosphere(0.2, 2), 5.0).with_position(Vec3::new(0.0, 1.5, 0.0)),
+    );
+    let mut sim = Simulation::new(sys, SimConfig { dt: 1.0 / 250.0, ..Default::default() });
+    sim.run(400);
+    let center = sim.sys.cloths[0].x[60]; // middle node
+    assert!(center.y < 0.9, "cloth center not dragged down: {}", center.y);
+    // Ball rests in the pocket, above the (sagged) center.
+    let ball_y = sim.sys.rigids[0].translation().y;
+    assert!(ball_y > center.y, "ball below the cloth it rests on");
+    assert!(ball_y < 1.2);
+}

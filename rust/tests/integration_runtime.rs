@@ -1,0 +1,244 @@
+//! PJRT runtime integration: load the AOT artifacts, execute them, and
+//! cross-validate against the native rust implementations.
+//! Requires `make artifacts` (skips cleanly if absent).
+
+use diffsim::bodies::{RigidBody, System};
+use diffsim::collision::zones::build_zones;
+use diffsim::collision::{detect, surfaces_from_system};
+use diffsim::coordinator::{Coordinator, ZoneBwItem};
+use diffsim::diff::implicit::backward_qr;
+use diffsim::engine::backward::{backward, LossGrad};
+use diffsim::engine::{DiffMode, SimConfig, Simulation};
+use diffsim::math::{euler, Vec3};
+use diffsim::mesh::primitives::{box_mesh, unit_box};
+use diffsim::runtime::Runtime;
+use diffsim::solver::zone_solver::ZoneProblem;
+use diffsim::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    match Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            eprintln!("skipping PJRT tests (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn rigid_transform_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let coord = Coordinator::new(rt);
+    let mut rng = Pcg32::new(42);
+    let n = 300; // spans chunking within the 512 bucket
+    let mut qs = Vec::new();
+    let mut p0s = Vec::new();
+    for _ in 0..n {
+        qs.push([
+            rng.range(-2.0, 2.0),
+            rng.range(-1.3, 1.3),
+            rng.range(-2.0, 2.0),
+            rng.range(-3.0, 3.0),
+            rng.range(-3.0, 3.0),
+            rng.range(-3.0, 3.0),
+        ]);
+        p0s.push([rng.range(-1.0, 1.0), rng.range(-1.0, 1.0), rng.range(-1.0, 1.0)]);
+    }
+    let (xs, jacs) = coord.rigid_transform_batch(&qs, &p0s).expect("pjrt call");
+    for i in 0..n {
+        let p0 = Vec3::new(p0s[i][0], p0s[i][1], p0s[i][2]);
+        let want_x = euler::transform_point(&qs[i], p0);
+        let want_j = euler::jacobian(&qs[i], p0);
+        for c in 0..3 {
+            assert!(
+                (xs[i][c] - want_x[c]).abs() < 1e-4,
+                "item {i} x[{c}]: pjrt {} native {}",
+                xs[i][c],
+                want_x[c]
+            );
+        }
+        for r in 0..3 {
+            for c in 0..6 {
+                assert!(
+                    (jacs[i][r][c] - want_j[r][c]).abs() < 1e-3,
+                    "item {i} jac[{r}][{c}]: pjrt {} native {}",
+                    jacs[i][r][c],
+                    want_j[r][c]
+                );
+            }
+        }
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.rigid_pjrt_calls >= 1);
+    assert_eq!(m.rigid_items, n);
+}
+
+fn cube_zone(depth: f64) -> (System, ZoneProblem) {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(5.0, 0.5, 5.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+    let mut rigid_q: Vec<[f64; 6]> = sys.rigids.iter().map(|b| b.q).collect();
+    rigid_q[1][4] = 0.5 - depth;
+    let x1: Vec<Vec<Vec3>> = (0..2)
+        .map(|b| {
+            let mut tmp = sys.rigids[b].clone();
+            tmp.q = rigid_q[b];
+            tmp.world_verts()
+        })
+        .collect();
+    let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
+    let (impacts, _) = detect(&surfs, 1e-3);
+    let zones = build_zones(&sys, &impacts);
+    assert_eq!(zones.len(), 1);
+    let zp = ZoneProblem::build(&sys, &zones[0], &rigid_q, &[], 1e-3);
+    (sys, zp)
+}
+
+#[test]
+fn zone_backward_artifact_matches_native_qr() {
+    let Some(rt) = runtime() else { return };
+    let coord = Coordinator::new(rt);
+    let (_sys, zp) = cube_zone(0.2);
+    let sol = zp.solve();
+    assert!(sol.converged);
+    let mut rng = Pcg32::new(9);
+    let grad_z: Vec<f64> = (0..zp.n).map(|_| rng.normal()).collect();
+    let native = backward_qr(&zp, &sol, &grad_z).grad_q;
+    let items = vec![ZoneBwItem { problem: &zp, solution: &sol, grad_z: &grad_z }];
+    let out = coord.zone_backward_batch(&items);
+    assert_eq!(out.len(), 1);
+    for (a, b) in out[0].iter().zip(&native) {
+        // f32 artifact + CG-vs-direct: commensurate tolerance.
+        assert!((a - b).abs() < 2e-3 * (1.0 + b.abs()), "pjrt {a} vs native {b}");
+    }
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(m.zone_items, 1);
+    assert!(m.zone_occupancy() > 0.0);
+}
+
+#[test]
+fn full_backward_pjrt_mode_matches_native() {
+    let Some(rt) = runtime() else { return };
+    // Cube dropped on the ground, loss = final x translation; gradients
+    // via native QR vs the PJRT-batched path must agree.
+    let build = || {
+        let mut sys = System::new();
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(box_mesh(Vec3::new(5.0, 0.5, 5.0)))
+                .with_position(Vec3::new(0.0, -0.5, 0.0)),
+        );
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0)
+                .with_position(Vec3::new(0.0, 0.8, 0.0))
+                .with_velocity(Vec3::new(0.5, 0.0, 0.0)),
+        );
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig { record_tape: true, dt: 1.0 / 100.0, ..Default::default() },
+        );
+        sim.run(40);
+        sim
+    };
+    let mut sim_native = build();
+    sim_native.cfg.diff_mode = DiffMode::Qr;
+    let mut seed = LossGrad::zeros(&sim_native);
+    seed.rigid_q[1][3] = 1.0;
+    let g_native = backward(&sim_native, &seed);
+
+    let mut sim_pjrt = build();
+    sim_pjrt.coordinator = Some(Arc::new(Coordinator::new(rt)));
+    sim_pjrt.cfg.diff_mode = DiffMode::Pjrt;
+    let g_pjrt = backward(&sim_pjrt, &seed);
+
+    for k in 0..6 {
+        let (a, b) = (g_pjrt.rigid_q0[1][k], g_native.rigid_q0[1][k]);
+        assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "q0[{k}]: pjrt {a} native {b}");
+        let (a, b) = (g_pjrt.rigid_v0[1][k], g_native.rigid_v0[1][k]);
+        assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()), "v0[{k}]: pjrt {a} native {b}");
+    }
+    let coord = sim_pjrt.coordinator.as_ref().unwrap();
+    let m = coord.metrics.lock().unwrap();
+    assert!(m.zone_pjrt_calls + m.zone_native_fallback > 0, "no zone work went through");
+}
+
+#[test]
+fn cloth_step_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    use diffsim::bodies::Cloth;
+    use diffsim::mesh::primitives::cloth_grid;
+    use diffsim::solver::implicit_euler::cloth_implicit_step;
+    // 8x8 grid matches the exported cloth_step_r8x8 artifact.
+    let (nx, nz) = (8, 8);
+    let mut cloth = Cloth::from_grid(cloth_grid(nx, nz, 1.0, 1.0), 0.2, 500.0, 2.0, 0.1);
+    cloth.pin(0);
+    cloth.pin(nz);
+    // Perturb so internal forces are nonzero.
+    let mut rng = Pcg32::new(4);
+    for x in &mut cloth.x {
+        *x += Vec3::new(rng.range(-0.01, 0.01), rng.range(-0.01, 0.01), rng.range(-0.01, 0.01));
+    }
+    let h = 0.01;
+    let native = cloth_implicit_step(&cloth, h, Vec3::new(0.0, -9.8, 0.0));
+
+    // Assemble the artifact inputs (see aot.py for the contract).
+    let name = format!("cloth_step_r{nx}x{nz}");
+    let spec = rt.spec(&name).expect("cloth artifact").clone();
+    let nv = cloth.n_nodes();
+    let ns = spec.inputs[5][0]; // padded spring count
+    let mut xf = vec![0.0f32; nv * 3];
+    let mut vf = vec![0.0f32; nv * 3];
+    let ext = vec![0.0f32; nv * 3];
+    let mut pinned = vec![0.0f32; nv];
+    let mut mass = vec![0.0f32; nv];
+    for i in 0..nv {
+        for c in 0..3 {
+            xf[3 * i + c] = cloth.x[i][c] as f32;
+            vf[3 * i + c] = cloth.v[i][c] as f32;
+        }
+        pinned[i] = if cloth.pinned[i] { 1.0 } else { 0.0 };
+        mass[i] = cloth.node_mass[i] as f32;
+    }
+    // Spring order in the artifact: stretch edges then bend pairs, in the
+    // python grid_topology order == rust build_topology order (both walk
+    // faces in the same sequence).
+    let mut rest = vec![0.0f32; ns];
+    for (k, l0) in cloth.rest_len.iter().enumerate() {
+        rest[k] = *l0 as f32;
+    }
+    for (k, l0) in cloth.bend_rest.iter().enumerate() {
+        rest[cloth.rest_len.len() + k] = *l0 as f32;
+    }
+    let outs = rt
+        .call_f32(
+            &name,
+            &[
+                &xf,
+                &vf,
+                &ext,
+                &pinned,
+                &mass,
+                &rest,
+                &[cloth.k_stretch as f32],
+                &[cloth.k_bend as f32],
+                &[cloth.damping as f32],
+                &[h as f32],
+                &[-9.8f32],
+            ],
+        )
+        .expect("cloth artifact call");
+    let dv = &outs[0];
+    for i in 0..nv {
+        for c in 0..3 {
+            let a = dv[3 * i + c] as f64;
+            let b = native.dv[i][c];
+            assert!(
+                (a - b).abs() < 5e-4 + 5e-3 * b.abs(),
+                "node {i}.{c}: pjrt {a} native {b}"
+            );
+        }
+    }
+}
