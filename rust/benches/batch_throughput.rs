@@ -1,0 +1,55 @@
+//! Batch-throughput bench: aggregate steps/sec of `SceneBatch` vs
+//! stepping the same scenes sequentially, across batch sizes. The
+//! acceptance target is >2x aggregate steps/sec at batch size 8 on a
+//! multi-core host (scenes are embarrassingly parallel).
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{RigidBody, System};
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, unit_box};
+use diffsim::util::bench::{time, Bench};
+use diffsim::util::pool::Pool;
+
+/// Contact-rich scene: ground + a leaning 4-cube stack.
+fn pile_system() -> System {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    for k in 0..4 {
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+            0.05 * k as f64,
+            0.6 + 1.05 * k as f64,
+            0.02 * k as f64,
+        )));
+    }
+    sys
+}
+
+fn main() {
+    let mut b = Bench::new("batch_throughput");
+    let steps = 25;
+    let workers = Pool::default_for_machine().workers();
+    b.metric("workers", workers as f64, "threads");
+    for &n in &[1usize, 2, 4, 8, 16] {
+        let base = pile_system();
+        let solo_cfg = SimConfig { workers: 1, ..Default::default() };
+        let mut solos: Vec<Simulation> =
+            (0..n).map(|_| Simulation::new(base.clone(), solo_cfg.clone())).collect();
+        let s_seq = time(1, 3, || {
+            for sim in &mut solos {
+                sim.run(steps);
+            }
+        });
+        let batch_cfg = SimConfig { workers, ..Default::default() };
+        let mut batch = SceneBatch::from_scene(&base, &batch_cfg, n, |_, _| {});
+        let s_par = time(1, 3, || batch.run(steps));
+        let sps_seq = (n * steps) as f64 / s_seq.mean().max(1e-12);
+        let sps_par = (n * steps) as f64 / s_par.mean().max(1e-12);
+        b.metric(&format!("batch{n}/steps_per_s_sequential"), sps_seq, "steps/s");
+        b.metric(&format!("batch{n}/steps_per_s_batched"), sps_par, "steps/s");
+        b.metric(&format!("batch{n}/speedup"), sps_par / sps_seq, "x");
+    }
+    b.finish();
+}

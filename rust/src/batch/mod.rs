@@ -1,0 +1,215 @@
+//! Batched multi-scene simulation: N independent [`Simulation`]s stepped
+//! in parallel on one persistent worker pool, with batched forward
+//! rollouts and a batched backward that gathers per-scene ∂L/∂θ into one
+//! contiguous buffer for [`crate::ml::adam`].
+//!
+//! This is the throughput layer for the paper's learning loops: inverse
+//! problems (Fig. 7) evaluate CMA-ES populations, control learning
+//! (Fig. 8) rolls out minibatches of episodes, and parameter estimation
+//! (Fig. 9) advances many gradient chains — all embarrassingly parallel
+//! across scenes. Scenes are the unit of parallelism (each scene's inner
+//! zone pool is forced to one worker), so a batch of B scenes on W cores
+//! costs ~max(B/W)·(one scene) wall-clock and trajectories stay
+//! bitwise-identical to sequential runs.
+//!
+//! When every scene uses `DiffMode::Pjrt` with a coordinator, the
+//! backward walks all tapes in lockstep and routes every scene's zone
+//! items at each (step, pass) level through a *single*
+//! `Coordinator::zone_backward_batch` call, so PJRT bucket-batching
+//! amortizes across scenes instead of within one (see [`backward`]).
+
+pub mod backward;
+
+use crate::bodies::System;
+use crate::diff::tape::Grads;
+use crate::engine::backward::LossGrad;
+use crate::engine::{SimConfig, Simulation};
+use crate::util::pool::Pool;
+
+/// A batch of independent scenes advanced in lockstep.
+pub struct SceneBatch {
+    sims: Vec<Simulation>,
+    pool: Pool,
+}
+
+/// Result of a taped batch rollout: per-scene losses, gradients, and the
+/// per-scene controller state threaded through the rollout.
+pub struct BatchRollout<S> {
+    pub losses: Vec<f64>,
+    pub grads: Vec<Grads>,
+    pub states: Vec<S>,
+}
+
+impl<S> BatchRollout<S> {
+    pub fn total_loss(&self) -> f64 {
+        self.losses.iter().sum()
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.losses.is_empty() {
+            0.0
+        } else {
+            self.total_loss() / self.losses.len() as f64
+        }
+    }
+
+    /// Gather per-scene parameter gradients into one contiguous buffer
+    /// (scene-major: scene i owns `[i·per_scene, (i+1)·per_scene)`),
+    /// ready for a single `ml::adam::Adam::step` over the whole
+    /// population. `fill(i, grads, slice)` extracts scene i's ∂L/∂θ.
+    pub fn gather_param_grads<F>(&self, per_scene: usize, fill: F) -> Vec<f64>
+    where
+        F: Fn(usize, &Grads, &mut [f64]),
+    {
+        let mut buf = vec![0.0; self.grads.len() * per_scene];
+        for (i, g) in self.grads.iter().enumerate() {
+            fill(i, g, &mut buf[i * per_scene..(i + 1) * per_scene]);
+        }
+        buf
+    }
+}
+
+impl SceneBatch {
+    /// Wrap pre-built simulations; `workers` sizes the batch pool.
+    pub fn new(sims: Vec<Simulation>, workers: usize) -> SceneBatch {
+        SceneBatch { sims, pool: Pool::new(workers) }
+    }
+
+    /// Clone one scene config into `n` scenes, applying a per-scene
+    /// override (parameter perturbations, population candidates, …).
+    /// `cfg.workers` sizes the *batch* pool; each scene's own zone pool
+    /// is forced to one worker so scenes, not zones, are the unit of
+    /// parallelism — which also keeps batch trajectories bitwise
+    /// identical to sequential single-scene runs.
+    pub fn from_scene<F>(base: &System, cfg: &SimConfig, n: usize, customize: F) -> SceneBatch
+    where
+        F: Fn(usize, &mut System),
+    {
+        let workers = cfg.workers.max(1);
+        let sims = (0..n)
+            .map(|i| {
+                let mut sys = base.clone();
+                customize(i, &mut sys);
+                let cfg_i = SimConfig { workers: 1, ..cfg.clone() };
+                Simulation::new(sys, cfg_i)
+            })
+            .collect();
+        SceneBatch::new(sims, workers)
+    }
+
+    pub fn len(&self) -> usize {
+        self.sims.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sims.is_empty()
+    }
+
+    pub fn sim(&self, i: usize) -> &Simulation {
+        &self.sims[i]
+    }
+
+    pub fn sims(&self) -> &[Simulation] {
+        &self.sims
+    }
+
+    pub fn sims_mut(&mut self) -> &mut [Simulation] {
+        &mut self.sims
+    }
+
+    /// Toggle taping on every scene.
+    pub fn set_record_tape(&mut self, on: bool) {
+        for sim in &mut self.sims {
+            sim.cfg.record_tape = on;
+        }
+    }
+
+    /// Install one SHARED coordinator on every scene and switch them to
+    /// `DiffMode::Pjrt`. Sharing matters: the batched backward only
+    /// takes the lockstep path (all scenes' zone items in one
+    /// `Coordinator::zone_backward_batch` call per (step, pass) level)
+    /// when every scene holds the same coordinator.
+    pub fn set_coordinator(&mut self, coord: std::sync::Arc<crate::coordinator::Coordinator>) {
+        for sim in &mut self.sims {
+            sim.coordinator = Some(coord.clone());
+            sim.cfg.diff_mode = crate::engine::DiffMode::Pjrt;
+        }
+    }
+
+    /// Advance every scene one step, in parallel.
+    pub fn step(&mut self) {
+        self.pool.map_mut(&mut self.sims, |_, sim| sim.step());
+    }
+
+    /// Advance every scene `steps` steps. Scenes are independent, so
+    /// each worker runs its scenes' full horizon without barriers.
+    pub fn run(&mut self, steps: usize) {
+        self.pool.map_mut(&mut self.sims, |_, sim| sim.run(steps));
+    }
+
+    /// Forward rollout with per-scene controller state: for scene i,
+    /// `state = init(i)`, then `steps` iterations of
+    /// `control(&mut state, i, step, sim); sim.step()`. Returns the
+    /// final states in scene order.
+    pub fn rollout<S, I, C>(&mut self, steps: usize, init: I, control: C) -> Vec<S>
+    where
+        S: Send,
+        I: Fn(usize) -> S + Sync,
+        C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
+    {
+        self.pool.map_mut(&mut self.sims, |i, sim| {
+            let mut state = init(i);
+            for s in 0..steps {
+                control(&mut state, i, s, sim);
+                sim.step();
+            }
+            state
+        })
+    }
+
+    /// Taped batch rollout + batched backward. Tapes are cleared, taping
+    /// is enabled, the controlled forward runs in parallel, then
+    /// `loss(i, sim, state)` seeds each scene's adjoint and the backward
+    /// runs batched (lockstep + shared coordinator calls under
+    /// `DiffMode::Pjrt`, scene-parallel native otherwise).
+    pub fn rollout_grad<S, I, C, L>(
+        &mut self,
+        steps: usize,
+        init: I,
+        control: C,
+        loss: L,
+    ) -> BatchRollout<S>
+    where
+        S: Send + Sync,
+        I: Fn(usize) -> S + Sync,
+        C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
+        L: Fn(usize, &Simulation, &S) -> (f64, LossGrad) + Sync,
+    {
+        // Tape only for the duration of this call: prior record_tape
+        // flags are restored afterwards so a later forward-only
+        // `run()` on the same batch doesn't grow tapes unboundedly.
+        // (The rollout's tapes themselves are kept for inspection;
+        // the next rollout_grad clears them.)
+        let prior_tape: Vec<bool> = self.sims.iter().map(|s| s.cfg.record_tape).collect();
+        for sim in &mut self.sims {
+            sim.cfg.record_tape = true;
+            sim.clear_tape();
+        }
+        let states = self.rollout(steps, init, control);
+        let pool = &self.pool;
+        let sims = &self.sims;
+        let seeded: Vec<(f64, LossGrad)> =
+            pool.map(sims.len(), |i| loss(i, &sims[i], &states[i]));
+        let mut losses = Vec::with_capacity(seeded.len());
+        let mut seeds = Vec::with_capacity(seeded.len());
+        for (l, s) in seeded {
+            losses.push(l);
+            seeds.push(s);
+        }
+        let grads = backward::backward_batch(pool, sims, &seeds);
+        for (sim, on) in self.sims.iter_mut().zip(prior_tape) {
+            sim.cfg.record_tape = on;
+        }
+        BatchRollout { losses, grads, states }
+    }
+}

@@ -1,11 +1,17 @@
 //! Reverse pass over the step tape: backpropagates a loss on the final
 //! state to initial conditions, per-step control forces, and rigid-body
 //! masses — the gradient flows the paper's applications (§7.4) use.
+//!
+//! The per-step adjoint is factored into stages ([`begin_step`] → zone
+//! groups → [`finish_step`]) so [`crate::batch`] can walk many scenes'
+//! tapes in lockstep and route every scene's zone backwards through one
+//! coordinator call per (step, pass) level.
 
 use super::Simulation;
+use crate::coordinator::ZoneBwItem;
 use crate::diff::dynamics_grad::adjoint_solve;
 use crate::diff::implicit::{backward_dense, backward_qr};
-use crate::diff::tape::Grads;
+use crate::diff::tape::{Grads, StepRecord, ZoneRec};
 use crate::engine::DiffMode;
 use crate::math::Vec3;
 
@@ -30,264 +36,356 @@ impl LossGrad {
     }
 }
 
-/// Run the backward pass over `sim`'s tape.
-pub fn backward(sim: &Simulation, seed: &LossGrad) -> Grads {
+/// Running adjoint state: ∂L/∂(state) at the current tape position.
+pub(crate) struct Adjoint {
+    pub gq_r: Vec<[f64; 6]>,
+    pub gv_r: Vec<[f64; 6]>,
+    pub gx_c: Vec<Vec<Vec3>>,
+    pub gv_c: Vec<Vec<Vec3>>,
+}
+
+/// Within-step intermediates, alive between the commit adjoint and the
+/// candidate adjoint; zone-group backwards read and rewrite the `*bar`
+/// entries.
+pub(crate) struct StepWork {
+    pub gqbar_r: Vec<[f64; 6]>,
+    pub gq0_r: Vec<[f64; 6]>,
+    pub gxbar_c: Vec<Vec<Vec3>>,
+    pub gx0_c: Vec<Vec<Vec3>>,
+}
+
+/// Zeroed gradient accumulator shaped like `sim` with `steps` records.
+pub(crate) fn grads_zeros(sim: &Simulation, steps: usize) -> Grads {
     let nr = sim.sys.rigids.len();
-    let nc = sim.sys.cloths.len();
-    let steps = sim.tape.len();
-    let mut gq_r = seed.rigid_q.clone();
-    let mut gv_r = seed.rigid_v.clone();
-    let mut gx_c: Vec<Vec<Vec3>> = seed.cloth_x.clone();
-    let mut gv_c: Vec<Vec<Vec3>> = seed.cloth_v.clone();
-    let mut out = Grads {
+    Grads {
         rigid_q0: vec![[0.0; 6]; nr],
         rigid_v0: vec![[0.0; 6]; nr],
         cloth_x0: sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect(),
-        cloth_v0: gx_c.clone(),
+        cloth_v0: sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect(),
         rigid_force: vec![vec![Vec3::default(); nr]; steps],
         cloth_force: (0..steps)
             .map(|_| sim.sys.cloths.iter().map(|c| vec![Vec3::default(); c.n_nodes()]).collect())
             .collect(),
         rigid_mass: vec![0.0; nr],
-    };
-    // Zero-out grads of fixed DOFs.
-    let clamp_fixed = |gq_r: &mut Vec<[f64; 6]>, gv_r: &mut Vec<[f64; 6]>, gx: &mut Vec<Vec<Vec3>>, gv: &mut Vec<Vec<Vec3>>| {
-        for (b, body) in sim.sys.rigids.iter().enumerate() {
-            if body.frozen {
-                gq_r[b] = [0.0; 6];
-                gv_r[b] = [0.0; 6];
+    }
+}
+
+/// Zero-out adjoint entries of fixed DOFs (frozen bodies, pinned nodes).
+fn clamp_fixed(sim: &Simulation, adj: &mut Adjoint) {
+    for (b, body) in sim.sys.rigids.iter().enumerate() {
+        if body.frozen {
+            adj.gq_r[b] = [0.0; 6];
+            adj.gv_r[b] = [0.0; 6];
+        }
+    }
+    for (c, cloth) in sim.sys.cloths.iter().enumerate() {
+        for i in 0..cloth.n_nodes() {
+            if cloth.pinned[i] {
+                adj.gx_c[c][i] = Vec3::default();
+                adj.gv_c[c][i] = Vec3::default();
             }
         }
-        for (c, cloth) in sim.sys.cloths.iter().enumerate() {
-            for i in 0..cloth.n_nodes() {
-                if cloth.pinned[i] {
-                    gx[c][i] = Vec3::default();
-                    gv[c][i] = Vec3::default();
-                }
-            }
-        }
+    }
+}
+
+/// Initial adjoint from the loss seed (with fixed DOFs clamped).
+pub(crate) fn seed_adjoint(sim: &Simulation, seed: &LossGrad) -> Adjoint {
+    let mut adj = Adjoint {
+        gq_r: seed.rigid_q.clone(),
+        gv_r: seed.rigid_v.clone(),
+        gx_c: seed.cloth_x.clone(),
+        gv_c: seed.cloth_v.clone(),
     };
-    clamp_fixed(&mut gq_r, &mut gv_r, &mut gx_c, &mut gv_c);
+    clamp_fixed(sim, &mut adj);
+    adj
+}
 
-    for (s, rec) in sim.tape.iter().enumerate().rev() {
-        let h = rec.h;
-        // --- Commit adjoint: q₁ = q̄′, v₁ = (q₁ − q₀)/h. ---
-        // ḡ_q̄′ = ḡ_q₁ + ḡ_v₁/h; ḡ_q₀ −= ḡ_v₁/h.
-        let mut gqbar_r: Vec<[f64; 6]> = (0..nr)
-            .map(|b| {
-                let mut g = gq_r[b];
-                for k in 0..6 {
-                    g[k] += gv_r[b][k] / h;
-                }
-                g
-            })
-            .collect();
-        let mut gq0_r: Vec<[f64; 6]> = (0..nr)
-            .map(|b| {
-                let mut g = [0.0; 6];
-                for k in 0..6 {
-                    g[k] = -gv_r[b][k] / h;
-                }
-                g
-            })
-            .collect();
-        let mut gxbar_c: Vec<Vec<Vec3>> = (0..nc)
-            .map(|c| {
-                (0..gx_c[c].len()).map(|i| gx_c[c][i] + gv_c[c][i] / h).collect()
-            })
-            .collect();
-        let mut gx0_c: Vec<Vec<Vec3>> = (0..nc)
-            .map(|c| (0..gx_c[c].len()).map(|i| -gv_c[c][i] / h).collect())
-            .collect();
-
-        // --- Zone resolutions, reversed by fail-safe pass. Zones within
-        // one pass are independent (disjoint entities) so their backwards
-        // can be computed together — which is exactly what the PJRT
-        // coordinator batches. ---
-        let mut hi = rec.zones.len();
-        while hi > 0 {
-            let pass = rec.zones[hi - 1].pass;
-            let mut lo = hi;
-            while lo > 0 && rec.zones[lo - 1].pass == pass {
-                lo -= 1;
+/// Commit adjoint of one step: q₁ = q̄′, v₁ = (q₁ − q₀)/h gives
+/// ḡ_q̄′ = ḡ_q₁ + ḡ_v₁/h and ḡ_q₀ −= ḡ_v₁/h.
+pub(crate) fn begin_step(sim: &Simulation, rec: &StepRecord, adj: &Adjoint) -> StepWork {
+    let h = rec.h;
+    let nr = sim.sys.rigids.len();
+    let nc = sim.sys.cloths.len();
+    let gqbar_r: Vec<[f64; 6]> = (0..nr)
+        .map(|b| {
+            let mut g = adj.gq_r[b];
+            for k in 0..6 {
+                g[k] += adj.gv_r[b][k] / h;
             }
-            let group = &rec.zones[lo..hi];
-            hi = lo;
-            // Gather ∂L/∂z for every zone in the group.
-            let grad_zs: Vec<Vec<f64>> = group
-                .iter()
-                .map(|zr| {
-                    let zp = &zr.problem;
-                    let mut grad_z = vec![0.0; zp.n];
-                    for (k, e) in zp.entities.iter().enumerate() {
-                        let off = zp.offsets[k];
-                        match e {
-                            crate::collision::zones::Entity::Rigid(b) => {
-                                grad_z[off..off + 6].copy_from_slice(&gqbar_r[*b as usize]);
-                            }
-                            crate::collision::zones::Entity::ClothNode(c, i) => {
-                                let g = gxbar_c[*c as usize][*i as usize];
-                                grad_z[off] = g.x;
-                                grad_z[off + 1] = g.y;
-                                grad_z[off + 2] = g.z;
-                            }
-                        }
+            g
+        })
+        .collect();
+    let gq0_r: Vec<[f64; 6]> = (0..nr)
+        .map(|b| {
+            let mut g = [0.0; 6];
+            for k in 0..6 {
+                g[k] = -adj.gv_r[b][k] / h;
+            }
+            g
+        })
+        .collect();
+    let gxbar_c: Vec<Vec<Vec3>> = (0..nc)
+        .map(|c| (0..adj.gx_c[c].len()).map(|i| adj.gx_c[c][i] + adj.gv_c[c][i] / h).collect())
+        .collect();
+    let gx0_c: Vec<Vec<Vec3>> = (0..nc)
+        .map(|c| (0..adj.gx_c[c].len()).map(|i| -adj.gv_c[c][i] / h).collect())
+        .collect();
+    StepWork { gqbar_r, gq0_r, gxbar_c, gx0_c }
+}
+
+/// Gather ∂L/∂z for every zone in a (single fail-safe pass) group.
+pub(crate) fn gather_zone_grads(group: &[ZoneRec], w: &StepWork) -> Vec<Vec<f64>> {
+    group
+        .iter()
+        .map(|zr| {
+            let zp = &zr.problem;
+            let mut grad_z = vec![0.0; zp.n];
+            for (k, e) in zp.entities.iter().enumerate() {
+                let off = zp.offsets[k];
+                match e {
+                    crate::collision::zones::Entity::Rigid(b) => {
+                        grad_z[off..off + 6].copy_from_slice(&w.gqbar_r[*b as usize]);
                     }
-                    grad_z
+                    crate::collision::zones::Entity::ClothNode(c, i) => {
+                        let g = w.gxbar_c[*c as usize][*i as usize];
+                        grad_z[off] = g.x;
+                        grad_z[off + 1] = g.y;
+                        grad_z[off + 2] = g.z;
+                    }
+                }
+            }
+            grad_z
+        })
+        .collect()
+}
+
+/// Scatter a solved zone group's ∂L/∂q back into the step intermediates
+/// and accumulate the mass-parameter gradients.
+pub(crate) fn apply_zone_grads(
+    sim: &Simulation,
+    group: &[ZoneRec],
+    grads_q: &[Vec<f64>],
+    w: &mut StepWork,
+    out: &mut Grads,
+) {
+    for (zr, grad_q) in group.iter().zip(grads_q) {
+        let zp = &zr.problem;
+        // Mass-parameter gradient through the zone's M̂ (uniform
+        // density: ∂M̂_b/∂m = M̂_b/m). Using grad_q = M̂·u_z:
+        //   ∂L/∂m += −u_zᵀ·(M̂_b/m)·(z*−q)|_b = −grad_q·(z*−q)|_b / m.
+        for (k, e) in zp.entities.iter().enumerate() {
+            if let crate::collision::zones::Entity::Rigid(b) = e {
+                let body = &sim.sys.rigids[*b as usize];
+                if body.frozen {
+                    continue;
+                }
+                let off = zp.offsets[k];
+                let mut dot = 0.0;
+                for i in 0..6 {
+                    dot += grad_q[off + i] * (zr.solution.q[off + i] - zp.q0[off + i]);
+                }
+                out.rigid_mass[*b as usize] += -dot / body.mass;
+            }
+        }
+        // Scatter ∂L/∂q back (replacing the entries).
+        for (k, e) in zp.entities.iter().enumerate() {
+            let off = zp.offsets[k];
+            match e {
+                crate::collision::zones::Entity::Rigid(b) => {
+                    w.gqbar_r[*b as usize].copy_from_slice(&grad_q[off..off + 6]);
+                }
+                crate::collision::zones::Entity::ClothNode(c, i) => {
+                    w.gxbar_c[*c as usize][*i as usize] =
+                        Vec3::new(grad_q[off], grad_q[off + 1], grad_q[off + 2]);
+                }
+            }
+        }
+    }
+}
+
+/// Zone-group backward dispatch by diff mode. `DiffMode::Pjrt` without a
+/// coordinator (e.g. the `pjrt` feature or artifacts are absent)
+/// degrades to the QR path with a logged warning instead of panicking.
+pub(crate) fn dispatch_zone_backward(
+    sim: &Simulation,
+    items: &[ZoneBwItem<'_>],
+) -> Vec<Vec<f64>> {
+    let native_qr = |items: &[ZoneBwItem<'_>]| -> Vec<Vec<f64>> {
+        items.iter().map(|it| backward_qr(it.problem, it.solution, it.grad_z).grad_q).collect()
+    };
+    match sim.cfg.diff_mode {
+        DiffMode::Qr => native_qr(items),
+        DiffMode::Dense => items
+            .iter()
+            .map(|it| backward_dense(it.problem, it.solution, it.grad_z).grad_q)
+            .collect(),
+        DiffMode::Pjrt => match &sim.coordinator {
+            Some(coord) => coord.zone_backward_batch(items),
+            None => {
+                // Warn once, not once per zone group: a single backward
+                // hits this for every (step, pass) level.
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    crate::warnlog!(
+                        "DiffMode::Pjrt without a coordinator (pjrt feature/artifacts \
+                         unavailable); falling back to the QR backward"
+                    );
+                });
+                native_qr(items)
+            }
+        },
+    }
+}
+
+/// Contiguous (pass, index-range) groups of a step's zone records, in
+/// recorded (ascending-pass) order. Zones within one group are
+/// independent; groups must be back-propagated last-to-first.
+pub(crate) fn pass_groups(zones: &[ZoneRec]) -> Vec<(usize, std::ops::Range<usize>)> {
+    let mut out = Vec::new();
+    let mut lo = 0;
+    while lo < zones.len() {
+        let pass = zones[lo].pass;
+        let mut hi = lo + 1;
+        while hi < zones.len() && zones[hi].pass == pass {
+            hi += 1;
+        }
+        out.push((pass, lo..hi));
+        lo = hi;
+    }
+    out
+}
+
+/// Candidate adjoint (q̄ = q₀ + h·(v₀ + Δv)) plus the rigid/cloth solve
+/// adjoints of one step; rolls `adj` to the previous step's state.
+pub(crate) fn finish_step(
+    sim: &Simulation,
+    s: usize,
+    rec: &StepRecord,
+    w: StepWork,
+    adj: &mut Adjoint,
+    out: &mut Grads,
+) {
+    let h = rec.h;
+    let nr = sim.sys.rigids.len();
+    let nc = sim.sys.cloths.len();
+    let StepWork { gqbar_r, mut gq0_r, gxbar_c, mut gx0_c } = w;
+
+    let mut gv0_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
+    let mut gdv_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
+    for b in 0..nr {
+        if sim.sys.rigids[b].frozen {
+            continue;
+        }
+        for k in 0..6 {
+            gq0_r[b][k] += gqbar_r[b][k];
+            // v₁ = (q₁−q₀)/h: v₀ and Δv act only through q̄ (gv/h is
+            // already folded into gqbar above).
+            gv0_r[b][k] = h * gqbar_r[b][k];
+            gdv_r[b][k] = h * gqbar_r[b][k];
+        }
+    }
+    let mut gv0_c: Vec<Vec<Vec3>> =
+        (0..nc).map(|c| vec![Vec3::default(); sim.sys.cloths[c].n_nodes()]).collect();
+    let mut gdv_c: Vec<Vec<Vec3>> = gv0_c.clone();
+    for c in 0..nc {
+        for i in 0..sim.sys.cloths[c].n_nodes() {
+            if sim.sys.cloths[c].pinned[i] {
+                continue;
+            }
+            gx0_c[c][i] += gxbar_c[c][i];
+            gv0_c[c][i] = gxbar_c[c][i] * h;
+            gdv_c[c][i] = gxbar_c[c][i] * h;
+        }
+    }
+
+    // --- Rigid velocity update adjoint: Δq̇ = h·M̂⁻¹·Q. ---
+    for (b, rs) in rec.rigid_solves.iter().enumerate() {
+        if sim.sys.rigids[b].frozen {
+            continue;
+        }
+        let u = rs
+            .mass
+            .lu_solve(&gdv_r[b])
+            .unwrap_or_else(|| vec![0.0; 6]);
+        // ∂L/∂f_ext (world force): translation rows of ḡ_Q = h·u.
+        out.rigid_force[s][b] = Vec3::new(h * u[3], h * u[4], h * u[5]);
+        // ∂L/∂m: −ḡ_Δq̇·Δq̇/m + h·u·[0; g] (gyro-term/m dropped).
+        let mut d = 0.0;
+        for k in 0..6 {
+            d -= gdv_r[b][k] * rs.dqdot[k];
+        }
+        let g = sim.cfg.gravity;
+        out.rigid_mass[b] +=
+            d / sim.sys.rigids[b].mass + h * (u[3] * g.x + u[4] * g.y + u[5] * g.z);
+    }
+
+    // --- Cloth implicit solve adjoint. ---
+    for (c, cs) in rec.cloth_solves.iter().enumerate() {
+        let nnodes = sim.sys.cloths[c].n_nodes();
+        let mut gflat = vec![0.0; 3 * nnodes];
+        for i in 0..nnodes {
+            gflat[3 * i] = gdv_c[c][i].x;
+            gflat[3 * i + 1] = gdv_c[c][i].y;
+            gflat[3 * i + 2] = gdv_c[c][i].z;
+        }
+        let u = adjoint_solve(&cs.a, &gflat);
+        // b = h·(f₀ + h·Jx·v₀):
+        //   ∂L/∂ext_force_i = h·u_i
+        //   ∂L/∂x₀ += h·Jxᵀ·u   (∂f₀/∂x = Jx; higher-order dropped)
+        //   ∂L/∂v₀ += h·(∂f/∂v)ᵀ·u + h²·Jxᵀ·u
+        let jtu = cs.jx.matvec(&u); // Jx symmetric by construction
+        for i in 0..nnodes {
+            if sim.sys.cloths[c].pinned[i] {
+                continue;
+            }
+            let ui = Vec3::new(u[3 * i], u[3 * i + 1], u[3 * i + 2]);
+            let jti = Vec3::new(jtu[3 * i], jtu[3 * i + 1], jtu[3 * i + 2]);
+            out.cloth_force[s][c][i] = ui * h;
+            gx0_c[c][i] += jti * h;
+            gv0_c[c][i] += ui * (h * cs.dfdv[i]) + jti * (h * h);
+        }
+    }
+
+    // Roll to the previous step.
+    adj.gq_r = gq0_r;
+    adj.gv_r = gv0_r;
+    adj.gx_c = gx0_c;
+    adj.gv_c = gv0_c;
+    clamp_fixed(sim, adj);
+}
+
+/// Run the backward pass over `sim`'s tape.
+pub fn backward(sim: &Simulation, seed: &LossGrad) -> Grads {
+    let steps = sim.tape.len();
+    let mut out = grads_zeros(sim, steps);
+    let mut adj = seed_adjoint(sim, seed);
+    for (s, rec) in sim.tape.iter().enumerate().rev() {
+        let mut w = begin_step(sim, rec, &adj);
+        // Zone resolutions, reversed by fail-safe pass. Zones within one
+        // pass are independent (disjoint entities) so their backwards are
+        // computed together — which is exactly what the PJRT coordinator
+        // batches.
+        for (_pass, r) in pass_groups(&rec.zones).iter().rev() {
+            let group = &rec.zones[r.clone()];
+            let grad_zs = gather_zone_grads(group, &w);
+            let items: Vec<ZoneBwItem<'_>> = group
+                .iter()
+                .zip(&grad_zs)
+                .map(|(zr, g)| ZoneBwItem {
+                    problem: &zr.problem,
+                    solution: &zr.solution,
+                    grad_z: g,
                 })
                 .collect();
-            let grads_q: Vec<Vec<f64>> = match sim.cfg.diff_mode {
-                DiffMode::Qr => group
-                    .iter()
-                    .zip(&grad_zs)
-                    .map(|(zr, g)| backward_qr(&zr.problem, &zr.solution, g).grad_q)
-                    .collect(),
-                DiffMode::Dense => group
-                    .iter()
-                    .zip(&grad_zs)
-                    .map(|(zr, g)| backward_dense(&zr.problem, &zr.solution, g).grad_q)
-                    .collect(),
-                DiffMode::Pjrt => {
-                    let coord = sim
-                        .coordinator
-                        .as_ref()
-                        .expect("DiffMode::Pjrt requires Simulation::coordinator");
-                    let items: Vec<crate::coordinator::ZoneBwItem<'_>> = group
-                        .iter()
-                        .zip(&grad_zs)
-                        .map(|(zr, g)| crate::coordinator::ZoneBwItem {
-                            problem: &zr.problem,
-                            solution: &zr.solution,
-                            grad_z: g,
-                        })
-                        .collect();
-                    coord.zone_backward_batch(&items)
-                }
-            };
-            for (zr, grad_q) in group.iter().zip(&grads_q) {
-                let zp = &zr.problem;
-                // Mass-parameter gradient through the zone's M̂ (uniform
-                // density: ∂M̂_b/∂m = M̂_b/m). Using grad_q = M̂·u_z:
-                //   ∂L/∂m += −u_zᵀ·(M̂_b/m)·(z*−q)|_b = −grad_q·(z*−q)|_b / m.
-                for (k, e) in zp.entities.iter().enumerate() {
-                    if let crate::collision::zones::Entity::Rigid(b) = e {
-                        let body = &sim.sys.rigids[*b as usize];
-                        if body.frozen {
-                            continue;
-                        }
-                        let off = zp.offsets[k];
-                        let mut dot = 0.0;
-                        for i in 0..6 {
-                            dot += grad_q[off + i] * (zr.solution.q[off + i] - zp.q0[off + i]);
-                        }
-                        out.rigid_mass[*b as usize] += -dot / body.mass;
-                    }
-                }
-                // Scatter ∂L/∂q back (replacing the entries).
-                for (k, e) in zp.entities.iter().enumerate() {
-                    let off = zp.offsets[k];
-                    match e {
-                        crate::collision::zones::Entity::Rigid(b) => {
-                            gqbar_r[*b as usize].copy_from_slice(&grad_q[off..off + 6]);
-                        }
-                        crate::collision::zones::Entity::ClothNode(c, i) => {
-                            gxbar_c[*c as usize][*i as usize] =
-                                Vec3::new(grad_q[off], grad_q[off + 1], grad_q[off + 2]);
-                        }
-                    }
-                }
-            }
+            let grads_q = dispatch_zone_backward(sim, &items);
+            apply_zone_grads(sim, group, &grads_q, &mut w, &mut out);
         }
-
-        // --- Candidate adjoint: q̄ = q₀ + h·(v₀ + Δv). ---
-        let mut gv0_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
-        let mut gdv_r: Vec<[f64; 6]> = vec![[0.0; 6]; nr];
-        for b in 0..nr {
-            if sim.sys.rigids[b].frozen {
-                continue;
-            }
-            for k in 0..6 {
-                gq0_r[b][k] += gqbar_r[b][k];
-                // v₁ = (q₁−q₀)/h: v₀ and Δv act only through q̄ (gv/h is
-                // already folded into gqbar above).
-                gv0_r[b][k] = h * gqbar_r[b][k];
-                gdv_r[b][k] = h * gqbar_r[b][k];
-            }
-        }
-        let mut gv0_c: Vec<Vec<Vec3>> = (0..nc)
-            .map(|c| vec![Vec3::default(); gx_c[c].len()])
-            .collect();
-        let mut gdv_c: Vec<Vec<Vec3>> = gv0_c.clone();
-        for c in 0..nc {
-            for i in 0..gx_c[c].len() {
-                if sim.sys.cloths[c].pinned[i] {
-                    continue;
-                }
-                gx0_c[c][i] += gxbar_c[c][i];
-                gv0_c[c][i] = gxbar_c[c][i] * h;
-                gdv_c[c][i] = gxbar_c[c][i] * h;
-            }
-        }
-
-        // --- Rigid velocity update adjoint: Δq̇ = h·M̂⁻¹·Q. ---
-        for (b, rs) in rec.rigid_solves.iter().enumerate() {
-            if sim.sys.rigids[b].frozen {
-                continue;
-            }
-            let u = rs
-                .mass
-                .lu_solve(&gdv_r[b])
-                .unwrap_or_else(|| vec![0.0; 6]);
-            // ∂L/∂f_ext (world force): translation rows of ḡ_Q = h·u.
-            out.rigid_force[s][b] = Vec3::new(h * u[3], h * u[4], h * u[5]);
-            // ∂L/∂m: −ḡ_Δq̇·Δq̇/m + h·u·[0; g] (gyro-term/m dropped).
-            let mut d = 0.0;
-            for k in 0..6 {
-                d -= gdv_r[b][k] * rs.dqdot[k];
-            }
-            let g = sim.cfg.gravity;
-            out.rigid_mass[b] +=
-                d / sim.sys.rigids[b].mass + h * (u[3] * g.x + u[4] * g.y + u[5] * g.z);
-        }
-
-        // --- Cloth implicit solve adjoint. ---
-        for (c, cs) in rec.cloth_solves.iter().enumerate() {
-            let nnodes = gx_c[c].len();
-            let mut gflat = vec![0.0; 3 * nnodes];
-            for i in 0..nnodes {
-                gflat[3 * i] = gdv_c[c][i].x;
-                gflat[3 * i + 1] = gdv_c[c][i].y;
-                gflat[3 * i + 2] = gdv_c[c][i].z;
-            }
-            let u = adjoint_solve(&cs.a, &gflat);
-            // b = h·(f₀ + h·Jx·v₀):
-            //   ∂L/∂ext_force_i = h·u_i
-            //   ∂L/∂x₀ += h·Jxᵀ·u   (∂f₀/∂x = Jx; higher-order dropped)
-            //   ∂L/∂v₀ += h·(∂f/∂v)ᵀ·u + h²·Jxᵀ·u
-            let jtu = cs.jx.matvec(&u); // Jx symmetric by construction
-            for i in 0..nnodes {
-                if sim.sys.cloths[c].pinned[i] {
-                    continue;
-                }
-                let ui = Vec3::new(u[3 * i], u[3 * i + 1], u[3 * i + 2]);
-                let jti = Vec3::new(jtu[3 * i], jtu[3 * i + 1], jtu[3 * i + 2]);
-                out.cloth_force[s][c][i] = ui * h;
-                gx0_c[c][i] += jti * h;
-                gv0_c[c][i] += ui * (h * cs.dfdv[i]) + jti * (h * h);
-            }
-        }
-
-        // Roll to the previous step.
-        gq_r = gq0_r;
-        gv_r = gv0_r;
-        gx_c = gx0_c;
-        gv_c = gv0_c;
-        clamp_fixed(&mut gq_r, &mut gv_r, &mut gx_c, &mut gv_c);
+        finish_step(sim, s, rec, w, &mut adj, &mut out);
     }
-    out.rigid_q0 = gq_r;
-    out.rigid_v0 = gv_r;
-    out.cloth_x0 = gx_c;
-    out.cloth_v0 = gv_c;
+    out.rigid_q0 = adj.gq_r;
+    out.rigid_v0 = adj.gv_r;
+    out.cloth_x0 = adj.gx_c;
+    out.cloth_v0 = adj.gv_c;
     out
 }
 

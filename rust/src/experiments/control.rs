@@ -7,24 +7,27 @@
 //! Task (b) "cloth": corner forces steer a cloth carrying a ball.
 
 use super::{dump_json, print_table};
+use crate::batch::SceneBatch;
 use crate::bodies::{Cloth, RigidBody, System};
+use crate::diff::tape::Grads;
 use crate::engine::backward::{backward, LossGrad};
 use crate::engine::{SimConfig, Simulation};
 use crate::math::Vec3;
 use crate::mesh::primitives::{box_mesh, cloth_grid, icosphere};
 use crate::ml::adam::Adam;
 use crate::ml::ddpg::{Ddpg, DdpgConfig, Transition};
-use crate::ml::mlp::Mlp;
+use crate::ml::mlp::{Mlp, MlpTrace};
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 use crate::util::rng::Pcg32;
 use anyhow::Result;
 
 pub const EP_STEPS: usize = 40;
 const FMAX: f64 = 6.0;
 
-/// The sticks environment: manipulators are rigids 1-2, object rigid 3.
-fn sticks_scene() -> Simulation {
+/// The sticks system: manipulators are rigids 1-2, object rigid 3.
+fn sticks_system() -> System {
     let mut sys = System::new();
     sys.add_rigid(
         RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
@@ -40,8 +43,12 @@ fn sticks_scene() -> Simulation {
         RigidBody::from_mesh(box_mesh(Vec3::splat(0.15)), 1.0)
             .with_position(Vec3::new(0.0, 0.151, 0.0)),
     );
+    sys
+}
+
+fn sticks_scene() -> Simulation {
     Simulation::new(
-        sys,
+        sticks_system(),
         SimConfig { record_tape: true, dt: 1.0 / 100.0, ..Default::default() },
     )
 }
@@ -60,6 +67,47 @@ fn obs(sim: &Simulation, object: usize, target: Vec3, step: usize) -> Vec<f64> {
     ]
 }
 
+/// Apply the policy to one sticks step (forces on manipulators 1-2);
+/// returns the (trace, raw output) pair needed for the chain rule.
+fn sticks_policy_step(
+    net: &Mlp,
+    sim: &mut Simulation,
+    target: Vec3,
+    s: usize,
+) -> (MlpTrace, Vec<f64>) {
+    let o = obs(sim, 3, target, s);
+    let (raw, tr) = net.forward(&o);
+    let a: Vec<f64> = raw.iter().map(|r| r.tanh() * FMAX).collect();
+    sim.sys.rigids[1].ext_force = Vec3::new(a[0], 0.0, a[1]);
+    sim.sys.rigids[2].ext_force = Vec3::new(a[2], 0.0, a[3]);
+    (tr, raw)
+}
+
+/// Chain ∂L/∂force → tanh scaling → network params for one episode's
+/// traces; `scale` averages minibatches (1.0 for a single episode).
+fn sticks_chain_grads(
+    net: &Mlp,
+    traces: &[(MlpTrace, Vec<f64>)],
+    g: &Grads,
+    scale: f64,
+    grad: &mut [f64],
+) {
+    for (s, (tr, raw)) in traces.iter().enumerate() {
+        let df = [
+            g.rigid_force[s][1].x,
+            g.rigid_force[s][1].z,
+            g.rigid_force[s][2].x,
+            g.rigid_force[s][2].z,
+        ];
+        let draw: Vec<f64> = df
+            .iter()
+            .zip(raw)
+            .map(|(d, r)| d * FMAX * (1.0 - r.tanh() * r.tanh()) * scale)
+            .collect();
+        net.backward(tr, &draw, grad);
+    }
+}
+
 /// One taped episode driven by the policy; returns (loss, force grads
 /// chained into the network via saved traces).
 fn sticks_episode_ours(
@@ -70,12 +118,7 @@ fn sticks_episode_ours(
     let mut sim = sticks_scene();
     let mut traces = Vec::new();
     for s in 0..EP_STEPS {
-        let o = obs(&sim, 3, target, s);
-        let (raw, tr) = net.forward(&o);
-        let a: Vec<f64> = raw.iter().map(|r| r.tanh() * FMAX).collect();
-        sim.sys.rigids[1].ext_force = Vec3::new(a[0], 0.0, a[1]);
-        sim.sys.rigids[2].ext_force = Vec3::new(a[2], 0.0, a[3]);
-        traces.push((o, tr, raw));
+        traces.push(sticks_policy_step(net, &mut sim, target, s));
         sim.step();
     }
     let p = sim.sys.rigids[3].translation();
@@ -84,21 +127,7 @@ fn sticks_episode_ours(
     seed.rigid_q[3][3] = 2.0 * (p.x - target.x);
     seed.rigid_q[3][5] = 2.0 * (p.z - target.z);
     let g = backward(&sim, &seed);
-    // Chain ∂L/∂force → tanh scaling → network params.
-    for (s, (_o, tr, raw)) in traces.iter().enumerate() {
-        let df = [
-            g.rigid_force[s][1].x,
-            g.rigid_force[s][1].z,
-            g.rigid_force[s][2].x,
-            g.rigid_force[s][2].z,
-        ];
-        let draw: Vec<f64> = df
-            .iter()
-            .zip(raw)
-            .map(|(d, r)| d * FMAX * (1.0 - r.tanh() * r.tanh()))
-            .collect();
-        net.backward(tr, &draw, grad);
-    }
+    sticks_chain_grads(net, &traces, &g, 1.0, grad);
     loss
 }
 
@@ -116,6 +145,54 @@ pub fn train_ours_sticks(episodes: usize, seed: u64) -> Vec<f64> {
         losses.push(loss);
     }
     losses
+}
+
+/// Minibatched "ours" training: every update rolls out `batch` episodes
+/// with independent random targets in parallel through a [`SceneBatch`]
+/// (batched backward included) and averages the policy gradients into
+/// one Adam step. Returns the mean episode loss per update.
+pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f64> {
+    let batch = batch.max(1);
+    let mut rng = Pcg32::new(seed);
+    let mut net = Mlp::new(&[5, 50, 200, 4], &mut rng);
+    let mut opt = Adam::new(net.n_params(), 3e-3);
+    let workers = Pool::default_for_machine().workers();
+    let cfg = SimConfig { record_tape: true, dt: 1.0 / 100.0, workers, ..Default::default() };
+    let mut curve = Vec::new();
+    for _ in 0..updates {
+        let targets: Vec<Vec3> = (0..batch)
+            .map(|_| Vec3::new(rng.range(0.2, 0.8), 0.0, rng.range(-0.4, 0.4)))
+            .collect();
+        let mut sb = SceneBatch::from_scene(&sticks_system(), &cfg, batch, |_, _| {});
+        let net_ref = &net;
+        let targets_ref = &targets;
+        let res = sb.rollout_grad(
+            EP_STEPS,
+            |_| Vec::with_capacity(EP_STEPS),
+            |traces: &mut Vec<(MlpTrace, Vec<f64>)>, i, s, sim| {
+                traces.push(sticks_policy_step(net_ref, sim, targets_ref[i], s));
+            },
+            |i, sim, _| {
+                let p = sim.sys.rigids[3].translation();
+                let t = targets_ref[i];
+                let loss = (p.x - t.x) * (p.x - t.x) + (p.z - t.z) * (p.z - t.z);
+                let mut seed_g = LossGrad::zeros(sim);
+                seed_g.rigid_q[3][3] = 2.0 * (p.x - t.x);
+                seed_g.rigid_q[3][5] = 2.0 * (p.z - t.z);
+                (loss, seed_g)
+            },
+        );
+        // Chain the force gradients into the network, averaged over the
+        // minibatch.
+        let mut grad = vec![0.0; net.n_params()];
+        let inv_b = 1.0 / batch as f64;
+        for (i, traces) in res.states.iter().enumerate() {
+            sticks_chain_grads(&net, traces, &res.grads[i], inv_b, &mut grad);
+        }
+        opt.step(&mut net.params, &grad);
+        curve.push(res.mean_loss());
+    }
+    curve
 }
 
 /// DDPG on the same environment/steps budget; per-episode final loss.
@@ -243,16 +320,26 @@ fn tail_mean(xs: &[f64], n: usize) -> f64 {
 }
 
 pub fn run(args: &Args) -> Result<()> {
-    let episodes = args.usize_or("episodes", 40);
-    println!("training sticks controllers for {episodes} episodes each...");
-    let ours = train_ours_sticks(episodes, 11);
+    let batch = args.usize_or("batch", 4).max(1);
+    let updates = (args.usize_or("episodes", 40) + batch - 1) / batch;
+    // Keep the episode budgets comparable: every trainer gets exactly
+    // updates·batch episodes.
+    let episodes = updates * batch;
+    println!(
+        "training sticks controllers: ours = {updates} minibatched updates x{batch} \
+         parallel episodes, DDPG = {episodes} episodes..."
+    );
+    let ours = train_ours_sticks_batch(updates, batch, 11);
     let ddpg = train_ddpg_sticks(episodes, 11);
     println!("training cloth controller (ours) for {episodes} episodes...");
     let ours_cloth = train_ours_cloth(episodes, 13);
+    // `ours` is a per-update curve of `batch`-episode means; tail over
+    // ceil(5/batch) updates ≈ the same ~5-episode window DDPG gets.
+    let ours_tail = (5 + batch - 1) / batch;
     let rows = vec![
         vec![
             "sticks".into(),
-            format!("{:.4}", tail_mean(&ours, 5)),
+            format!("{:.4}", tail_mean(&ours, ours_tail)),
             format!("{:.4}", tail_mean(&ddpg, 5)),
         ],
         vec![
@@ -262,13 +349,17 @@ pub fn run(args: &Args) -> Result<()> {
         ],
     ];
     print_table(
-        &format!("Fig 8: final-distance² after {episodes} episodes (tail mean)"),
-        &["task", "ours (diff-sim BPTT)", "DDPG"],
+        &format!(
+            "Fig 8: final-distance² after {episodes} episodes (tail mean; \
+             ours entries are {batch}-episode minibatch means)"
+        ),
+        &["task", "ours (batched diff-sim BPTT)", "DDPG"],
         &rows,
     );
     let mut out = Json::obj();
     out.set("experiment", "fig8")
         .set("episodes", episodes)
+        .set("batch", batch)
         .set("ours_sticks", Json::Arr(ours.iter().map(|&l| Json::Num(l)).collect()))
         .set("ddpg_sticks", Json::Arr(ddpg.iter().map(|&l| Json::Num(l)).collect()))
         .set("ours_cloth", Json::Arr(ours_cloth.iter().map(|&l| Json::Num(l)).collect()));
@@ -291,6 +382,13 @@ mod tests {
             "ours {ours_end} vs ddpg {}",
             tail_mean(&ddpg, 4)
         );
+    }
+
+    #[test]
+    fn batched_trainer_runs_and_stays_finite() {
+        let curve = train_ours_sticks_batch(3, 2, 9);
+        assert_eq!(curve.len(), 3);
+        assert!(curve.iter().all(|l| l.is_finite()), "{curve:?}");
     }
 
     #[test]

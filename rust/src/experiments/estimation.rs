@@ -2,72 +2,132 @@
 //! velocities ±v; estimate the left cube's mass so the post-collision
 //! total momentum matches a target (paper: p = (3,0,0), m₁ → 5.4 after
 //! 90 gradient steps).
+//!
+//! The batched variant ([`estimate_multi`]) advances K gradient chains
+//! with different initial masses in lockstep: each iteration is one
+//! parallel taped rollout plus one batched backward over all K scenes
+//! through [`crate::batch::SceneBatch`].
 
 use super::{dump_json, print_table};
+use crate::batch::SceneBatch;
 use crate::bodies::{RigidBody, System};
-use crate::engine::backward::{backward, LossGrad};
+use crate::engine::backward::LossGrad;
 use crate::engine::{SimConfig, Simulation};
 use crate::math::Vec3;
 use crate::mesh::primitives::unit_box;
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 use anyhow::Result;
 
-/// Simulate the collision with left-cube mass `m1`; returns
-/// (total momentum x, sim-with-tape).
-fn collide(m1: f64, record: bool) -> (f64, Simulation) {
+const COLLIDE_STEPS: usize = 60;
+
+fn left_cube(m1: f64) -> RigidBody {
+    RigidBody::from_mesh(unit_box(), m1)
+        .with_position(Vec3::new(-1.2, 0.02, 0.05))
+        .with_velocity(Vec3::new(1.0, 0.0, 0.0))
+}
+
+fn collide_system(m1: f64) -> System {
     let mut sys = System::new();
-    sys.add_rigid(
-        RigidBody::from_mesh(unit_box(), m1)
-            .with_position(Vec3::new(-1.2, 0.02, 0.05))
-            .with_velocity(Vec3::new(1.0, 0.0, 0.0)),
-    );
+    sys.add_rigid(left_cube(m1));
     sys.add_rigid(
         RigidBody::from_mesh(unit_box(), 1.0)
             .with_position(Vec3::new(0.0, 0.0, 0.0))
             .with_velocity(Vec3::new(-1.0, 0.0, 0.0)),
     );
-    let mut sim = Simulation::new(
-        sys,
-        SimConfig {
-            record_tape: record,
-            gravity: Vec3::default(),
-            dt: 1.0 / 100.0,
-            ..Default::default()
-        },
-    );
-    sim.run(60);
+    sys
+}
+
+fn collide_cfg(record: bool) -> SimConfig {
+    SimConfig {
+        record_tape: record,
+        gravity: Vec3::default(),
+        dt: 1.0 / 100.0,
+        ..Default::default()
+    }
+}
+
+/// Simulate the collision with left-cube mass `m1`; returns
+/// (total momentum x, sim-with-tape).
+fn collide(m1: f64, record: bool) -> (f64, Simulation) {
+    let mut sim = Simulation::new(collide_system(m1), collide_cfg(record));
+    sim.run(COLLIDE_STEPS);
     (sim.sys.linear_momentum().x, sim)
 }
 
-/// Gradient-descent mass estimation; returns (mass history, loss history).
-pub fn estimate(p_target: f64, iters: usize, lr: f64) -> (Vec<f64>, Vec<f64>) {
-    let mut m1: f64 = 1.0;
-    let mut ms = vec![m1];
-    let mut losses = Vec::new();
+/// Batched multi-start estimation: `inits.len()` gradient chains advance
+/// together, one `SceneBatch` rollout + batched backward per iteration.
+/// Returns (per-chain mass history, per-chain loss history).
+pub fn estimate_multi(
+    inits: &[f64],
+    p_target: f64,
+    iters: usize,
+    lr: f64,
+) -> (Vec<Vec<f64>>, Vec<Vec<f64>>) {
+    let mut mass: Vec<f64> = inits.to_vec();
+    let mut ms: Vec<Vec<f64>> = inits.iter().map(|&m| vec![m]).collect();
+    let mut losses: Vec<Vec<f64>> = vec![Vec::new(); inits.len()];
+    let mut cfg = collide_cfg(true);
+    cfg.workers = Pool::default_for_machine().workers();
     for _ in 0..iters {
-        let (p, sim) = collide(m1, true);
-        let loss = (p - p_target) * (p - p_target);
-        losses.push(loss);
-        // L = (p − p*)², p = m₁·v₁' + m₂·v₂' ⇒ seeds on final velocities
-        // (scaled by each body's mass) + the explicit ∂p/∂m₁ = v₁' term.
-        let d = 2.0 * (p - p_target);
-        let mut seed = LossGrad::zeros(&sim);
-        seed.rigid_v[0][3] = d * sim.sys.rigids[0].mass;
-        seed.rigid_v[1][3] = d * sim.sys.rigids[1].mass;
-        let g = backward(&sim, &seed);
-        let grad = g.rigid_mass[0] + d * sim.sys.rigids[0].qdot[3];
-        m1 = (m1 - lr * grad).max(0.05);
-        ms.push(m1);
+        let mass_now = mass.clone();
+        let mut batch =
+            SceneBatch::from_scene(&collide_system(1.0), &cfg, mass_now.len(), |i, sys| {
+                sys.rigids[0] = left_cube(mass_now[i]);
+            });
+        let res = batch.rollout_grad(
+            COLLIDE_STEPS,
+            |_| (),
+            |_, _, _, _| {},
+            |_, sim, _| {
+                let p = sim.sys.linear_momentum().x;
+                let loss = (p - p_target) * (p - p_target);
+                // L = (p − p*)², p = m₁·v₁' + m₂·v₂' ⇒ seeds on final
+                // velocities (scaled by each body's mass) + the explicit
+                // ∂p/∂m₁ = v₁' term added after the backward.
+                let d = 2.0 * (p - p_target);
+                let mut seed = LossGrad::zeros(sim);
+                seed.rigid_v[0][3] = d * sim.sys.rigids[0].mass;
+                seed.rigid_v[1][3] = d * sim.sys.rigids[1].mass;
+                (loss, seed)
+            },
+        );
+        for i in 0..mass.len() {
+            let sim = batch.sim(i);
+            let p = sim.sys.linear_momentum().x;
+            let d = 2.0 * (p - p_target);
+            let grad = res.grads[i].rigid_mass[0] + d * sim.sys.rigids[0].qdot[3];
+            losses[i].push(res.losses[i]);
+            mass[i] = (mass[i] - lr * grad).max(0.05);
+            ms[i].push(mass[i]);
+        }
     }
     (ms, losses)
+}
+
+/// Gradient-descent mass estimation (single chain from m₁ = 1); returns
+/// (mass history, loss history).
+pub fn estimate(p_target: f64, iters: usize, lr: f64) -> (Vec<f64>, Vec<f64>) {
+    let (ms, losses) = estimate_multi(&[1.0], p_target, iters, lr);
+    (ms.into_iter().next().unwrap(), losses.into_iter().next().unwrap())
 }
 
 pub fn run(args: &Args) -> Result<()> {
     let p_target = args.f64_or("p-target", 3.0);
     let iters = args.usize_or("iters", 90);
     let lr = args.f64_or("lr", 0.15);
-    let (ms, losses) = estimate(p_target, iters, lr);
+    let mut inits: Vec<f64> = args
+        .str_or("inits", "1.0,0.3,2.5")
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .collect();
+    if inits.is_empty() {
+        crate::warnlog!("--inits had no parseable masses; using 1.0");
+        inits.push(1.0);
+    }
+    let (ms_all, losses_all) = estimate_multi(&inits, p_target, iters, lr);
+    let (ms, losses) = (&ms_all[0], &losses_all[0]);
     let m_final = *ms.last().unwrap();
     let (p_final, _) = collide(m_final, false);
     let mut rows = Vec::new();
@@ -82,12 +142,20 @@ pub fn run(args: &Args) -> Result<()> {
     }
     print_table("Fig 9: mass estimation (target p_x)", &["iter", "m1", "loss"], &rows);
     println!("estimated m1 = {m_final:.3}; achieved momentum {p_final:.3} (target {p_target})");
+    for (k, (init, chain)) in inits.iter().zip(&ms_all).enumerate() {
+        println!("  chain {k}: m1 {init:.3} -> {:.3}", chain.last().unwrap());
+    }
     let mut out = Json::obj();
     out.set("experiment", "fig9")
         .set("p_target", p_target)
         .set("m1_final", m_final)
         .set("p_final", p_final)
+        .set("inits", Json::Arr(inits.iter().map(|&m| Json::Num(m)).collect()))
         .set("m1_curve", Json::Arr(ms.iter().map(|&m| Json::Num(m)).collect()))
+        .set(
+            "m1_finals",
+            Json::Arr(ms_all.iter().map(|c| Json::Num(*c.last().unwrap())).collect()),
+        )
         .set("loss_curve", Json::Arr(losses.iter().map(|&l| Json::Num(l)).collect()));
     dump_json("fig9_estimation", &out)
 }
@@ -109,5 +177,21 @@ mod tests {
             p_target + 1.0
         );
         assert!(losses.last().unwrap() < &0.01, "loss {:?}", losses.last());
+    }
+
+    #[test]
+    fn multi_start_chains_converge_together() {
+        // Chains from different initial masses must reach the same
+        // momentum-matching mass — the batched vectorized-gradient path.
+        let p_target = 1.2;
+        let (ms, _) = estimate_multi(&[0.4, 1.0, 3.0], p_target, 50, 0.3);
+        for (k, chain) in ms.iter().enumerate() {
+            let m_final = *chain.last().unwrap();
+            assert!(
+                (m_final - (p_target + 1.0)).abs() < 0.2,
+                "chain {k}: m1 = {m_final}, want ≈ {}",
+                p_target + 1.0
+            );
+        }
     }
 }

@@ -4,6 +4,7 @@
 //! optimization (through the differentiable simulator) vs CMA-ES.
 
 use super::{dump_json, print_table};
+use crate::batch::SceneBatch;
 use crate::bodies::{Cloth, RigidBody, System};
 use crate::engine::backward::{backward, LossGrad};
 use crate::engine::{SimConfig, Simulation};
@@ -13,15 +14,16 @@ use crate::ml::adam::Adam;
 use crate::ml::cmaes::CmaEs;
 use crate::util::cli::Args;
 use crate::util::json::Json;
+use crate::util::pool::Pool;
 use crate::util::rng::Pcg32;
 use anyhow::Result;
 
 pub const STEPS: usize = 40;
+const SETTLE_STEPS: usize = 30;
 const FORCE_REG: f64 = 1e-3;
 
-/// Roll out the marble-on-sheet episode with per-step horizontal forces
-/// (2·STEPS parameters). Returns (loss, sim-with-tape).
-fn rollout(forces: &[f64], target: Vec3, record: bool) -> (f64, Simulation) {
+/// The Fig. 7 scene: a marble resting on a corner-pinned soft sheet.
+fn marble_scene() -> System {
     let mut sys = System::new();
     let mut cloth = Cloth::from_grid(
         cloth_grid(8, 8, 2.0, 2.0).translated(Vec3::new(0.0, 0.5, 0.0)),
@@ -37,22 +39,55 @@ fn rollout(forces: &[f64], target: Vec3, record: bool) -> (f64, Simulation) {
     sys.add_rigid(
         RigidBody::from_mesh(icosphere(0.12, 1), 3.0).with_position(Vec3::new(0.0, 0.63, 0.0)),
     );
-    let mut sim = Simulation::new(
-        sys,
-        SimConfig { record_tape: false, dt: 1.0 / 100.0, ..Default::default() },
-    );
+    sys
+}
+
+fn episode_cfg() -> SimConfig {
+    SimConfig { record_tape: false, dt: 1.0 / 100.0, ..Default::default() }
+}
+
+fn episode_loss(sim: &Simulation, forces: &[f64], target: Vec3) -> f64 {
+    let p = sim.sys.rigids[0].translation();
+    let d = Vec3::new(p.x - target.x, 0.0, p.z - target.z);
+    d.norm2() + FORCE_REG * forces.iter().map(|f| f * f).sum::<f64>()
+}
+
+/// Roll out the marble-on-sheet episode with per-step horizontal forces
+/// (2·STEPS parameters). Returns (loss, sim-with-tape).
+fn rollout(forces: &[f64], target: Vec3, record: bool) -> (f64, Simulation) {
+    let mut sim = Simulation::new(marble_scene(), episode_cfg());
     // Let the marble settle into its pocket first (untaped) so the
     // controlled segment starts from steady contact.
-    sim.run(30);
+    sim.run(SETTLE_STEPS);
     sim.cfg.record_tape = record;
     for s in 0..STEPS {
         sim.sys.rigids[0].ext_force = Vec3::new(forces[2 * s], 0.0, forces[2 * s + 1]);
         sim.step();
     }
-    let p = sim.sys.rigids[0].translation();
-    let d = Vec3::new(p.x - target.x, 0.0, p.z - target.z);
-    let loss = d.norm2() + FORCE_REG * forces.iter().map(|f| f * f).sum::<f64>();
+    let loss = episode_loss(&sim, forces, target);
     (loss, sim)
+}
+
+/// Batched population evaluation: one scene per candidate force
+/// sequence, all stepped in parallel through a [`SceneBatch`] (the
+/// CMA-ES population / perturbation-set workload). Losses come back in
+/// candidate order and are bitwise-identical to sequential `loss_only`.
+pub fn loss_only_batch(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let mut cfg = episode_cfg();
+    cfg.workers = Pool::default_for_machine().workers();
+    let mut batch = SceneBatch::from_scene(&marble_scene(), &cfg, cands.len(), |_, _| {});
+    batch.run(SETTLE_STEPS); // settle into the pocket, untaped
+    batch.rollout(STEPS, |_| (), |_, i, s, sim| {
+        sim.sys.rigids[0].ext_force = Vec3::new(cands[i][2 * s], 0.0, cands[i][2 * s + 1]);
+    });
+    cands
+        .iter()
+        .enumerate()
+        .map(|(i, forces)| episode_loss(batch.sim(i), forces, target))
+        .collect()
 }
 
 /// Loss + gradient via the tape.
@@ -94,23 +129,34 @@ pub fn optimize_gradient_lr(target: Vec3, iters: usize, lr: f64) -> Vec<f64> {
 }
 
 /// CMA-ES baseline; returns best-so-far loss per EPISODE (each candidate
-/// evaluation is one simulation — the x-axis the paper plots).
+/// evaluation is one simulation — the x-axis the paper plots). The whole
+/// population of each generation is evaluated in parallel through
+/// [`loss_only_batch`]; the curve is identical to sequential evaluation.
 pub fn optimize_cmaes(target: Vec3, episodes: usize, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::new(seed);
     let mut es = CmaEs::new(&vec![0.0; 2 * STEPS], 0.5);
     let mut curve = Vec::new();
     let mut best = f64::MAX;
-    'outer: loop {
-        let pop = es.ask(&mut rng);
+    loop {
+        let remaining = episodes.saturating_sub(curve.len());
+        if remaining == 0 {
+            break;
+        }
+        let mut pop = es.ask(&mut rng);
+        // Don't simulate candidates past the episode budget: a truncated
+        // generation never reaches `tell`, so dropping them is
+        // behavior-identical to stopping mid-population.
+        let truncated = pop.len() > remaining;
+        pop.truncate(remaining);
+        let fits = loss_only_batch(&pop, target);
         let mut scored = Vec::with_capacity(pop.len());
-        for x in pop {
-            let l = loss_only(&x, target);
+        for (x, l) in pop.into_iter().zip(fits) {
             best = best.min(l);
             curve.push(best);
             scored.push((x, l));
-            if curve.len() >= episodes {
-                break 'outer;
-            }
+        }
+        if truncated {
+            break;
         }
         es.tell(scored);
     }
@@ -151,6 +197,20 @@ pub fn run(args: &Args) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn batched_population_matches_sequential_losses() {
+        let target = Vec3::new(0.3, 0.0, 0.1);
+        let mut rng = Pcg32::new(2);
+        let cands: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..2 * STEPS).map(|_| rng.range(-0.5, 0.5)).collect())
+            .collect();
+        let batched = loss_only_batch(&cands, target);
+        for (c, lb) in cands.iter().zip(&batched) {
+            let ls = loss_only(c, target);
+            assert!(ls == *lb, "batch {lb} differs from sequential {ls}");
+        }
+    }
 
     #[test]
     fn gradient_optimization_beats_cmaes_budget() {

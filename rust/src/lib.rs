@@ -1,5 +1,6 @@
 //! DiffSim: scalable differentiable physics (ICML 2020 reproduction).
 pub mod baselines;
+pub mod batch;
 pub mod bodies;
 pub mod collision;
 pub mod coordinator;

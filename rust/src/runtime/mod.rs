@@ -3,6 +3,12 @@
 //! the PJRT CPU client once, and exposes a typed call interface. This is
 //! the only place the `xla` crate is touched; Python is never on the
 //! request path.
+//!
+//! The `xla` dependency sits behind the `pjrt` cargo feature (off by
+//! default) so the default build works fully offline. Without the
+//! feature, [`Runtime::load`] returns a clear error and the engine's
+//! `DiffMode::Pjrt` degrades to the native QR backward (with a logged
+//! warning) because no coordinator can be constructed.
 
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -27,22 +33,44 @@ pub struct ZoneBucket {
     pub batch: usize,
 }
 
-/// The compiled-executable store.
-pub struct Runtime {
+/// The xla-owned state, isolated in its own type so the thread-safety
+/// assertion below covers exactly the PJRT objects and nothing that may
+/// be added to `Runtime` later.
+#[cfg(feature = "pjrt")]
+struct PjrtState {
     client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT C API client and loaded executables are thread-safe; the
+// `xla` wrapper types just hold raw pointers and may not carry the auto
+// traits. `Runtime` is shared behind `Arc` across the engine's worker
+// threads (coordinator calls, batched multi-scene backwards).
+#[cfg(feature = "pjrt")]
+unsafe impl Send for PjrtState {}
+#[cfg(feature = "pjrt")]
+unsafe impl Sync for PjrtState {}
+
+/// The compiled-executable store.
+#[allow(dead_code)]
+pub struct Runtime {
+    #[cfg(feature = "pjrt")]
+    pjrt: PjrtState,
     dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
     pub rigid_batches: Vec<usize>,
     pub zone_buckets: Vec<ZoneBucket>,
     pub cloth_grids: Vec<(usize, usize)>,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
     /// Executed-call counter per artifact (coordinator metrics).
     pub calls: Mutex<HashMap<String, usize>>,
 }
 
 impl Runtime {
     /// Load the manifest and create the PJRT CPU client. Compilation is
-    /// lazy (first call per artifact) and cached.
+    /// lazy (first call per artifact) and cached. Without the `pjrt`
+    /// feature this fails with an actionable error after validating the
+    /// manifest (so a missing-artifacts message stays identical across
+    /// builds).
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest_path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&manifest_path)
@@ -106,17 +134,42 @@ impl Runtime {
                     .collect()
             })
             .unwrap_or_default();
+        Runtime::finish_load(dir, specs, rigid_batches, zone_buckets, cloth_grids)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn finish_load(
+        dir: &Path,
+        specs: HashMap<String, ArtifactSpec>,
+        rigid_batches: Vec<usize>,
+        zone_buckets: Vec<ZoneBucket>,
+        cloth_grids: Vec<(usize, usize)>,
+    ) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime {
-            client,
+            pjrt: PjrtState { client, cache: Mutex::new(HashMap::new()) },
             dir: dir.to_path_buf(),
             specs,
             rigid_batches,
             zone_buckets,
             cloth_grids,
-            cache: Mutex::new(HashMap::new()),
             calls: Mutex::new(HashMap::new()),
         })
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn finish_load(
+        dir: &Path,
+        _specs: HashMap<String, ArtifactSpec>,
+        _rigid_batches: Vec<usize>,
+        _zone_buckets: Vec<ZoneBucket>,
+        _cloth_grids: Vec<(usize, usize)>,
+    ) -> Result<Runtime> {
+        bail!(
+            "artifacts found at {} but this build has no PJRT runtime; \
+             rebuild with `cargo build --features pjrt`",
+            dir.display()
+        )
     }
 
     /// Load from the conventional `artifacts/` directory.
@@ -138,8 +191,9 @@ impl Runtime {
         v
     }
 
+    #[cfg(feature = "pjrt")]
     fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        if let Some(e) = self.pjrt.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let spec = self.specs.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
@@ -150,21 +204,32 @@ impl Runtime {
         .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
+            .pjrt
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         let exe = std::sync::Arc::new(exe);
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        self.pjrt.cache.lock().unwrap().insert(name.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Pre-compile an artifact (warmup).
+    #[cfg(feature = "pjrt")]
     pub fn warmup(&self, name: &str) -> Result<()> {
         self.executable(name).map(|_| ())
     }
 
+    /// Pre-compile an artifact (warmup). Stub: the runtime cannot be
+    /// constructed without the `pjrt` feature, so this is unreachable in
+    /// practice but keeps the API uniform.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn warmup(&self, name: &str) -> Result<()> {
+        bail!("artifact '{name}': PJRT runtime disabled (build with `--features pjrt`)")
+    }
+
     /// Execute artifact `name` with f32 inputs shaped per the manifest.
     /// Returns the flattened outputs in manifest order.
+    #[cfg(feature = "pjrt")]
     pub fn call_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let spec = self.specs.get(name).with_context(|| format!("unknown artifact '{name}'"))?;
         if inputs.len() != spec.inputs.len() {
@@ -202,6 +267,12 @@ impl Runtime {
         Ok(vecs)
     }
 
+    /// Stub `call_f32`: always an error (see `warmup`).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn call_f32(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("artifact '{name}': PJRT runtime disabled (build with `--features pjrt`)")
+    }
+
     /// Total PJRT calls made (metrics).
     pub fn total_calls(&self) -> usize {
         self.calls.lock().unwrap().values().sum()
@@ -219,6 +290,22 @@ mod tests {
         match Runtime::load(Path::new("/nonexistent/dir")) {
             Ok(_) => panic!("should fail"),
             Err(err) => assert!(format!("{err:#}").contains("make artifacts")),
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_build_reports_disabled_runtime() {
+        // With a readable manifest the stub must point at the feature flag.
+        let dir = std::env::temp_dir().join("diffsim_stub_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"artifacts": []}"#).unwrap();
+        match Runtime::load(&dir) {
+            Ok(_) => panic!("stub build must not construct a runtime"),
+            Err(err) => {
+                let msg = format!("{err:#}");
+                assert!(msg.contains("pjrt"), "unexpected error: {msg}");
+            }
         }
     }
 }

@@ -34,18 +34,41 @@ impl Pool {
         T: Send,
         F: Fn(usize) -> T + Sync,
     {
+        // Zero-sized slots: `map` is `map_mut` with nothing to mutate.
+        let mut slots = vec![(); n];
+        self.map_mut(&mut slots, |i, _| f(i))
+    }
+
+    /// Parallel mutable indexed map over a slice (the batch-stepping
+    /// primitive: N independent `Simulation`s advanced concurrently).
+    /// Each index is claimed exactly once via the atomic cursor, so the
+    /// per-element `&mut T` handed to `f` never aliases. Results are
+    /// returned in index order.
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
         if n == 0 {
             return Vec::new();
         }
         if self.workers == 1 || n == 1 {
-            return (0..n).map(&f).collect();
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
         }
+        // Shared base pointer; safe to hand to workers because every
+        // index is visited by exactly one worker (cursor) and T: Send.
+        struct Base<T>(*mut T);
+        unsafe impl<T: Send> Sync for Base<T> {}
+        let base = Base(items.as_mut_ptr());
         let cursor = AtomicUsize::new(0);
-        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..self.workers.min(n))
                 .map(|_| {
                     let cursor = &cursor;
                     let f = &f;
+                    let base = &base;
                     scope.spawn(move || {
                         let mut local = Vec::new();
                         loop {
@@ -53,7 +76,11 @@ impl Pool {
                             if i >= n {
                                 break;
                             }
-                            local.push((i, f(i)));
+                            // SAFETY: `i` was claimed exactly once across
+                            // all workers, so this is the only live
+                            // reference to items[i].
+                            let item = unsafe { &mut *base.0.add(i) };
+                            local.push((i, f(i, item)));
                         }
                         local
                     })
@@ -61,7 +88,7 @@ impl Pool {
                 .collect();
             handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
         });
-        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
         for part in parts {
             for (i, v) in part {
                 out[i] = Some(v);
@@ -136,6 +163,34 @@ mod tests {
             s[i] += 1;
         });
         assert!(seen.lock().unwrap().iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn map_mut_visits_each_element_once_in_order() {
+        let p = Pool::new(4);
+        let mut items: Vec<usize> = vec![0; 200];
+        let out = p.map_mut(&mut items, |i, v| {
+            *v += i + 1;
+            *v * 2
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i + 1, "element {i} mutated wrongly");
+        }
+        assert_eq!(out, (0..200).map(|i| 2 * (i + 1)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_mut_single_worker_and_empty() {
+        let p = Pool::new(1);
+        let mut items = vec![1, 2, 3];
+        let out = p.map_mut(&mut items, |_, v| {
+            *v *= 10;
+            *v
+        });
+        assert_eq!(items, vec![10, 20, 30]);
+        assert_eq!(out, vec![10, 20, 30]);
+        let mut empty: Vec<i32> = Vec::new();
+        assert!(Pool::new(4).map_mut(&mut empty, |_, v| *v).is_empty());
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Batched multi-scene simulation: batch-vs-sequential equivalence of
+//! trajectories, gradients, and the vectorized `rollout_grad` path.
+
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::engine::backward::{backward, LossGrad};
+use diffsim::engine::{DiffMode, SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+
+fn ground() -> RigidBody {
+    RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
+        .with_position(Vec3::new(0.0, -0.5, 0.0))
+}
+
+fn falling_cube(vx: f64) -> RigidBody {
+    RigidBody::from_mesh(unit_box(), 1.0)
+        .with_position(Vec3::new(0.0, 0.8, 0.0))
+        .with_velocity(Vec3::new(vx, 0.0, 0.0))
+}
+
+/// Ground + cube (contact-rich) + a small draping cloth off to the side
+/// (exercises the cloth solver and cloth-rigid zones too).
+fn drop_system(vx: f64) -> System {
+    let mut sys = System::new();
+    sys.add_rigid(ground());
+    sys.add_rigid(falling_cube(vx));
+    let cloth = Cloth::from_grid(
+        cloth_grid(4, 4, 1.0, 1.0).translated(Vec3::new(4.0, 0.4, 0.0)),
+        0.2,
+        500.0,
+        1.0,
+        0.5,
+    );
+    sys.add_cloth(cloth);
+    sys
+}
+
+#[test]
+fn batch_trajectories_bitwise_match_sequential() {
+    let vxs = [0.0, 0.4, -0.3, 1.1];
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 4, ..Default::default() };
+    let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+        sys.rigids[1] = falling_cube(vxs[i]);
+    });
+    batch.run(60);
+    for (i, &vx) in vxs.iter().enumerate() {
+        let mut solo =
+            Simulation::new(drop_system(vx), SimConfig { dt: 1.0 / 100.0, ..Default::default() });
+        solo.run(60);
+        let (a, b) = (&batch.sim(i).sys, &solo.sys);
+        for k in 0..6 {
+            assert!(
+                a.rigids[1].q[k] == b.rigids[1].q[k],
+                "scene {i} q[{k}]: batch {} vs solo {}",
+                a.rigids[1].q[k],
+                b.rigids[1].q[k]
+            );
+            assert!(
+                a.rigids[1].qdot[k] == b.rigids[1].qdot[k],
+                "scene {i} qdot[{k}]: batch {} vs solo {}",
+                a.rigids[1].qdot[k],
+                b.rigids[1].qdot[k]
+            );
+        }
+        for (n, (xa, xb)) in a.cloths[0].x.iter().zip(&b.cloths[0].x).enumerate() {
+            assert!(
+                xa.x == xb.x && xa.y == xb.y && xa.z == xb.z,
+                "scene {i} cloth node {n}: batch {xa:?} vs solo {xb:?}"
+            );
+        }
+    }
+}
+
+/// The Fig-7-style taped cloth scene: 4x4 cloth pinned at two corners,
+/// per-step force θ on the center node, loss = center node's final x.
+fn cloth_pull_system() -> System {
+    let mut sys = System::new();
+    let mut cloth = Cloth::from_grid(cloth_grid(3, 3, 1.0, 1.0), 0.3, 100.0, 1.0, 0.2);
+    cloth.pin(0);
+    cloth.pin(12);
+    sys.add_cloth(cloth);
+    sys
+}
+
+fn cloth_cfg() -> SimConfig {
+    SimConfig {
+        record_tape: true,
+        gravity: Vec3::new(0.0, -2.0, 0.0),
+        dt: 1.0 / 100.0,
+        ..Default::default()
+    }
+}
+
+/// Sequential taped episode with force scale `theta`; returns (loss,
+/// per-θ gradient via the tape).
+fn cloth_episode_sequential(theta: f64, steps: usize) -> (f64, f64) {
+    let mut sim = Simulation::new(cloth_pull_system(), cloth_cfg());
+    for _ in 0..steps {
+        sim.sys.cloths[0].ext_force[8] = Vec3::new(theta, 0.0, 0.0);
+        sim.step();
+    }
+    let loss = sim.sys.cloths[0].x[8].x;
+    let mut seed = LossGrad::zeros(&sim);
+    seed.cloth_x[0][8].x = 1.0;
+    let g = backward(&sim, &seed);
+    let dtheta: f64 = (0..steps).map(|s| g.cloth_force[s][0][8].x).sum();
+    (loss, dtheta)
+}
+
+#[test]
+fn rollout_grad_matches_sequential_gradients_and_fd() {
+    let steps = 8;
+    let thetas = [0.2, 0.5, -0.3, 0.8];
+    let mut cfg = cloth_cfg();
+    cfg.workers = 4;
+    let mut batch = SceneBatch::from_scene(&cloth_pull_system(), &cfg, thetas.len(), |_, _| {});
+    let res = batch.rollout_grad(
+        steps,
+        |_| (),
+        |_, i, _s, sim| {
+            sim.sys.cloths[0].ext_force[8] = Vec3::new(thetas[i], 0.0, 0.0);
+        },
+        |_, sim, _| {
+            let mut seed = LossGrad::zeros(sim);
+            seed.cloth_x[0][8].x = 1.0;
+            (sim.sys.cloths[0].x[8].x, seed)
+        },
+    );
+    // Contiguous scene-major gradient buffer, as fed to ml::adam.
+    let flat = res.gather_param_grads(1, |_i, g, out| {
+        out[0] = (0..steps).map(|s| g.cloth_force[s][0][8].x).sum();
+    });
+    for (i, &theta) in thetas.iter().enumerate() {
+        // (a) batch == sequential single-scene gradients (acceptance:
+        // 1e-9; in practice the code path is identical → bitwise).
+        let (loss_seq, dtheta_seq) = cloth_episode_sequential(theta, steps);
+        assert!(
+            (res.losses[i] - loss_seq).abs() <= 1e-12,
+            "scene {i}: batch loss {} vs sequential {}",
+            res.losses[i],
+            loss_seq
+        );
+        assert!(
+            (flat[i] - dtheta_seq).abs() <= 1e-9 * (1.0 + dtheta_seq.abs()),
+            "scene {i}: batch grad {} vs sequential {}",
+            flat[i],
+            dtheta_seq
+        );
+        // (b) per-scene finite differences on the taped dynamics.
+        let eps = 1e-5;
+        let (lp, _) = cloth_episode_sequential(theta + eps, steps);
+        let (lm, _) = cloth_episode_sequential(theta - eps, steps);
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (flat[i] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+            "scene {i}: analytic {} vs fd {fd}",
+            flat[i]
+        );
+    }
+    // Full per-scene Grads match too (initial-condition gradients).
+    for (i, &theta) in thetas.iter().enumerate() {
+        let mut sim = Simulation::new(cloth_pull_system(), cloth_cfg());
+        for _ in 0..steps {
+            sim.sys.cloths[0].ext_force[8] = Vec3::new(theta, 0.0, 0.0);
+            sim.step();
+        }
+        let mut seed = LossGrad::zeros(&sim);
+        seed.cloth_x[0][8].x = 1.0;
+        let g = backward(&sim, &seed);
+        for (n, (a, b)) in res.grads[i].cloth_x0[0].iter().zip(&g.cloth_x0[0]).enumerate() {
+            assert!(
+                (a.x - b.x).abs() <= 1e-9
+                    && (a.y - b.y).abs() <= 1e-9
+                    && (a.z - b.z).abs() <= 1e-9,
+                "scene {i} node {n}: batch {a:?} vs sequential {b:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_mode_without_coordinator_falls_back_to_qr() {
+    // Satellite of the pjrt feature gate: DiffMode::Pjrt with no
+    // coordinator (feature or artifacts absent) must produce the QR
+    // gradients instead of panicking.
+    let run = |mode: DiffMode| -> diffsim::diff::tape::Grads {
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(falling_cube(0.5));
+        let mut sim = Simulation::new(
+            sys,
+            SimConfig {
+                record_tape: true,
+                dt: 1.0 / 100.0,
+                diff_mode: mode,
+                ..Default::default()
+            },
+        );
+        sim.run(40);
+        let mut seed = LossGrad::zeros(&sim);
+        seed.rigid_q[1][3] = 1.0;
+        backward(&sim, &seed)
+    };
+    let g_qr = run(DiffMode::Qr);
+    let g_pjrt = run(DiffMode::Pjrt);
+    for k in 0..6 {
+        assert!(
+            g_qr.rigid_q0[1][k] == g_pjrt.rigid_q0[1][k],
+            "q0[{k}]: qr {} vs pjrt-fallback {}",
+            g_qr.rigid_q0[1][k],
+            g_pjrt.rigid_q0[1][k]
+        );
+        assert!(
+            g_qr.rigid_v0[1][k] == g_pjrt.rigid_v0[1][k],
+            "v0[{k}]: qr {} vs pjrt-fallback {}",
+            g_qr.rigid_v0[1][k],
+            g_pjrt.rigid_v0[1][k]
+        );
+    }
+}
+
+#[test]
+fn stateful_rollout_threads_per_scene_state() {
+    // rollout() returns the controller state each scene accumulated.
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 2, ..Default::default() };
+    let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg, 3, |i, sys| {
+        sys.rigids[1] = falling_cube(0.2 * i as f64);
+    });
+    let states = batch.rollout(
+        10,
+        |i| vec![i as f64],
+        |st: &mut Vec<f64>, _i, _s, sim| {
+            st.push(sim.sys.rigids[1].translation().y);
+        },
+    );
+    assert_eq!(states.len(), 3);
+    for (i, st) in states.iter().enumerate() {
+        assert_eq!(st.len(), 11, "scene {i}: init + one entry per step");
+        assert_eq!(st[0], i as f64);
+        // The cube falls: observed heights decrease.
+        assert!(st[1] > *st.last().unwrap(), "scene {i}: {st:?}");
+    }
+}
