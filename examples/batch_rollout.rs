@@ -37,8 +37,13 @@ fn main() {
             .with_velocity(Vec3::new(thetas_ref[i], 0.0, 0.0));
     });
 
-    // One call: N taped rollouts in parallel + N backwards, batched.
-    let res = batch.rollout_grad(
+    // One call: N taped rollouts + N backwards, batched. The lockstep
+    // forward pools every fail-safe pass's zone solves across all
+    // scenes (one Coordinator::zone_solve_batch call per pass level
+    // when a shared coordinator is installed); with the native solver,
+    // as here, trajectories are bitwise-identical to the scene-parallel
+    // rollout_grad.
+    let res = batch.rollout_grad_lockstep(
         steps,
         |_| (),
         |_, _, _, _| {},

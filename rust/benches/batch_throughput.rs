@@ -45,11 +45,18 @@ fn main() {
         let batch_cfg = SimConfig { workers, ..Default::default() };
         let mut batch = SceneBatch::from_scene(&base, &batch_cfg, n, |_, _| {});
         let s_par = time(1, 3, || batch.run(steps));
+        // Lockstep forward: per-step barrier, zone solves pooled across
+        // scenes (the PJRT-batching layout; native solver here).
+        let mut lock = SceneBatch::from_scene(&base, &batch_cfg, n, |_, _| {});
+        let s_lock = time(1, 3, || lock.run_lockstep(steps));
         let sps_seq = (n * steps) as f64 / s_seq.mean().max(1e-12);
         let sps_par = (n * steps) as f64 / s_par.mean().max(1e-12);
+        let sps_lock = (n * steps) as f64 / s_lock.mean().max(1e-12);
         b.metric(&format!("batch{n}/steps_per_s_sequential"), sps_seq, "steps/s");
         b.metric(&format!("batch{n}/steps_per_s_batched"), sps_par, "steps/s");
+        b.metric(&format!("batch{n}/steps_per_s_lockstep"), sps_lock, "steps/s");
         b.metric(&format!("batch{n}/speedup"), sps_par / sps_seq, "x");
+        b.metric(&format!("batch{n}/lockstep_speedup"), sps_lock / sps_seq, "x");
     }
     b.finish();
 }

@@ -1,0 +1,199 @@
+//! Lockstep forward stepping over many scenes — the forward-side twin of
+//! [`super::backward`]'s lockstep backward.
+//!
+//! Every scene advances through the staged step primitives
+//! (`integrate → candidates → detect_and_zone → solve_zones → scatter →
+//! commit`, see [`crate::engine::StepState`]) with a barrier at the
+//! zone-solve level: at each fail-safe pass, every scene's
+//! [`ZoneProblem`]s are pooled and solved together —
+//!
+//! * through a single [`Coordinator::zone_solve_batch`] call when all
+//!   scenes share one PJRT coordinator, so bucket occupancy amortizes
+//!   across the whole batch instead of within one scene (zones per pass
+//!   per scene are few; zones per pass per *batch* fill buckets), or
+//! * through one cross-scene [`Pool::map`] over the union of zones
+//!   otherwise — better load balance than scene-granularity stepping
+//!   when zone counts are skewed across the batch.
+//!
+//! With the native zone solver the pooled solve runs the exact same
+//! per-zone code on the exact same problems in the exact same per-scene
+//! order, so lockstep trajectories are bitwise-identical to sequential
+//! per-scene [`crate::engine::Simulation::run`].
+
+use crate::coordinator::Coordinator;
+use crate::engine::{Simulation, StepState};
+use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::util::pool::Pool;
+use std::sync::{Arc, Mutex};
+
+/// The one coordinator every scene shares, if they all hold the same
+/// `Arc`. Distinct coordinators must not be pooled (different runtimes
+/// would mis-bucket), so anything else returns `None`.
+pub(crate) fn shared_coordinator(sims: &[Simulation]) -> Option<Arc<Coordinator>> {
+    let first = sims.first()?.coordinator.clone()?;
+    if sims[1..]
+        .iter()
+        .all(|s| s.coordinator.as_ref().is_some_and(|c| Arc::ptr_eq(c, &first)))
+    {
+        Some(first)
+    } else {
+        None
+    }
+}
+
+/// Advance every scene one step in lockstep (see module docs).
+pub(crate) fn step_lockstep(pool: &Pool, sims: &mut [Simulation]) {
+    if sims.is_empty() {
+        return;
+    }
+    let coord = shared_coordinator(sims);
+    // Stages 1–2 per scene, in parallel.
+    let mut states: Vec<StepState> = pool.map_mut(sims, |_, sim| {
+        let mut st = sim.integrate();
+        sim.candidates(&mut st);
+        st
+    });
+    let n = sims.len();
+    let max_passes = sims.iter().map(|s| s.cfg.max_resolve_passes).max().unwrap_or(0);
+    let mut done = vec![false; n];
+    for pass in 0..max_passes {
+        // Stage 3 per scene, in parallel: CCD + zoning + problem build.
+        // Scenes that broke out of the fail-safe loop skip the pass.
+        let problems_per: Vec<Vec<ZoneProblem>> = {
+            let sims_ref: &[Simulation] = sims;
+            let done_ref: &[bool] = &done;
+            pool.map_mut(&mut states, |i, st| {
+                if done_ref[i] || pass >= sims_ref[i].cfg.max_resolve_passes {
+                    Vec::new()
+                } else {
+                    sims_ref[i].detect_and_zone(st, pass)
+                }
+            })
+        };
+        for (i, probs) in problems_per.iter().enumerate() {
+            if probs.is_empty() {
+                done[i] = true;
+            }
+        }
+        // Stage 4 — the lockstep barrier: pool every scene's zones at
+        // this pass level into one batched solve. Scenes with a zone
+        // hook keep their scene-local solver (the hook sees exactly the
+        // problems it would see in a sequential step).
+        let mut solutions_per: Vec<Vec<ZoneSolution>> = (0..n).map(|_| Vec::new()).collect();
+        let mut union: Vec<(usize, usize)> = Vec::new(); // (scene, zone index)
+        for (i, probs) in problems_per.iter().enumerate() {
+            if probs.is_empty() {
+                continue;
+            }
+            if sims[i].zone_hook.is_some() {
+                solutions_per[i] = sims[i].solve_zones(probs);
+            } else {
+                for k in 0..probs.len() {
+                    union.push((i, k));
+                }
+            }
+        }
+        if !union.is_empty() {
+            let refs: Vec<&ZoneProblem> =
+                union.iter().map(|&(i, k)| &problems_per[i][k]).collect();
+            let sols: Vec<ZoneSolution> = match &coord {
+                Some(c) => c.zone_solve_batch(&refs, pool),
+                None => pool.map(refs.len(), |j| refs[j].solve()),
+            };
+            // Split back in (scene, zone) order — `union` is ascending,
+            // so pushes land in each scene's original zone order.
+            for (&(i, _), sol) in union.iter().zip(sols) {
+                solutions_per[i].push(sol);
+            }
+        }
+        // Stage 5 per scene: scatter into the candidates; scenes whose
+        // pass was a no-op leave the fail-safe loop (same early exit as
+        // the sequential driver).
+        for (i, (probs, sols)) in problems_per.into_iter().zip(solutions_per).enumerate() {
+            if probs.is_empty() {
+                continue;
+            }
+            let max_disp = sims[i].scatter(&mut states[i], probs, sols, pass);
+            if max_disp < 1e-9 {
+                done[i] = true;
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+    }
+    // Stage 6 per scene, in parallel. Each slot is consumed exactly
+    // once; the per-scene mutexes are uncontended.
+    let slots: Vec<Mutex<Option<StepState>>> =
+        states.into_iter().map(|st| Mutex::new(Some(st))).collect();
+    pool.map_mut(sims, |i, sim| {
+        let st = slots[i].lock().unwrap().take().expect("step state consumed once");
+        sim.commit(st);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bodies::{RigidBody, System};
+    use crate::engine::SimConfig;
+    use crate::math::Vec3;
+    use crate::mesh::primitives::{box_mesh, unit_box};
+
+    fn drop_scene(vx: f64) -> Simulation {
+        let mut sys = System::new();
+        sys.add_rigid(
+            RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+                .with_position(Vec3::new(0.0, -0.5, 0.0)),
+        );
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0)
+                .with_position(Vec3::new(0.0, 0.8, 0.0))
+                .with_velocity(Vec3::new(vx, 0.0, 0.0)),
+        );
+        Simulation::new(sys, SimConfig { dt: 1.0 / 100.0, ..Default::default() })
+    }
+
+    #[test]
+    fn lockstep_step_matches_sequential_step() {
+        // Different contact histories across the batch (one scene
+        // airborne, one in contact) exercise the skewed-pass-count path.
+        let mut sims: Vec<Simulation> = [0.0, 0.7].iter().map(|&vx| drop_scene(vx)).collect();
+        let pool = Pool::new(2);
+        for _ in 0..50 {
+            step_lockstep(&pool, &mut sims);
+        }
+        for (i, &vx) in [0.0, 0.7].iter().enumerate() {
+            let mut solo = drop_scene(vx);
+            solo.run(50);
+            for k in 0..6 {
+                assert!(
+                    sims[i].sys.rigids[1].q[k] == solo.sys.rigids[1].q[k],
+                    "scene {i} q[{k}]: lockstep {} vs solo {}",
+                    sims[i].sys.rigids[1].q[k],
+                    solo.sys.rigids[1].q[k]
+                );
+                assert!(
+                    sims[i].sys.rigids[1].qdot[k] == solo.sys.rigids[1].qdot[k],
+                    "scene {i} qdot[{k}]",
+                );
+            }
+            assert_eq!(sims[i].steps, solo.steps);
+        }
+    }
+
+    #[test]
+    fn shared_coordinator_requires_one_arc() {
+        let sims: Vec<Simulation> = vec![drop_scene(0.0), drop_scene(0.1)];
+        assert!(shared_coordinator(&sims).is_none(), "no coordinators installed");
+        let mut sims = sims;
+        let c = Arc::new(Coordinator::new(Arc::new(crate::runtime::Runtime::empty())));
+        sims[0].coordinator = Some(c.clone());
+        assert!(shared_coordinator(&sims).is_none(), "only one scene has it");
+        sims[1].coordinator = Some(c.clone());
+        assert!(shared_coordinator(&sims).is_some(), "both share the same Arc");
+        sims[1].coordinator =
+            Some(Arc::new(Coordinator::new(Arc::new(crate::runtime::Runtime::empty()))));
+        assert!(shared_coordinator(&sims).is_none(), "distinct coordinators must not pool");
+    }
+}

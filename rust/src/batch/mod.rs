@@ -17,8 +17,18 @@
 //! items at each (step, pass) level through a *single*
 //! `Coordinator::zone_backward_batch` call, so PJRT bucket-batching
 //! amortizes across scenes instead of within one (see [`backward`]).
+//!
+//! The forward has the same lockstep option ([`SceneBatch::run_lockstep`]
+//! / [`SceneBatch::step_lockstep`], see [`forward`]): scenes advance
+//! through the staged step primitives with a barrier at the zone-solve
+//! level, and each fail-safe pass's zones from *all* scenes are solved
+//! together — one `Coordinator::zone_solve_batch` call per (step, pass)
+//! level under a shared coordinator, or one cross-scene pool map
+//! otherwise. Native-solver trajectories stay bitwise-identical to
+//! sequential per-scene stepping.
 
 pub mod backward;
+pub mod forward;
 
 use crate::bodies::System;
 use crate::diff::tape::Grads;
@@ -147,6 +157,34 @@ impl SceneBatch {
         self.pool.map_mut(&mut self.sims, |_, sim| sim.run(steps));
     }
 
+    /// The coordinator every scene shares, if they all hold the same
+    /// `Arc` — the condition for both lockstep dispatch paths (forward
+    /// `zone_solve_batch`, backward `zone_backward_batch`).
+    pub fn shared_coordinator(&self) -> Option<std::sync::Arc<crate::coordinator::Coordinator>> {
+        forward::shared_coordinator(&self.sims)
+    }
+
+    /// Advance every scene one step in lockstep: all scenes move through
+    /// the staged step primitives together and each fail-safe pass's
+    /// zone problems are pooled across the batch — one
+    /// `Coordinator::zone_solve_batch` call per pass level when all
+    /// scenes share a coordinator, one cross-scene pool map otherwise
+    /// (better load balance than scene-granularity stepping when zone
+    /// counts are skewed). With the native solver, trajectories are
+    /// bitwise-identical to [`SceneBatch::step`] and sequential
+    /// single-scene stepping.
+    pub fn step_lockstep(&mut self) {
+        forward::step_lockstep(&self.pool, &mut self.sims);
+    }
+
+    /// Advance every scene `steps` steps in lockstep (see
+    /// [`SceneBatch::step_lockstep`]).
+    pub fn run_lockstep(&mut self, steps: usize) {
+        for _ in 0..steps {
+            self.step_lockstep();
+        }
+    }
+
     /// Forward rollout with per-scene controller state: for scene i,
     /// `state = init(i)`, then `steps` iterations of
     /// `control(&mut state, i, step, sim); sim.step()`. Returns the
@@ -167,6 +205,35 @@ impl SceneBatch {
         })
     }
 
+    /// Lockstep variant of [`SceneBatch::rollout`]: the per-scene
+    /// controller state is threaded identically, but scenes advance one
+    /// step at a time through [`SceneBatch::step_lockstep`] so zone
+    /// solves batch across the whole population at each fail-safe pass.
+    /// Control callbacks still run on the worker pool (policy networks
+    /// are real per-step work); each scene's state slot is touched by
+    /// exactly one worker, so the mutexes are uncontended.
+    pub fn rollout_lockstep<S, I, C>(&mut self, steps: usize, init: I, control: C) -> Vec<S>
+    where
+        S: Send,
+        I: Fn(usize) -> S + Sync,
+        C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
+    {
+        let slots: Vec<std::sync::Mutex<S>> =
+            (0..self.sims.len()).map(|i| std::sync::Mutex::new(init(i))).collect();
+        for s in 0..steps {
+            {
+                let slots = &slots;
+                let control = &control;
+                self.pool.map_mut(&mut self.sims, |i, sim| {
+                    let mut state = slots[i].lock().unwrap();
+                    control(&mut *state, i, s, sim);
+                });
+            }
+            self.step_lockstep();
+        }
+        slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+    }
+
     /// Taped batch rollout + batched backward. Tapes are cleared, taping
     /// is enabled, the controlled forward runs in parallel, then
     /// `loss(i, sim, state)` seeds each scene's adjoint and the backward
@@ -185,6 +252,48 @@ impl SceneBatch {
         C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
         L: Fn(usize, &Simulation, &S) -> (f64, LossGrad) + Sync,
     {
+        self.rollout_grad_impl(steps, init, control, loss, false)
+    }
+
+    /// [`SceneBatch::rollout_grad`] with a *lockstep* forward
+    /// ([`SceneBatch::rollout_lockstep`]): forward zone solves batch
+    /// across scenes at each (step, pass) level, matching the batched
+    /// backward's lockstep granularity. With the native zone solver the
+    /// forward trajectory is bitwise the same, so gradients are
+    /// identical to [`SceneBatch::rollout_grad`]; with a shared
+    /// coordinator and real `zone_solve_*` artifacts the forward runs
+    /// f32 PJRT solves and trajectories (hence gradients) differ within
+    /// solver tolerance.
+    pub fn rollout_grad_lockstep<S, I, C, L>(
+        &mut self,
+        steps: usize,
+        init: I,
+        control: C,
+        loss: L,
+    ) -> BatchRollout<S>
+    where
+        S: Send + Sync,
+        I: Fn(usize) -> S + Sync,
+        C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
+        L: Fn(usize, &Simulation, &S) -> (f64, LossGrad) + Sync,
+    {
+        self.rollout_grad_impl(steps, init, control, loss, true)
+    }
+
+    fn rollout_grad_impl<S, I, C, L>(
+        &mut self,
+        steps: usize,
+        init: I,
+        control: C,
+        loss: L,
+        lockstep: bool,
+    ) -> BatchRollout<S>
+    where
+        S: Send + Sync,
+        I: Fn(usize) -> S + Sync,
+        C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
+        L: Fn(usize, &Simulation, &S) -> (f64, LossGrad) + Sync,
+    {
         // Tape only for the duration of this call: prior record_tape
         // flags are restored afterwards so a later forward-only
         // `run()` on the same batch doesn't grow tapes unboundedly.
@@ -195,7 +304,11 @@ impl SceneBatch {
             sim.cfg.record_tape = true;
             sim.clear_tape();
         }
-        let states = self.rollout(steps, init, control);
+        let states = if lockstep {
+            self.rollout_lockstep(steps, init, control)
+        } else {
+            self.rollout(steps, init, control)
+        };
         let pool = &self.pool;
         let sims = &self.sims;
         let seeded: Vec<(f64, LossGrad)> =

@@ -57,9 +57,9 @@ impl Bvh {
         let axis = bb.longest_axis();
         let mid = (lo + hi) / 2;
         self.order[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
-            centers[a as usize][axis]
-                .partial_cmp(&centers[b as usize][axis])
-                .unwrap_or(std::cmp::Ordering::Equal)
+            // total_cmp: NaN centers (degenerate geometry) get a stable
+            // order instead of collapsing to Equal and skewing the split.
+            centers[a as usize][axis].total_cmp(&centers[b as usize][axis])
         });
         self.build_range(aabbs, centers, lo, mid);
         let right = self.build_range(aabbs, centers, mid, hi);

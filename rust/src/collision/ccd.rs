@@ -8,7 +8,16 @@ use crate::math::Vec3;
 
 /// Roots of c₃t³ + c₂t² + c₁t + c₀ = 0 inside [0, 1], ascending.
 /// Robust bracketed bisection/Newton on monotonic intervals.
+///
+/// Non-finite coefficients (degenerate/coplanar sweeps on exploding
+/// trajectories overflow the cross products) yield no reliable roots:
+/// they are rejected up front rather than allowed to poison the knot
+/// sort or the bracketing signs mid-rollout, and every interval
+/// endpoint is filtered to finite before use.
 pub fn cubic_roots_01(c3: f64, c2: f64, c1: f64, c0: f64) -> Vec<f64> {
+    if !(c3.is_finite() && c2.is_finite() && c1.is_finite() && c0.is_finite()) {
+        return Vec::new();
+    }
     let f = |t: f64| ((c3 * t + c2) * t + c1) * t + c0;
     // Critical points of the cubic: roots of 3c₃t² + 2c₂t + c₁.
     let mut knots = vec![0.0, 1.0];
@@ -18,18 +27,18 @@ pub fn cubic_roots_01(c3: f64, c2: f64, c1: f64, c0: f64) -> Vec<f64> {
         if disc >= 0.0 {
             let s = disc.sqrt();
             for r in [(-b - s) / (2.0 * a), (-b + s) / (2.0 * a)] {
-                if r > 0.0 && r < 1.0 {
+                if r.is_finite() && r > 0.0 && r < 1.0 {
                     knots.push(r);
                 }
             }
         }
     } else if b.abs() > 1e-300 {
         let r = -c / b;
-        if r > 0.0 && r < 1.0 {
+        if r.is_finite() && r > 0.0 && r < 1.0 {
             knots.push(r);
         }
     }
-    knots.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    knots.sort_by(f64::total_cmp);
     let mut roots = Vec::new();
     let eps = 1e-12;
     for w in knots.windows(2) {
@@ -72,7 +81,7 @@ pub fn cubic_roots_01(c3: f64, c2: f64, c1: f64, c0: f64) -> Vec<f64> {
 }
 
 fn push_root(roots: &mut Vec<f64>, r: f64) {
-    if !roots.iter().any(|&x| (x - r).abs() < 1e-9) {
+    if r.is_finite() && !roots.iter().any(|&x| (x - r).abs() < 1e-9) {
         roots.push(r);
     }
 }
@@ -363,6 +372,76 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn cubic_roots_nonfinite_coefficients_yield_no_roots() {
+        // Exploding trajectories overflow the coplanarity cross products
+        // into inf/NaN coefficients; the solver must return cleanly (no
+        // panicking knot sort, no fake bisection "roots").
+        for (c3, c2, c1, c0) in [
+            (f64::NAN, 0.0, 0.0, 0.0),
+            (1.0, f64::NAN, -0.5, 0.25),
+            (1.0, f64::INFINITY, -0.5, 0.25),
+            (f64::NEG_INFINITY, f64::INFINITY, f64::NAN, 1.0),
+            (0.0, 0.0, f64::INFINITY, f64::NAN),
+        ] {
+            assert!(
+                cubic_roots_01(c3, c2, c1, c0).is_empty(),
+                "non-finite cubic ({c3}, {c2}, {c1}, {c0}) must yield no roots"
+            );
+        }
+        // Huge-but-finite coefficients: never panic, every claimed root
+        // finite and inside [0, 1].
+        for r in cubic_roots_01(1e300, -1.5e300, 0.6e300, -0.05e300) {
+            assert!(r.is_finite() && (0.0..=1.0).contains(&r), "root {r}");
+        }
+    }
+
+    #[test]
+    fn degenerate_coplanar_vf_sweep_does_not_panic() {
+        // All four points and all displacements lie in the y = 0 plane:
+        // the coplanarity cubic is identically zero (every t is a
+        // "root"), the historical breeding ground for NaN knots. The
+        // sweep must complete and report either no hit or a sane one.
+        let x = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.3, 0.0, 0.3),
+        ];
+        let d = [
+            Vec3::default(),
+            Vec3::default(),
+            Vec3::default(),
+            Vec3::new(0.5, 0.0, -0.1),
+        ];
+        if let Some(hit) = ccd_vertex_face(x, d, 1e-3) {
+            assert!(hit.t.is_finite() && (0.0..=1.0).contains(&hit.t), "t = {}", hit.t);
+            assert!(hit.n.is_finite(), "n = {:?}", hit.n);
+        }
+        // Fully degenerate: the vertex coincides with a face corner and
+        // nothing moves — cubic ≡ 0 with a zero-area closest feature.
+        let x = [
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(1.0, 0.0, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.0, 0.0, 0.0),
+        ];
+        let d = [Vec3::default(); 4];
+        let _ = ccd_vertex_face(x, d, 1e-3); // must not panic
+        let _ = ccd_edge_edge(x, d, 1e-3); // must not panic
+        // Non-finite sweep geometry (NaN candidate positions after a
+        // solver blow-up) must not panic either.
+        let x_bad = [
+            Vec3::new(f64::NAN, 0.0, 0.0),
+            Vec3::new(1.0, f64::INFINITY, 0.0),
+            Vec3::new(0.0, 0.0, 1.0),
+            Vec3::new(0.3, 1.0, 0.3),
+        ];
+        let d_bad = [Vec3::default(), Vec3::default(), Vec3::default(), Vec3::new(0.0, -2.0, 0.0)];
+        let _ = ccd_vertex_face(x_bad, d_bad, 1e-3);
+        let _ = ccd_edge_edge(x_bad, d_bad, 1e-3);
     }
 
     #[test]

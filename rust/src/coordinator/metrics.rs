@@ -13,6 +13,19 @@ pub struct CoordMetrics {
     pub zone_slots: usize,
     /// Zones that ran on the native path (oversize or PJRT failure).
     pub zone_native_fallback: usize,
+    /// `zone_solve_batch` invocations — one per (step, fail-safe pass)
+    /// level under lockstep forward batching, covering every scene's
+    /// zones at that level.
+    pub zone_solve_dispatches: usize,
+    /// PJRT calls made for forward zone solves.
+    pub zone_solve_pjrt_calls: usize,
+    /// Real forward-solve items shipped.
+    pub zone_solve_items: usize,
+    /// Total padded forward-solve slots shipped.
+    pub zone_solve_slots: usize,
+    /// Forward solves that ran the native AL solver (no bucket, missing
+    /// artifact, or PJRT failure).
+    pub zone_solve_native_fallback: usize,
     pub rigid_pjrt_calls: usize,
     pub rigid_items: usize,
     pub rigid_slots: usize,
@@ -24,6 +37,14 @@ impl CoordMetrics {
             0.0
         } else {
             self.zone_items as f64 / self.zone_slots as f64
+        }
+    }
+
+    pub fn zone_solve_occupancy(&self) -> f64 {
+        if self.zone_solve_slots == 0 {
+            0.0
+        } else {
+            self.zone_solve_items as f64 / self.zone_solve_slots as f64
         }
     }
 
@@ -42,6 +63,12 @@ impl CoordMetrics {
             .set("zone_slots", self.zone_slots)
             .set("zone_occupancy", self.zone_occupancy())
             .set("zone_native_fallback", self.zone_native_fallback)
+            .set("zone_solve_dispatches", self.zone_solve_dispatches)
+            .set("zone_solve_pjrt_calls", self.zone_solve_pjrt_calls)
+            .set("zone_solve_items", self.zone_solve_items)
+            .set("zone_solve_slots", self.zone_solve_slots)
+            .set("zone_solve_occupancy", self.zone_solve_occupancy())
+            .set("zone_solve_native_fallback", self.zone_solve_native_fallback)
             .set("rigid_pjrt_calls", self.rigid_pjrt_calls)
             .set("rigid_items", self.rigid_items)
             .set("rigid_occupancy", self.rigid_occupancy());
@@ -58,19 +85,25 @@ mod tests {
         let m = CoordMetrics {
             zone_items: 12,
             zone_slots: 16,
+            zone_solve_items: 3,
+            zone_solve_slots: 8,
             rigid_items: 100,
             rigid_slots: 128,
             ..Default::default()
         };
         assert!((m.zone_occupancy() - 0.75).abs() < 1e-12);
+        assert!((m.zone_solve_occupancy() - 0.375).abs() < 1e-12);
         assert!((m.rigid_occupancy() - 100.0 / 128.0).abs() < 1e-12);
         assert_eq!(CoordMetrics::default().zone_occupancy(), 0.0);
+        assert_eq!(CoordMetrics::default().zone_solve_occupancy(), 0.0);
     }
 
     #[test]
     fn json_dump_has_fields() {
         let j = CoordMetrics::default().to_json();
         assert!(j.get("zone_occupancy").is_some());
+        assert!(j.get("zone_solve_dispatches").is_some());
+        assert!(j.get("zone_solve_occupancy").is_some());
         assert!(j.get("rigid_items").is_some());
     }
 }

@@ -34,28 +34,49 @@ impl Coordinator {
         Coordinator { runtime, metrics: Mutex::new(CoordMetrics::default()) }
     }
 
-    /// Smallest exported bucket fitting (n, m), if any.
-    fn bucket_for(&self, n: usize, m: usize) -> Option<ZoneBucket> {
-        self.runtime
-            .zone_buckets
+    /// Cheapest exported bucket fitting (n, m) from `buckets`, if any.
+    /// "Cheapest" is padded cost n² + m·n (the mass + Jacobian footprint
+    /// actually shipped), not the lexicographic (n, m) minimum — a
+    /// bucket with minimal n but a hugely overshooting m must lose to a
+    /// near-exact fit. Ties break on (n, m) so selection is
+    /// deterministic.
+    fn bucket_for_in(buckets: &[ZoneBucket], n: usize, m: usize) -> Option<ZoneBucket> {
+        buckets
             .iter()
             .copied()
             .filter(|b| b.n >= n && b.m >= m)
-            .min_by_key(|b| (b.n, b.m))
+            .min_by_key(|b| (b.n * b.n + b.m * b.n, b.n, b.m))
+    }
+
+    /// Buckets from `buckets` whose artifact (per `name`) actually
+    /// exists in the manifest. Selecting only among these keeps the
+    /// PJRT paths alive under partial exports (a manifest listing
+    /// buckets the aot step didn't ship yet): a zone whose cheapest
+    /// bucket is missing lands in the next-cheapest available one
+    /// instead of silently falling back native.
+    fn available_buckets(
+        &self,
+        buckets: &[ZoneBucket],
+        name: fn(ZoneBucket) -> String,
+    ) -> Vec<ZoneBucket> {
+        buckets.iter().copied().filter(|&b| self.runtime.has(&name(b))).collect()
     }
 
     /// Batched zone-backward over independent zones: groups by bucket,
     /// pads, one PJRT call per bucket-batch; oversize zones run native.
-    /// Returns ∂L/∂q per item (same order).
+    /// Returns ∂L/∂q per item (same order). Bucket groups dispatch in
+    /// sorted (n, m) order, so PJRT call order, chunk boundaries, and
+    /// fallback/metrics logs are identical across identical runs.
     pub fn zone_backward_batch(&self, items: &[ZoneBwItem<'_>]) -> Vec<Vec<f64>> {
+        let avail = self.available_buckets(&self.runtime.zone_buckets, zone_backward_name);
         let mut out: Vec<Vec<f64>> = items.iter().map(|_| Vec::new()).collect();
-        // Group item indices by bucket.
-        let mut groups: std::collections::HashMap<(usize, usize), Vec<usize>> =
-            std::collections::HashMap::new();
+        // Group item indices by bucket (ordered map: see above).
+        let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+            std::collections::BTreeMap::new();
         for (i, it) in items.iter().enumerate() {
             let n = it.problem.n;
             let m = it.problem.constraints.len();
-            match self.bucket_for(n, m) {
+            match Coordinator::bucket_for_in(&avail, n, m) {
                 Some(b) => groups.entry((b.n, b.m)).or_default().push(i),
                 None => {
                     // Native fallback for oversize zones.
@@ -66,14 +87,12 @@ impl Coordinator {
             }
         }
         for ((bn, bm), idxs) in groups {
-            let bucket = self
-                .runtime
-                .zone_buckets
+            let bucket = avail
                 .iter()
                 .copied()
                 .find(|b| b.n == bn && b.m == bm)
                 .expect("bucket vanished");
-            let name = format!("zone_backward_n{}_m{}_b{}", bucket.n, bucket.m, bucket.batch);
+            let name = zone_backward_name(bucket);
             for chunk in idxs.chunks(bucket.batch) {
                 match self.call_zone_bucket(&name, bucket, chunk, items) {
                     Ok(grads) => {
@@ -110,38 +129,18 @@ impl Coordinator {
         items: &[ZoneBwItem<'_>],
     ) -> Result<Vec<Vec<f64>>> {
         let (bn, bm, bb) = (bucket.n, bucket.m, bucket.batch);
-        let mut mass = vec![0.0f32; bb * bn * bn];
+        let mut mass = identity_padded_mass(bb, bn);
         let mut jac = vec![0.0f32; bb * bm * bn];
         let mut lam = vec![0.0f32; bb * bm];
         let mut g = vec![0.0f32; bb * bn];
-        // Empty batch slots get identity mass so the batched CG stays
-        // well posed.
-        for k in 0..bb {
-            for r in 0..bn {
-                mass[k * bn * bn + r * bn + r] = 1.0;
-            }
-        }
-        for k in chunk.len()..bb {
-            let _ = k; // (slots already identity)
-        }
         for (k, &i) in chunk.iter().enumerate() {
             let it = &items[i];
             let zp = it.problem;
             let n = zp.n;
             let m = zp.constraints.len();
-            for r in 0..n {
-                for c in 0..n {
-                    mass[k * bn * bn + r * bn + c] = zp.mass[(r, c)] as f32;
-                }
-                if zp.mass[(r, r)] != 0.0 {
-                    // (diagonal was pre-set to 1; real value overwrites)
-                }
-            }
-            let jrows = zp.jacobian(&it.solution.q);
+            // Backward linearizes at the *solution* point.
+            pack_mass_jac(&mut mass, &mut jac, k, bn, bm, zp, &it.solution.q);
             for r in 0..m {
-                for c in 0..n {
-                    jac[k * bm * bn + r * bn + c] = jrows[(r, c)] as f32;
-                }
                 lam[k * bm + r] = it.solution.lambda[r] as f32;
             }
             for c in 0..n {
@@ -154,6 +153,136 @@ impl Coordinator {
         for (k, &i) in chunk.iter().enumerate() {
             let n = items[i].problem.n;
             res.push((0..n).map(|c| grad[k * bn + c] as f64).collect());
+        }
+        Ok(res)
+    }
+
+    /// Batched *forward* zone solve over independent zones — the
+    /// lockstep forward's dispatch (`batch::SceneBatch::step_lockstep`).
+    /// Groups by the cheapest *available* solve bucket, pads, one PJRT
+    /// call per bucket-batch; zones exceeding every available bucket and
+    /// zones in a failed PJRT call run the native augmented-Lagrangian
+    /// solver on `pool` — exactly the degradation ladder of
+    /// [`Coordinator::zone_backward_batch`] (the native work here is a
+    /// full solve, not a backsolve, hence the caller-provided pool
+    /// instead of inline fallback: worker budgets stay honored).
+    /// Returns solutions in item order; bucket groups dispatch in sorted
+    /// (n, m) order, so call order, chunking, and metrics are
+    /// deterministic from day one.
+    pub fn zone_solve_batch(
+        &self,
+        problems: &[&ZoneProblem],
+        pool: &crate::util::pool::Pool,
+    ) -> Vec<ZoneSolution> {
+        if problems.is_empty() {
+            // Not counted as a dispatch: the metric means "batched solve
+            // levels", and an empty call does no solving.
+            return Vec::new();
+        }
+        self.metrics.lock().unwrap().zone_solve_dispatches += 1;
+        let avail = self.available_buckets(&self.runtime.zone_solve_buckets, zone_solve_name);
+        let mut out: Vec<Option<ZoneSolution>> = problems.iter().map(|_| None).collect();
+        let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
+            std::collections::BTreeMap::new();
+        let mut native: Vec<usize> = Vec::new();
+        for (i, zp) in problems.iter().enumerate() {
+            match Coordinator::bucket_for_in(&avail, zp.n, zp.constraints.len()) {
+                Some(b) => {
+                    groups.entry((b.n, b.m)).or_default().push(i);
+                }
+                None => native.push(i),
+            }
+        }
+        if !native.is_empty() {
+            self.metrics.lock().unwrap().zone_solve_native_fallback += native.len();
+            let sols = pool.map(native.len(), |j| problems[native[j]].solve());
+            for (&i, sol) in native.iter().zip(sols) {
+                out[i] = Some(sol);
+            }
+        }
+        for ((bn, bm), idxs) in groups {
+            let bucket = avail
+                .iter()
+                .copied()
+                .find(|b| b.n == bn && b.m == bm)
+                .expect("bucket vanished");
+            let name = zone_solve_name(bucket);
+            for chunk in idxs.chunks(bucket.batch) {
+                match self.call_zone_solve_bucket(&name, bucket, chunk, problems) {
+                    Ok(sols) => {
+                        for (&i, sol) in chunk.iter().zip(sols) {
+                            out[i] = Some(sol);
+                        }
+                        let mut m = self.metrics.lock().unwrap();
+                        m.zone_solve_pjrt_calls += 1;
+                        m.zone_solve_items += chunk.len();
+                        m.zone_solve_slots += bucket.batch;
+                    }
+                    Err(e) => {
+                        // PJRT trouble: degrade to native (full AL
+                        // solves, so on the pool), keep running.
+                        crate::warnlog!("pjrt zone solve failed ({e:#}); native fallback");
+                        self.metrics.lock().unwrap().zone_solve_native_fallback += chunk.len();
+                        let sols = pool.map(chunk.len(), |j| problems[chunk[j]].solve());
+                        for (&i, sol) in chunk.iter().zip(sols) {
+                            out[i] = Some(sol);
+                        }
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("every zone solved")).collect()
+    }
+
+    /// One padded PJRT call for a chunk of same-bucket forward solves.
+    /// Inputs: block mass (identity in empty slots), constraint Jacobian
+    /// at q0, constraint values C(q0) (padded rows strictly satisfied so
+    /// they stay inactive), and q0. Outputs: resolved q and multipliers.
+    fn call_zone_solve_bucket(
+        &self,
+        name: &str,
+        bucket: ZoneBucket,
+        chunk: &[usize],
+        problems: &[&ZoneProblem],
+    ) -> Result<Vec<ZoneSolution>> {
+        let (bn, bm, bb) = (bucket.n, bucket.m, bucket.batch);
+        let mut mass = identity_padded_mass(bb, bn);
+        let mut jac = vec![0.0f32; bb * bm * bn];
+        let mut c0 = vec![1.0f32; bb * bm];
+        let mut q0 = vec![0.0f32; bb * bn];
+        for (k, &i) in chunk.iter().enumerate() {
+            let zp = problems[i];
+            let n = zp.n;
+            let m = zp.constraints.len();
+            // Forward linearizes at the *candidate* point q0.
+            pack_mass_jac(&mut mass, &mut jac, k, bn, bm, zp, &zp.q0);
+            for r in 0..n {
+                q0[k * bn + r] = zp.q0[r] as f32;
+            }
+            let cvals = zp.eval(&zp.q0);
+            for r in 0..m {
+                c0[k * bm + r] = cvals[r] as f32;
+            }
+        }
+        let outs = self.runtime.call_f32(name, &[&mass, &jac, &c0, &q0])?;
+        let (qs, lams) = (&outs[0], &outs[1]);
+        let mut res = Vec::with_capacity(chunk.len());
+        for (k, &i) in chunk.iter().enumerate() {
+            let zp = problems[i];
+            let n = zp.n;
+            let m = zp.constraints.len();
+            let q: Vec<f64> = (0..n).map(|c| qs[k * bn + c] as f64).collect();
+            let lambda: Vec<f64> = (0..m).map(|r| (lams[k * bm + r] as f64).max(0.0)).collect();
+            // Feasibility is judged natively (f64) so the converged flag
+            // means the same thing on every path.
+            let viol = zp.eval(&q).iter().map(|&x| (-x).max(0.0)).fold(0.0, f64::max);
+            res.push(ZoneSolution {
+                q,
+                lambda,
+                converged: viol < 1e-6,
+                outer_iters: 0,
+                max_violation: viol,
+            });
         }
         Ok(res)
     }
@@ -225,5 +354,98 @@ impl Coordinator {
             .iter()
             .map(|it| backward_dense(it.problem, it.solution, it.grad_z).grad_q)
             .collect()
+    }
+}
+
+/// Artifact name of a zone-backward bucket.
+fn zone_backward_name(b: ZoneBucket) -> String {
+    format!("zone_backward_n{}_m{}_b{}", b.n, b.m, b.batch)
+}
+
+/// Artifact name of a forward zone-solve bucket.
+fn zone_solve_name(b: ZoneBucket) -> String {
+    format!("zone_solve_n{}_m{}_b{}", b.n, b.m, b.batch)
+}
+
+/// Padded bucket mass buffer with identity diagonals in every slot, so
+/// empty batch slots keep the batched solves well posed.
+fn identity_padded_mass(bb: usize, bn: usize) -> Vec<f32> {
+    let mut mass = vec![0.0f32; bb * bn * bn];
+    for k in 0..bb {
+        for r in 0..bn {
+            mass[k * bn * bn + r * bn + r] = 1.0;
+        }
+    }
+    mass
+}
+
+/// Pack one zone's mass block and its constraint Jacobian (linearized
+/// at `at`) into slot `k` of the padded bucket buffers — shared between
+/// the forward and backward bucket calls so the padding scheme cannot
+/// silently diverge.
+fn pack_mass_jac(
+    mass: &mut [f32],
+    jac: &mut [f32],
+    k: usize,
+    bn: usize,
+    bm: usize,
+    zp: &ZoneProblem,
+    at: &[f64],
+) {
+    let n = zp.n;
+    let m = zp.constraints.len();
+    for r in 0..n {
+        for c in 0..n {
+            mass[k * bn * bn + r * bn + c] = zp.mass[(r, c)] as f32;
+        }
+    }
+    let jrows = zp.jacobian(at);
+    for r in 0..m {
+        for c in 0..n {
+            jac[k * bm * bn + r * bn + c] = jrows[(r, c)] as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_choice_minimizes_padded_cost() {
+        let table = vec![
+            ZoneBucket { n: 6, m: 64, batch: 8 },
+            ZoneBucket { n: 12, m: 8, batch: 8 },
+            ZoneBucket { n: 24, m: 24, batch: 4 },
+        ];
+        // (6, 4) fits all three. The old lexicographic (n, m) min picked
+        // (6, 64) — cost 6² + 64·6 = 420 — over the near-exact (12, 8)
+        // at 12² + 8·12 = 240.
+        let b = Coordinator::bucket_for_in(&table, 6, 4).expect("fits");
+        assert_eq!((b.n, b.m), (12, 8));
+        // Near-exact fit wins outright.
+        let b = Coordinator::bucket_for_in(&table, 10, 8).expect("fits");
+        assert_eq!((b.n, b.m), (12, 8));
+        // Many constraints force the wide bucket.
+        let b = Coordinator::bucket_for_in(&table, 4, 40).expect("fits");
+        assert_eq!((b.n, b.m), (6, 64));
+        // Oversize in either dimension: no bucket.
+        assert!(Coordinator::bucket_for_in(&table, 25, 1).is_none());
+        assert!(Coordinator::bucket_for_in(&table, 1, 65).is_none());
+        // Exact tie on cost breaks deterministically on (n, m).
+        let tied = vec![
+            ZoneBucket { n: 8, m: 8, batch: 4 },
+            ZoneBucket { n: 8, m: 8, batch: 2 },
+        ];
+        let b = Coordinator::bucket_for_in(&tied, 8, 8).expect("fits");
+        assert_eq!((b.n, b.m, b.batch), (8, 8, 4), "first listed of equal keys");
+    }
+
+    #[test]
+    fn solve_name_matches_export_convention() {
+        assert_eq!(
+            zone_solve_name(ZoneBucket { n: 12, m: 8, batch: 16 }),
+            "zone_solve_n12_m8_b16"
+        );
     }
 }

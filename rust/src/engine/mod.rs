@@ -98,19 +98,65 @@ pub struct Simulation {
     pub coordinator: Option<std::sync::Arc<crate::coordinator::Coordinator>>,
 }
 
+/// In-flight state of one staged forward step, produced by
+/// [`Simulation::integrate`] and consumed by [`Simulation::commit`].
+///
+/// The step is factored into reusable stages —
+/// `integrate → candidates → (detect_and_zone → solve_zones → scatter)*
+/// → commit` — mirroring the backward's
+/// `begin_step/gather/apply/finish_step` decomposition, so
+/// [`crate::batch`] can advance many scenes in lockstep and pool every
+/// scene's zone problems at each fail-safe pass into one batched solve.
+/// [`Simulation::step`] drives the stages sequentially; single-scene
+/// behavior is identical to the pre-staged monolith.
+pub struct StepState {
+    stats: StepStats,
+    rigid_recs: Vec<RigidSolveRec>,
+    cloth_recs: Vec<ClothSolveRec>,
+    cloth_ext: Vec<Vec<Vec3>>,
+    rigid_vhalf: Vec<[f64; 6]>,
+    cloth_vhalf: Vec<Vec<Vec3>>,
+    rigid_qbar: Vec<[f64; 6]>,
+    cloth_xbar: Vec<Vec<Vec3>>,
+    zone_recs: Vec<ZoneRec>,
+    /// Surfaces are built once per step; later passes only update the
+    /// candidate positions and refit the BVHs (perf: §Perf L3-1).
+    surfs: Option<Vec<crate::collision::Surface>>,
+}
+
 impl Simulation {
     pub fn new(sys: System, cfg: SimConfig) -> Simulation {
         let pool = Pool::new(cfg.workers);
         Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, zone_hook: None, coordinator: None }
     }
 
-    /// Advance one step of length `cfg.dt`.
+    /// Advance one step of length `cfg.dt`: the thin sequential driver
+    /// over the staged primitives (see [`StepState`]).
     pub fn step(&mut self) {
+        let mut st = self.integrate();
+        self.candidates(&mut st);
+        // Fail-safe collision resolution over impact zones.
+        for pass in 0..self.cfg.max_resolve_passes {
+            let problems = self.detect_and_zone(&mut st, pass);
+            if problems.is_empty() {
+                break;
+            }
+            let solutions = self.solve_zones(&problems);
+            let max_disp = self.scatter(&mut st, problems, solutions, pass);
+            // Proximity contacts re-fire at gap ≈ δ with negligible
+            // corrections; don't burn the remaining passes on no-ops.
+            if max_disp < 1e-9 {
+                break;
+            }
+        }
+        self.commit(st);
+    }
+
+    /// Stage 1 — unconstrained velocity update (Eq. 3).
+    pub fn integrate(&self) -> StepState {
         let h = self.cfg.dt;
         let g = self.cfg.gravity;
         let mut stats = StepStats::default();
-
-        // --- 1. Unconstrained velocity update (Eq. 3). ---
         let mut rigid_recs = Vec::with_capacity(self.sys.rigids.len());
         let mut rigid_vhalf: Vec<[f64; 6]> = Vec::with_capacity(self.sys.rigids.len());
         for b in &self.sys.rigids {
@@ -147,13 +193,28 @@ impl Simulation {
                 cloth_ext.push(c.ext_force.clone());
             }
         }
+        StepState {
+            stats,
+            rigid_recs,
+            cloth_recs,
+            cloth_ext,
+            rigid_vhalf,
+            cloth_vhalf,
+            rigid_qbar: Vec::new(),
+            cloth_xbar: Vec::new(),
+            zone_recs: Vec::new(),
+            surfs: None,
+        }
+    }
 
-        // --- 2. Candidate positions q̄ = q₀ + h·q̇₁. ---
-        let mut rigid_qbar: Vec<[f64; 6]> = self
+    /// Stage 2 — candidate positions q̄ = q₀ + h·q̇₁.
+    pub fn candidates(&self, st: &mut StepState) {
+        let h = self.cfg.dt;
+        st.rigid_qbar = self
             .sys
             .rigids
             .iter()
-            .zip(&rigid_vhalf)
+            .zip(&st.rigid_vhalf)
             .map(|(b, v)| {
                 let mut q = b.q;
                 if !b.frozen {
@@ -164,114 +225,139 @@ impl Simulation {
                 q
             })
             .collect();
-        let mut cloth_xbar: Vec<Vec<Vec3>> = self
+        st.cloth_xbar = self
             .sys
             .cloths
             .iter()
-            .zip(&cloth_vhalf)
+            .zip(&st.cloth_vhalf)
             .map(|(c, v)| {
                 (0..c.n_nodes())
                     .map(|i| if c.pinned[i] { c.x[i] } else { c.x[i] + v[i] * h })
                     .collect()
             })
             .collect();
+    }
 
-        // --- 3. Fail-safe collision resolution over impact zones. ---
-        // Surfaces are built once per step; later passes only update the
-        // candidate positions and refit the BVHs (perf: §Perf L3-1).
-        let mut zone_recs: Vec<ZoneRec> = Vec::new();
-        let mut surfs: Option<Vec<crate::collision::Surface>> = None;
-        for pass in 0..self.cfg.max_resolve_passes {
-            let rigid_x1: Vec<Vec<Vec3>> = self
-                .sys
-                .rigids
-                .iter()
-                .zip(&rigid_qbar)
-                .map(|(b, q)| {
-                    let r = euler::rotation(Vec3::new(q[0], q[1], q[2]));
-                    let t = Vec3::new(q[3], q[4], q[5]);
-                    b.mesh0.verts.iter().map(|&p| r * p + t).collect()
-                })
-                .collect();
-            let surfs = match surfs.as_mut() {
-                None => {
-                    surfs = Some(surfaces_from_system(
-                        &self.sys,
-                        &rigid_x1,
-                        &cloth_xbar,
-                        self.cfg.thickness,
-                    ));
-                    surfs.as_mut().unwrap()
-                }
-                Some(ss) => {
-                    let nr = self.sys.rigids.len();
-                    for (i, x1) in rigid_x1.into_iter().enumerate() {
-                        ss[i].update_candidates(x1, self.cfg.thickness);
-                    }
-                    for (c, x1) in cloth_xbar.iter().enumerate() {
-                        ss[nr + c].update_candidates(x1.clone(), self.cfg.thickness);
-                    }
-                    ss
-                }
-            };
-            let (impacts, dstats) = detect(surfs, self.cfg.thickness);
-            if pass == 0 {
-                stats.detect = dstats;
-                stats.impacts = impacts.len();
+    /// Stage 3 — one fail-safe pass of continuous collision detection and
+    /// impact-zone construction at the current candidates. Returns the
+    /// built zone problems; empty means the resolution loop is finished.
+    pub fn detect_and_zone(&self, st: &mut StepState, pass: usize) -> Vec<ZoneProblem> {
+        let rigid_x1: Vec<Vec<Vec3>> = self
+            .sys
+            .rigids
+            .iter()
+            .zip(&st.rigid_qbar)
+            .map(|(b, q)| {
+                let r = euler::rotation(Vec3::new(q[0], q[1], q[2]));
+                let t = Vec3::new(q[3], q[4], q[5]);
+                b.mesh0.verts.iter().map(|&p| r * p + t).collect()
+            })
+            .collect();
+        if st.surfs.is_none() {
+            st.surfs = Some(surfaces_from_system(
+                &self.sys,
+                &rigid_x1,
+                &st.cloth_xbar,
+                self.cfg.thickness,
+            ));
+        } else {
+            let ss = st.surfs.as_mut().expect("checked above");
+            let nr = self.sys.rigids.len();
+            for (i, x1) in rigid_x1.into_iter().enumerate() {
+                ss[i].update_candidates(x1, self.cfg.thickness);
             }
-            let mut zones = build_zones(&self.sys, &impacts);
-            if self.cfg.collision_mode == CollisionMode::Global {
-                zones = merge_zones(&zones).into_iter().collect();
-            }
-            if zones.is_empty() {
-                break;
-            }
-            stats.resolve_passes = pass + 1;
-            if pass == 0 {
-                stats.zones = zones.len();
-                stats.max_zone_dofs = zones.iter().map(|z| z.n_dofs()).max().unwrap_or(0);
-                stats.max_zone_constraints =
-                    zones.iter().map(|z| z.n_constraints()).max().unwrap_or(0);
-            }
-            // Build problems, solve independently (coordinator hook or
-            // the thread pool), then scatter sequentially.
-            let problems: Vec<ZoneProblem> = zones
-                .iter()
-                .map(|z| ZoneProblem::build(&self.sys, z, &rigid_qbar, &cloth_xbar, self.cfg.thickness))
-                .collect();
-            let solutions: Vec<ZoneSolution> = if let Some(hook) = &self.zone_hook {
-                hook(&problems)
-            } else {
-                self.pool.map(problems.len(), |i| problems[i].solve())
-            };
-            let mut max_disp: f64 = 0.0;
-            for (zp, sol) in problems.into_iter().zip(solutions) {
-                for (a, b) in sol.q.iter().zip(&zp.q0) {
-                    max_disp = max_disp.max((a - b).abs());
-                }
-                zp.scatter(&sol, &mut rigid_qbar, &mut cloth_xbar);
-                if self.cfg.record_tape {
-                    zone_recs.push(ZoneRec { problem: zp, solution: sol, pass });
-                }
-            }
-            // Proximity contacts re-fire at gap ≈ δ with negligible
-            // corrections; don't burn the remaining passes on no-ops.
-            if max_disp < 1e-9 {
-                break;
+            for (c, x1) in st.cloth_xbar.iter().enumerate() {
+                ss[nr + c].update_candidates(x1.clone(), self.cfg.thickness);
             }
         }
+        let surfs = st.surfs.as_ref().expect("surfaces built above");
+        let (impacts, dstats) = detect(surfs, self.cfg.thickness);
+        if pass == 0 {
+            st.stats.detect = dstats;
+            st.stats.impacts = impacts.len();
+        }
+        let mut zones = build_zones(&self.sys, &impacts);
+        if self.cfg.collision_mode == CollisionMode::Global {
+            zones = merge_zones(&zones).into_iter().collect();
+        }
+        if zones.is_empty() {
+            return Vec::new();
+        }
+        st.stats.resolve_passes = pass + 1;
+        if pass == 0 {
+            st.stats.zones = zones.len();
+            st.stats.max_zone_dofs = zones.iter().map(|z| z.n_dofs()).max().unwrap_or(0);
+            st.stats.max_zone_constraints =
+                zones.iter().map(|z| z.n_constraints()).max().unwrap_or(0);
+        }
+        zones
+            .iter()
+            .map(|z| {
+                ZoneProblem::build(&self.sys, z, &st.rigid_qbar, &st.cloth_xbar, self.cfg.thickness)
+            })
+            .collect()
+    }
 
-        // --- 4. Commit: q₁ = q̄′, q̇₁ = (q₁ − q₀)/h, with an inelastic
-        // energy clamp on the resolution's velocity correction.
-        //
-        // The projection is position-level; committing v = (q₁−q₀)/h can
-        // *inject* kinetic energy when deep corrections route through
-        // rotation (cheap in the mass metric — e.g. a sphere picking up
-        // violent spin from a single-vertex contact). The impact-zone
-        // response is inelastic: post-resolution KE must not exceed
-        // pre-resolution KE, so Δ = v_new − v_half is scaled back when it
-        // would. (Not applied while taping: the clamp is off the gradient
-        // chain; taped episodes use gentle contacts.)
+    /// Stage 4 — solve a pass's zone problems independently (zone hook,
+    /// or the scene's thread pool). Batch callers substitute a
+    /// cross-scene batched solve here instead.
+    pub fn solve_zones(&self, problems: &[ZoneProblem]) -> Vec<ZoneSolution> {
+        if let Some(hook) = &self.zone_hook {
+            hook(problems)
+        } else {
+            self.pool.map(problems.len(), |i| problems[i].solve())
+        }
+    }
+
+    /// Stage 5 — scatter a pass's resolved coordinates back into the
+    /// candidates (and the tape when recording). Returns the largest
+    /// per-DOF displacement the pass produced, for the no-op early exit.
+    pub fn scatter(
+        &self,
+        st: &mut StepState,
+        problems: Vec<ZoneProblem>,
+        solutions: Vec<ZoneSolution>,
+        pass: usize,
+    ) -> f64 {
+        let mut max_disp: f64 = 0.0;
+        for (zp, sol) in problems.into_iter().zip(solutions) {
+            for (a, b) in sol.q.iter().zip(&zp.q0) {
+                max_disp = max_disp.max((a - b).abs());
+            }
+            zp.scatter(&sol, &mut st.rigid_qbar, &mut st.cloth_xbar);
+            if self.cfg.record_tape {
+                st.zone_recs.push(ZoneRec { problem: zp, solution: sol, pass });
+            }
+        }
+        max_disp
+    }
+
+    /// Stage 6 — commit: q₁ = q̄′, q̇₁ = (q₁ − q₀)/h, with an inelastic
+    /// energy clamp on the resolution's velocity correction; pushes the
+    /// tape record and rolls the per-step counters.
+    ///
+    /// The projection is position-level; committing v = (q₁−q₀)/h can
+    /// *inject* kinetic energy when deep corrections route through
+    /// rotation (cheap in the mass metric — e.g. a sphere picking up
+    /// violent spin from a single-vertex contact). The impact-zone
+    /// response is inelastic: post-resolution KE must not exceed
+    /// pre-resolution KE, so Δ = v_new − v_half is scaled back when it
+    /// would. (Not applied while taping: the clamp is off the gradient
+    /// chain; taped episodes use gentle contacts.)
+    pub fn commit(&mut self, st: StepState) {
+        let h = self.cfg.dt;
+        let StepState {
+            stats,
+            rigid_recs,
+            cloth_recs,
+            cloth_ext,
+            rigid_vhalf,
+            cloth_vhalf,
+            rigid_qbar,
+            cloth_xbar,
+            zone_recs,
+            surfs: _,
+        } = st;
         let ke_of = |sys: &System, rv: &[[f64; 6]], cv: &[Vec<Vec3>]| -> f64 {
             let mut e = 0.0;
             for (i, b) in sys.rigids.iter().enumerate() {

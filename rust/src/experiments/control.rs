@@ -148,8 +148,9 @@ pub fn train_ours_sticks(episodes: usize, seed: u64) -> Vec<f64> {
 }
 
 /// Minibatched "ours" training: every update rolls out `batch` episodes
-/// with independent random targets in parallel through a [`SceneBatch`]
-/// (batched backward included) and averages the policy gradients into
+/// with independent random targets through a [`SceneBatch`] in lockstep
+/// (forward zone solves pooled across the minibatch per fail-safe pass;
+/// batched backward included) and averages the policy gradients into
 /// one Adam step. Returns the mean episode loss per update.
 pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f64> {
     let batch = batch.max(1);
@@ -166,7 +167,7 @@ pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f
         let mut sb = SceneBatch::from_scene(&sticks_system(), &cfg, batch, |_, _| {});
         let net_ref = &net;
         let targets_ref = &targets;
-        let res = sb.rollout_grad(
+        let res = sb.rollout_grad_lockstep(
             EP_STEPS,
             |_| Vec::with_capacity(EP_STEPS),
             |traces: &mut Vec<(MlpTrace, Vec<f64>)>, i, s, sim| {

@@ -69,9 +69,13 @@ fn rollout(forces: &[f64], target: Vec3, record: bool) -> (f64, Simulation) {
 }
 
 /// Batched population evaluation: one scene per candidate force
-/// sequence, all stepped in parallel through a [`SceneBatch`] (the
-/// CMA-ES population / perturbation-set workload). Losses come back in
-/// candidate order and are bitwise-identical to sequential `loss_only`.
+/// sequence, all stepped through a [`SceneBatch`] in *lockstep* (the
+/// CMA-ES population / perturbation-set workload) so every fail-safe
+/// pass's zone solves pool across the whole population — one
+/// `Coordinator::zone_solve_batch` call per pass level when a shared
+/// coordinator is installed, one cross-scene pool map otherwise.
+/// Losses come back in candidate order and are bitwise-identical to
+/// sequential `loss_only`.
 pub fn loss_only_batch(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
     if cands.is_empty() {
         return Vec::new();
@@ -79,8 +83,8 @@ pub fn loss_only_batch(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
     let mut cfg = episode_cfg();
     cfg.workers = Pool::default_for_machine().workers();
     let mut batch = SceneBatch::from_scene(&marble_scene(), &cfg, cands.len(), |_, _| {});
-    batch.run(SETTLE_STEPS); // settle into the pocket, untaped
-    batch.rollout(STEPS, |_| (), |_, i, s, sim| {
+    batch.run_lockstep(SETTLE_STEPS); // settle into the pocket, untaped
+    batch.rollout_lockstep(STEPS, |_| (), |_, i, s, sim| {
         sim.sys.rigids[0].ext_force = Vec3::new(cands[i][2 * s], 0.0, cands[i][2 * s + 1]);
     });
     cands

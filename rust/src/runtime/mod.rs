@@ -60,9 +60,32 @@ pub struct Runtime {
     specs: HashMap<String, ArtifactSpec>,
     pub rigid_batches: Vec<usize>,
     pub zone_buckets: Vec<ZoneBucket>,
+    /// Buckets exported for the *forward* zone solve
+    /// (`zone_solve_n{n}_m{m}_b{b}` artifacts). Manifests that predate
+    /// the forward path simply reuse `zone_buckets`; the coordinator
+    /// still checks per-artifact presence before dispatching.
+    pub zone_solve_buckets: Vec<ZoneBucket>,
     pub cloth_grids: Vec<(usize, usize)>,
     /// Executed-call counter per artifact (coordinator metrics).
     pub calls: Mutex<HashMap<String, usize>>,
+}
+
+/// Parse a `[[n, m, batch], ...]` bucket table from a manifest key.
+/// Malformed entries (short arrays, non-integers) are skipped, not
+/// panicked on — hand-edited manifests must fail soft.
+fn parse_buckets(j: &Json, key: &str) -> Option<Vec<ZoneBucket>> {
+    j.get(key).and_then(Json::as_arr).map(|v| {
+        v.iter()
+            .filter_map(|b| {
+                let b = b.as_arr()?;
+                Some(ZoneBucket {
+                    n: b.first()?.as_usize()?,
+                    m: b.get(1)?.as_usize()?,
+                    batch: b.get(2)?.as_usize()?,
+                })
+            })
+            .collect()
+    })
 }
 
 impl Runtime {
@@ -106,22 +129,9 @@ impl Runtime {
             .and_then(Json::as_arr)
             .map(|v| v.iter().filter_map(Json::as_usize).collect())
             .unwrap_or_default();
-        let zone_buckets = j
-            .get("zone_buckets")
-            .and_then(Json::as_arr)
-            .map(|v| {
-                v.iter()
-                    .filter_map(|b| {
-                        let b = b.as_arr()?;
-                        Some(ZoneBucket {
-                            n: b[0].as_usize()?,
-                            m: b[1].as_usize()?,
-                            batch: b[2].as_usize()?,
-                        })
-                    })
-                    .collect()
-            })
-            .unwrap_or_default();
+        let zone_buckets = parse_buckets(&j, "zone_buckets").unwrap_or_default();
+        let zone_solve_buckets =
+            parse_buckets(&j, "zone_solve_buckets").unwrap_or_else(|| zone_buckets.clone());
         let cloth_grids = j
             .get("cloth_grids")
             .and_then(Json::as_arr)
@@ -134,7 +144,7 @@ impl Runtime {
                     .collect()
             })
             .unwrap_or_default();
-        Runtime::finish_load(dir, specs, rigid_batches, zone_buckets, cloth_grids)
+        Runtime::finish_load(dir, specs, rigid_batches, zone_buckets, zone_solve_buckets, cloth_grids)
     }
 
     #[cfg(feature = "pjrt")]
@@ -143,6 +153,7 @@ impl Runtime {
         specs: HashMap<String, ArtifactSpec>,
         rigid_batches: Vec<usize>,
         zone_buckets: Vec<ZoneBucket>,
+        zone_solve_buckets: Vec<ZoneBucket>,
         cloth_grids: Vec<(usize, usize)>,
     ) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
@@ -152,6 +163,7 @@ impl Runtime {
             specs,
             rigid_batches,
             zone_buckets,
+            zone_solve_buckets,
             cloth_grids,
             calls: Mutex::new(HashMap::new()),
         })
@@ -163,6 +175,7 @@ impl Runtime {
         _specs: HashMap<String, ArtifactSpec>,
         _rigid_batches: Vec<usize>,
         _zone_buckets: Vec<ZoneBucket>,
+        _zone_solve_buckets: Vec<ZoneBucket>,
         _cloth_grids: Vec<(usize, usize)>,
     ) -> Result<Runtime> {
         bail!(
@@ -170,6 +183,43 @@ impl Runtime {
              rebuild with `cargo build --features pjrt`",
             dir.display()
         )
+    }
+
+    /// An artifact-less runtime: no executables, no buckets, no manifest
+    /// directory. Every coordinator call that consults it takes the
+    /// native fallback path, so the coordinator's batching, fallback,
+    /// and metrics logic can be exercised offline (tests, artifact-less
+    /// deployments).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn empty() -> Runtime {
+        Runtime {
+            dir: PathBuf::new(),
+            specs: HashMap::new(),
+            rigid_batches: Vec::new(),
+            zone_buckets: Vec::new(),
+            zone_solve_buckets: Vec::new(),
+            cloth_grids: Vec::new(),
+            calls: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// An artifact-less runtime (see the non-`pjrt` variant). Still
+    /// constructs the PJRT CPU client — in a `pjrt` build the client is
+    /// assumed creatable (panics otherwise; this constructor is for
+    /// tests/diagnostics, not the serving path).
+    #[cfg(feature = "pjrt")]
+    pub fn empty() -> Runtime {
+        let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+        Runtime {
+            pjrt: PjrtState { client, cache: Mutex::new(HashMap::new()) },
+            dir: PathBuf::new(),
+            specs: HashMap::new(),
+            rigid_batches: Vec::new(),
+            zone_buckets: Vec::new(),
+            zone_solve_buckets: Vec::new(),
+            cloth_grids: Vec::new(),
+            calls: Mutex::new(HashMap::new()),
+        }
     }
 
     /// Load from the conventional `artifacts/` directory.

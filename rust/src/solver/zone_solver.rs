@@ -194,7 +194,7 @@ impl ZoneProblem {
                 let c = self.eval(&q);
                 let jac = self.jacobian(&q);
                 // grad = M(q−q0) − Jᵀ·max(0, λ − μ·c)
-                let mut dq: Vec<f64> = q.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
+                let dq: Vec<f64> = q.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
                 let mut grad = self.mass.matvec(&dq);
                 let mut active = vec![false; m];
                 for j in 0..m {
@@ -260,7 +260,6 @@ impl ZoneProblem {
                     break; // stationary for this μ
                 }
                 let step_norm = alpha * crate::math::dense::norm(&step);
-                dq.clear();
                 if step_norm < 1e-12 * (1.0 + crate::math::dense::norm(&q)) {
                     break;
                 }

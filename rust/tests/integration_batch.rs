@@ -1,12 +1,16 @@
 //! Batched multi-scene simulation: batch-vs-sequential equivalence of
-//! trajectories, gradients, and the vectorized `rollout_grad` path.
+//! trajectories, gradients, the vectorized `rollout_grad` path, and the
+//! lockstep forward (`run_lockstep` / `zone_solve_batch` dispatch).
 
 use diffsim::batch::SceneBatch;
 use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::coordinator::Coordinator;
 use diffsim::engine::backward::{backward, LossGrad};
 use diffsim::engine::{DiffMode, SimConfig, Simulation};
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+use diffsim::runtime::Runtime;
+use std::sync::Arc;
 
 fn ground() -> RigidBody {
     RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
@@ -70,6 +74,110 @@ fn batch_trajectories_bitwise_match_sequential() {
             );
         }
     }
+}
+
+/// Bitwise comparison of one scene's rigid body 1 + cloth 0 against a
+/// sequential reference.
+fn assert_scene_bitwise(label: &str, i: usize, a: &System, b: &System) {
+    for k in 0..6 {
+        assert!(
+            a.rigids[1].q[k] == b.rigids[1].q[k],
+            "{label} scene {i} q[{k}]: {} vs solo {}",
+            a.rigids[1].q[k],
+            b.rigids[1].q[k]
+        );
+        assert!(
+            a.rigids[1].qdot[k] == b.rigids[1].qdot[k],
+            "{label} scene {i} qdot[{k}]: {} vs solo {}",
+            a.rigids[1].qdot[k],
+            b.rigids[1].qdot[k]
+        );
+    }
+    for (n, (xa, xb)) in a.cloths[0].x.iter().zip(&b.cloths[0].x).enumerate() {
+        assert!(
+            xa.x == xb.x && xa.y == xb.y && xa.z == xb.z,
+            "{label} scene {i} cloth node {n}: {xa:?} vs solo {xb:?}"
+        );
+    }
+}
+
+#[test]
+fn lockstep_trajectories_bitwise_match_sequential() {
+    // The lockstep forward pools every pass's zone solves across scenes
+    // (here: the cross-scene pool map — no coordinator); with the native
+    // solver the trajectories must stay bitwise-identical to sequential
+    // per-scene run(). Different vx values give the scenes different
+    // contact histories, so per-pass zone counts are skewed.
+    let vxs = [0.0, 0.4, -0.3, 1.1];
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 4, ..Default::default() };
+    let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+        sys.rigids[1] = falling_cube(vxs[i]);
+    });
+    batch.run_lockstep(60);
+    for (i, &vx) in vxs.iter().enumerate() {
+        let mut solo =
+            Simulation::new(drop_system(vx), SimConfig { dt: 1.0 / 100.0, ..Default::default() });
+        solo.run(60);
+        assert_scene_bitwise("lockstep", i, &batch.sim(i).sys, &solo.sys);
+    }
+}
+
+#[test]
+fn lockstep_shared_coordinator_one_dispatch_per_step_pass_level() {
+    // With one shared coordinator, every (step, fail-safe pass) level
+    // must produce exactly one zone_solve_batch dispatch covering all
+    // scenes' zones at that level. The artifact-less Runtime::empty()
+    // routes every zone through the native fallback inside the
+    // coordinator, so trajectories also stay bitwise-identical to
+    // sequential stepping.
+    let vxs = [0.0, 0.5, -0.8];
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 3, record_tape: true, ..Default::default() };
+    let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+        sys.rigids[1] = falling_cube(vxs[i]);
+    });
+    let coord = Arc::new(Coordinator::new(Arc::new(Runtime::empty())));
+    assert!(batch.shared_coordinator().is_none());
+    for sim in batch.sims_mut() {
+        sim.coordinator = Some(coord.clone());
+    }
+    assert!(batch.shared_coordinator().is_some(), "all scenes share one Arc");
+    let steps = 40;
+    batch.run_lockstep(steps);
+    // Parity against sequential per-scene stepping (same record_tape
+    // config; the coordinator's forward fallback is the native solver).
+    for (i, &vx) in vxs.iter().enumerate() {
+        let mut solo = Simulation::new(
+            drop_system(vx),
+            SimConfig { dt: 1.0 / 100.0, record_tape: true, ..Default::default() },
+        );
+        solo.run(steps);
+        assert_scene_bitwise("coord-lockstep", i, &batch.sim(i).sys, &solo.sys);
+    }
+    // Expected dispatches: one per (step, pass) level where ANY scene
+    // resolved zones — recoverable from the recorded tapes.
+    let mut expected = 0usize;
+    let mut total_zones = 0usize;
+    for s in 0..steps {
+        let mut passes: Vec<usize> = Vec::new();
+        for i in 0..batch.len() {
+            for zr in &batch.sim(i).tape[s].zones {
+                if !passes.contains(&zr.pass) {
+                    passes.push(zr.pass);
+                }
+                total_zones += 1;
+            }
+        }
+        expected += passes.len();
+    }
+    assert!(total_zones > 0, "scene must have contact for this test to bite");
+    let m = coord.metrics.lock().unwrap();
+    assert_eq!(
+        m.zone_solve_dispatches, expected,
+        "one zone_solve_batch dispatch per (step, pass) level across all scenes"
+    );
+    // Artifact-less runtime: everything fell back native, nothing hit PJRT.
+    assert_eq!(m.zone_solve_pjrt_calls, 0);
+    assert_eq!(m.zone_solve_native_fallback, total_zones);
 }
 
 /// The Fig-7-style taped cloth scene: 4x4 cloth pinned at two corners,
