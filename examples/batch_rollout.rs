@@ -28,7 +28,7 @@ fn main() {
     );
     base.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.502, 0.0)));
 
-    let workers = Pool::default_for_machine().workers();
+    let workers = Pool::machine_workers();
     let cfg = SimConfig { record_tape: true, dt: 1.0 / 100.0, workers, ..Default::default() };
     let thetas_ref = &thetas;
     let mut batch = SceneBatch::from_scene(&base, &cfg, n, |i, sys| {

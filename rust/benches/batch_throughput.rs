@@ -1,14 +1,16 @@
 //! Batch-throughput bench: aggregate steps/sec of `SceneBatch` vs
-//! stepping the same scenes sequentially, across batch sizes. The
-//! acceptance target is >2x aggregate steps/sec at batch size 8 on a
-//! multi-core host (scenes are embarrassingly parallel).
+//! stepping the same scenes sequentially, across batch sizes, plus the
+//! persistent-pool vs spawn-per-call comparison that gates the
+//! worker-pool runtime (results merged into `BENCH_pool.json` for perf
+//! trajectory tracking; run with `--test` for the CI smoke config).
 use diffsim::batch::SceneBatch;
 use diffsim::bodies::{RigidBody, System};
 use diffsim::engine::{SimConfig, Simulation};
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, unit_box};
-use diffsim::util::bench::{time, Bench};
-use diffsim::util::pool::Pool;
+use diffsim::util::bench::{merge_section, time, Bench};
+use diffsim::util::json::Json;
+use diffsim::util::pool::{thread_spawns, Pool};
 
 /// Contact-rich scene: ground + a leaning 4-cube stack.
 fn pile_system() -> System {
@@ -27,28 +29,71 @@ fn pile_system() -> System {
     sys
 }
 
+/// Small scene — ground + one settling cube. Physics work per step is
+/// tiny, so per-call thread spawn/join dominates the spawn-per-call
+/// baseline: the workload shape the persistent runtime targets.
+fn small_system() -> System {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.8, 0.0)));
+    sys
+}
+
+/// Time lockstep stepping of `scenes` copies of `base` on `pool`,
+/// rebuilding the batch each iteration so every arm walks the same
+/// trajectory. Returns (mean seconds, pool-layer thread spawns per
+/// step, both measured after one warmup iteration).
+fn time_lockstep(
+    base: &System,
+    cfg: &SimConfig,
+    scenes: usize,
+    steps: usize,
+    iters: usize,
+    pool: &Pool,
+) -> (f64, f64) {
+    let run = || {
+        let mut sb = SceneBatch::from_scene(base, cfg, scenes, |i, sys| {
+            let body = sys.rigids[1].clone();
+            sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+        });
+        sb.set_pool(pool.clone());
+        sb.run_lockstep(steps);
+    };
+    run(); // warmup: persistent workers exist after this
+    let s0 = thread_spawns();
+    let stats = time(0, iters, run);
+    let spawns = (thread_spawns() - s0) as f64 / (iters * steps) as f64;
+    (stats.mean(), spawns)
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
     let mut b = Bench::new("batch_throughput");
-    let steps = 25;
-    let workers = Pool::default_for_machine().workers();
+    let steps = if smoke { 5 } else { 25 };
+    let iters = if smoke { 1 } else { 3 };
+    let sizes: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8, 16] };
+    let workers = Pool::machine_workers();
     b.metric("workers", workers as f64, "threads");
-    for &n in &[1usize, 2, 4, 8, 16] {
+    for &n in sizes {
         let base = pile_system();
         let solo_cfg = SimConfig { workers: 1, ..Default::default() };
         let mut solos: Vec<Simulation> =
             (0..n).map(|_| Simulation::new(base.clone(), solo_cfg.clone())).collect();
-        let s_seq = time(1, 3, || {
+        let s_seq = time(1, iters, || {
             for sim in &mut solos {
                 sim.run(steps);
             }
         });
         let batch_cfg = SimConfig { workers, ..Default::default() };
         let mut batch = SceneBatch::from_scene(&base, &batch_cfg, n, |_, _| {});
-        let s_par = time(1, 3, || batch.run(steps));
+        let s_par = time(1, iters, || batch.run(steps));
         // Lockstep forward: per-step barrier, zone solves pooled across
         // scenes (the PJRT-batching layout; native solver here).
         let mut lock = SceneBatch::from_scene(&base, &batch_cfg, n, |_, _| {});
-        let s_lock = time(1, 3, || lock.run_lockstep(steps));
+        let s_lock = time(1, iters, || lock.run_lockstep(steps));
         let sps_seq = (n * steps) as f64 / s_seq.mean().max(1e-12);
         let sps_par = (n * steps) as f64 / s_par.mean().max(1e-12);
         let sps_lock = (n * steps) as f64 / s_lock.mean().max(1e-12);
@@ -58,5 +103,41 @@ fn main() {
         b.metric(&format!("batch{n}/speedup"), sps_par / sps_seq, "x");
         b.metric(&format!("batch{n}/lockstep_speedup"), sps_lock / sps_seq, "x");
     }
+
+    // ---- persistent pool vs spawn-per-call (→ BENCH_pool.json) ----
+    // The lockstep forward issues several pool calls per simulated step
+    // (stage barriers + one per fail-safe pass); with small scenes the
+    // spawn-per-call baseline pays OS thread creation on every one.
+    let mut pj = Json::obj();
+    pj.set("workers", workers);
+    let pool_iters = if smoke { 1 } else { 5 };
+    let configs: &[(&str, System, usize, usize)] = &[
+        // Acceptance config: 4 scenes × 64 steps, small scenes.
+        ("small_scene", small_system(), 4, if smoke { 8 } else { 64 }),
+        ("large_batch", pile_system(), if smoke { 4 } else { 16 }, if smoke { 4 } else { 25 }),
+    ];
+    for (label, base, scenes, steps) in configs {
+        let cfg = SimConfig { workers, dt: 1.0 / 100.0, ..Default::default() };
+        let (t_scoped, spawns_scoped) =
+            time_lockstep(base, &cfg, *scenes, *steps, pool_iters, &Pool::scoped(workers));
+        let (t_pers, spawns_pers) =
+            time_lockstep(base, &cfg, *scenes, *steps, pool_iters, &Pool::shared(workers));
+        let speedup = t_scoped / t_pers.max(1e-12);
+        b.metric(&format!("{label}/spawn_per_call_s"), t_scoped, "s");
+        b.metric(&format!("{label}/persistent_s"), t_pers, "s");
+        b.metric(&format!("{label}/persistent_speedup"), speedup, "x");
+        b.metric(&format!("{label}/spawn_per_call_spawns_per_step"), spawns_scoped, "threads");
+        b.metric(&format!("{label}/persistent_spawns_per_step"), spawns_pers, "threads");
+        let mut row = Json::obj();
+        row.set("scenes", *scenes)
+            .set("steps", *steps)
+            .set("spawn_per_call_s", t_scoped)
+            .set("persistent_s", t_pers)
+            .set("persistent_speedup", speedup)
+            .set("spawn_per_call_spawns_per_step", spawns_scoped)
+            .set("persistent_spawns_per_step", spawns_pers);
+        pj.set(label, row);
+    }
+    merge_section("BENCH_pool.json", "batch_throughput", pj);
     b.finish();
 }

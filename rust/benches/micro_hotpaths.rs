@@ -1,6 +1,8 @@
 //! Micro-benchmarks of the per-step hot paths (the §Perf working set):
 //! BVH build/refit, CCD narrowphase, zone solve, zone backward (QR vs
-//! dense), cloth implicit solve, and the PJRT call overhead.
+//! dense), cloth implicit solve, pool dispatch (persistent vs
+//! spawn-per-call, → `BENCH_pool.json`), and the PJRT call overhead.
+//! Run with `--test` for the CI smoke config.
 use diffsim::bodies::{Cloth, RigidBody, System};
 use diffsim::collision::zones::build_zones;
 use diffsim::collision::{detect, surfaces_from_system};
@@ -9,10 +11,56 @@ use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere, unit_box};
 use diffsim::solver::implicit_euler::cloth_implicit_step;
 use diffsim::solver::zone_solver::ZoneProblem;
-use diffsim::util::bench::{time, Bench};
+use diffsim::util::bench::{merge_section, time, Bench};
+use diffsim::util::json::Json;
+use diffsim::util::pool::{thread_spawns, Pool};
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let scale = |iters: usize| if smoke { 1 } else { iters };
     let mut b = Bench::new("micro_hotpaths");
+
+    // Pool dispatch overhead: one `map` over N small tasks — the shape
+    // of a per-pass zone-solve barrier. The persistent runtime hands
+    // indices to parked workers; the scoped baseline spawns and joins
+    // OS threads every call.
+    let w = Pool::machine_workers();
+    let busy = |i: usize| {
+        let mut acc = 0u64;
+        for k in 0..2_000u64 {
+            acc = acc.wrapping_mul(31).wrapping_add(k ^ i as u64);
+        }
+        acc
+    };
+    let persistent = Pool::shared(w);
+    persistent.map(8, busy); // warmup: global workers exist after this
+    let iters = scale(200);
+    let s_pers = time(5, iters, || {
+        std::hint::black_box(persistent.map(8, busy));
+    });
+    let spawns0 = thread_spawns();
+    persistent.map(8, busy);
+    let pers_spawns_per_call = (thread_spawns() - spawns0) as f64;
+    let scoped = Pool::scoped(w);
+    let s_scoped = time(5, iters, || {
+        std::hint::black_box(scoped.map(8, busy));
+    });
+    let spawns1 = thread_spawns();
+    scoped.map(8, busy);
+    let scoped_spawns_per_call = (thread_spawns() - spawns1) as f64;
+    b.report("pool/map8 persistent", &s_pers);
+    b.report("pool/map8 spawn-per-call", &s_scoped);
+    b.metric("pool/map8 persistent speedup", s_scoped.mean() / s_pers.mean().max(1e-12), "x");
+    b.metric("pool/map8 persistent spawns/call", pers_spawns_per_call, "threads");
+    b.metric("pool/map8 scoped spawns/call", scoped_spawns_per_call, "threads");
+    let mut pj = Json::obj();
+    pj.set("workers", w)
+        .set("map8_persistent_s", s_pers.mean())
+        .set("map8_spawn_per_call_s", s_scoped.mean())
+        .set("map8_persistent_speedup", s_scoped.mean() / s_pers.mean().max(1e-12))
+        .set("map8_persistent_spawns_per_call", pers_spawns_per_call)
+        .set("map8_spawn_per_call_spawns_per_call", scoped_spawns_per_call);
+    merge_section("BENCH_pool.json", "micro_hotpaths", pj);
 
     // BVH over a 1280-face mesh.
     let mesh = icosphere(1.0, 3);
@@ -26,11 +74,11 @@ fn main() {
             ])
         })
         .collect();
-    b.report("bvh/build 1280 faces", &time(3, 30, || {
+    b.report("bvh/build 1280 faces", &time(3, scale(30), || {
         std::hint::black_box(diffsim::collision::bvh::Bvh::build(&aabbs));
     }));
     let mut bvh = diffsim::collision::bvh::Bvh::build(&aabbs);
-    b.report("bvh/refit 1280 faces", &time(3, 100, || {
+    b.report("bvh/refit 1280 faces", &time(3, scale(100), || {
         bvh.refit(&aabbs);
     }));
 
@@ -49,7 +97,7 @@ fn main() {
         )));
     }
     let x1: Vec<Vec<Vec3>> = sys.rigids.iter().map(|r| r.world_verts()).collect();
-    b.report("detect/27-cube pile", &time(2, 20, || {
+    b.report("detect/27-cube pile", &time(2, scale(20), || {
         let surfs = surfaces_from_system(&sys, &x1, &[], 1e-3);
         std::hint::black_box(detect(&surfs, 1e-3));
     }));
@@ -63,22 +111,22 @@ fn main() {
         let zp = ZoneProblem::build(&sys, z, &rigid_q, &[], 1e-3);
         b.metric("zone/dofs", zp.n as f64, "n");
         b.metric("zone/constraints", zp.constraints.len() as f64, "m");
-        b.report("zone/solve", &time(2, 10, || {
+        b.report("zone/solve", &time(2, scale(10), || {
             std::hint::black_box(zp.solve());
         }));
         let sol = zp.solve();
         let g: Vec<f64> = (0..zp.n).map(|i| (i as f64 * 0.37).sin()).collect();
-        b.report("zone/backward-qr", &time(3, 50, || {
+        b.report("zone/backward-qr", &time(3, scale(50), || {
             std::hint::black_box(backward_qr(&zp, &sol, &g));
         }));
-        b.report("zone/backward-dense", &time(3, 50, || {
+        b.report("zone/backward-dense", &time(3, scale(50), || {
             std::hint::black_box(backward_dense(&zp, &sol, &g));
         }));
     }
 
     // Cloth implicit step, 33×33 grid.
     let cloth = Cloth::from_grid(cloth_grid(32, 32, 2.0, 2.0), 0.3, 3000.0, 2.0, 1.0);
-    b.report("cloth/implicit step 33x33", &time(2, 10, || {
+    b.report("cloth/implicit step 33x33", &time(2, scale(10), || {
         std::hint::black_box(cloth_implicit_step(&cloth, 0.005, Vec3::new(0.0, -9.8, 0.0)));
     }));
 
@@ -87,7 +135,7 @@ fn main() {
         let q = vec![0f32; 128 * 6];
         let p = vec![0f32; 128 * 3];
         rt.warmup("rigid_transform_b128").ok();
-        b.report("pjrt/rigid_transform_b128 call", &time(3, 30, || {
+        b.report("pjrt/rigid_transform_b128 call", &time(3, scale(30), || {
             std::hint::black_box(rt.call_f32("rigid_transform_b128", &[&q, &p]).unwrap());
         }));
     }

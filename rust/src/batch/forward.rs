@@ -159,7 +159,10 @@ mod tests {
         // Different contact histories across the batch (one scene
         // airborne, one in contact) exercise the skewed-pass-count path.
         let mut sims: Vec<Simulation> = [0.0, 0.7].iter().map(|&vx| drop_scene(vx)).collect();
-        let pool = Pool::new(2);
+        // The shared persistent pool the batch layer actually steps on —
+        // this doubles as the determinism assertion for lockstep
+        // trajectories under the persistent runtime.
+        let pool = Pool::global();
         for _ in 0..50 {
             step_lockstep(&pool, &mut sims);
         }

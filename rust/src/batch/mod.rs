@@ -80,9 +80,22 @@ impl<S> BatchRollout<S> {
 }
 
 impl SceneBatch {
-    /// Wrap pre-built simulations; `workers` sizes the batch pool.
+    /// Wrap pre-built simulations; `workers` budgets the batch's handle
+    /// to the process-wide persistent worker pool ([`Pool::shared`]).
     pub fn new(sims: Vec<Simulation>, workers: usize) -> SceneBatch {
-        SceneBatch { sims, pool: Pool::new(workers) }
+        SceneBatch { sims, pool: Pool::shared(workers) }
+    }
+
+    /// Replace the batch's pool handle (e.g. a dedicated [`Pool::new`]
+    /// for isolation, or the [`Pool::scoped`] spawn-per-call baseline in
+    /// the perf benches).
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
+    }
+
+    /// The pool handle this batch steps on.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
     }
 
     /// Clone one scene config into `n` scenes, applying a per-scene

@@ -13,6 +13,7 @@ pub mod metrics;
 use crate::diff::implicit::{backward_dense, backward_qr};
 use crate::runtime::{Runtime, ZoneBucket};
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::util::scratch;
 use anyhow::Result;
 use metrics::CoordMetrics;
 use std::sync::{Arc, Mutex};
@@ -129,10 +130,14 @@ impl Coordinator {
         items: &[ZoneBwItem<'_>],
     ) -> Result<Vec<Vec<f64>>> {
         let (bn, bm, bb) = (bucket.n, bucket.m, bucket.batch);
-        let mut mass = identity_padded_mass(bb, bn);
-        let mut jac = vec![0.0f32; bb * bm * bn];
-        let mut lam = vec![0.0f32; bb * bm];
-        let mut g = vec![0.0f32; bb * bn];
+        // Packing buffers come from the per-worker scratch arena: under
+        // the persistent pool the same allocations serve every bucket
+        // call this thread ever makes.
+        let mut mass = scratch::f32s(bb * bn * bn, 0.0);
+        fill_identity_padded_mass(&mut mass, bb, bn);
+        let mut jac = scratch::f32s(bb * bm * bn, 0.0);
+        let mut lam = scratch::f32s(bb * bm, 0.0);
+        let mut g = scratch::f32s(bb * bn, 0.0);
         for (k, &i) in chunk.iter().enumerate() {
             let it = &items[i];
             let zp = it.problem;
@@ -147,7 +152,7 @@ impl Coordinator {
                 g[k * bn + c] = it.grad_z[c] as f32;
             }
         }
-        let outs = self.runtime.call_f32(name, &[&mass, &jac, &lam, &g])?;
+        let outs = self.runtime.call_f32(name, &[&mass[..], &jac[..], &lam[..], &g[..]])?;
         let grad = &outs[0];
         let mut res = Vec::with_capacity(chunk.len());
         for (k, &i) in chunk.iter().enumerate() {
@@ -246,10 +251,12 @@ impl Coordinator {
         problems: &[&ZoneProblem],
     ) -> Result<Vec<ZoneSolution>> {
         let (bn, bm, bb) = (bucket.n, bucket.m, bucket.batch);
-        let mut mass = identity_padded_mass(bb, bn);
-        let mut jac = vec![0.0f32; bb * bm * bn];
-        let mut c0 = vec![1.0f32; bb * bm];
-        let mut q0 = vec![0.0f32; bb * bn];
+        let mut mass = scratch::f32s(bb * bn * bn, 0.0);
+        fill_identity_padded_mass(&mut mass, bb, bn);
+        let mut jac = scratch::f32s(bb * bm * bn, 0.0);
+        let mut c0 = scratch::f32s(bb * bm, 1.0);
+        let mut q0 = scratch::f32s(bb * bn, 0.0);
+        let mut cvals = scratch::f64s(0, 0.0);
         for (k, &i) in chunk.iter().enumerate() {
             let zp = problems[i];
             let n = zp.n;
@@ -259,12 +266,12 @@ impl Coordinator {
             for r in 0..n {
                 q0[k * bn + r] = zp.q0[r] as f32;
             }
-            let cvals = zp.eval(&zp.q0);
+            zp.eval_into(&zp.q0, cvals.as_vec());
             for r in 0..m {
                 c0[k * bm + r] = cvals[r] as f32;
             }
         }
-        let outs = self.runtime.call_f32(name, &[&mass, &jac, &c0, &q0])?;
+        let outs = self.runtime.call_f32(name, &[&mass[..], &jac[..], &c0[..], &q0[..]])?;
         let (qs, lams) = (&outs[0], &outs[1]);
         let mut res = Vec::with_capacity(chunk.len());
         for (k, &i) in chunk.iter().enumerate() {
@@ -309,10 +316,12 @@ impl Coordinator {
         let mut xs = Vec::with_capacity(n);
         let mut jacs = Vec::with_capacity(n);
         let mut start = 0;
+        let mut qbuf = scratch::f32s(0, 0.0);
+        let mut pbuf = scratch::f32s(0, 0.0);
         while start < n {
             let take = (n - start).min(bucket);
-            let mut qbuf = vec![0.0f32; bucket * 6];
-            let mut pbuf = vec![0.0f32; bucket * 3];
+            qbuf.refill(bucket * 6, 0.0);
+            pbuf.refill(bucket * 3, 0.0);
             for k in 0..take {
                 for c in 0..6 {
                     qbuf[k * 6 + c] = q[start + k][c] as f32;
@@ -322,7 +331,7 @@ impl Coordinator {
                 }
             }
             let name = format!("rigid_transform_b{bucket}");
-            let outs = self.runtime.call_f32(&name, &[&qbuf, &pbuf])?;
+            let outs = self.runtime.call_f32(&name, &[&qbuf[..], &pbuf[..]])?;
             let (xf, jf) = (&outs[0], &outs[1]);
             for k in 0..take {
                 xs.push([
@@ -367,16 +376,14 @@ fn zone_solve_name(b: ZoneBucket) -> String {
     format!("zone_solve_n{}_m{}_b{}", b.n, b.m, b.batch)
 }
 
-/// Padded bucket mass buffer with identity diagonals in every slot, so
-/// empty batch slots keep the batched solves well posed.
-fn identity_padded_mass(bb: usize, bn: usize) -> Vec<f32> {
-    let mut mass = vec![0.0f32; bb * bn * bn];
+/// Set identity diagonals in every slot of a zeroed padded bucket mass
+/// buffer, so empty batch slots keep the batched solves well posed.
+fn fill_identity_padded_mass(mass: &mut [f32], bb: usize, bn: usize) {
     for k in 0..bb {
         for r in 0..bn {
             mass[k * bn * bn + r * bn + r] = 1.0;
         }
     }
-    mass
 }
 
 /// Pack one zone's mass block and its constraint Jacobian (linearized
@@ -399,7 +406,8 @@ fn pack_mass_jac(
             mass[k * bn * bn + r * bn + c] = zp.mass[(r, c)] as f32;
         }
     }
-    let jrows = zp.jacobian(at);
+    let mut jrows = scratch::mat(0, 0);
+    zp.jacobian_into(at, &mut jrows);
     for r in 0..m {
         for c in 0..n {
             jac[k * bm * bn + r * bn + c] = jrows[(r, c)] as f32;

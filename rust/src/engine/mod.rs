@@ -126,8 +126,18 @@ pub struct StepState {
 
 impl Simulation {
     pub fn new(sys: System, cfg: SimConfig) -> Simulation {
-        let pool = Pool::new(cfg.workers);
+        // Handle to the process-wide persistent worker runtime, budgeted
+        // at cfg.workers — per-pass zone solves share one worker set
+        // with batch stepping and gradient gathers, and no OS threads
+        // are spawned on the stepping hot path.
+        let pool = Pool::shared(cfg.workers);
         Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, zone_hook: None, coordinator: None }
+    }
+
+    /// Replace this scene's worker pool (injection point for dedicated
+    /// or baseline pools; benches compare spawn-per-call vs persistent).
+    pub fn set_pool(&mut self, pool: Pool) {
+        self.pool = pool;
     }
 
     /// Advance one step of length `cfg.dt`: the thin sequential driver

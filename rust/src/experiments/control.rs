@@ -157,7 +157,7 @@ pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f
     let mut rng = Pcg32::new(seed);
     let mut net = Mlp::new(&[5, 50, 200, 4], &mut rng);
     let mut opt = Adam::new(net.n_params(), 3e-3);
-    let workers = Pool::default_for_machine().workers();
+    let workers = Pool::machine_workers();
     let cfg = SimConfig { record_tape: true, dt: 1.0 / 100.0, workers, ..Default::default() };
     let mut curve = Vec::new();
     for _ in 0..updates {

@@ -69,7 +69,7 @@ pub fn estimate_multi(
     let mut ms: Vec<Vec<f64>> = inits.iter().map(|&m| vec![m]).collect();
     let mut losses: Vec<Vec<f64>> = vec![Vec::new(); inits.len()];
     let mut cfg = collide_cfg(true);
-    cfg.workers = Pool::default_for_machine().workers();
+    cfg.workers = Pool::machine_workers();
     for _ in 0..iters {
         let mass_now = mass.clone();
         let mut batch =

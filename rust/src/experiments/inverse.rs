@@ -81,7 +81,7 @@ pub fn loss_only_batch(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
         return Vec::new();
     }
     let mut cfg = episode_cfg();
-    cfg.workers = Pool::default_for_machine().workers();
+    cfg.workers = Pool::machine_workers();
     let mut batch = SceneBatch::from_scene(&marble_scene(), &cfg, cands.len(), |_, _| {});
     batch.run_lockstep(SETTLE_STEPS); // settle into the pocket, untaped
     batch.rollout_lockstep(STEPS, |_| (), |_, i, s, sim| {

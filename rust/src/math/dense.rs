@@ -84,6 +84,39 @@ impl Mat {
         y
     }
 
+    /// Matrix–vector product into a caller-provided (scratch) buffer;
+    /// bitwise-identical to [`Mat::matvec`].
+    pub fn matvec_into(&self, x: &[f64], y: &mut Vec<f64>) {
+        assert_eq!(x.len(), self.cols);
+        y.clear();
+        y.resize(self.rows, 0.0);
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let mut s = 0.0;
+            for j in 0..self.cols {
+                s += row[j] * x[j];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// Resize to `rows × cols` and zero every entry, keeping the
+    /// backing allocation (scratch-arena reuse).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `o`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, o: &Mat) {
+        self.rows = o.rows;
+        self.cols = o.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&o.data);
+    }
+
     /// Transposed matrix–vector product Aᵀx.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows);

@@ -17,6 +17,7 @@ use crate::collision::zones::{entity_of, Entity, ImpactZone};
 use crate::collision::Impact;
 use crate::math::dense::Mat;
 use crate::math::{euler, Vec3};
+use crate::util::scratch;
 
 /// One term of a constraint row: how one of the four impact nodes maps
 /// to zone DOFs. Fixed nodes fold into the constant part.
@@ -129,7 +130,16 @@ impl ZoneProblem {
 
     /// Evaluate all constraints at stacked coordinates `q`.
     pub fn eval(&self, q: &[f64]) -> Vec<f64> {
-        self.constraints
+        let mut out = Vec::with_capacity(self.constraints.len());
+        self.eval_into(q, &mut out);
+        out
+    }
+
+    /// [`ZoneProblem::eval`] into a caller-provided (scratch) buffer —
+    /// same arithmetic, no allocation when the buffer has capacity.
+    pub fn eval_into(&self, q: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.extend(self.constraints
             .iter()
             .map(|c| {
                 let mut v = c.fixed_part - c.delta;
@@ -147,14 +157,22 @@ impl ZoneProblem {
                     }
                 }
                 v
-            })
-            .collect()
+            }));
     }
 
     /// Constraint Jacobian ∇C (m×n) at `q` — the paper's G·∇f.
     pub fn jacobian(&self, q: &[f64]) -> Mat {
+        let mut jac = Mat::zeros(0, 0);
+        self.jacobian_into(q, &mut jac);
+        jac
+    }
+
+    /// [`ZoneProblem::jacobian`] into a caller-provided (scratch)
+    /// matrix — resized and zeroed before accumulation, so results are
+    /// bitwise-identical to the allocating version.
+    pub fn jacobian_into(&self, q: &[f64], jac: &mut Mat) {
         let m = self.constraints.len();
-        let mut jac = Mat::zeros(m, self.n);
+        jac.reset(m, self.n);
         for (j, c) in self.constraints.iter().enumerate() {
             for t in &c.terms {
                 match *t {
@@ -176,10 +194,16 @@ impl ZoneProblem {
                 }
             }
         }
-        jac
     }
 
     /// Augmented-Lagrangian Gauss–Newton solve of Eq. 6.
+    ///
+    /// The per-iteration temporaries (constraint values, Jacobian, AL
+    /// Hessian, gradient) come from the thread-local scratch arena
+    /// ([`crate::util::scratch`]): under the persistent pool each worker
+    /// re-fills the same allocations across every zone it solves instead
+    /// of reallocating ~m×n + n² doubles per Gauss–Newton iteration.
+    /// Arithmetic is unchanged, so solutions stay bitwise-identical.
     pub fn solve(&self) -> ZoneSolution {
         let m = self.constraints.len();
         let mut q = self.q0.clone();
@@ -188,14 +212,20 @@ impl ZoneProblem {
         let mut prev_viol = f64::MAX;
         let tol = 1e-10;
         let max_outer = 40;
+        let mut c = scratch::f64s(0, 0.0);
+        let mut jac = scratch::mat(0, 0);
+        let mut h = scratch::mat(0, 0);
+        let mut dq = scratch::f64s(0, 0.0);
+        let mut grad = scratch::f64s(0, 0.0);
+        let mut trial: Vec<f64> = Vec::with_capacity(self.n);
         for outer in 0..max_outer {
             // Inner Gauss–Newton minimization of the AL function.
             for _ in 0..25 {
-                let c = self.eval(&q);
-                let jac = self.jacobian(&q);
+                self.eval_into(&q, c.as_vec());
+                self.jacobian_into(&q, &mut jac);
                 // grad = M(q−q0) − Jᵀ·max(0, λ − μ·c)
-                let dq: Vec<f64> = q.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
-                let mut grad = self.mass.matvec(&dq);
+                dq.fill_with(q.iter().zip(&self.q0).map(|(a, b)| a - b));
+                self.mass.matvec_into(&dq, grad.as_vec());
                 let mut active = vec![false; m];
                 for j in 0..m {
                     let force = (lambda[j] - mu * c[j]).max(0.0);
@@ -207,7 +237,7 @@ impl ZoneProblem {
                     }
                 }
                 // H = M + μ·Σ_active JᵀJ
-                let mut h = self.mass.clone();
+                h.copy_from(&self.mass);
                 for j in 0..m {
                     if active[j] {
                         for a in 0..self.n {
@@ -228,11 +258,17 @@ impl ZoneProblem {
                 };
                 // Backtracking line search on the AL merit function —
                 // Gauss–Newton steps through the rotation nonlinearity
-                // can otherwise overshoot wildly.
+                // can otherwise overshoot wildly. (Merit temporaries are
+                // fresh scratch takes per call, so the closure doesn't
+                // contend with the loop's held buffers.)
                 let merit = |qq: &[f64]| -> f64 {
-                    let cs = self.eval(qq);
-                    let d: Vec<f64> = qq.iter().zip(&self.q0).map(|(a, b)| a - b).collect();
-                    let mut val = 0.5 * crate::math::dense::dot(&d, &self.mass.matvec(&d));
+                    let mut cs = scratch::f64s(0, 0.0);
+                    self.eval_into(qq, cs.as_vec());
+                    let mut d = scratch::f64s(0, 0.0);
+                    d.fill_with(qq.iter().zip(&self.q0).map(|(a, b)| a - b));
+                    let mut md = scratch::f64s(0, 0.0);
+                    self.mass.matvec_into(&d, md.as_vec());
+                    let mut val = 0.5 * crate::math::dense::dot(&d, &md);
                     for (j, &cj) in cs.iter().enumerate() {
                         let t = lambda[j] - mu * cj;
                         if t > 0.0 {
@@ -247,10 +283,10 @@ impl ZoneProblem {
                 let mut alpha = 1.0;
                 let mut accepted = false;
                 for _ in 0..12 {
-                    let trial: Vec<f64> =
-                        q.iter().zip(&step).map(|(qi, si)| qi + alpha * si).collect();
+                    trial.clear();
+                    trial.extend(q.iter().zip(&step).map(|(qi, si)| qi + alpha * si));
                     if merit(&trial) <= m0 + 1e-12 * m0.abs() {
-                        q = trial;
+                        std::mem::swap(&mut q, &mut trial);
                         accepted = true;
                         break;
                     }
@@ -265,7 +301,7 @@ impl ZoneProblem {
                 }
             }
             // Multiplier update + convergence check.
-            let c = self.eval(&q);
+            self.eval_into(&q, c.as_vec());
             let mut viol: f64 = 0.0;
             for j in 0..m {
                 lambda[j] = (lambda[j] - mu * c[j]).max(0.0);
@@ -290,7 +326,7 @@ impl ZoneProblem {
             }
             prev_viol = viol;
         }
-        let c = self.eval(&q);
+        self.eval_into(&q, c.as_vec());
         let viol = c.iter().map(|&x| (-x).max(0.0)).fold(0.0, f64::max);
         ZoneSolution { q, lambda, converged: viol < 1e-6, outer_iters: max_outer, max_violation: viol }
     }
@@ -453,6 +489,19 @@ mod tests {
         // Multipliers: at least one active contact, all nonnegative.
         assert!(sol.lambda.iter().any(|&l| l > 0.0));
         assert!(sol.lambda.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn eval_and_jacobian_into_match_allocating_versions() {
+        let (_sys, zp) = penetrating_cube_problem();
+        let q: Vec<f64> = zp.q0.iter().map(|&x| x + 0.01).collect();
+        let mut c = vec![9.0; 3]; // stale contents must be overwritten
+        zp.eval_into(&q, &mut c);
+        assert_eq!(c, zp.eval(&q));
+        let mut jac = Mat::zeros(2, 2);
+        jac[(0, 0)] = 5.0; // stale entry must not leak into the accumulation
+        zp.jacobian_into(&q, &mut jac);
+        assert_eq!(jac, zp.jacobian(&q));
     }
 
     #[test]

@@ -65,6 +65,23 @@ impl Bench {
     }
 }
 
+/// Merge `rows` into the shared machine-readable results file at
+/// `path`, under top-level key `section` (read-modify-write, so several
+/// bench binaries can each contribute a section — e.g. both
+/// `batch_throughput` and `micro_hotpaths` write into
+/// `BENCH_pool.json` for perf-trajectory tracking).
+pub fn merge_section(path: &str, section: &str, rows: Json) {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .filter(|j| j.as_obj().is_some())
+        .unwrap_or_else(Json::obj);
+    root.set(section, rows);
+    if std::fs::write(path, root.pretty()).is_ok() {
+        println!("[merged section '{section}' into {path}]");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,6 +93,30 @@ mod tests {
         });
         assert_eq!(s.n, 5);
         assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn merge_section_read_modify_write() {
+        let path = std::env::temp_dir().join("diffsim_merge_section_test.json");
+        let path = path.to_str().unwrap();
+        let _ = std::fs::remove_file(path);
+        let mut a = Json::obj();
+        a.set("x", 1.0);
+        merge_section(path, "first", a);
+        let mut b = Json::obj();
+        b.set("y", 2.0);
+        merge_section(path, "second", b);
+        let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(j.get("first").unwrap().f64_or("x", 0.0), 1.0);
+        assert_eq!(j.get("second").unwrap().f64_or("y", 0.0), 2.0);
+        // Re-writing a section replaces it, not the whole file.
+        let mut c = Json::obj();
+        c.set("x", 3.0);
+        merge_section(path, "first", c);
+        let j = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        assert_eq!(j.get("first").unwrap().f64_or("x", 0.0), 3.0);
+        assert_eq!(j.get("second").unwrap().f64_or("y", 0.0), 2.0);
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

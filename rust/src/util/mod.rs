@@ -9,5 +9,6 @@ pub mod logging;
 pub mod memory;
 pub mod pool;
 pub mod quick;
+pub mod scratch;
 pub mod rng;
 pub mod timer;

@@ -1,29 +1,378 @@
-//! Thread-pool substrate (no tokio offline): scoped parallel map with an
-//! atomic work-stealing cursor. The coordinator uses it to solve
-//! independent impact zones in parallel.
+//! Persistent worker-pool runtime (no tokio/rayon offline): long-lived
+//! worker threads fed through a Mutex+Condvar submission queue, with the
+//! same atomic work-stealing cursor semantics the engine has always
+//! relied on. The coordinator uses it to solve independent impact zones
+//! in parallel; `batch::SceneBatch` uses it for cross-scene stepping and
+//! batched gradient gathers.
+//!
+//! The previous implementation spawned a fresh `thread::scope` per
+//! `map`/`map_mut`/`parallel_for` call. The lockstep forward issues
+//! several such calls per simulated step (stage barriers + one per
+//! fail-safe pass), so small scenes and large batches paid OS thread
+//! creation on the hottest path. Here workers are created once, park on
+//! a condvar while idle, and claim indices from submitted jobs — zero
+//! thread spawns per call after warmup (see [`thread_spawns`] and
+//! `benches/batch_throughput.rs` → `BENCH_pool.json`).
+//!
+//! # Execution model
+//!
+//! * A `map`/`map_mut` call packages the closure as a type-erased *job*
+//!   (index cursor + completion counter) and pushes it on the runtime's
+//!   queue. **The submitting thread participates**: it claims indices
+//!   alongside the workers and only blocks once the cursor is
+//!   exhausted. This is what makes nested/re-entrant maps safe (see
+//!   below) and keeps a one-budget handle exactly as fast as inline.
+//! * Results are written into per-index slots, so outputs are in index
+//!   order and bitwise-independent of scheduling — determinism is
+//!   identical to the old scoped pool and to sequential execution.
+//! * Each handle carries a *worker budget*: at most `workers()` threads
+//!   (submitter included) execute one job concurrently, so
+//!   `Pool::shared(2)` on a 16-thread runtime still honors a 2-worker
+//!   budget per call.
+//!
+//! # Sharing
+//!
+//! [`Pool::global`]/[`Pool::shared`] hand out handles to one
+//! process-wide runtime sized by [`Pool::machine_workers`]; the engine
+//! ([`crate::engine::Simulation`]), the batch layer
+//! ([`crate::batch::SceneBatch`]), and the lockstep forward/backward
+//! paths all draw from this single worker set. [`Pool::new`] builds a
+//! dedicated runtime (own threads, shut down on `Drop`) for isolation —
+//! mostly tests. [`Pool::scoped`] keeps the old spawn-per-call behavior
+//! as a measurable baseline for the perf benches.
+//!
+//! # Nested maps
+//!
+//! Calling `map`/`map_mut` from *inside* a pool task (same runtime) is
+//! supported: the inner submitter executes its own job's indices, so
+//! progress never depends on another worker being free — no deadlock by
+//! construction. Idle workers may join the inner job as usual.
+//!
+//! # Panics
+//!
+//! A panic inside a task does not kill the worker: it is caught, the
+//! remaining indices still run (matching the old `thread::scope` join
+//! semantics), and the first payload is re-thrown on the submitting
+//! thread once the job completes. The pool stays usable afterwards.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Fixed-size worker pool. Work is submitted as a parallel indexed map —
-/// the dominant pattern in the engine (N independent zones / bodies).
+/// Process-wide count of OS threads spawned by the pool layer —
+/// persistent workers and spawn-per-call baseline threads alike.
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+/// Total OS threads the pool layer has ever spawned. Benches read the
+/// delta across a measured phase to prove "zero spawns per step after
+/// warmup" for the persistent runtime.
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------- jobs
+
+/// Type- and lifetime-erased `Fn(usize)` executing one index of a map.
+///
+/// SAFETY: sound because the submitter blocks in [`run_on`] until
+/// `completed == n`, so the referenced closure and output slots outlive
+/// every dereference; workers never touch the pointer once the cursor
+/// is exhausted.
+struct TaskRef(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskRef {}
+unsafe impl Sync for TaskRef {}
+
+struct Job {
+    task: TaskRef,
+    n: usize,
+    /// Next unclaimed index — the work-stealing cursor that keeps
+    /// unequal zone sizes balanced across workers.
+    cursor: AtomicUsize,
+    /// Indices fully executed; `done` flips when it reaches `n`.
+    completed: AtomicUsize,
+    /// Executors currently inside the job (submitter included), capped
+    /// at `limit` so per-handle worker budgets stay honored on the
+    /// shared runtime.
+    active: AtomicUsize,
+    limit: usize,
+    /// First task panic, re-thrown on the submitting thread.
+    panic: Mutex<Option<Box<dyn Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Job {
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.n
+    }
+
+    /// Reserve an executor slot; fails when the job is exhausted or at
+    /// its concurrency budget.
+    fn try_join(&self) -> bool {
+        let mut a = self.active.load(Ordering::Relaxed);
+        loop {
+            if a >= self.limit || self.exhausted() {
+                return false;
+            }
+            match self.active.compare_exchange_weak(
+                a,
+                a + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return true,
+                Err(now) => a = now,
+            }
+        }
+    }
+
+    fn leave(&self) {
+        self.active.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Claim and execute indices until the cursor is exhausted.
+    fn run(&self) {
+        loop {
+            let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                break;
+            }
+            // SAFETY: see `TaskRef` — the submitter keeps the closure
+            // alive until every claimed index has completed.
+            let task = unsafe { &*self.task.0 };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            // AcqRel: the final increment synchronizes with every prior
+            // executor's release, so the submitter observes all writes.
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                *self.done.lock().unwrap() = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn wait(&self) {
+        let mut d = self.done.lock().unwrap();
+        while !*d {
+            d = self.done_cv.wait(d).unwrap();
+        }
+    }
+}
+
+// ------------------------------------------------------------- runtime
+
+struct Queue {
+    jobs: VecDeque<Arc<Job>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    cv: Condvar,
+}
+
+/// A set of persistent worker threads. Dropped (last handle) → shutdown
+/// flag + condvar broadcast; workers drain claimable work, exit, and are
+/// joined.
+struct PoolRuntime {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl PoolRuntime {
+    fn new(workers: usize) -> PoolRuntime {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), shutdown: false }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|k| {
+                let sh = shared.clone();
+                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                std::thread::Builder::new()
+                    .name(format!("pool-worker-{k}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        PoolRuntime { shared, handles: Mutex::new(handles) }
+    }
+
+    fn submit(&self, job: &Arc<Job>) {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.jobs.push_back(job.clone());
+        drop(q);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for PoolRuntime {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                // Exhausted jobs leave the queue here; any executors
+                // still inside them hold their own Arcs.
+                q.jobs.retain(|j| !j.exhausted());
+                if let Some(j) = q.jobs.iter().find(|j| j.try_join()) {
+                    break Arc::clone(j);
+                }
+                if q.shutdown {
+                    return;
+                }
+                // Park until new work (or shutdown) is announced.
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        job.run();
+        job.leave();
+    }
+}
+
+/// Submit `task` over `0..n` on `rt` with concurrency `budget`, with
+/// the submitting thread participating; blocks until every index has
+/// completed, then re-throws the first task panic, if any.
+fn run_on(rt: &Arc<PoolRuntime>, budget: usize, n: usize, task: &(dyn Fn(usize) + Sync)) {
+    // Lifetime erasure; sound because this function does not return
+    // until `completed == n` (see `TaskRef`).
+    let task: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(task) };
+    let job = Arc::new(Job {
+        task: TaskRef(task as *const _),
+        n,
+        cursor: AtomicUsize::new(0),
+        completed: AtomicUsize::new(0),
+        active: AtomicUsize::new(1), // the submitter's slot
+        limit: budget.min(n).max(1),
+        panic: Mutex::new(None),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
+    });
+    rt.submit(&job);
+    job.run();
+    job.leave();
+    job.wait();
+    if let Some(p) = job.panic.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+}
+
+fn global_runtime() -> &'static Arc<PoolRuntime> {
+    static GLOBAL: OnceLock<Arc<PoolRuntime>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(PoolRuntime::new(Pool::machine_workers())))
+}
+
+// ---------------------------------------------------------------- Pool
+
+#[derive(Clone)]
+enum Backend {
+    /// One worker: run on the caller, no queue traffic.
+    Inline,
+    /// Spawn-per-call `thread::scope` — the pre-persistent behavior,
+    /// kept as a measurable baseline for `BENCH_pool.json`.
+    Scoped { workers: usize },
+    /// Persistent runtime (dedicated or the process-wide one) with a
+    /// per-handle concurrency budget.
+    Persistent { rt: Arc<PoolRuntime>, budget: usize },
+}
+
+/// Handle to a worker pool. Cheap to clone; clones share the same
+/// worker threads. Work is submitted as a parallel indexed map — the
+/// dominant pattern in the engine (N independent zones / bodies /
+/// scenes).
+#[derive(Clone)]
 pub struct Pool {
-    workers: usize,
+    backend: Backend,
 }
 
 impl Pool {
+    /// Dedicated persistent pool with a `workers` concurrency budget:
+    /// spawns `workers − 1` owned threads once (the submitter is the
+    /// remaining executor) and shuts them down when the last handle is
+    /// dropped. `workers <= 1` degenerates to inline execution.
     pub fn new(workers: usize) -> Pool {
-        Pool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        if workers == 1 {
+            Pool { backend: Backend::Inline }
+        } else {
+            Pool {
+                backend: Backend::Persistent {
+                    rt: Arc::new(PoolRuntime::new(workers - 1)),
+                    budget: workers,
+                },
+            }
+        }
     }
 
-    /// Pool sized to the machine, capped (zone solves are memory-bound
-    /// beyond a few cores).
-    pub fn default_for_machine() -> Pool {
+    /// Handle to the process-wide shared runtime with a per-call
+    /// concurrency budget of `workers`. The runtime itself is created
+    /// on first use with [`Pool::machine_workers`] threads and lives for
+    /// the process. This is what [`crate::engine::Simulation`] and
+    /// [`crate::batch::SceneBatch`] use, so one worker set serves
+    /// per-pass zone solves, cross-scene stepping, and batched gradient
+    /// gathers.
+    pub fn shared(workers: usize) -> Pool {
+        if workers.max(1) == 1 {
+            Pool { backend: Backend::Inline }
+        } else {
+            Pool { backend: Backend::Persistent { rt: global_runtime().clone(), budget: workers } }
+        }
+    }
+
+    /// The process-wide pool at full machine budget —
+    /// `Pool::shared(Pool::machine_workers())`.
+    pub fn global() -> Pool {
+        Pool::shared(Pool::machine_workers())
+    }
+
+    /// Spawn-per-call baseline (the pre-persistent implementation):
+    /// every `map`/`map_mut` spawns `workers.min(n)` scoped threads and
+    /// joins them. Kept for benchmarking the persistent runtime against;
+    /// do not use on hot paths.
+    pub fn scoped(workers: usize) -> Pool {
+        Pool { backend: Backend::Scoped { workers: workers.max(1) } }
+    }
+
+    /// Worker count the machine supports, capped (zone solves are
+    /// memory-bound beyond a few cores). Use this instead of
+    /// constructing a pool just to read `.workers()`.
+    pub fn machine_workers() -> usize {
         let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Pool::new(n.min(16))
+        n.min(16)
     }
 
+    /// Pool sized to the machine — now a handle to the shared runtime
+    /// (no threads spawned per call; see [`Pool::shared`]).
+    pub fn default_for_machine() -> Pool {
+        Pool::global()
+    }
+
+    /// This handle's concurrency budget per submitted map.
     pub fn workers(&self) -> usize {
-        self.workers
+        match &self.backend {
+            Backend::Inline => 1,
+            Backend::Scoped { workers } => *workers,
+            Backend::Persistent { budget, .. } => *budget,
+        }
     }
 
     /// Parallel map over `0..n`; results returned in index order.
@@ -54,52 +403,90 @@ impl Pool {
         if n == 0 {
             return Vec::new();
         }
-        if self.workers == 1 || n == 1 {
+        if self.workers() == 1 || n == 1 {
             return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
         }
-        // Shared base pointer; safe to hand to workers because every
-        // index is visited by exactly one worker (cursor) and T: Send.
-        struct Base<T>(*mut T);
-        unsafe impl<T: Send> Sync for Base<T> {}
-        let base = Base(items.as_mut_ptr());
-        let cursor = AtomicUsize::new(0);
-        let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..self.workers.min(n))
-                .map(|_| {
-                    let cursor = &cursor;
+        match &self.backend {
+            Backend::Inline => unreachable!("workers() == 1 handled above"),
+            Backend::Scoped { workers } => scoped_map_mut(*workers, items, f),
+            Backend::Persistent { rt, budget } => {
+                let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+                {
+                    let items_base = SendPtr(items.as_mut_ptr());
+                    let out_base = SendPtr(out.as_mut_ptr());
                     let f = &f;
-                    let base = &base;
-                    scope.spawn(move || {
-                        let mut local = Vec::new();
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            if i >= n {
-                                break;
-                            }
-                            // SAFETY: `i` was claimed exactly once across
-                            // all workers, so this is the only live
-                            // reference to items[i].
-                            let item = unsafe { &mut *base.0.add(i) };
-                            local.push((i, f(i, item)));
-                        }
-                        local
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
-        });
-        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for part in parts {
-            for (i, v) in part {
-                out[i] = Some(v);
+                    let runner = move |i: usize| {
+                        // SAFETY: `i` was claimed exactly once across all
+                        // executors, so these are the only live references
+                        // to items[i] / out[i].
+                        let item = unsafe { &mut *items_base.0.add(i) };
+                        let r = f(i, item);
+                        unsafe { *out_base.0.add(i) = Some(r) };
+                    };
+                    run_on(rt, *budget, n, &runner);
+                }
+                out.into_iter().map(|o| o.expect("pool: missing result")).collect()
             }
         }
-        out.into_iter().map(|o| o.expect("pool: missing result")).collect()
     }
+}
+
+/// Shared base pointer; safe to hand to executors because every index
+/// is visited by exactly one executor (cursor) and T: Send.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// The old scoped implementation, kept verbatim as the spawn-per-call
+/// baseline ([`Pool::scoped`]).
+fn scoped_map_mut<T, R, F>(workers: usize, items: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let base = SendPtr(items.as_mut_ptr());
+    let cursor = AtomicUsize::new(0);
+    let parts: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers.min(n))
+            .map(|_| {
+                let cursor = &cursor;
+                let f = &f;
+                let base = &base;
+                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                scope.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        // SAFETY: `i` was claimed exactly once across
+                        // all workers, so this is the only live
+                        // reference to items[i].
+                        let item = unsafe { &mut *base.0.add(i) };
+                        local.push((i, f(i, item)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("pool worker panicked")).collect()
+    });
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, v) in part {
+            out[i] = Some(v);
+        }
+    }
+    out.into_iter().map(|o| o.expect("pool: missing result")).collect()
 }
 
 /// Run `f` over `0..n` in parallel for side effects (e.g. writes into
 /// disjoint pre-partitioned storage guarded by interior mutability).
+/// Routed through the process-wide persistent runtime with a `workers`
+/// budget — no threads are spawned per call.
 pub fn parallel_for<F>(workers: usize, n: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -114,26 +501,14 @@ where
         }
         return;
     }
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let cursor = &cursor;
-            let f = &f;
-            scope.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                f(i);
-            });
-        }
-    });
+    run_on(global_runtime(), workers, n, &|i| f(i));
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::Mutex;
+    use std::time::Duration;
 
     #[test]
     fn map_returns_in_order() {
@@ -215,5 +590,119 @@ mod tests {
             })
             .collect();
         assert_eq!(out, seq);
+    }
+
+    #[test]
+    fn all_backends_agree_bitwise() {
+        let work = |i: usize| {
+            let mut acc = 1.0f64;
+            for k in 0..(i * 31 + 7) {
+                acc = (acc * 1.000001 + k as f64).sin();
+            }
+            acc
+        };
+        let inline: Vec<f64> = (0..40).map(work).collect();
+        assert_eq!(Pool::scoped(4).map(40, work), inline);
+        assert_eq!(Pool::new(4).map(40, work), inline);
+        assert_eq!(Pool::shared(4).map(40, work), inline);
+        assert_eq!(Pool::global().map(40, work), inline);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let p = Pool::new(4);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            p.map(32, |i| {
+                if i == 17 {
+                    panic!("boom {i}");
+                }
+                i
+            })
+        }));
+        let payload = r.expect_err("panic must propagate to the submitter");
+        let msg = payload.downcast_ref::<String>().expect("String payload");
+        assert!(msg.contains("boom 17"), "payload: {msg}");
+        // The pool keeps serving work after a task panicked.
+        assert_eq!(p.map(8, |i| i * 2), (0..8).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn drop_shutdown_with_work_in_flight() {
+        // Drop one handle while a clone is mid-map: the runtime stays up
+        // for the in-flight job (clone holds it) and joins its workers
+        // only when the last handle goes — a hang here is the failure.
+        let p = Pool::new(3);
+        let p2 = p.clone();
+        let h = std::thread::spawn(move || {
+            p2.map(64, |i| {
+                std::thread::sleep(Duration::from_millis(1));
+                i
+            })
+        });
+        drop(p);
+        let out = h.join().expect("in-flight map must complete");
+        assert_eq!(out, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_map_from_inside_a_task() {
+        // Re-entrant submission on the same runtime: the inner submitter
+        // participates in its own job, so this cannot deadlock even with
+        // every worker busy in outer tasks.
+        let p = Pool::new(3);
+        let out = p.map(6, |i| p.map(5, move |j| i * 10 + j).into_iter().sum::<usize>());
+        let expect: Vec<usize> =
+            (0..6).map(|i| (0..5).map(|j| i * 10 + j).sum::<usize>()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn persistent_pool_spawns_no_threads_per_call() {
+        // THREAD_SPAWNS is process-global and sibling tests run
+        // concurrently, so assert with margins rather than equality:
+        // siblings contribute a handful of spawns (dedicated pools,
+        // the lazy global runtime, one scoped map), while 100
+        // spawn-per-call maps at 4 workers would add ~400.
+        let p = Pool::new(4); // dedicated workers spawn here, once
+        p.map(32, |i| i); // warmup
+        let s0 = thread_spawns();
+        for _ in 0..100 {
+            p.map(32, |i| i);
+        }
+        let persistent_delta = thread_spawns() - s0;
+        assert!(
+            persistent_delta < 100,
+            "persistent pool spawned per call: +{persistent_delta} threads over 100 maps"
+        );
+        // The scoped baseline does spawn per call — the counter sees it.
+        let s1 = thread_spawns();
+        let sc = Pool::scoped(4);
+        for _ in 0..100 {
+            sc.map(32, |i| i);
+        }
+        assert!(
+            thread_spawns() - s1 >= 300,
+            "scoped baseline must spawn per call"
+        );
+    }
+
+    #[test]
+    fn budget_caps_concurrency_on_shared_runtime() {
+        use std::sync::atomic::AtomicUsize;
+        let p = Pool::shared(2);
+        assert_eq!(p.workers(), 2);
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        p.map(64, |_| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_micros(200));
+            live.fetch_sub(1, Ordering::SeqCst);
+        });
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "budget 2 exceeded: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
     }
 }

@@ -1,0 +1,216 @@
+//! Per-worker reusable scratch buffers — the first slice of the
+//! ROADMAP "cross-scene memory pooling" item.
+//!
+//! The persistent pool ([`crate::util::pool`]) keeps worker threads
+//! alive across calls, so buffers parked in thread-local storage
+//! actually amortize: the coordinator's mass/Jacobian packing buffers
+//! (`zone_solve_batch` / `zone_backward_batch`) and the zone solver's
+//! per-iteration temporaries are re-filled in place instead of being
+//! reallocated on every call. The arena is keyed by the executing
+//! thread (each persistent worker owns one store), RAII guards return
+//! buffers on drop, and every take fully overwrites its buffer before
+//! use — so numerics are bitwise-identical to the allocating versions.
+//!
+//! Usage:
+//! ```
+//! let mut buf = diffsim::util::scratch::f64s(8, 0.0); // len 8, zeroed
+//! buf[3] = 2.5;
+//! // dropping `buf` parks the allocation for the next take
+//! ```
+
+use crate::math::dense::Mat;
+use std::cell::RefCell;
+use std::ops::{Deref, DerefMut};
+
+/// Retained buffers per kind; beyond this, returned buffers are freed
+/// (the engine's working set is a handful of mats + packing buffers per
+/// worker, so hoarding indicates a leak, not a workload).
+const KEEP: usize = 32;
+
+#[derive(Default)]
+struct Store {
+    f32s: Vec<Vec<f32>>,
+    f64s: Vec<Vec<f64>>,
+    mats: Vec<Mat>,
+    takes: u64,
+    reuses: u64,
+}
+
+thread_local! {
+    static STORE: RefCell<Store> = RefCell::new(Store::default());
+}
+
+/// (total takes, takes served from a parked buffer) for the calling
+/// thread — test/diagnostic visibility into reuse.
+pub fn stats() -> (u64, u64) {
+    STORE.with(|s| {
+        let s = s.borrow();
+        (s.takes, s.reuses)
+    })
+}
+
+macro_rules! buf_kind {
+    ($guard:ident, $take:ident, $elem:ty, $field:ident) => {
+        /// RAII scratch buffer; derefs to a slice and returns its
+        /// allocation to the thread-local arena on drop.
+        pub struct $guard(Vec<$elem>);
+
+        impl Deref for $guard {
+            type Target = [$elem];
+            fn deref(&self) -> &[$elem] {
+                &self.0
+            }
+        }
+
+        impl DerefMut for $guard {
+            fn deref_mut(&mut self) -> &mut [$elem] {
+                &mut self.0
+            }
+        }
+
+        impl $guard {
+            /// Replace the contents with `len` copies of `fill`
+            /// (capacity is kept).
+            pub fn refill(&mut self, len: usize, fill: $elem) {
+                self.0.clear();
+                self.0.resize(len, fill);
+            }
+
+            /// Clear, then append from an iterator (the `collect`
+            /// replacement for reused buffers).
+            pub fn fill_with(&mut self, it: impl Iterator<Item = $elem>) {
+                self.0.clear();
+                self.0.extend(it);
+            }
+
+            pub fn as_vec(&mut self) -> &mut Vec<$elem> {
+                &mut self.0
+            }
+        }
+
+        impl Drop for $guard {
+            fn drop(&mut self) {
+                let v = std::mem::take(&mut self.0);
+                STORE.with(|s| {
+                    let mut s = s.borrow_mut();
+                    if s.$field.len() < KEEP {
+                        s.$field.push(v);
+                    }
+                });
+            }
+        }
+
+        /// Take a scratch buffer of `len` copies of `fill` from the
+        /// calling thread's arena (allocating only on cold start).
+        pub fn $take(len: usize, fill: $elem) -> $guard {
+            let mut v = STORE.with(|s| {
+                let mut s = s.borrow_mut();
+                s.takes += 1;
+                match s.$field.pop() {
+                    Some(v) => {
+                        s.reuses += 1;
+                        v
+                    }
+                    None => Vec::new(),
+                }
+            });
+            v.clear();
+            v.resize(len, fill);
+            $guard(v)
+        }
+    };
+}
+
+buf_kind!(F32Buf, f32s, f32, f32s);
+buf_kind!(F64Buf, f64s, f64, f64s);
+
+/// RAII scratch matrix; derefs to [`Mat`] and returns the backing
+/// allocation to the thread-local arena on drop.
+pub struct MatBuf(Mat);
+
+impl Deref for MatBuf {
+    type Target = Mat;
+    fn deref(&self) -> &Mat {
+        &self.0
+    }
+}
+
+impl DerefMut for MatBuf {
+    fn deref_mut(&mut self) -> &mut Mat {
+        &mut self.0
+    }
+}
+
+impl Drop for MatBuf {
+    fn drop(&mut self) {
+        let m = std::mem::replace(&mut self.0, Mat::zeros(0, 0));
+        STORE.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.mats.len() < KEEP {
+                s.mats.push(m);
+            }
+        });
+    }
+}
+
+/// Take a zeroed `rows × cols` scratch matrix from the calling thread's
+/// arena.
+pub fn mat(rows: usize, cols: usize) -> MatBuf {
+    let mut m = STORE.with(|s| {
+        let mut s = s.borrow_mut();
+        s.takes += 1;
+        match s.mats.pop() {
+            Some(m) => {
+                s.reuses += 1;
+                m
+            }
+            None => Mat::zeros(0, 0),
+        }
+    });
+    m.reset(rows, cols);
+    MatBuf(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_are_reused_and_reset() {
+        // Drain any parked buffers so the reuse accounting is ours.
+        let pre: Vec<F64Buf> = (0..KEEP).map(|_| f64s(4, 7.0)).collect();
+        drop(pre);
+        let (t0, r0) = stats();
+        {
+            let mut a = f64s(16, 0.0);
+            a[5] = 3.5;
+        } // returned to the arena here
+        let b = f64s(16, 0.0);
+        assert!(b.iter().all(|&x| x == 0.0), "stale contents leaked through");
+        assert_eq!(b.len(), 16);
+        let (t1, r1) = stats();
+        assert_eq!(t1 - t0, 2);
+        assert!(r1 > r0, "second take must reuse the first allocation");
+    }
+
+    #[test]
+    fn mat_scratch_resizes_and_zeroes() {
+        {
+            let mut m = mat(3, 5);
+            m[(2, 4)] = 9.0;
+            assert_eq!((m.rows, m.cols), (3, 5));
+        }
+        let m = mat(5, 3);
+        assert_eq!((m.rows, m.cols), (5, 3));
+        assert!(m.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn f32_refill_and_fill_with() {
+        let mut v = f32s(3, 1.0);
+        v.refill(5, 2.0);
+        assert_eq!(&*v, &[2.0; 5]);
+        v.fill_with((0..3).map(|i| i as f32));
+        assert_eq!(&*v, &[0.0, 1.0, 2.0]);
+    }
+}

@@ -10,6 +10,7 @@ use diffsim::engine::{DiffMode, SimConfig, Simulation};
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
 use diffsim::runtime::Runtime;
+use diffsim::util::pool::Pool;
 use std::sync::Arc;
 
 fn ground() -> RigidBody {
@@ -178,6 +179,34 @@ fn lockstep_shared_coordinator_one_dispatch_per_step_pass_level() {
     // Artifact-less runtime: everything fell back native, nothing hit PJRT.
     assert_eq!(m.zone_solve_pjrt_calls, 0);
     assert_eq!(m.zone_solve_native_fallback, total_zones);
+}
+
+#[test]
+fn persistent_pool_lockstep_bitwise_matches_spawn_per_call_and_sequential() {
+    // The persistent worker runtime must not change a single bit of any
+    // trajectory: run the same lockstep batch on (a) the shared
+    // persistent pool, (b) the old spawn-per-call scoped baseline, and
+    // compare both against sequential per-scene stepping.
+    let vxs = [0.0, 0.6, -0.9];
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: Pool::machine_workers(), ..Default::default() };
+    let build = || {
+        SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+            sys.rigids[1] = falling_cube(vxs[i]);
+        })
+    };
+    let mut persistent = build();
+    persistent.set_pool(Pool::shared(cfg.workers));
+    persistent.run_lockstep(50);
+    let mut scoped = build();
+    scoped.set_pool(Pool::scoped(cfg.workers));
+    scoped.run_lockstep(50);
+    for (i, &vx) in vxs.iter().enumerate() {
+        let mut solo =
+            Simulation::new(drop_system(vx), SimConfig { dt: 1.0 / 100.0, ..Default::default() });
+        solo.run(50);
+        assert_scene_bitwise("persistent-pool", i, &persistent.sim(i).sys, &solo.sys);
+        assert_scene_bitwise("scoped-baseline", i, &scoped.sim(i).sys, &solo.sys);
+    }
 }
 
 /// The Fig-7-style taped cloth scene: 4x4 cloth pinned at two corners,
