@@ -85,5 +85,18 @@ fn main() {
             "scene {i}: x={x}, grad={g} points away from the target"
         );
     }
+
+    // The batch shares one cross-scene BatchArena: after a rollout the
+    // per-step contact/solver buffers have been checked out and reused
+    // instead of allocated per scene per step.
+    let a = batch.arena().stats();
+    println!(
+        "\narena: {} takes, {} reused ({:.0}% hit rate), {} retained",
+        a.takes,
+        a.hits,
+        100.0 * a.hit_rate(),
+        diffsim::util::memory::fmt_bytes(a.retained_bytes)
+    );
+    assert!(a.takes > 0, "pooled batch must route buffers through the arena");
     println!("\nbatch_rollout OK");
 }

@@ -1,0 +1,229 @@
+//! Batch-extended Fig-3 memory accounting: peak *logical* bytes of a
+//! multi-scene batch under three buffer regimes —
+//!
+//! * `alloc`     — no pooling, instrumented plain allocation
+//!                 (`BatchArena::tracked`): the transient live peak.
+//! * `per_scene` — one private pooled arena per scene: the
+//!                 `n_scenes × worst_case` retention the ROADMAP item
+//!                 calls out (every scene keeps its own warm buffers).
+//! * `shared`    — one cross-scene `BatchArena` (the `SceneBatch`
+//!                 default): retention bounded by the worker budget,
+//!                 not the population size.
+//!
+//! The headline acceptance row is `forward16/peak_ratio_shared_vs_per_scene`
+//! (expected well below 0.5 for a 16-scene batch on a 4-worker budget).
+//! A taped configuration additionally shows the tape bytes batched
+//! fig7/fig8-style rollouts now register under `MemCategory::Tape`.
+//! Results are merged into `BENCH_memory.json` (section `batch_memory`)
+//! via `bench::merge_section`; run with `--test` for the CI smoke
+//! config.
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{RigidBody, System};
+use diffsim::engine::backward::LossGrad;
+use diffsim::engine::SimConfig;
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, unit_box};
+use diffsim::util::arena::{ArenaStats, BatchArena, DEFAULT_RETAIN_CAP};
+use diffsim::util::bench::{merge_section, Bench};
+use diffsim::util::json::Json;
+use diffsim::util::memory::{fmt_bytes, MemCategory, MemTracker};
+use std::sync::Arc;
+
+/// Contact-rich scene: ground + a leaning 4-cube stack (same shape as
+/// the batch_throughput bench, so the two benches describe one workload).
+fn pile_system() -> System {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    for k in 0..4 {
+        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(
+            0.05 * k as f64,
+            0.6 + 1.05 * k as f64,
+            0.02 * k as f64,
+        )));
+    }
+    sys
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Mode {
+    Alloc,
+    PerScene,
+    Shared,
+}
+
+impl Mode {
+    fn label(self) -> &'static str {
+        match self {
+            Mode::Alloc => "alloc",
+            Mode::PerScene => "per_scene",
+            Mode::Shared => "shared",
+        }
+    }
+}
+
+struct Measured {
+    peak: usize,
+    cat_peak: [usize; 4],
+    tape_current: usize,
+    arena: ArenaStats,
+}
+
+/// Run `scenes` lockstep copies of the pile for `steps` steps on a
+/// `workers`-budget pool under `mode`, against a fresh tracker; `taped`
+/// runs a rollout_grad_lockstep (fig8-style) instead of a forward-only
+/// run (fig7-style).
+fn run_config(mode: Mode, scenes: usize, steps: usize, workers: usize, taped: bool) -> Measured {
+    let tracker = Arc::new(MemTracker::new());
+    let cfg = SimConfig { workers, dt: 1.0 / 100.0, ..Default::default() };
+    let mut sb = SceneBatch::from_scene(&pile_system(), &cfg, scenes, |i, sys| {
+        let body = sys.rigids[1].clone();
+        sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+    });
+    // Keep handles to every arena so stats survive the run.
+    let arenas: Vec<BatchArena> = match mode {
+        Mode::Alloc => {
+            let a = BatchArena::tracked_with(tracker.clone());
+            sb.set_arena(a.clone());
+            vec![a]
+        }
+        Mode::Shared => {
+            let a = BatchArena::pooled_with(DEFAULT_RETAIN_CAP, tracker.clone());
+            sb.set_arena(a.clone());
+            vec![a]
+        }
+        Mode::PerScene => {
+            let arenas: Vec<BatchArena> = (0..scenes)
+                .map(|_| BatchArena::pooled_with(DEFAULT_RETAIN_CAP, tracker.clone()))
+                .collect();
+            for (sim, a) in sb.sims_mut().iter_mut().zip(&arenas) {
+                sim.set_arena(a.clone());
+            }
+            arenas
+        }
+    };
+    if taped {
+        let _ = sb.rollout_grad_lockstep(
+            steps,
+            |_| (),
+            |_, _i, _s, _sim| {},
+            |_, sim, _| {
+                let x = sim.sys.rigids[1].translation().x;
+                let mut seed = LossGrad::zeros(sim);
+                seed.rigid_q[1][3] = 2.0 * x;
+                (x * x, seed)
+            },
+        );
+    } else {
+        sb.run_lockstep(steps);
+    }
+    let mut agg = ArenaStats::default();
+    for a in &arenas {
+        let s = a.stats();
+        agg.takes += s.takes;
+        agg.hits += s.hits;
+        agg.misses += s.misses;
+        agg.parks += s.parks;
+        agg.evictions += s.evictions;
+        agg.retained_bytes += s.retained_bytes;
+        agg.retained_buffers += s.retained_buffers;
+    }
+    Measured {
+        peak: tracker.peak(),
+        cat_peak: [
+            tracker.peak_cat(MemCategory::Tape),
+            tracker.peak_cat(MemCategory::Contacts),
+            tracker.peak_cat(MemCategory::Solver),
+            tracker.peak_cat(MemCategory::ArenaRetained),
+        ],
+        tape_current: tracker.current_cat(MemCategory::Tape),
+        arena: agg,
+    }
+}
+
+fn row_for(m: &Measured) -> Json {
+    let mut j = Json::obj();
+    j.set("peak_bytes", m.peak)
+        .set("tape_peak_bytes", m.cat_peak[0])
+        .set("contacts_peak_bytes", m.cat_peak[1])
+        .set("solver_peak_bytes", m.cat_peak[2])
+        .set("arena_retained_peak_bytes", m.cat_peak[3])
+        .set("tape_final_bytes", m.tape_current)
+        .set("arena_takes", m.arena.takes)
+        .set("arena_hits", m.arena.hits)
+        .set("arena_misses", m.arena.misses)
+        .set("arena_evictions", m.arena.evictions)
+        .set("arena_hit_rate", m.arena.hit_rate())
+        .set("arena_retained_bytes", m.arena.retained_bytes)
+        .set("arena_retained_buffers", m.arena.retained_buffers);
+    j
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test" || a == "--smoke");
+    let mut b = Bench::new("batch_memory");
+    // Memory scales with the worker budget under the shared arena, so
+    // pin it: 16 scenes stepped 4-wide is the acceptance geometry.
+    let workers = 4;
+    let configs: &[(&str, usize, usize, bool)] = if smoke {
+        &[("forward16", 8, 10, false), ("taped4", 2, 6, true)]
+    } else {
+        &[("forward16", 16, 50, false), ("taped4", 4, 25, true)]
+    };
+    let mut section = Json::obj();
+    section.set("workers", workers).set("smoke", smoke);
+    for &(name, scenes, steps, taped) in configs {
+        let mut cj = Json::obj();
+        cj.set("scenes", scenes).set("steps", steps).set("taped", taped);
+        let mut peaks = [0usize; 3];
+        for (k, mode) in [Mode::Alloc, Mode::PerScene, Mode::Shared].into_iter().enumerate() {
+            let m = run_config(mode, scenes, steps, workers, taped);
+            peaks[k] = m.peak;
+            b.metric(
+                &format!("{name}/{}/peak_logical", mode.label()),
+                m.peak as f64,
+                "bytes",
+            );
+            if mode != Mode::Alloc {
+                b.metric(
+                    &format!("{name}/{}/arena_hit_rate", mode.label()),
+                    m.arena.hit_rate(),
+                    "frac",
+                );
+                b.metric(
+                    &format!("{name}/{}/arena_retained", mode.label()),
+                    m.arena.retained_bytes as f64,
+                    "bytes",
+                );
+            }
+            if taped {
+                b.metric(
+                    &format!("{name}/{}/tape_peak", mode.label()),
+                    m.cat_peak[0] as f64,
+                    "bytes",
+                );
+            }
+            println!(
+                "  {name}/{}: peak {} (tape {}, contacts {}, solver {}, retained {})",
+                mode.label(),
+                fmt_bytes(m.peak),
+                fmt_bytes(m.cat_peak[0]),
+                fmt_bytes(m.cat_peak[1]),
+                fmt_bytes(m.cat_peak[2]),
+                fmt_bytes(m.cat_peak[3]),
+            );
+            cj.set(mode.label(), row_for(&m));
+        }
+        let vs_per_scene = peaks[2] as f64 / peaks[1].max(1) as f64;
+        let vs_alloc = peaks[2] as f64 / peaks[0].max(1) as f64;
+        b.metric(&format!("{name}/peak_ratio_shared_vs_per_scene"), vs_per_scene, "x");
+        b.metric(&format!("{name}/peak_ratio_shared_vs_alloc"), vs_alloc, "x");
+        cj.set("peak_ratio_shared_vs_per_scene", vs_per_scene)
+            .set("peak_ratio_shared_vs_alloc", vs_alloc);
+        section.set(name, cj);
+    }
+    merge_section("BENCH_memory.json", "batch_memory", section);
+    b.finish();
+}

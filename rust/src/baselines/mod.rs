@@ -1,6 +1,9 @@
 //! Comparator systems built in-repo (DESIGN.md §6 substitutions):
-//! an MLS-MPM particle/grid simulator standing in for ChainQueen /
-//! DiffTaichi (Fig. 3), and a capsule-grid cloth standing in for
-//! MuJoCo's cloth representation (Fig. 6 / Fig. 10).
+//! an MLS-MPM particle/grid simulator ([`mpm`]) standing in for
+//! ChainQueen / DiffTaichi (Fig. 3), and a capsule-grid cloth
+//! ([`capsule_cloth`]) standing in for MuJoCo's cloth representation
+//! (Fig. 6 / Fig. 10). The MPM baseline reports its tape bytes through
+//! an uncategorized [`crate::util::memory::MemTracker`], the quantity
+//! the Fig-3 memory comparison plots against ours.
 pub mod capsule_cloth;
 pub mod mpm;

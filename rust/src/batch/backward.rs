@@ -13,6 +13,13 @@
 //!   (zones per pass per scene are few; zones per pass per *batch* fill
 //!   buckets). Passes stay sequential within a scene because a pass
 //!   group's scatter feeds the next group's gather.
+//!
+//! Either strategy walks tapes read-only: tape records (and their
+//! arena-loaned zone buffers) are only released afterwards, by
+//! `Simulation::clear_tape` at the start of the next
+//! [`crate::batch::SceneBatch::rollout_grad`]. Gradients are
+//! bitwise-identical whether the tapes were recorded with pooled or
+//! plain buffers (asserted in `rust/tests/integration_batch.rs`).
 
 use crate::coordinator::ZoneBwItem;
 use crate::diff::tape::Grads;

@@ -19,6 +19,18 @@
 //! per-zone code on the exact same problems in the exact same per-scene
 //! order, so lockstep trajectories are bitwise-identical to sequential
 //! per-scene [`crate::engine::Simulation::run`].
+//!
+//! Memory: each stage runs through the scene's own
+//! [`crate::engine::Simulation`] primitives, so the batch's shared
+//! [`BatchArena`](crate::util::arena::BatchArena) is exercised from
+//! inside `detect_and_zone`/`scatter`/`commit` without this module
+//! holding any buffers itself. At most `min(worker budget, n_scenes)`
+//! scenes execute a stage concurrently, which is what bounds the
+//! arena's live checkout count (and hence a warm batch's peak buffer
+//! memory) regardless of population size. Panics from a scene's stage
+//! propagate through the pool ([`Pool::map`] semantics) after the job
+//! drains; arena guards return their buffers during unwinding, so the
+//! arena stays consistent.
 
 use crate::coordinator::Coordinator;
 use crate::engine::{Simulation, StepState};

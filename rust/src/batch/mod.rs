@@ -26,6 +26,21 @@
 //! level under a shared coordinator, or one cross-scene pool map
 //! otherwise. Native-solver trajectories stay bitwise-identical to
 //! sequential per-scene stepping.
+//!
+//! # Memory
+//!
+//! Every batch installs one shared
+//! [`BatchArena`](crate::util::arena::BatchArena) across its scenes, so
+//! the per-step contact lists, zone solver state, and (between
+//! rollouts) tape buffers are checked out of a common pool instead of
+//! being allocated per scene: a warm batch holds roughly one buffer set
+//! per *concurrently stepping* scene — bounded by the pool's worker
+//! budget, not the population size — where independent scenes would
+//! hold `n_scenes × worst_case`. Pooling is content-neutral
+//! (bitwise-identical trajectories and gradients, asserted in
+//! `rust/tests/integration_batch.rs`); [`SceneBatch::set_arena`] swaps
+//! in a disabled/tracked/per-scene configuration for baselines, and the
+//! `batch_memory` bench reports the peaks to `BENCH_memory.json`.
 
 pub mod backward;
 pub mod forward;
@@ -34,12 +49,14 @@ use crate::bodies::System;
 use crate::diff::tape::Grads;
 use crate::engine::backward::LossGrad;
 use crate::engine::{SimConfig, Simulation};
+use crate::util::arena::BatchArena;
 use crate::util::pool::Pool;
 
 /// A batch of independent scenes advanced in lockstep.
 pub struct SceneBatch {
     sims: Vec<Simulation>,
     pool: Pool,
+    arena: BatchArena,
 }
 
 /// Result of a taped batch rollout: per-scene losses, gradients, and the
@@ -82,8 +99,16 @@ impl<S> BatchRollout<S> {
 impl SceneBatch {
     /// Wrap pre-built simulations; `workers` budgets the batch's handle
     /// to the process-wide persistent worker pool ([`Pool::shared`]).
+    /// Installs one shared [`BatchArena`] across the scenes (replacing
+    /// any arena they held) — pooling is content-neutral, so this never
+    /// changes trajectories; use [`SceneBatch::set_arena`] to opt out.
     pub fn new(sims: Vec<Simulation>, workers: usize) -> SceneBatch {
-        SceneBatch { sims, pool: Pool::shared(workers) }
+        let mut sb = SceneBatch { sims, pool: Pool::shared(workers), arena: BatchArena::new() };
+        let arena = sb.arena.clone();
+        for sim in &mut sb.sims {
+            sim.set_arena(arena.clone());
+        }
+        sb
     }
 
     /// Replace the batch's pool handle (e.g. a dedicated [`Pool::new`]
@@ -96,6 +121,25 @@ impl SceneBatch {
     /// The pool handle this batch steps on.
     pub fn pool(&self) -> &Pool {
         &self.pool
+    }
+
+    /// Install `arena` on every scene (and remember it as the batch's):
+    /// [`BatchArena::disabled`] restores plain per-scene allocation,
+    /// [`BatchArena::tracked`] keeps accounting without pooling. For
+    /// per-scene arenas (the `n_scenes × worst_case` baseline the
+    /// `batch_memory` bench measures), set arenas directly through
+    /// [`SceneBatch::sims_mut`] + `Simulation::set_arena` instead.
+    pub fn set_arena(&mut self, arena: BatchArena) {
+        for sim in &mut self.sims {
+            sim.set_arena(arena.clone());
+        }
+        self.arena = arena;
+    }
+
+    /// The arena installed by the batch (scenes may have been re-pointed
+    /// individually via `Simulation::set_arena`).
+    pub fn arena(&self) -> &BatchArena {
+        &self.arena
     }
 
     /// Clone one scene config into `n` scenes, applying a per-scene

@@ -1,7 +1,9 @@
-//! Dynamic bodies (§4 of the paper): rigid bodies with 6-DOF generalized
-//! coordinates `q = [r, t]` and cloth with 3-DOF nodes, plus the `System`
-//! container that packs all coordinates into one state vector
-//! `q = [q₁ᵀ, …, qₙᵀ]ᵀ`.
+//! Dynamic bodies (§4 of the paper): rigid bodies ([`RigidBody`]) with
+//! 6-DOF generalized coordinates `q = [r, t]` and cloth ([`Cloth`]) with
+//! 3-DOF nodes, plus the [`System`] container that packs all coordinates
+//! into one state vector `q = [q₁ᵀ, …, qₙᵀ]ᵀ`. [`NodeRef`] names one
+//! surface node — the unit the collision layer
+//! ([`crate::collision`]) works in.
 pub mod cloth;
 pub mod rigid;
 

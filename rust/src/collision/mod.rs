@@ -1,6 +1,16 @@
-//! Scalable collision handling (paper §5): BVH broadphase over swept face
-//! bounds, continuous + proximity narrowphase producing `Impact`s
-//! (Eq. 4), grouped into independent impact zones (`zones`).
+//! Scalable collision handling (paper §5): BVH broadphase ([`bvh`]) over
+//! swept face bounds ([`aabb`]), continuous + proximity narrowphase
+//! ([`ccd`]) producing [`Impact`]s (Eq. 4), grouped into independent
+//! impact zones ([`zones`]).
+//!
+//! The detection pass's candidate/contact lists (broadphase face pairs,
+//! raw and deduplicated impacts) dominate its transient memory. They can
+//! be checked out from a cross-scene
+//! [`BatchArena`](crate::util::arena::BatchArena) via [`detect_in`] so a
+//! batch reuses one warm set of buffers instead of allocating per scene
+//! per step; [`detect`] is the plain-allocation wrapper. Both produce
+//! bitwise-identical impacts in identical order — pooling only changes
+//! which allocation backs a list, never its contents.
 pub mod aabb;
 pub mod bvh;
 pub mod ccd;
@@ -8,6 +18,8 @@ pub mod zones;
 
 use crate::bodies::{NodeRef, System};
 use crate::math::Vec3;
+use crate::util::arena::{ArenaVec, BatchArena};
+use crate::util::memory::MemCategory;
 use aabb::Aabb;
 use bvh::Bvh;
 use std::collections::HashSet;
@@ -178,9 +190,24 @@ pub struct DetectStats {
 /// Full collision detection across all surfaces. Returns every VF and EE
 /// impact between distinct bodies, plus cloth self-collisions.
 pub fn detect(surfaces: &[Surface], thickness: f64) -> (Vec<Impact>, DetectStats) {
-    let mut impacts = Vec::new();
+    let (impacts, stats) = detect_in(surfaces, thickness, &BatchArena::disabled());
+    (impacts.into_inner(), stats)
+}
+
+/// [`detect`] with the candidate/contact lists checked out from a
+/// [`BatchArena`]: the face-pair buffer, the raw impact accumulator, and
+/// the returned deduplicated impact list all come from (and return to)
+/// `arena`, charged to [`MemCategory::Contacts`]. With
+/// [`BatchArena::disabled`] this *is* [`detect`]; impacts are
+/// bitwise-identical in identical order in every mode.
+pub fn detect_in(
+    surfaces: &[Surface],
+    thickness: f64,
+    arena: &BatchArena,
+) -> (ArenaVec<Impact>, DetectStats) {
+    let mut raw: ArenaVec<Impact> = arena.vec(0, MemCategory::Contacts);
     let mut stats = DetectStats::default();
-    let mut face_pairs: Vec<(u32, u32)> = Vec::new();
+    let mut face_pairs: ArenaVec<(u32, u32)> = arena.vec(0, MemCategory::Contacts);
     for i in 0..surfaces.len() {
         for j in i + 1..surfaces.len() {
             let (a, b) = (&surfaces[i], &surfaces[j]);
@@ -194,7 +221,7 @@ pub fn detect(surfaces: &[Surface], thickness: f64) -> (Vec<Impact>, DetectStats
             face_pairs.clear();
             a.bvh.pairs_with(&b.bvh, &mut face_pairs);
             stats.face_pairs += face_pairs.len();
-            narrowphase_pair(a, b, &face_pairs, thickness, &mut impacts, &mut stats);
+            narrowphase_pair(a, b, &face_pairs, thickness, &mut raw, &mut stats);
         }
     }
     // Cloth self-collision.
@@ -211,7 +238,7 @@ pub fn detect(surfaces: &[Surface], thickness: f64) -> (Vec<Impact>, DetectStats
                 })
                 .collect();
             stats.face_pairs += filtered.len();
-            narrowphase_pair(s, s, &filtered, thickness, &mut impacts, &mut stats);
+            narrowphase_pair(s, s, &filtered, thickness, &mut raw, &mut stats);
         }
     }
     // Deduplicate VF impacts: a vertex near the shared edge of two
@@ -219,7 +246,11 @@ pub fn detect(surfaces: &[Surface], thickness: f64) -> (Vec<Impact>, DetectStats
     // duplicated constraint rows that make the zone KKT system singular.
     // Keep one impact per (vertex, opposing body, quantized normal),
     // preferring the earliest collision time.
-    let impacts = dedup_vf(impacts);
+    let mut impacts: ArenaVec<Impact> = arena.vec(raw.len(), MemCategory::Contacts);
+    dedup_vf_into(&raw, &mut impacts);
+    raw.recharge();
+    face_pairs.recharge();
+    impacts.recharge();
     stats.impacts = impacts.len();
     (impacts, stats)
 }
@@ -232,11 +263,12 @@ fn body_of(n: NodeRef) -> BodyId {
 }
 
 /// One VF impact per (vertex, opposing body, ~normal); earliest t wins.
-fn dedup_vf(impacts: Vec<Impact>) -> Vec<Impact> {
-    let mut out: Vec<Impact> = Vec::with_capacity(impacts.len());
+/// Writes into `out` (assumed empty) so the output list can be a reused
+/// arena buffer.
+fn dedup_vf_into(impacts: &[Impact], out: &mut Vec<Impact>) {
     let mut best: std::collections::HashMap<(NodeRef, BodyId, [i64; 3]), usize> =
         std::collections::HashMap::new();
-    for im in impacts {
+    for &im in impacts {
         let is_vf = im.w[3] == 1.0;
         if !is_vf {
             out.push(im);
@@ -261,7 +293,6 @@ fn dedup_vf(impacts: Vec<Impact>) -> Vec<Impact> {
             }
         }
     }
-    out
 }
 
 fn narrowphase_pair(

@@ -6,6 +6,13 @@
 //! its vertices are tied through its 6 DOFs), a cloth node is one entity.
 //! Fixed entities (frozen bodies, pinned nodes) never merge zones — they
 //! contribute constraint geometry but no optimization variables.
+//!
+//! Zones copy their impacts out of the detection pass's contact list, so
+//! they are part of the per-step contact memory the batch-extended Fig-3
+//! accounting attributes to
+//! [`MemCategory::Contacts`](crate::util::memory::MemCategory):
+//! [`ImpactZone::bytes`]/[`zones_bytes`] report the logical bytes the
+//! engine charges for the zones of one fail-safe pass.
 
 use super::Impact;
 use crate::bodies::{NodeRef, System};
@@ -112,6 +119,19 @@ impl ImpactZone {
     pub fn n_constraints(&self) -> usize {
         self.impacts.len()
     }
+
+    /// Logical bytes held by this zone's impact and entity lists
+    /// (contact-memory accounting; capacity, not length, since that is
+    /// what the allocator hands out).
+    pub fn bytes(&self) -> usize {
+        self.impacts.capacity() * std::mem::size_of::<Impact>()
+            + self.entities.capacity() * std::mem::size_of::<Entity>()
+    }
+}
+
+/// Total [`ImpactZone::bytes`] of one fail-safe pass's zones.
+pub fn zones_bytes(zones: &[ImpactZone]) -> usize {
+    zones.iter().map(|z| z.bytes()).sum()
 }
 
 /// Partition impacts into independent zones (union–find over shared

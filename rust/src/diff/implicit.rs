@@ -7,8 +7,10 @@
 //! with J = ∇C(z*) (= −G∇f in the paper's notation). Linearizing f
 //! around z*, the adjoint system for a loss L(z*) is
 //!
+//! ```text
 //!   [ M̂      Jᵀ·D(λ*) ] [u_z]   [∂L/∂z]
 //!   [ −J     D(C)     ] [u_λ] = [  0   ]        (paper Eq. 9)
+//! ```
 //!
 //! and ∂L/∂q = M̂·u_z (Eq. 10). Two backends:
 //!

@@ -2,11 +2,22 @@
 //! step in reverse. The engine records one [`StepRecord`] per step (when
 //! `record_tape` is on); [`crate::engine::backward`] walks them in
 //! reverse order.
+//!
+//! Tape storage is the dominant *retained* memory of a taped rollout
+//! (the paper's Fig-3 quantity): each record charges its
+//! [`StepRecord::bytes`] to
+//! [`MemCategory::Tape`](crate::util::memory::MemCategory) when pushed
+//! and releases them when the tape is cleared. Between rollouts the
+//! records' zone buffers go back to the scene's
+//! [`BatchArena`](crate::util::arena::BatchArena) through
+//! [`StepRecord::recycle`], so repeated `rollout_grad` calls on a batch
+//! re-fill warm buffers instead of reallocating every tape.
 
 use crate::math::dense::Mat;
 use crate::math::sparse::Csr;
 use crate::math::Vec3;
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::util::arena::BatchArena;
 
 /// Per-cloth data retained from the implicit-Euler solve.
 pub struct ClothSolveRec {
@@ -70,6 +81,26 @@ impl StepRecord {
         }
         b
     }
+
+    /// Return this record's reusable zone buffers (problem `q0`/M̂,
+    /// solution `q`/λ, and the `ZoneRec` list itself) to `arena` for the
+    /// next rollout. Category charges are the caller's job (the engine
+    /// releases the record's `Tape` bytes before recycling); with a
+    /// disabled arena this is exactly a drop.
+    pub fn recycle(self, arena: &BatchArena) {
+        let StepRecord { zones, .. } = self;
+        let mut zones = zones;
+        for zr in zones.drain(..) {
+            let ZoneRec { problem, solution, .. } = zr;
+            let ZoneProblem { q0, mass, .. } = problem;
+            arena.park_vec(q0);
+            arena.park_vec(mass.data);
+            let ZoneSolution { q, lambda, .. } = solution;
+            arena.park_vec(q);
+            arena.park_vec(lambda);
+        }
+        arena.park_vec(zones);
+    }
 }
 
 /// Gradient accumulators produced by the backward pass.
@@ -82,9 +113,9 @@ pub struct Grads {
     pub cloth_x0: Vec<Vec<Vec3>>,
     pub cloth_v0: Vec<Vec<Vec3>>,
     /// ∂L/∂(external world-frame force on rigid body b at step s):
-    /// indexed [step][body].
+    /// indexed `[step][body]`.
     pub rigid_force: Vec<Vec<Vec3>>,
-    /// ∂L/∂(external force on cloth c node i at step s): [step][cloth][node].
+    /// ∂L/∂(external force on cloth c node i at step s): `[step][cloth][node]`.
     pub cloth_force: Vec<Vec<Vec<Vec3>>>,
     /// ∂L/∂(mass of rigid body b) assuming uniform density scaling.
     pub rigid_mass: Vec<f64>,

@@ -1,18 +1,25 @@
 //! The simulation engine (paper §3, Fig. 1): time integration → continuous
 //! collision detection → impact-zone resolution, with a tape for
-//! end-to-end backpropagation.
+//! end-to-end backpropagation ([`backward`]). [`Simulation`] drives the
+//! staged step primitives documented on [`StepState`]; scene JSON
+//! loading lives in [`scene`]. Per-step buffers come from the scene's
+//! [`BatchArena`] (disabled/plain for standalone scenes, shared across
+//! a [`crate::batch::SceneBatch`]) with logical-byte accounting in
+//! [`crate::util::memory`].
 pub mod backward;
 pub mod scene;
 
 use crate::bodies::System;
-use crate::collision::zones::build_zones;
-use crate::collision::{detect, surfaces_from_system, DetectStats};
+use crate::collision::zones::{build_zones, zones_bytes};
+use crate::collision::{detect_in, surfaces_from_system, DetectStats};
 use crate::diff::tape::{ClothSolveRec, RigidSolveRec, StepRecord, ZoneRec};
 use crate::math::sparse::Triplets;
 use crate::math::{euler, Vec3};
 use crate::solver::implicit_euler::{cloth_implicit_step, rigid_step_damped};
 use crate::solver::lcp::merge_zones;
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::util::arena::BatchArena;
+use crate::util::memory::MemCategory;
 use crate::util::pool::Pool;
 
 /// How zone-solve backward passes are computed (§6 / Table 2).
@@ -90,6 +97,11 @@ pub struct Simulation {
     pub steps: usize,
     pub last_stats: StepStats,
     pool: Pool,
+    /// Buffer source for per-step contact/solver/tape allocations:
+    /// [`BatchArena::disabled`] (plain allocation) for standalone
+    /// scenes; [`crate::batch::SceneBatch`] installs one shared pooled
+    /// arena across its scenes. Content-neutral either way.
+    arena: BatchArena,
     /// Optional external zone-solver hook; receives the problems and
     /// returns solutions (testing / alternative solvers).
     #[allow(clippy::type_complexity)]
@@ -131,13 +143,29 @@ impl Simulation {
         // with batch stepping and gradient gathers, and no OS threads
         // are spawned on the stepping hot path.
         let pool = Pool::shared(cfg.workers);
-        Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, zone_hook: None, coordinator: None }
+        Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, arena: BatchArena::disabled(), zone_hook: None, coordinator: None }
     }
 
     /// Replace this scene's worker pool (injection point for dedicated
     /// or baseline pools; benches compare spawn-per-call vs persistent).
     pub fn set_pool(&mut self, pool: Pool) {
         self.pool = pool;
+    }
+
+    /// Replace this scene's buffer arena (cross-scene pooling when the
+    /// same arena is shared by a batch; [`BatchArena::tracked`] for
+    /// accounting without pooling; [`BatchArena::disabled`] to restore
+    /// the plain-allocation default). Trajectories and gradients are
+    /// bitwise-identical in every mode. Swapping arenas mid-tape is
+    /// harmless for correctness but splits the tape's recycling and
+    /// accounting across arenas — do it between rollouts.
+    pub fn set_arena(&mut self, arena: BatchArena) {
+        self.arena = arena;
+    }
+
+    /// The buffer arena this scene checks per-step allocations out of.
+    pub fn arena(&self) -> &BatchArena {
+        &self.arena
     }
 
     /// Advance one step of length `cfg.dt`: the thin sequential driver
@@ -212,7 +240,9 @@ impl Simulation {
             cloth_vhalf,
             rigid_qbar: Vec::new(),
             cloth_xbar: Vec::new(),
-            zone_recs: Vec::new(),
+            // Taped steps accumulate zone records; reuse a parked list
+            // so repeated rollouts don't regrow it from scratch.
+            zone_recs: if self.cfg.record_tape { self.arena.loan_vec(0) } else { Vec::new() },
             surfs: None,
         }
     }
@@ -281,7 +311,9 @@ impl Simulation {
             }
         }
         let surfs = st.surfs.as_ref().expect("surfaces built above");
-        let (impacts, dstats) = detect(surfs, self.cfg.thickness);
+        // Candidate/contact lists come from (and return to) the scene's
+        // arena; impacts are bitwise-identical to plain `detect`.
+        let (impacts, dstats) = detect_in(surfs, self.cfg.thickness, &self.arena);
         if pass == 0 {
             st.stats.detect = dstats;
             st.stats.impacts = impacts.len();
@@ -300,12 +332,25 @@ impl Simulation {
             st.stats.max_zone_constraints =
                 zones.iter().map(|z| z.n_constraints()).max().unwrap_or(0);
         }
-        zones
+        // The zones' impact/entity copies live only for this pass; count
+        // them while the problems are being built.
+        let zbytes = zones_bytes(&zones);
+        self.arena.charge(MemCategory::Contacts, zbytes);
+        let problems: Vec<ZoneProblem> = zones
             .iter()
             .map(|z| {
-                ZoneProblem::build(&self.sys, z, &st.rigid_qbar, &st.cloth_xbar, self.cfg.thickness)
+                ZoneProblem::build_in(
+                    &self.sys,
+                    z,
+                    &st.rigid_qbar,
+                    &st.cloth_xbar,
+                    self.cfg.thickness,
+                    &self.arena,
+                )
             })
-            .collect()
+            .collect();
+        self.arena.uncharge(MemCategory::Contacts, zbytes);
+        problems
     }
 
     /// Stage 4 — solve a pass's zone problems independently (zone hook,
@@ -336,7 +381,16 @@ impl Simulation {
             }
             zp.scatter(&sol, &mut st.rigid_qbar, &mut st.cloth_xbar);
             if self.cfg.record_tape {
+                // The record keeps the solver buffers alive: the Solver
+                // charge transfers to the Tape category at commit, and
+                // the loan itself is handed back by `clear_tape`.
+                self.arena.uncharge(MemCategory::Solver, zp.loaned_bytes());
                 st.zone_recs.push(ZoneRec { problem: zp, solution: sol, pass });
+            } else {
+                zp.retire(&self.arena);
+                let ZoneSolution { q, lambda, .. } = sol;
+                self.arena.park_vec(q);
+                self.arena.park_vec(lambda);
             }
         }
         max_disp
@@ -497,6 +551,9 @@ impl Simulation {
                 bytes: 0,
             };
             rec.bytes = rec.estimate_bytes();
+            // Fig-3 accounting: the record's bytes are retained until
+            // `clear_tape` (uniform for standalone and batched scenes).
+            self.arena.charge(MemCategory::Tape, rec.bytes);
             self.tape.push(rec);
         }
         self.steps += 1;
@@ -515,8 +572,13 @@ impl Simulation {
         self.tape.iter().map(|r| r.bytes).sum()
     }
 
+    /// Drop the tape, releasing its [`MemCategory::Tape`] bytes and
+    /// returning the records' reusable zone buffers to the arena.
     pub fn clear_tape(&mut self) {
-        self.tape.clear();
+        for rec in self.tape.drain(..) {
+            self.arena.uncharge(MemCategory::Tape, rec.bytes);
+            rec.recycle(&self.arena);
+        }
     }
 }
 

@@ -326,6 +326,8 @@ pub fn run(args: &Args) -> Result<()> {
     // Keep the episode budgets comparable: every trainer gets exactly
     // updates·batch episodes.
     let episodes = updates * batch;
+    // Fresh Fig-3-style accounting for this run's batched rollouts.
+    crate::util::memory::global().reset();
     println!(
         "training sticks controllers: ours = {updates} minibatched updates x{batch} \
          parallel episodes, DDPG = {episodes} episodes..."
@@ -363,7 +365,8 @@ pub fn run(args: &Args) -> Result<()> {
         .set("batch", batch)
         .set("ours_sticks", Json::Arr(ours.iter().map(|&l| Json::Num(l)).collect()))
         .set("ddpg_sticks", Json::Arr(ddpg.iter().map(|&l| Json::Num(l)).collect()))
-        .set("ours_cloth", Json::Arr(ours_cloth.iter().map(|&l| Json::Num(l)).collect()));
+        .set("ours_cloth", Json::Arr(ours_cloth.iter().map(|&l| Json::Num(l)).collect()))
+        .set("memory", super::batch_memory_report("fig8"));
     dump_json("fig8_control", &out)
 }
 

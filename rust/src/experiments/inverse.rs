@@ -171,6 +171,8 @@ pub fn run(args: &Args) -> Result<()> {
     let target = Vec3::new(args.f64_or("tx", 0.5), 0.0, args.f64_or("tz", 0.3));
     let grad_iters = args.usize_or("grad-iters", 15);
     let cma_episodes = args.usize_or("cma-episodes", 200);
+    // Fresh Fig-3-style accounting for this run's batched populations.
+    crate::util::memory::global().reset();
     println!("target = ({}, {}), horizon {STEPS} steps", target.x, target.z);
     let gcurve = optimize_gradient(target, grad_iters);
     let ccurve = optimize_cmaes(target, cma_episodes, 42);
@@ -194,7 +196,8 @@ pub fn run(args: &Args) -> Result<()> {
     let mut out = Json::obj();
     out.set("experiment", "fig7")
         .set("grad_curve", Json::Arr(gcurve.iter().map(|&l| Json::Num(l)).collect()))
-        .set("cma_curve", Json::Arr(ccurve.iter().map(|&l| Json::Num(l)).collect()));
+        .set("cma_curve", Json::Arr(ccurve.iter().map(|&l| Json::Num(l)).collect()))
+        .set("memory", super::batch_memory_report("fig7"));
     dump_json("fig7_inverse", &out)
 }
 

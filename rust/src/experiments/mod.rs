@@ -1,5 +1,9 @@
 //! Experiment drivers — one per table/figure of the paper's §7.
-//! See DESIGN.md §5 for the experiment index (E1–E11).
+//! See DESIGN.md §5 for the experiment index (E1–E11); [`registry`]
+//! lists the CLI ids. Batched drivers (fig7 [`inverse`], fig8
+//! [`control`], fig9 [`estimation`]) run their populations through
+//! [`crate::batch::SceneBatch`] and report Fig-3-style memory via
+//! [`batch_memory_report`].
 
 use crate::util::cli::Args;
 use anyhow::{bail, Result};
@@ -91,4 +95,39 @@ pub fn dump_json(name: &str, j: &crate::util::json::Json) -> Result<()> {
     std::fs::write(&path, j.pretty())?;
     println!("[wrote {path}]");
     Ok(())
+}
+
+/// Fig-3-style memory block for batched experiment drivers (fig7/fig8):
+/// per-category logical-byte peaks from the global
+/// [`MemTracker`](crate::util::memory::MemTracker) plus process-wide
+/// [`BatchArena`](crate::util::arena::BatchArena) reuse stats. Prints
+/// one summary line and returns the block for the JSON dump. Call
+/// `crate::util::memory::global().reset()` at the start of the driver
+/// so the peaks describe this run only.
+pub fn batch_memory_report(label: &str) -> crate::util::json::Json {
+    use crate::util::memory::{self, fmt_bytes, MemCategory};
+    let t = memory::global();
+    let a = crate::util::arena::process_stats();
+    println!(
+        "[{label}] batch memory: peak logical {} (tape {}, contacts {}, solver {}, \
+         arena-retained {}); arena reuse {}/{} takes",
+        fmt_bytes(t.peak()),
+        fmt_bytes(t.peak_cat(MemCategory::Tape)),
+        fmt_bytes(t.peak_cat(MemCategory::Contacts)),
+        fmt_bytes(t.peak_cat(MemCategory::Solver)),
+        fmt_bytes(t.peak_cat(MemCategory::ArenaRetained)),
+        a.hits,
+        a.takes,
+    );
+    let mut j = crate::util::json::Json::obj();
+    j.set("peak_bytes", t.peak())
+        .set("tape_peak_bytes", t.peak_cat(MemCategory::Tape))
+        .set("contacts_peak_bytes", t.peak_cat(MemCategory::Contacts))
+        .set("solver_peak_bytes", t.peak_cat(MemCategory::Solver))
+        .set("arena_retained_peak_bytes", t.peak_cat(MemCategory::ArenaRetained))
+        .set("arena_takes", a.takes)
+        .set("arena_hits", a.hits)
+        .set("arena_hit_rate", a.hit_rate())
+        .set("peak_rss_bytes", memory::peak_rss_bytes());
+    j
 }

@@ -1,7 +1,8 @@
-//! Numerical substrates: small fixed-size linear algebra, dense
-//! factorizations (LU, Cholesky, Householder QR), CSR sparse matrices,
-//! conjugate gradients, and the RPY Euler-angle kinematics from the
-//! paper's appendices A–C.
+//! Numerical substrates: small fixed-size linear algebra ([`Vec3`],
+//! [`Mat3`]), dense factorizations ([`dense`]: LU, Cholesky, Householder
+//! QR), CSR sparse matrices ([`sparse`]), conjugate gradients ([`cg`]),
+//! and the RPY Euler-angle kinematics from the paper's appendices A–C
+//! ([`euler`]).
 pub mod cg;
 pub mod dense;
 pub mod euler;

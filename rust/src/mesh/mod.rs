@@ -1,5 +1,8 @@
 //! Triangle-mesh representation — the paper's core object representation
-//! (§3: "we adopt meshes as a general representation of objects").
+//! (§3: "we adopt meshes as a general representation of objects"):
+//! the indexed [`TriMesh`], generator shapes ([`primitives`]), OBJ I/O
+//! ([`obj`]), inertia/mass integrals ([`mass`]), and edge/adjacency
+//! queries ([`topology`]).
 pub mod mass;
 pub mod obj;
 pub mod primitives;

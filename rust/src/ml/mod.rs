@@ -1,7 +1,10 @@
 //! Learning components for the paper's §7.4 applications: a hand-rolled
-//! MLP (the controller network of Fig. 8), Adam/SGD, and the two
-//! baselines the paper compares against — CMA-ES (derivative-free,
-//! Fig. 7) and DDPG (model-free RL, Fig. 8).
+//! MLP ([`mlp`], the controller network of Fig. 8), Adam/SGD
+//! ([`adam`]), and the two baselines the paper compares against —
+//! CMA-ES ([`cmaes`], derivative-free, Fig. 7) and DDPG ([`ddpg`],
+//! model-free RL, Fig. 8). The gradient consumers are fed by
+//! [`crate::batch::SceneBatch::rollout_grad`]'s contiguous scene-major
+//! gradient buffers.
 pub mod adam;
 pub mod cmaes;
 pub mod ddpg;

@@ -1,6 +1,11 @@
-//! Numerical solvers: implicit Euler time integration (paper Eq. 3), the
-//! per-zone nonlinearly-constrained projection (Eq. 6), and the global
-//! LCP-style baseline used by the Table-1 ablation.
+//! Numerical solvers: implicit Euler time integration
+//! ([`implicit_euler`], paper Eq. 3), the per-zone
+//! nonlinearly-constrained projection ([`zone_solver`], Eq. 6), and the
+//! global LCP-style baseline ([`lcp`]) used by the Table-1 ablation.
+//! Zone problems can borrow their state from the cross-scene
+//! [`crate::util::arena::BatchArena`]; the solvers themselves draw
+//! inner-loop temporaries from [`crate::util::scratch`]. Both reuse
+//! layers are bitwise-neutral.
 pub mod implicit_euler;
 pub mod lcp;
 pub mod zone_solver;

@@ -11,12 +11,21 @@
 //! Solved with an augmented-Lagrangian Gauss–Newton: robust, produces the
 //! KKT multipliers λ* that the implicit-differentiation backward (§6)
 //! needs.
+//!
+//! Memory: the solver's per-iteration temporaries live in the
+//! thread-local [`crate::util::scratch`] arena, while the problem's own
+//! state (`q0`, M̂) can be loaned from a cross-scene
+//! [`BatchArena`] via [`ZoneProblem::build_in`] and handed back with
+//! [`ZoneProblem::retire`] — see the engine's scatter/commit stages.
+//! Both reuse paths are bitwise-neutral.
 
 use crate::bodies::{NodeRef, System};
 use crate::collision::zones::{entity_of, Entity, ImpactZone};
 use crate::collision::Impact;
 use crate::math::dense::Mat;
 use crate::math::{euler, Vec3};
+use crate::util::arena::BatchArena;
+use crate::util::memory::MemCategory;
 use crate::util::scratch;
 
 /// One term of a constraint row: how one of the four impact nodes maps
@@ -77,6 +86,25 @@ impl ZoneProblem {
         cloth_x: &[Vec<Vec3>],
         delta: f64,
     ) -> ZoneProblem {
+        ZoneProblem::build_in(sys, zone, rigid_q, cloth_x, delta, &BatchArena::disabled())
+    }
+
+    /// [`ZoneProblem::build`] with the stacked coordinates `q0` and the
+    /// zone mass matrix M̂ — the n + n² doubles that dominate a zone's
+    /// footprint — loaned from a [`BatchArena`] under
+    /// [`MemCategory::Solver`]. Loans are zero-filled before the same
+    /// writes as the allocating path, so the problem is bitwise-identical
+    /// either way. The loan is handed back via [`ZoneProblem::retire`]
+    /// (untaped steps) or [`crate::diff::tape::StepRecord::recycle`]
+    /// (taped ones).
+    pub fn build_in(
+        sys: &System,
+        zone: &ImpactZone,
+        rigid_q: &[[f64; 6]],
+        cloth_x: &[Vec<Vec3>],
+        delta: f64,
+        arena: &BatchArena,
+    ) -> ZoneProblem {
         let mut offsets = Vec::with_capacity(zone.entities.len());
         let mut n = 0;
         for e in &zone.entities {
@@ -85,8 +113,8 @@ impl ZoneProblem {
         }
         let slot = |e: &Entity| zone.entities.iter().position(|x| x == e).unwrap();
         // Stacked q0 and block mass.
-        let mut q0 = vec![0.0; n];
-        let mut mass = Mat::zeros(n, n);
+        let mut q0 = arena.loan_f64_zeroed(n, MemCategory::Solver);
+        let mut mass = Mat::from_vec(n, n, arena.loan_f64_zeroed(n * n, MemCategory::Solver));
         for (k, e) in zone.entities.iter().enumerate() {
             let off = offsets[k];
             match e {
@@ -357,6 +385,25 @@ impl ZoneProblem {
             }
         }
         crate::math::dense::norm(&r)
+    }
+
+    /// Logical bytes of the buffers [`ZoneProblem::build_in`] loans from
+    /// the arena (q0 + M̂) — the amount charged to
+    /// [`MemCategory::Solver`] while the problem is alive.
+    pub fn loaned_bytes(&self) -> usize {
+        8 * (self.n + self.n * self.n)
+    }
+
+    /// Hand the loaned buffers back to `arena`: releases the
+    /// [`MemCategory::Solver`] charge and parks the `q0`/M̂ allocations
+    /// for the next zone of a similar shape. A plain drop (and a no-op
+    /// charge-wise) when the arena is disabled.
+    pub fn retire(self, arena: &BatchArena) {
+        let bytes = self.loaned_bytes();
+        arena.uncharge(MemCategory::Solver, bytes);
+        let ZoneProblem { q0, mass, .. } = self;
+        arena.park_vec(q0);
+        arena.park_vec(mass.data);
     }
 
     /// Write the resolved coordinates back into per-body candidate state.

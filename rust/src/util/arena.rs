@@ -1,0 +1,653 @@
+//! Cross-scene memory pooling: the shape-keyed [`BatchArena`].
+//!
+//! A batch of N scenes ([`crate::batch::SceneBatch`]) repeats the same
+//! per-step allocations N times: collision candidate/contact lists
+//! ([`crate::collision::detect_in`]), per-zone solver state
+//! ([`crate::solver::zone_solver::ZoneProblem::build_in`]), and — across
+//! rollouts — tape record storage
+//! ([`crate::diff::tape::StepRecord::recycle`]). Left independent, batch
+//! memory scales as `n_scenes × worst_case` and allocator traffic scales
+//! with `n_scenes × steps × passes`. The arena makes those buffers a
+//! shared, reusable resource: scenes check buffers out per (scene, step),
+//! and return them when the step (or the tape) is done, so a warm batch
+//! holds roughly `max_live` buffer sets — bounded by the worker budget of
+//! the pool driving the batch ([`crate::util::pool::Pool`]), not by the
+//! population size.
+//!
+//! This is the cross-scene second slice of the ROADMAP's memory-pooling
+//! item; the first slice, [`crate::util::scratch`], pools *thread-local*
+//! solver temporaries and stays as-is underneath this layer.
+//!
+//! # Shape keying
+//!
+//! Shelved buffers are keyed by element type and a power-of-two size
+//! class of their capacity. A checkout for capacity `c` probes its own
+//! class and the next two larger ones (a capacity-0 hint takes any class
+//! — right for accumulator lists whose final size is unknown); a miss
+//! falls back to a fresh allocation. Classes are approximate: a reused
+//! buffer may still regrow, `Vec` handles that transparently.
+//!
+//! # Modes and the no-arena fallback
+//!
+//! * [`BatchArena::disabled`] (the [`Default`], and what a standalone
+//!   [`crate::engine::Simulation`] starts with): every checkout is a
+//!   plain allocation, every return a plain drop, and nothing is
+//!   charged to any tracker — zero overhead, byte-for-byte the
+//!   pre-arena behavior.
+//! * [`BatchArena::tracked`]: no pooling, but checkouts are charged to
+//!   the [`MemTracker`] categories — the instrumented "no-arena"
+//!   baseline the `batch_memory` bench compares against.
+//! * [`BatchArena::new`] (pooled): reuse *and* accounting. Parked bytes
+//!   are charged to [`MemCategory::ArenaRetained`]; a retention cap
+//!   (default [`DEFAULT_RETAIN_CAP`]) drops returns that would exceed
+//!   it, so a pathological workload degrades to plain allocation
+//!   instead of hoarding.
+//!
+//! # Invariants
+//!
+//! * **Bitwise parity.** Every checkout is cleared (or zero-filled)
+//!   before it is handed out and fully overwritten before use; buffer
+//!   *contents* never depend on pooling history, so trajectories and
+//!   gradients are bitwise-identical with the arena on, off, shared, or
+//!   per-scene (asserted in `rust/tests/integration_batch.rs`).
+//! * **Determinism.** Shelf state affects only which allocation backs a
+//!   buffer, never control flow or numerics. Concurrent checkouts from
+//!   pool workers race only for *which* parked allocation they receive.
+//! * **Panic behavior.** Arena paths never panic on exhaustion (a miss
+//!   allocates) and guard drops during unwinding skip a poisoned shelf
+//!   lock rather than aborting; the arena stays usable after a caught
+//!   task panic, like [`crate::util::pool`].
+//! * **Accounting is advisory.** Charges saturate; losing track of a
+//!   loan distorts a report, never correctness.
+//!
+//! # RAII vs. loans
+//!
+//! Short-lived buffers use the [`ArenaVec`] guard (returned on drop).
+//! Buffers embedded in longer-lived structs (`ZoneProblem::q0`, zone
+//! mass matrices, tape records) are *loaned* as plain `Vec`s and handed
+//! back explicitly — [`crate::solver::zone_solver::ZoneProblem::retire`]
+//! on commit for untaped steps, [`crate::diff::tape::StepRecord::recycle`]
+//! at `clear_tape` for taped ones.
+
+use crate::util::memory::{self, MemCategory, MemTracker};
+use std::any::{Any, TypeId};
+use std::collections::{BTreeMap, HashMap};
+use std::mem::size_of;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Default retention cap per pooled arena: beyond this many parked
+/// bytes, returned buffers are dropped instead of shelved. The working
+/// set of a 16-scene contact-rich batch is a few MiB, so the default
+/// never bites in practice while still bounding pathological retention.
+pub const DEFAULT_RETAIN_CAP: usize = 64 << 20;
+
+// Process-wide mirrors of every arena's reuse counters, so experiment
+// drivers can report arena behavior without holding the (function-local)
+// arena handles. Retained bytes decrement when an arena is dropped.
+static P_TAKES: AtomicU64 = AtomicU64::new(0);
+static P_HITS: AtomicU64 = AtomicU64::new(0);
+static P_MISSES: AtomicU64 = AtomicU64::new(0);
+static P_PARKS: AtomicU64 = AtomicU64::new(0);
+static P_EVICTIONS: AtomicU64 = AtomicU64::new(0);
+static P_RETAINED_BYTES: AtomicUsize = AtomicUsize::new(0);
+static P_RETAINED_BUFS: AtomicUsize = AtomicUsize::new(0);
+
+/// Snapshot of an arena's reuse behavior (or, via [`process_stats`],
+/// of every arena in the process).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// Checkouts requested (pooled arenas only).
+    pub takes: u64,
+    /// Checkouts served from a parked buffer.
+    pub hits: u64,
+    /// Checkouts that fell back to a fresh allocation.
+    pub misses: u64,
+    /// Buffers successfully parked on return.
+    pub parks: u64,
+    /// Returns dropped because the retention cap was reached.
+    pub evictions: u64,
+    /// Bytes currently parked.
+    pub retained_bytes: usize,
+    /// Buffers currently parked.
+    pub retained_buffers: usize,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served from a parked buffer.
+    pub fn hit_rate(&self) -> f64 {
+        if self.takes == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.takes as f64
+        }
+    }
+}
+
+/// Process-wide [`ArenaStats`] aggregated over every arena ever created
+/// (retained counts reflect arenas still alive).
+pub fn process_stats() -> ArenaStats {
+    ArenaStats {
+        takes: P_TAKES.load(Ordering::Relaxed),
+        hits: P_HITS.load(Ordering::Relaxed),
+        misses: P_MISSES.load(Ordering::Relaxed),
+        parks: P_PARKS.load(Ordering::Relaxed),
+        evictions: P_EVICTIONS.load(Ordering::Relaxed),
+        retained_bytes: P_RETAINED_BYTES.load(Ordering::Relaxed),
+        retained_buffers: P_RETAINED_BUFS.load(Ordering::Relaxed),
+    }
+}
+
+/// Size class: index of the power of two covering `cap`.
+fn class_of(cap: usize) -> u8 {
+    cap.max(1).next_power_of_two().trailing_zeros() as u8
+}
+
+/// Shelved buffers: element type → size class → parked allocations.
+/// Buffers are type-erased (`Vec<T>` boxed as `Any`); the `TypeId` key
+/// guarantees every downcast succeeds.
+struct Shelves {
+    by_type: HashMap<TypeId, BTreeMap<u8, Vec<Box<dyn Any + Send>>>>,
+    retained_bytes: usize,
+    retained_buffers: usize,
+}
+
+struct Inner {
+    shelves: Mutex<Shelves>,
+    retain_cap: usize,
+    tracker: Arc<MemTracker>,
+    takes: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    parks: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        if let Ok(sh) = self.shelves.get_mut() {
+            self.tracker.free_cat(MemCategory::ArenaRetained, sh.retained_bytes);
+            P_RETAINED_BYTES
+                .fetch_sub(sh.retained_bytes.min(P_RETAINED_BYTES.load(Ordering::Relaxed)), Ordering::Relaxed);
+            P_RETAINED_BUFS
+                .fetch_sub(sh.retained_buffers.min(P_RETAINED_BUFS.load(Ordering::Relaxed)), Ordering::Relaxed);
+        }
+    }
+}
+
+/// Cheap-to-clone handle to one cross-scene buffer arena (or to the
+/// disabled/tracked fallbacks — see the module docs for the modes).
+#[derive(Clone)]
+pub struct BatchArena {
+    inner: Option<Arc<Inner>>,
+    /// Charge checkouts/loans to `tracker` categories. True for pooled
+    /// and tracked arenas, false for disabled ones.
+    charge: bool,
+    tracker: Arc<MemTracker>,
+}
+
+impl Default for BatchArena {
+    fn default() -> BatchArena {
+        BatchArena::disabled()
+    }
+}
+
+impl BatchArena {
+    /// Pooled arena with the default retention cap, charging the
+    /// [`memory::global`] tracker.
+    pub fn new() -> BatchArena {
+        BatchArena::pooled_with(DEFAULT_RETAIN_CAP, memory::global().clone())
+    }
+
+    /// Pooled arena with an explicit retention cap and tracker.
+    pub fn pooled_with(retain_cap: usize, tracker: Arc<MemTracker>) -> BatchArena {
+        let inner = Inner {
+            shelves: Mutex::new(Shelves {
+                by_type: HashMap::new(),
+                retained_bytes: 0,
+                retained_buffers: 0,
+            }),
+            retain_cap,
+            tracker: tracker.clone(),
+            takes: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            parks: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        };
+        BatchArena { inner: Some(Arc::new(inner)), charge: true, tracker }
+    }
+
+    /// No pooling, no accounting — the zero-overhead standalone default.
+    pub fn disabled() -> BatchArena {
+        BatchArena { inner: None, charge: false, tracker: memory::global().clone() }
+    }
+
+    /// No pooling, but checkouts/loans are charged to the global
+    /// tracker's categories (the instrumented "no-arena" baseline).
+    pub fn tracked() -> BatchArena {
+        BatchArena::tracked_with(memory::global().clone())
+    }
+
+    /// [`BatchArena::tracked`] against an injected tracker.
+    pub fn tracked_with(tracker: Arc<MemTracker>) -> BatchArena {
+        BatchArena { inner: None, charge: true, tracker }
+    }
+
+    /// Whether returns are actually shelved (pooled mode).
+    pub fn is_pooling(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The tracker this arena charges.
+    pub fn tracker(&self) -> &MemTracker {
+        &self.tracker
+    }
+
+    /// Reuse counters (zeros for disabled/tracked arenas).
+    pub fn stats(&self) -> ArenaStats {
+        let Some(inner) = &self.inner else {
+            return ArenaStats::default();
+        };
+        let (retained_bytes, retained_buffers) = match inner.shelves.lock() {
+            Ok(sh) => (sh.retained_bytes, sh.retained_buffers),
+            Err(_) => (0, 0),
+        };
+        ArenaStats {
+            takes: inner.takes.load(Ordering::Relaxed),
+            hits: inner.hits.load(Ordering::Relaxed),
+            misses: inner.misses.load(Ordering::Relaxed),
+            parks: inner.parks.load(Ordering::Relaxed),
+            evictions: inner.evictions.load(Ordering::Relaxed),
+            retained_bytes,
+            retained_buffers,
+        }
+    }
+
+    /// Register `bytes` as application-held under `cat` (no-op for
+    /// disabled arenas). Public so domain layers can transfer a loan
+    /// between categories (e.g. Solver → Tape when a zone record moves
+    /// onto the tape).
+    pub fn charge(&self, cat: MemCategory, bytes: usize) {
+        if self.charge && bytes > 0 {
+            self.tracker.alloc_cat(cat, bytes);
+        }
+    }
+
+    /// Release a [`BatchArena::charge`], saturating.
+    pub fn uncharge(&self, cat: MemCategory, bytes: usize) {
+        if self.charge && bytes > 0 {
+            self.tracker.free_cat(cat, bytes);
+        }
+    }
+
+    /// Pop a parked `Vec<T>` for requested capacity `cap` (0 = any),
+    /// cleared; `None` on miss or when not pooling.
+    fn take_raw<T: Send + 'static>(&self, cap: usize) -> Option<Vec<T>> {
+        let inner = self.inner.as_ref()?;
+        inner.takes.fetch_add(1, Ordering::Relaxed);
+        P_TAKES.fetch_add(1, Ordering::Relaxed);
+        let mut popped: Option<Box<dyn Any + Send>> = None;
+        {
+            let mut sh = inner.shelves.lock().expect("arena shelf lock");
+            if let Some(bins) = sh.by_type.get_mut(&TypeId::of::<Vec<T>>()) {
+                // Empty class lists are removed eagerly, so any present
+                // key has a buffer — no temporary key collection needed
+                // under the lock. A capacity-0 hint takes the *largest*
+                // class so growing accumulators start from the biggest
+                // parked buffer instead of regrowing a small one.
+                let key = if cap == 0 {
+                    bins.keys().next_back().copied()
+                } else {
+                    let k = class_of(cap);
+                    bins.range(k..=k.saturating_add(2)).map(|(&c, _)| c).next()
+                };
+                if let Some(k) = key {
+                    if let Some(list) = bins.get_mut(&k) {
+                        if let Some(b) = list.pop() {
+                            if list.is_empty() {
+                                bins.remove(&k);
+                            }
+                            popped = Some(b);
+                        }
+                    }
+                }
+            }
+            if let Some(b) = &popped {
+                let bytes = b
+                    .downcast_ref::<Vec<T>>()
+                    .map(|v| v.capacity() * size_of::<T>())
+                    .unwrap_or(0);
+                sh.retained_bytes = sh.retained_bytes.saturating_sub(bytes);
+                sh.retained_buffers = sh.retained_buffers.saturating_sub(1);
+            }
+        }
+        match popped {
+            Some(boxed) => {
+                let mut v = *boxed.downcast::<Vec<T>>().expect("shelf keyed by TypeId");
+                let bytes = v.capacity() * size_of::<T>();
+                self.tracker.free_cat(MemCategory::ArenaRetained, bytes);
+                P_RETAINED_BYTES
+                    .fetch_sub(bytes.min(P_RETAINED_BYTES.load(Ordering::Relaxed)), Ordering::Relaxed);
+                P_RETAINED_BUFS
+                    .fetch_sub(1usize.min(P_RETAINED_BUFS.load(Ordering::Relaxed)), Ordering::Relaxed);
+                inner.hits.fetch_add(1, Ordering::Relaxed);
+                P_HITS.fetch_add(1, Ordering::Relaxed);
+                v.clear();
+                Some(v)
+            }
+            None => {
+                inner.misses.fetch_add(1, Ordering::Relaxed);
+                P_MISSES.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Park a `Vec<T>` for reuse (drop when not pooling, capacity-0, or
+    /// over the retention cap). Does not touch category charges other
+    /// than [`MemCategory::ArenaRetained`].
+    fn park_raw<T: Send + 'static>(&self, v: Vec<T>) {
+        let Some(inner) = &self.inner else {
+            return;
+        };
+        let bytes = v.capacity() * size_of::<T>();
+        if bytes == 0 {
+            return;
+        }
+        // Tolerate a poisoned lock (guard drops run during unwinding).
+        let Ok(mut sh) = inner.shelves.lock() else {
+            return;
+        };
+        if sh.retained_bytes + bytes > inner.retain_cap {
+            inner.evictions.fetch_add(1, Ordering::Relaxed);
+            P_EVICTIONS.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let class = class_of(v.capacity());
+        sh.by_type
+            .entry(TypeId::of::<Vec<T>>())
+            .or_default()
+            .entry(class)
+            .or_default()
+            .push(Box::new(v));
+        sh.retained_bytes += bytes;
+        sh.retained_buffers += 1;
+        drop(sh);
+        inner.parks.fetch_add(1, Ordering::Relaxed);
+        P_PARKS.fetch_add(1, Ordering::Relaxed);
+        P_RETAINED_BYTES.fetch_add(bytes, Ordering::Relaxed);
+        P_RETAINED_BUFS.fetch_add(1, Ordering::Relaxed);
+        self.tracker.alloc_cat(MemCategory::ArenaRetained, bytes);
+    }
+
+    /// RAII checkout: an empty `Vec<T>`-like buffer with capacity at
+    /// least `cap` (0 = reuse anything), charged to `cat`, returned to
+    /// the arena when the guard drops. A reused buffer from a slightly
+    /// smaller size class is topped up here, so the capacity contract
+    /// holds and any growth happens once at checkout, not mid-use.
+    pub fn vec<T: Send + 'static>(&self, cap: usize, cat: MemCategory) -> ArenaVec<T> {
+        let mut v = self
+            .take_raw::<T>(cap)
+            .unwrap_or_else(|| if cap == 0 { Vec::new() } else { Vec::with_capacity(cap) });
+        if v.capacity() < cap {
+            v.reserve(cap);
+        }
+        let charged = v.capacity() * size_of::<T>();
+        self.charge(cat, charged);
+        ArenaVec { vec: v, charged, cat, home: self.clone() }
+    }
+
+    /// Loan a zero-filled `Vec<f64>` of exactly `len` elements, charged
+    /// to `cat` — bitwise-identical to `vec![0.0; len]`. On a shelf miss
+    /// (and always for disabled/tracked arenas) this *is*
+    /// `vec![0.0; len]`, so the plain-allocation path keeps its
+    /// `alloc_zeroed` behavior instead of paying an explicit memset.
+    /// Pair with [`BatchArena::retire_f64`] (or park +
+    /// [`BatchArena::uncharge`]).
+    pub fn loan_f64_zeroed(&self, len: usize, cat: MemCategory) -> Vec<f64> {
+        self.charge(cat, len * 8);
+        match self.take_raw::<f64>(len) {
+            Some(mut v) => {
+                v.clear();
+                v.resize(len, 0.0);
+                v
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Hand back a [`BatchArena::loan_f64_zeroed`] of `charged_len`
+    /// elements: releases the charge and parks the allocation.
+    pub fn retire_f64(&self, v: Vec<f64>, charged_len: usize, cat: MemCategory) {
+        self.uncharge(cat, charged_len * 8);
+        self.park_raw(v);
+    }
+
+    /// Loan an empty, uncharged `Vec<T>` (capacity hint `cap`; 0 = reuse
+    /// anything). For accumulators whose bytes are accounted by their
+    /// eventual owner (e.g. tape records). Return via
+    /// [`BatchArena::park_vec`].
+    pub fn loan_vec<T: Send + 'static>(&self, cap: usize) -> Vec<T> {
+        self.take_raw(cap)
+            .unwrap_or_else(|| if cap == 0 { Vec::new() } else { Vec::with_capacity(cap) })
+    }
+
+    /// Park an arbitrary `Vec<T>` for reuse without touching category
+    /// charges (retained bytes are still accounted).
+    pub fn park_vec<T: Send + 'static>(&self, v: Vec<T>) {
+        self.park_raw(v);
+    }
+}
+
+/// RAII arena checkout: derefs to `Vec<T>`, releases its category
+/// charge and parks the allocation on drop.
+pub struct ArenaVec<T: Send + 'static> {
+    vec: Vec<T>,
+    charged: usize,
+    cat: MemCategory,
+    home: BatchArena,
+}
+
+impl<T: Send + 'static> ArenaVec<T> {
+    /// Re-sync the category charge to the buffer's current capacity
+    /// (call after a fill that may have grown it, so peak accounting
+    /// sees the growth).
+    pub fn recharge(&mut self) {
+        let now = self.vec.capacity() * size_of::<T>();
+        if now > self.charged {
+            self.home.charge(self.cat, now - self.charged);
+            self.charged = now;
+        }
+    }
+
+    /// Detach the buffer from the arena (charge released, nothing
+    /// parked) — the plain-`Vec` escape hatch.
+    pub fn into_inner(mut self) -> Vec<T> {
+        self.home.uncharge(self.cat, self.charged);
+        self.charged = 0;
+        std::mem::take(&mut self.vec)
+    }
+}
+
+impl<T: Send + 'static> Deref for ArenaVec<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.vec
+    }
+}
+
+impl<T: Send + 'static> DerefMut for ArenaVec<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.vec
+    }
+}
+
+impl<T: Send + 'static> Drop for ArenaVec<T> {
+    fn drop(&mut self) {
+        self.home.uncharge(self.cat, self.charged);
+        let v = std::mem::take(&mut self.vec);
+        self.home.park_raw(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> (BatchArena, Arc<MemTracker>) {
+        let t = Arc::new(MemTracker::new());
+        (BatchArena::pooled_with(DEFAULT_RETAIN_CAP, t.clone()), t)
+    }
+
+    #[test]
+    fn checkout_park_reuse_roundtrip() {
+        let (a, _t) = fresh();
+        {
+            let mut g: ArenaVec<u64> = a.vec(100, MemCategory::Contacts);
+            g.extend(0..50u64);
+        } // parked here
+        let s = a.stats();
+        assert_eq!(s.takes, 1);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.parks, 1);
+        assert_eq!(s.retained_buffers, 1);
+        assert!(s.retained_bytes >= 100 * 8);
+        // Same size class → hit, and contents start cleared.
+        let g: ArenaVec<u64> = a.vec(90, MemCategory::Contacts);
+        assert!(g.is_empty());
+        assert!(g.capacity() >= 90);
+        let s = a.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.retained_buffers, 0, "checked out again");
+    }
+
+    #[test]
+    fn size_classes_separate_small_and_large() {
+        let (a, _t) = fresh();
+        drop(a.vec::<u64>(100, MemCategory::Contacts)); // class of 128
+        let _big: ArenaVec<u64> = a.vec(4000, MemCategory::Contacts); // class of 4096
+        let s = a.stats();
+        assert_eq!(s.hits, 0, "a 4000-cap request must not reuse a 128-cap buffer");
+        assert_eq!(s.misses, 2);
+        // But a capacity-0 hint takes anything.
+        let any: ArenaVec<u64> = a.vec(0, MemCategory::Contacts);
+        assert!(any.capacity() >= 100);
+        assert_eq!(a.stats().hits, 1);
+    }
+
+    #[test]
+    fn retention_cap_evicts_instead_of_hoarding() {
+        let t = Arc::new(MemTracker::new());
+        let a = BatchArena::pooled_with(256, t.clone());
+        drop(a.vec::<u64>(16, MemCategory::Contacts)); // 128 bytes parked
+        drop(a.vec::<u64>(64, MemCategory::Contacts)); // 512 bytes: over cap
+        let s = a.stats();
+        assert_eq!(s.parks, 1);
+        assert_eq!(s.evictions, 1);
+        assert!(s.retained_bytes <= 256, "cap respected: {}", s.retained_bytes);
+        assert_eq!(t.current_cat(MemCategory::ArenaRetained), s.retained_bytes);
+    }
+
+    #[test]
+    fn loans_are_zeroed_charged_and_retired() {
+        let (a, t) = fresh();
+        let mut v = a.loan_f64_zeroed(32, MemCategory::Solver);
+        assert_eq!(v.len(), 32);
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert_eq!(t.current_cat(MemCategory::Solver), 32 * 8);
+        v[7] = 3.25; // dirty it
+        a.retire_f64(v, 32, MemCategory::Solver);
+        assert_eq!(t.current_cat(MemCategory::Solver), 0);
+        assert!(t.current_cat(MemCategory::ArenaRetained) >= 32 * 8);
+        // The reused loan is zeroed again — stale contents never leak.
+        let v2 = a.loan_f64_zeroed(32, MemCategory::Solver);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!(a.stats().hits, 1);
+    }
+
+    #[test]
+    fn guard_charges_follow_capacity_and_release_on_drop() {
+        let (a, t) = fresh();
+        {
+            let mut g: ArenaVec<u8> = a.vec(64, MemCategory::Contacts);
+            assert_eq!(t.current_cat(MemCategory::Contacts), g.capacity());
+            g.extend(std::iter::repeat(7u8).take(1000)); // grows
+            g.recharge();
+            assert_eq!(t.current_cat(MemCategory::Contacts), g.capacity());
+        }
+        assert_eq!(t.current_cat(MemCategory::Contacts), 0);
+        assert!(t.peak_cat(MemCategory::Contacts) >= 1000);
+    }
+
+    #[test]
+    fn into_inner_detaches_without_parking() {
+        let (a, t) = fresh();
+        let mut g: ArenaVec<u64> = a.vec(8, MemCategory::Contacts);
+        g.push(42);
+        let v = g.into_inner();
+        assert_eq!(v, vec![42]);
+        assert_eq!(t.current_cat(MemCategory::Contacts), 0);
+        assert_eq!(a.stats().parks, 0);
+    }
+
+    #[test]
+    fn disabled_arena_is_a_plain_allocator() {
+        let a = BatchArena::disabled();
+        assert!(!a.is_pooling());
+        {
+            let mut g: ArenaVec<u64> = a.vec(16, MemCategory::Contacts);
+            g.push(1);
+        }
+        let v = a.loan_f64_zeroed(8, MemCategory::Solver);
+        assert_eq!(v, vec![0.0; 8]);
+        a.retire_f64(v, 8, MemCategory::Solver);
+        let s = a.stats();
+        assert_eq!((s.takes, s.hits, s.parks), (0, 0, 0));
+    }
+
+    #[test]
+    fn tracked_arena_accounts_without_pooling() {
+        let t = Arc::new(MemTracker::new());
+        let a = BatchArena::tracked_with(t.clone());
+        let v = a.loan_f64_zeroed(100, MemCategory::Solver);
+        assert_eq!(t.current_cat(MemCategory::Solver), 800);
+        a.retire_f64(v, 100, MemCategory::Solver);
+        assert_eq!(t.current_cat(MemCategory::Solver), 0);
+        assert_eq!(t.current_cat(MemCategory::ArenaRetained), 0, "nothing parked");
+        assert_eq!(a.stats().takes, 0);
+    }
+
+    #[test]
+    fn dropping_the_arena_releases_retained_accounting() {
+        let t = Arc::new(MemTracker::new());
+        let a = BatchArena::pooled_with(DEFAULT_RETAIN_CAP, t.clone());
+        drop(a.vec::<u64>(128, MemCategory::Contacts));
+        assert!(t.current_cat(MemCategory::ArenaRetained) > 0);
+        drop(a);
+        assert_eq!(t.current_cat(MemCategory::ArenaRetained), 0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let (a, _t) = fresh();
+        // Warm one buffer per worker's worth of work, then hammer it
+        // from several threads; the arena must stay consistent.
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let a = a.clone();
+                s.spawn(move || {
+                    for _ in 0..50 {
+                        let mut g: ArenaVec<u64> = a.vec(0, MemCategory::Contacts);
+                        g.extend(0..32u64);
+                    }
+                });
+            }
+        });
+        let s = a.stats();
+        assert_eq!(s.takes, 200);
+        assert!(s.hits > 0, "warm takes must reuse: {s:?}");
+        assert!(s.retained_buffers <= 4, "at most one set per thread live at once");
+    }
+}

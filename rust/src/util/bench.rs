@@ -51,7 +51,7 @@ impl Bench {
         self.rows.push((label.to_string(), j));
     }
 
-    /// Write all recorded rows to bench_output/<name>.json.
+    /// Write all recorded rows to `bench_output/<name>.json`.
     pub fn finish(self) {
         let mut obj = Json::obj();
         for (k, v) in self.rows {

@@ -1,8 +1,30 @@
 //! Memory accounting: process peak-RSS probe (Linux `/proc/self/status`)
 //! plus an explicit logical-bytes counter used to report *algorithmic*
-//! memory (what Fig 3 of the paper plots) independent of allocator noise.
+//! memory (what Fig. 3 of the paper plots) independent of allocator
+//! noise.
+//!
+//! The [`MemTracker`] carries both an uncategorized total (the original
+//! Fig-3 counter, still used by the MPM baseline) and per-category
+//! counters ([`MemCategory`]) so batched runs can attribute their peak
+//! to tape records, collision candidate/contact lists, per-zone solver
+//! state, or buffers parked for reuse in a
+//! [`crate::util::arena::BatchArena`]. Category allocations also feed
+//! the total, so `peak()` bounds the sum of the category peaks.
+//!
+//! A process-wide tracker ([`global`]) is what the engine, the arena,
+//! and the experiment drivers charge by default; benches and tests
+//! inject their own instance (`BatchArena::pooled_with` /
+//! `BatchArena::tracked_with`) so parallel test threads cannot perturb
+//! each other's numbers.
+//!
+//! Accounting is advisory, not load-bearing: frees saturate at zero
+//! (never panic, never underflow), and dropping a `Simulation` without
+//! calling `clear_tape` leaks *accounting* (the category `current`),
+//! never memory — peaks, which are what every report uses, are
+//! unaffected.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, OnceLock};
 
 /// Peak resident set size of this process in bytes (VmHWM), or 0 if the
 /// probe is unavailable (non-Linux).
@@ -26,12 +48,80 @@ fn read_status_kb(field: &str) -> Option<usize> {
     None
 }
 
+/// What a tracked logical allocation is for — the categories the
+/// batch-extended Fig-3 accounting reports.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemCategory {
+    /// Tape records retained for the backward pass
+    /// ([`crate::diff::tape::StepRecord`]).
+    Tape,
+    /// Collision candidate/contact lists: broadphase face pairs,
+    /// impacts, impact-zone copies.
+    Contacts,
+    /// Per-zone solver state: stacked coordinates and zone mass
+    /// matrices ([`crate::solver::zone_solver::ZoneProblem`]).
+    Solver,
+    /// Buffers currently parked in a
+    /// [`crate::util::arena::BatchArena`] awaiting reuse.
+    ArenaRetained,
+}
+
+impl MemCategory {
+    /// All categories, in reporting order.
+    pub const ALL: [MemCategory; 4] =
+        [MemCategory::Tape, MemCategory::Contacts, MemCategory::Solver, MemCategory::ArenaRetained];
+
+    fn index(self) -> usize {
+        match self {
+            MemCategory::Tape => 0,
+            MemCategory::Contacts => 1,
+            MemCategory::Solver => 2,
+            MemCategory::ArenaRetained => 3,
+        }
+    }
+
+    /// Stable snake_case label (JSON keys in `BENCH_memory.json`).
+    pub fn label(self) -> &'static str {
+        match self {
+            MemCategory::Tape => "tape",
+            MemCategory::Contacts => "contacts",
+            MemCategory::Solver => "solver",
+            MemCategory::ArenaRetained => "arena_retained",
+        }
+    }
+}
+
+const N_CATS: usize = MemCategory::ALL.len();
+
 /// Logical allocation tracker. Simulators register the bytes they hold
-/// (state vectors, tapes, grids); experiments report the peak.
-#[derive(Default)]
+/// (state vectors, tapes, grids); experiments report the peak. The
+/// untyped [`MemTracker::alloc`]/[`MemTracker::free`] pair feeds only
+/// the total; the `_cat` variants feed a category *and* the total.
 pub struct MemTracker {
     current: AtomicUsize,
     peak: AtomicUsize,
+    cat_current: [AtomicUsize; N_CATS],
+    cat_peak: [AtomicUsize; N_CATS],
+}
+
+impl Default for MemTracker {
+    fn default() -> MemTracker {
+        MemTracker {
+            current: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+            cat_current: std::array::from_fn(|_| AtomicUsize::new(0)),
+            cat_peak: std::array::from_fn(|_| AtomicUsize::new(0)),
+        }
+    }
+}
+
+fn bump(current: &AtomicUsize, peak: &AtomicUsize, bytes: usize) {
+    let cur = current.fetch_add(bytes, Ordering::Relaxed) + bytes;
+    peak.fetch_max(cur, Ordering::Relaxed);
+}
+
+fn sat_sub(current: &AtomicUsize, bytes: usize) {
+    current.fetch_sub(bytes.min(current.load(Ordering::Relaxed)), Ordering::Relaxed);
 }
 
 impl MemTracker {
@@ -40,12 +130,24 @@ impl MemTracker {
     }
 
     pub fn alloc(&self, bytes: usize) {
-        let cur = self.current.fetch_add(bytes, Ordering::Relaxed) + bytes;
-        self.peak.fetch_max(cur, Ordering::Relaxed);
+        bump(&self.current, &self.peak, bytes);
     }
 
     pub fn free(&self, bytes: usize) {
-        self.current.fetch_sub(bytes.min(self.current.load(Ordering::Relaxed)), Ordering::Relaxed);
+        sat_sub(&self.current, bytes);
+    }
+
+    /// Register `bytes` under `cat` (and in the total).
+    pub fn alloc_cat(&self, cat: MemCategory, bytes: usize) {
+        let i = cat.index();
+        bump(&self.cat_current[i], &self.cat_peak[i], bytes);
+        bump(&self.current, &self.peak, bytes);
+    }
+
+    /// Release `bytes` from `cat` (and from the total), saturating.
+    pub fn free_cat(&self, cat: MemCategory, bytes: usize) {
+        sat_sub(&self.cat_current[cat.index()], bytes);
+        sat_sub(&self.current, bytes);
     }
 
     pub fn current(&self) -> usize {
@@ -56,10 +158,31 @@ impl MemTracker {
         self.peak.load(Ordering::Relaxed)
     }
 
+    pub fn current_cat(&self, cat: MemCategory) -> usize {
+        self.cat_current[cat.index()].load(Ordering::Relaxed)
+    }
+
+    pub fn peak_cat(&self, cat: MemCategory) -> usize {
+        self.cat_peak[cat.index()].load(Ordering::Relaxed)
+    }
+
     pub fn reset(&self) {
         self.current.store(0, Ordering::Relaxed);
         self.peak.store(0, Ordering::Relaxed);
+        for i in 0..N_CATS {
+            self.cat_current[i].store(0, Ordering::Relaxed);
+            self.cat_peak[i].store(0, Ordering::Relaxed);
+        }
     }
+}
+
+/// The process-wide tracker the engine, the arena, and the experiment
+/// drivers charge by default. Benches reset it between configurations;
+/// tests that assert exact numbers should inject their own
+/// [`MemTracker`] instead (unit tests run in parallel threads).
+pub fn global() -> &'static Arc<MemTracker> {
+    static GLOBAL: OnceLock<Arc<MemTracker>> = OnceLock::new();
+    GLOBAL.get_or_init(|| Arc::new(MemTracker::new()))
 }
 
 /// Format bytes with binary units.
@@ -102,6 +225,26 @@ mod tests {
         assert_eq!(t.peak(), 300);
         t.reset();
         assert_eq!(t.peak(), 0);
+    }
+
+    #[test]
+    fn categories_feed_their_counter_and_the_total() {
+        let t = MemTracker::new();
+        t.alloc_cat(MemCategory::Tape, 100);
+        t.alloc_cat(MemCategory::Solver, 50);
+        t.alloc(25); // uncategorized joins the total only
+        assert_eq!(t.current_cat(MemCategory::Tape), 100);
+        assert_eq!(t.current_cat(MemCategory::Solver), 50);
+        assert_eq!(t.current_cat(MemCategory::Contacts), 0);
+        assert_eq!(t.current(), 175);
+        assert_eq!(t.peak(), 175);
+        t.free_cat(MemCategory::Tape, 100);
+        assert_eq!(t.current_cat(MemCategory::Tape), 0);
+        assert_eq!(t.peak_cat(MemCategory::Tape), 100);
+        assert_eq!(t.current(), 75);
+        // Over-free saturates instead of wrapping.
+        t.free_cat(MemCategory::Solver, 9999);
+        assert_eq!(t.current_cat(MemCategory::Solver), 0);
     }
 
     #[test]

@@ -2,6 +2,14 @@
 //! crate and its dependencies, so the usual ecosystem crates (rand, serde,
 //! clap, tokio, criterion, proptest) are re-implemented here at the scale
 //! this engine needs.
+//!
+//! The memory/concurrency substrate is three layers that compose:
+//! [`pool`] (the persistent worker runtime every parallel path runs on),
+//! [`scratch`] (per-worker thread-local solver temporaries), and
+//! [`arena`] (the cross-scene [`arena::BatchArena`] pooling per-step
+//! batch buffers), with [`memory`] providing the category-level
+//! logical-bytes accounting all of them report through.
+pub mod arena;
 pub mod bench;
 pub mod cli;
 pub mod json;

@@ -36,7 +36,11 @@
 //! process-wide runtime sized by [`Pool::machine_workers`]; the engine
 //! ([`crate::engine::Simulation`]), the batch layer
 //! ([`crate::batch::SceneBatch`]), and the lockstep forward/backward
-//! paths all draw from this single worker set. [`Pool::new`] builds a
+//! paths all draw from this single worker set. A handle's budget also
+//! bounds how many scenes of a batch execute a stage concurrently,
+//! which is what caps the live checkout count of the cross-scene
+//! [`crate::util::arena::BatchArena`] — batch buffer memory scales with
+//! the budget, not the population. [`Pool::new`] builds a
 //! dedicated runtime (own threads, shut down on `Drop`) for isolation —
 //! mostly tests. [`Pool::scoped`] keeps the old spawn-per-call behavior
 //! as a measurable baseline for the perf benches.

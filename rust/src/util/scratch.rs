@@ -1,5 +1,11 @@
-//! Per-worker reusable scratch buffers — the first slice of the
-//! ROADMAP "cross-scene memory pooling" item.
+//! Per-worker reusable scratch buffers — the first (thread-local) slice
+//! of the ROADMAP "cross-scene memory pooling" item; the cross-scene
+//! slice is [`crate::util::arena`], which pools per-(scene, step)
+//! buffers across a batch while this module keeps pooling per-worker
+//! solver temporaries underneath it. Invariants match the arena's:
+//! every take is fully overwritten before use (bitwise parity), reuse
+//! never changes control flow (determinism), and retention is capped so
+//! hoarding cannot occur.
 //!
 //! The persistent pool ([`crate::util::pool`]) keeps worker threads
 //! alive across calls, so buffers parked in thread-local storage

@@ -10,6 +10,8 @@ use diffsim::engine::{DiffMode, SimConfig, Simulation};
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
 use diffsim::runtime::Runtime;
+use diffsim::util::arena::BatchArena;
+use diffsim::util::memory::{MemCategory, MemTracker};
 use diffsim::util::pool::Pool;
 use std::sync::Arc;
 
@@ -378,4 +380,155 @@ fn stateful_rollout_threads_per_scene_state() {
         // The cube falls: observed heights decrease.
         assert!(st[1] > *st.last().unwrap(), "scene {i}: {st:?}");
     }
+}
+
+// ---------------------------------------------------------------- arena
+
+#[test]
+fn arena_pooling_is_bitwise_neutral_for_lockstep_trajectories() {
+    // Same lockstep batch with the default shared arena, with pooling
+    // disabled, and with one private arena per scene: every mode must
+    // produce bit-identical trajectories (pooled buffers are cleared or
+    // zero-filled before use, so contents never depend on history).
+    let vxs = [0.0, 0.4, -0.3, 1.1];
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 4, ..Default::default() };
+    let build = || {
+        SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+            sys.rigids[1] = falling_cube(vxs[i]);
+        })
+    };
+    let mut shared = build(); // SceneBatch default: one pooled arena
+    assert!(shared.arena().is_pooling());
+    shared.run_lockstep(60);
+    let mut off = build();
+    off.set_arena(BatchArena::disabled());
+    off.run_lockstep(60);
+    let mut per_scene = build();
+    for sim in per_scene.sims_mut() {
+        sim.set_arena(BatchArena::pooled_with(64 << 20, Arc::new(MemTracker::new())));
+    }
+    per_scene.run_lockstep(60);
+    for i in 0..vxs.len() {
+        assert_scene_bitwise("arena-off", i, &off.sim(i).sys, &shared.sim(i).sys);
+        assert_scene_bitwise("arena-per-scene", i, &per_scene.sim(i).sys, &shared.sim(i).sys);
+    }
+}
+
+#[test]
+fn arena_pooling_is_bitwise_neutral_for_rollout_gradients() {
+    // rollout_grad_lockstep with the arena on vs off: losses, flattened
+    // parameter gradients, and initial-condition gradients must be
+    // bitwise-identical (the acceptance bar for the pooled tape/solver
+    // buffers).
+    let steps = 8;
+    let thetas = [0.2, 0.5, -0.3, 0.8];
+    let run = |arena: Option<BatchArena>| {
+        let mut cfg = cloth_cfg();
+        cfg.workers = 4;
+        let mut batch =
+            SceneBatch::from_scene(&cloth_pull_system(), &cfg, thetas.len(), |_, _| {});
+        if let Some(a) = arena {
+            batch.set_arena(a);
+        }
+        let res = batch.rollout_grad_lockstep(
+            steps,
+            |_| (),
+            |_, i, _s, sim| {
+                sim.sys.cloths[0].ext_force[8] = Vec3::new(thetas[i], 0.0, 0.0);
+            },
+            |_, sim, _| {
+                let mut seed = LossGrad::zeros(sim);
+                seed.cloth_x[0][8].x = 1.0;
+                (sim.sys.cloths[0].x[8].x, seed)
+            },
+        );
+        let flat = res.gather_param_grads(1, |_i, g, out| {
+            out[0] = (0..steps).map(|s| g.cloth_force[s][0][8].x).sum();
+        });
+        let x0: Vec<Vec3> = res.grads.iter().map(|g| g.cloth_x0[0][8]).collect();
+        (res.losses, flat, x0)
+    };
+    let (losses_on, flat_on, x0_on) = run(None); // default pooled arena
+    let (losses_off, flat_off, x0_off) = run(Some(BatchArena::disabled()));
+    for i in 0..thetas.len() {
+        assert!(
+            losses_on[i] == losses_off[i],
+            "scene {i} loss: pooled {} vs plain {}",
+            losses_on[i],
+            losses_off[i]
+        );
+        assert!(
+            flat_on[i] == flat_off[i],
+            "scene {i} dL/dθ: pooled {} vs plain {}",
+            flat_on[i],
+            flat_off[i]
+        );
+        assert!(
+            x0_on[i].x == x0_off[i].x && x0_on[i].y == x0_off[i].y && x0_on[i].z == x0_off[i].z,
+            "scene {i} dL/dx0: pooled {:?} vs plain {:?}",
+            x0_on[i],
+            x0_off[i]
+        );
+    }
+}
+
+#[test]
+fn arena_reuse_kicks_in_after_warmup_4x64() {
+    // The acceptance config: a 4-scene, 64-step lockstep batch must show
+    // a nonzero arena hit rate once warm, with contact and solver
+    // traffic visible in the injected tracker's categories.
+    let tracker = Arc::new(MemTracker::new());
+    let arena = BatchArena::pooled_with(64 << 20, tracker.clone());
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 4, ..Default::default() };
+    let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg, 4, |i, sys| {
+        sys.rigids[1] = falling_cube(0.3 * i as f64);
+    });
+    batch.set_arena(arena.clone());
+    batch.run_lockstep(64);
+    let s = arena.stats();
+    assert!(s.takes > 0, "arena saw no traffic: {s:?}");
+    assert!(s.hits > 0, "no reuse after 64 warm steps: {s:?}");
+    assert!(s.hit_rate() > 0.0);
+    assert!(s.retained_bytes > 0, "warm arena retains buffers: {s:?}");
+    assert!(tracker.peak_cat(MemCategory::Contacts) > 0, "contact buffers uncounted");
+    assert!(tracker.peak_cat(MemCategory::Solver) > 0, "solver buffers uncounted");
+    assert_eq!(tracker.current_cat(MemCategory::Tape), 0, "untaped run");
+}
+
+#[test]
+fn batch_tapes_register_tape_bytes_and_release_on_clear() {
+    // The MemTracker-registration bugfix: batched taped rollouts must
+    // report their tape bytes under MemCategory::Tape (previously batch
+    // scenes never registered them), and clear_tape must release them.
+    let tracker = Arc::new(MemTracker::new());
+    let arena = BatchArena::pooled_with(64 << 20, tracker.clone());
+    let mut cfg = cloth_cfg();
+    cfg.workers = 2;
+    let mut batch = SceneBatch::from_scene(&cloth_pull_system(), &cfg, 3, |_, _| {});
+    batch.set_arena(arena);
+    let res = batch.rollout_grad_lockstep(
+        6,
+        |_| (),
+        |_, _i, _s, sim| {
+            sim.sys.cloths[0].ext_force[8] = Vec3::new(0.4, 0.0, 0.0);
+        },
+        |_, sim, _| {
+            let mut seed = LossGrad::zeros(sim);
+            seed.cloth_x[0][8].x = 1.0;
+            (sim.sys.cloths[0].x[8].x, seed)
+        },
+    );
+    assert_eq!(res.losses.len(), 3);
+    let expected: usize = batch.sims().iter().map(|s| s.tape_bytes()).sum();
+    assert!(expected > 0, "taped rollout retains records");
+    assert_eq!(
+        tracker.current_cat(MemCategory::Tape),
+        expected,
+        "every batch scene's tape bytes are registered"
+    );
+    for sim in batch.sims_mut() {
+        sim.clear_tape();
+    }
+    assert_eq!(tracker.current_cat(MemCategory::Tape), 0, "clear_tape releases the bytes");
+    assert!(tracker.peak_cat(MemCategory::Tape) >= expected);
 }
