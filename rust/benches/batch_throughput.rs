@@ -1,8 +1,11 @@
 //! Batch-throughput bench: aggregate steps/sec of `SceneBatch` vs
 //! stepping the same scenes sequentially, across batch sizes, plus the
 //! persistent-pool vs spawn-per-call comparison that gates the
-//! worker-pool runtime (results merged into `BENCH_pool.json` for perf
-//! trajectory tracking; run with `--test` for the CI smoke config).
+//! worker-pool runtime and the pipelined-vs-blocking comparison that
+//! gates `batch::pipeline` (results merged into `BENCH_pool.json` —
+//! sections `batch_throughput` and `pipeline` — for perf trajectory
+//! tracking; run with `--test` for the CI smoke config).
+use diffsim::batch::pipeline::BatchPipeline;
 use diffsim::batch::SceneBatch;
 use diffsim::bodies::{RigidBody, System};
 use diffsim::engine::{SimConfig, Simulation};
@@ -139,5 +142,53 @@ fn main() {
         pj.set(label, row);
     }
     merge_section("BENCH_pool.json", "batch_throughput", pj);
+
+    // ---- pipelined vs blocking (→ BENCH_pool.json#pipeline) ----
+    // Blocking arm: the synchronous lockstep path on the shared
+    // persistent pool (the fallback the fig7/fig8 drivers keep).
+    // Pipelined arm: per-scene rollouts streamed through a bounded
+    // in-flight window (batch::pipeline), per-scene "loss" read on the
+    // submitter while slower scenes still step — the layout the
+    // pipelined fig7/fig8 drivers run.
+    let mut pp = Json::obj();
+    pp.set("workers", workers).set("window", workers);
+    for (label, base, scenes, steps) in configs {
+        let cfg = SimConfig { workers, dt: 1.0 / 100.0, ..Default::default() };
+        let (t_block, _) =
+            time_lockstep(base, &cfg, *scenes, *steps, pool_iters, &Pool::shared(workers));
+        let pipe = BatchPipeline::new(workers);
+        let run_pipe = || {
+            // Same per-scene customization as `time_lockstep`, so both
+            // arms simulate identical trajectories.
+            let losses = pipe.map_windowed(
+                *scenes,
+                |i| {
+                    let mut sys = base.clone();
+                    let body = sys.rigids[1].clone();
+                    sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+                    let mut sim =
+                        Simulation::new(sys, SimConfig { workers: 1, ..cfg.clone() });
+                    sim.run(*steps);
+                    sim
+                },
+                |_i, sim| sim.sys.rigids[1].translation().y,
+            );
+            std::hint::black_box(losses);
+        };
+        run_pipe(); // warmup
+        let t_pipe = time(0, pool_iters, run_pipe).mean();
+        let speedup = t_block / t_pipe.max(1e-12);
+        b.metric(&format!("{label}/pipeline_blocking_s"), t_block, "s");
+        b.metric(&format!("{label}/pipeline_pipelined_s"), t_pipe, "s");
+        b.metric(&format!("{label}/pipeline_speedup"), speedup, "x");
+        let mut row = Json::obj();
+        row.set("scenes", *scenes)
+            .set("steps", *steps)
+            .set("blocking_s", t_block)
+            .set("pipelined_s", t_pipe)
+            .set("pipelined_speedup", speedup);
+        pp.set(label, row);
+    }
+    merge_section("BENCH_pool.json", "pipeline", pp);
     b.finish();
 }

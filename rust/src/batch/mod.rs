@@ -27,6 +27,21 @@
 //! otherwise. Native-solver trajectories stay bitwise-identical to
 //! sequential per-scene stepping.
 //!
+//! # Async pipelining
+//!
+//! The lockstep entry points are *blocking*: the submitting thread
+//! waits for every scene before it can evaluate a single loss or build
+//! the next generation. [`pipeline::BatchPipeline`] is the asynchronous
+//! alternative — per-scene rollouts stream through a bounded in-flight
+//! window (finished scenes' losses are evaluated on the submitter while
+//! slower scenes still step) and population drivers double-buffer
+//! generations (generation *k+1*'s scene construction overlaps
+//! generation *k*'s stepping, with a drain barrier only at
+//! gradient-consuming boundaries). It sits on the pool's detached-job
+//! API ([`crate::util::pool::Pool::submit`]) and is bitwise-identical
+//! to the synchronous paths; the fig7 CMA-ES and fig8 BPTT drivers use
+//! it, keeping the lockstep entry points as the synchronous fallback.
+//!
 //! # Memory
 //!
 //! Every batch installs one shared
@@ -44,6 +59,9 @@
 
 pub mod backward;
 pub mod forward;
+pub mod pipeline;
+
+pub use pipeline::{BatchPipeline, Generation};
 
 use crate::bodies::System;
 use crate::diff::tape::Grads;

@@ -1,0 +1,448 @@
+//! Async pipelined batch stepping: latency-hiding on top of the
+//! persistent [`Pool`] runtime's detached jobs
+//! ([`Pool::submit`](crate::util::pool::Pool::submit) /
+//! [`JobHandle`]).
+//!
+//! The lockstep entry points ([`super::SceneBatch::run_lockstep`],
+//! [`super::SceneBatch::rollout_grad_lockstep`]) advance all scenes
+//! with a *blocking* pool: the submitting thread cannot evaluate a
+//! finished scene's loss, or build the next generation's scenes, until
+//! every scene of the current call has finished. Per-scene completion
+//! times are uneven exactly because impact zones are localized (a
+//! contact-rich scene resolves several fail-safe passes while a
+//! ballistic one resolves none), so the submitter idles on the slowest
+//! scene. [`BatchPipeline`] hides that latency two ways:
+//!
+//! * **Streaming** ([`BatchPipeline::map_windowed`] /
+//!   [`BatchPipeline::stream`]): per-scene rollout jobs flow through a
+//!   bounded in-flight *window*. Finished scenes are consumed on the
+//!   submitter — loss evaluation, scoring, logging — while slower
+//!   scenes still step on the workers. Handles are waited in submission
+//!   order, so consumption is in scene order and the output is
+//!   identical to the sequential loop.
+//! * **Generation double-buffering** ([`BatchPipeline::prepare`] /
+//!   [`BatchPipeline::generations`]): population-style drivers (CMA-ES
+//!   fig7, minibatched BPTT fig8) build generation *k+1*'s scenes —
+//!   construction, perturbation, untaped settling — as detached jobs
+//!   while generation *k* is still stepping. The *drain barrier* sits
+//!   only at gradient-consuming boundaries: a generation's seeds are
+//!   waited right before its own rollout, and gradients are always
+//!   produced and consumed synchronously on the submitter, never
+//!   overlapped with each other.
+//!
+//! # Dataflow
+//!
+//! ```text
+//! submitter                               pool workers (budget w)
+//! ─────────────────────────────────────────────────────────────────
+//! prepare(gen k+1) ──submit──▶ [build 0][build 1]…   (overlaps gen k)
+//! stream(gen k):
+//!   wait seed i ──submit──▶ [work i: step scene i … done]
+//!   window full → wait oldest ──▶ consume(i−W)   (loss, on submitter)
+//!   …
+//!   drain: wait remaining in-flight          ◀── barrier before the
+//!                                                results are consumed
+//! ```
+//!
+//! # Invariants
+//!
+//! * **Determinism / bitwise parity.** Jobs are waited in submission
+//!   order and `consume` runs only on the submitter, so outputs are in
+//!   scene order and bitwise-independent of worker scheduling. A
+//!   pipelined driver that runs the same per-scene code as the
+//!   sequential path produces bitwise-identical trajectories, losses,
+//!   and gradients (asserted in `rust/tests/integration_pipeline.rs`).
+//!   On a 1-worker pool every `submit` degenerates to synchronous
+//!   execution, so the pipeline *is* the sequential loop.
+//! * **Bounded window.** At most `window` scenes of a stream are
+//!   in flight (submitted, not yet consumed) at once, and the pool's
+//!   budget gate additionally caps how many execute concurrently —
+//!   which is what keeps a shared
+//!   [`BatchArena`](crate::util::arena::BatchArena)'s live checkout
+//!   count (and hence warm buffer memory) bounded when scenes step as
+//!   detached jobs.
+//! * **Panic-at-wait.** A panic in one scene's job surfaces when that
+//!   handle is waited (in scene order). Before it propagates out of the
+//!   pipeline call, every other in-flight job is drained
+//!   ([`JobHandle`]'s drop blocks), so the pool is never poisoned and
+//!   no job outlives the borrows it captured.
+//! * **No nested waits.** Pipeline jobs never wait on other detached
+//!   jobs (see the pool docs' "never block on a handle from inside a
+//!   pool task" rule); nested `map`s inside a scene job remain fine.
+
+use crate::util::pool::{JobHandle, Pool};
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Erase the borrow lifetime of a scene job so it can be submitted as a
+/// detached pool job.
+///
+/// SAFETY: sound only because every caller drains its in-flight handles
+/// on every exit path — [`JobHandle`]'s drop blocks until the job has
+/// finished — so the closure (and everything it borrows) outlives the
+/// job even when the submitter unwinds.
+unsafe fn erase_job<'a, T>(
+    job: Box<dyn FnOnce() -> T + Send + 'a>,
+) -> Box<dyn FnOnce() -> T + Send + 'static> {
+    std::mem::transmute(job)
+}
+
+/// A generation of scene seeds being built ahead of time by detached
+/// pool jobs (see [`BatchPipeline::prepare`]). Waiting it — explicitly
+/// via [`Generation::wait_all`], implicitly via [`BatchPipeline::stream`],
+/// or by dropping it — is the drain barrier for the construction jobs.
+pub struct Generation<S> {
+    handles: Vec<JobHandle<S>>,
+}
+
+impl<S> Generation<S> {
+    /// Scenes in this generation.
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+
+    /// Drain barrier: block until every seed is built, returning them
+    /// in scene order.
+    pub fn wait_all(self) -> Vec<S> {
+        self.handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    /// Keep only the first `n` seeds (a truncated final CMA-ES
+    /// generation); the dropped construction jobs are drained.
+    pub fn truncate(&mut self, n: usize) {
+        self.handles.truncate(n);
+    }
+}
+
+/// Scheduler for asynchronous, windowed batch stepping (module docs).
+/// Cheap to construct; holds a [`Pool`] handle and a window size.
+pub struct BatchPipeline {
+    pool: Pool,
+    window: usize,
+}
+
+impl BatchPipeline {
+    /// Pipeline on the process-wide shared runtime with a `workers`
+    /// budget ([`Pool::shared`]); the in-flight window defaults to the
+    /// budget (a wider window cannot add concurrency, only queueing).
+    pub fn new(workers: usize) -> BatchPipeline {
+        let w = workers.max(1);
+        BatchPipeline { pool: Pool::shared(w), window: w }
+    }
+
+    /// Pipeline over an explicit pool handle (dedicated [`Pool::new`]
+    /// runtimes for isolation, [`Pool::scoped`] for bench baselines);
+    /// the window defaults to the handle's budget.
+    pub fn with_pool(pool: Pool) -> BatchPipeline {
+        let w = pool.workers().max(1);
+        BatchPipeline { pool, window: w }
+    }
+
+    /// Builder-style window override (clamped to ≥ 1).
+    pub fn with_window(mut self, window: usize) -> BatchPipeline {
+        self.set_window(window);
+        self
+    }
+
+    /// Set the bounded in-flight window: at most this many scenes of a
+    /// stream are submitted-but-unconsumed at once.
+    pub fn set_window(&mut self, window: usize) {
+        self.window = window.max(1);
+    }
+
+    /// The configured in-flight window.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// The pool handle jobs are submitted on.
+    pub fn pool(&self) -> &Pool {
+        &self.pool
+    }
+
+    /// Kick off construction of `n` scene seeds as detached jobs and
+    /// return immediately — generation *k+1*'s `prepare` overlaps
+    /// generation *k*'s stepping. `build` must be candidate-independent
+    /// (that is what makes the overlap legal) and is typically scene
+    /// cloning, perturbation, or untaped settling.
+    pub fn prepare<S, B>(&self, n: usize, build: B) -> Generation<S>
+    where
+        S: Send + 'static,
+        B: Fn(usize) -> S + Send + Sync + 'static,
+    {
+        let build = Arc::new(build);
+        Generation {
+            handles: (0..n)
+                .map(|i| {
+                    let b = build.clone();
+                    self.pool.submit(move || b(i))
+                })
+                .collect(),
+        }
+    }
+
+    /// The one bounded-window driver both streaming entry points share:
+    /// `submit_next(i)` submits scene `i`'s job (waiting its seed first,
+    /// for [`BatchPipeline::stream`]), the oldest in-flight handle is
+    /// waited whenever the window is full, and `consume` runs on the
+    /// submitter in scene order.
+    ///
+    /// This is also the drain guarantee the callers' `erase_job` safety
+    /// arguments rest on: `inflight` is waited or blocking-dropped on
+    /// every exit path (including unwinds out of `wait`/`consume`), so
+    /// no submitted job outlives the caller's borrowed closures.
+    fn drive_window<T, R, F, C>(&self, n: usize, mut submit_next: F, mut consume: C) -> Vec<R>
+    where
+        F: FnMut(usize) -> JobHandle<T>,
+        C: FnMut(usize, T) -> R,
+    {
+        let mut out = Vec::with_capacity(n);
+        let mut inflight: VecDeque<JobHandle<T>> = VecDeque::new();
+        for i in 0..n {
+            if inflight.len() >= self.window {
+                let t = inflight.pop_front().expect("window >= 1").wait();
+                let done = out.len();
+                out.push(consume(done, t));
+            }
+            inflight.push_back(submit_next(i));
+        }
+        while let Some(h) = inflight.pop_front() {
+            let t = h.wait();
+            let done = out.len();
+            out.push(consume(done, t));
+        }
+        out
+    }
+
+    /// Stream `n` scenes through the bounded window: `work(i)` runs on
+    /// a pool worker (build + roll out scene `i`), `consume(i, t)` runs
+    /// on the submitting thread in scene order while later scenes still
+    /// step. Returns the consumed results in scene order. Bitwise
+    /// equivalent to `(0..n).map(|i| consume(i, work(i))).collect()`.
+    pub fn map_windowed<T, R, W, C>(&self, n: usize, work: W, consume: C) -> Vec<R>
+    where
+        T: Send + 'static,
+        W: Fn(usize) -> T + Sync,
+        C: FnMut(usize, T) -> R,
+    {
+        let work_ref: &(dyn Fn(usize) -> T + Sync) = &work;
+        self.drive_window(
+            n,
+            |i| {
+                let job: Box<dyn FnOnce() -> T + Send + '_> = Box::new(move || work_ref(i));
+                // SAFETY: `drive_window` drains every submitted handle
+                // on every exit path, so `work` outlives every job.
+                let job = unsafe { erase_job(job) };
+                self.pool.submit(job)
+            },
+            consume,
+        )
+    }
+
+    /// [`BatchPipeline::map_windowed`] over a prepared generation:
+    /// seed `i` (waited in scene order — usually already built, since
+    /// its construction overlapped the previous generation) is handed
+    /// to `work(i, seed)` on a worker, and `consume(i, t)` runs on the
+    /// submitter. The generation's drain barrier is this call.
+    pub fn stream<S, T, R, W, C>(
+        &self,
+        generation: Generation<S>,
+        work: W,
+        consume: C,
+    ) -> Vec<R>
+    where
+        S: Send + 'static,
+        T: Send + 'static,
+        W: Fn(usize, S) -> T + Sync,
+        C: FnMut(usize, T) -> R,
+    {
+        let work_ref: &(dyn Fn(usize, S) -> T + Sync) = &work;
+        let n = generation.handles.len();
+        let mut seeds = generation.handles.into_iter();
+        self.drive_window(
+            n,
+            |i| {
+                let seed = seeds.next().expect("one seed handle per scene").wait();
+                let job: Box<dyn FnOnce() -> T + Send + '_> =
+                    Box::new(move || work_ref(i, seed));
+                // SAFETY: `drive_window` drains every submitted handle
+                // on every exit path (and the remaining seed handles'
+                // drops block too), so `work` outlives every job.
+                let job = unsafe { erase_job(job) };
+                self.pool.submit(job)
+            },
+            consume,
+        )
+    }
+
+    /// Double-buffered generation loop for population-style drivers:
+    /// `build(g + 1)` runs on a pool worker while `run(g, state)`
+    /// executes on the submitter, so the next generation's scene
+    /// construction overlaps the current one's stepping. `run` is where
+    /// rollouts execute and gradients are produced *and consumed* — the
+    /// wait on `build(g)`'s handle is the only barrier, and it sits
+    /// right at that gradient-consuming boundary, so results are
+    /// bitwise-identical to the sequential
+    /// `(0..n).map(|g| run(g, build(g)))` loop.
+    pub fn generations<S, R, B, U>(&self, n: usize, build: B, mut run: U) -> Vec<R>
+    where
+        S: Send + 'static,
+        B: Fn(usize) -> S + Send + Sync + 'static,
+        U: FnMut(usize, S) -> R,
+    {
+        let build = Arc::new(build);
+        let mut out = Vec::with_capacity(n);
+        let mut next: Option<JobHandle<S>> = if n > 0 {
+            let b = build.clone();
+            Some(self.pool.submit(move || b(0)))
+        } else {
+            None
+        };
+        for g in 0..n {
+            let state = next.take().expect("a handle exists for every generation").wait();
+            if g + 1 < n {
+                let b = build.clone();
+                next = Some(self.pool.submit(move || b(g + 1)));
+            }
+            out.push(run(g, state));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn map_windowed_matches_sequential_in_order() {
+        let pipe = BatchPipeline::new(4).with_window(2);
+        let work = |i: usize| {
+            let mut acc = 1.0f64;
+            for k in 0..(i * 17 + 3) {
+                acc = (acc * 1.0001 + k as f64).sin();
+            }
+            acc
+        };
+        let seq: Vec<(usize, f64)> = (0..12).map(|i| (i, work(i))).collect();
+        let out = pipe.map_windowed(12, work, |i, v| (i, v));
+        assert_eq!(out, seq, "pipelined output must be bitwise the sequential loop");
+    }
+
+    #[test]
+    fn inline_pool_pipeline_is_the_sequential_loop() {
+        // Budget 1 → submit degenerates to synchronous execution; the
+        // consume callbacks interleave with work exactly like a loop.
+        let pipe = BatchPipeline::new(1);
+        let order = std::sync::Mutex::new(Vec::new());
+        pipe.map_windowed(
+            4,
+            |i| {
+                order.lock().unwrap().push(format!("work{i}"));
+                i
+            },
+            |i, v| {
+                assert_eq!(i, v);
+                order.lock().unwrap().push(format!("consume{i}"));
+            },
+        );
+        let o = order.lock().unwrap().clone();
+        // All work happens before consumption begins only within the
+        // window; at window=1 each scene's work precedes its consume.
+        assert_eq!(o.iter().filter(|s| s.starts_with("work")).count(), 4);
+        assert_eq!(o.iter().filter(|s| s.starts_with("consume")).count(), 4);
+        assert!(o[0] == "work0");
+    }
+
+    #[test]
+    fn window_bounds_in_flight_jobs() {
+        let live = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let pipe = BatchPipeline::new(8).with_window(3);
+        pipe.map_windowed(
+            16,
+            |i| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(Duration::from_millis(2));
+                live.fetch_sub(1, Ordering::SeqCst);
+                i
+            },
+            |_i, v| v,
+        );
+        assert!(
+            peak.load(Ordering::SeqCst) <= 3,
+            "window 3 exceeded: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn stream_threads_prepared_seeds_in_order() {
+        let pipe = BatchPipeline::new(3).with_window(2);
+        let generation = pipe.prepare(6, |i| i * 10);
+        assert_eq!(generation.len(), 6);
+        let out = pipe.stream(generation, |i, seed| seed + i, |_i, v| v);
+        assert_eq!(out, vec![0, 11, 22, 33, 44, 55]);
+    }
+
+    #[test]
+    fn generation_wait_all_and_truncate() {
+        let pipe = BatchPipeline::new(3);
+        let mut generation = pipe.prepare(5, |i| i + 100);
+        generation.truncate(3); // drains the dropped construction jobs
+        assert_eq!(generation.wait_all(), vec![100, 101, 102]);
+    }
+
+    #[test]
+    fn generations_double_buffer_matches_sequential() {
+        let pipe = BatchPipeline::new(3);
+        let built = AtomicUsize::new(0);
+        let out = pipe.generations(
+            5,
+            move |g| g * 3,
+            |g, s| {
+                built.fetch_add(1, Ordering::SeqCst);
+                assert_eq!(s, g * 3, "generation {g} got the wrong state");
+                s + 1
+            },
+        );
+        assert_eq!(out, vec![1, 4, 7, 10, 13]);
+    }
+
+    #[test]
+    fn panic_in_one_job_drains_and_rethrows_in_scene_order() {
+        let pipe = BatchPipeline::new(4).with_window(2);
+        let completed = AtomicUsize::new(0);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pipe.map_windowed(
+                8,
+                |i| {
+                    if i == 3 {
+                        panic!("scene 3 exploded");
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                    completed.fetch_add(1, Ordering::SeqCst);
+                    i
+                },
+                |_i, v| v,
+            )
+        }));
+        let payload = r.expect_err("the scene panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("scene 3 exploded"), "payload: {msg}");
+        // Drained: nothing is still running after the unwind.
+        let settled = completed.load(Ordering::SeqCst);
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(completed.load(Ordering::SeqCst), settled, "jobs outlived the drain");
+        // The pool is not poisoned.
+        assert_eq!(pipe.pool().map(5, |i| i * 2), vec![0, 2, 4, 6, 8]);
+    }
+}

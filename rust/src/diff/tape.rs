@@ -8,7 +8,8 @@
 //! [`StepRecord::bytes`] to
 //! [`MemCategory::Tape`](crate::util::memory::MemCategory) when pushed
 //! and releases them when the tape is cleared. Between rollouts the
-//! records' zone buffers go back to the scene's
+//! records' zone buffers *and* cloth solve buffers (the implicit-Euler
+//! system/Jacobian CSRs, `dfdv`, `dv`) go back to the scene's
 //! [`BatchArena`](crate::util::arena::BatchArena) through
 //! [`StepRecord::recycle`], so repeated `rollout_grad` calls on a batch
 //! re-fill warm buffers instead of reallocating every tape.
@@ -82,13 +83,17 @@ impl StepRecord {
         b
     }
 
-    /// Return this record's reusable zone buffers (problem `q0`/M̂,
-    /// solution `q`/λ, and the `ZoneRec` list itself) to `arena` for the
-    /// next rollout. Category charges are the caller's job (the engine
-    /// releases the record's `Tape` bytes before recycling); with a
-    /// disabled arena this is exactly a drop.
+    /// Return this record's reusable buffers to `arena` for the next
+    /// rollout: the zone buffers (problem `q0`/M̂, solution `q`/λ, and
+    /// the `ZoneRec` list itself) and the cloth solve buffers (the
+    /// system and Jacobian CSRs' `indptr`/`indices`/`data`, the `dfdv`
+    /// diagonal, the `dv` increments, and the `ClothSolveRec` list) —
+    /// the loan/retire mirror of `ZoneProblem::build_in`/`retire` and
+    /// `cloth_implicit_step_in`. Category charges are the caller's job
+    /// (the engine releases the record's `Tape` bytes before
+    /// recycling); with a disabled arena this is exactly a drop.
     pub fn recycle(self, arena: &BatchArena) {
-        let StepRecord { zones, .. } = self;
+        let StepRecord { zones, cloth_solves, .. } = self;
         let mut zones = zones;
         for zr in zones.drain(..) {
             let ZoneRec { problem, solution, .. } = zr;
@@ -100,6 +105,18 @@ impl StepRecord {
             arena.park_vec(lambda);
         }
         arena.park_vec(zones);
+        let mut cloth_solves = cloth_solves;
+        for cs in cloth_solves.drain(..) {
+            let ClothSolveRec { a, jx, dfdv, dv } = cs;
+            for csr in [a, jx] {
+                arena.park_vec(csr.indptr);
+                arena.park_vec(csr.indices);
+                arena.park_vec(csr.data);
+            }
+            arena.park_vec(dfdv);
+            arena.park_vec(dv);
+        }
+        arena.park_vec(cloth_solves);
     }
 }
 

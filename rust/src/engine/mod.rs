@@ -15,7 +15,7 @@ use crate::collision::{detect_in, surfaces_from_system, DetectStats};
 use crate::diff::tape::{ClothSolveRec, RigidSolveRec, StepRecord, ZoneRec};
 use crate::math::sparse::Triplets;
 use crate::math::{euler, Vec3};
-use crate::solver::implicit_euler::{cloth_implicit_step, rigid_step_damped};
+use crate::solver::implicit_euler::{cloth_implicit_step, cloth_implicit_step_in, rigid_step_damped};
 use crate::solver::lcp::merge_zones;
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
 use crate::util::arena::BatchArena;
@@ -217,7 +217,16 @@ impl Simulation {
         let mut cloth_vhalf: Vec<Vec<Vec3>> = Vec::with_capacity(self.sys.cloths.len());
         let mut cloth_ext: Vec<Vec<Vec3>> = Vec::new();
         for c in &self.sys.cloths {
-            let solve = cloth_implicit_step(c, h, g);
+            // Taped solves loan their retained buffers (system CSR, Δv)
+            // from the scene's arena; `StepRecord::recycle` hands them
+            // back at `clear_tape`, so repeated rollouts re-fill warm
+            // CSR storage. Untaped solves retain nothing — plain
+            // allocation stays the right call there.
+            let solve = if self.cfg.record_tape {
+                cloth_implicit_step_in(c, h, g, &self.arena)
+            } else {
+                cloth_implicit_step(c, h, g)
+            };
             stats.cg_iters += solve.iters;
             let v: Vec<Vec3> = (0..c.n_nodes())
                 .map(|i| if c.pinned[i] { Vec3::default() } else { c.v[i] + solve.dv[i] })
@@ -227,7 +236,13 @@ impl Simulation {
                 let dim = 3 * c.n_nodes();
                 let mut jx_t = Triplets::new(dim, dim);
                 let dfdv = c.force_jacobian(&mut jx_t, 0, false);
-                cloth_recs.push(ClothSolveRec { a: solve.a, jx: jx_t.to_csr(), dfdv, dv: solve.dv });
+                let jnnz = jx_t.nnz();
+                let jx = jx_t.to_csr_into(
+                    self.arena.loan_vec(jnnz),
+                    self.arena.loan_vec(jnnz),
+                    self.arena.loan_vec(dim + 1),
+                );
+                cloth_recs.push(ClothSolveRec { a: solve.a, jx, dfdv, dv: solve.dv });
                 cloth_ext.push(c.ext_force.clone());
             }
         }

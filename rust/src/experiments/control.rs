@@ -7,6 +7,7 @@
 //! Task (b) "cloth": corner forces steer a cloth carrying a ball.
 
 use super::{dump_json, print_table};
+use crate::batch::pipeline::BatchPipeline;
 use crate::batch::SceneBatch;
 use crate::bodies::{Cloth, RigidBody, System};
 use crate::diff::tape::Grads;
@@ -147,27 +148,27 @@ pub fn train_ours_sticks(episodes: usize, seed: u64) -> Vec<f64> {
     losses
 }
 
-/// Minibatched "ours" training: every update rolls out `batch` episodes
-/// with independent random targets through a [`SceneBatch`] in lockstep
-/// (forward zone solves pooled across the minibatch per fail-safe pass;
-/// batched backward included) and averages the policy gradients into
-/// one Adam step. Returns the mean episode loss per update.
-pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f64> {
-    let batch = batch.max(1);
-    let mut rng = Pcg32::new(seed);
-    let mut net = Mlp::new(&[5, 50, 200, 4], &mut rng);
-    let mut opt = Adam::new(net.n_params(), 3e-3);
-    let workers = Pool::machine_workers();
-    let cfg = SimConfig { record_tape: true, dt: 1.0 / 100.0, workers, ..Default::default() };
-    let mut curve = Vec::new();
-    for _ in 0..updates {
-        let targets: Vec<Vec3> = (0..batch)
-            .map(|_| Vec3::new(rng.range(0.2, 0.8), 0.0, rng.range(-0.4, 0.4)))
-            .collect();
-        let mut sb = SceneBatch::from_scene(&sticks_system(), &cfg, batch, |_, _| {});
-        let net_ref = &net;
+/// One minibatched BPTT update on a pre-built [`SceneBatch`]: draw
+/// `batch` random targets, roll the episodes out in lockstep with
+/// taping, chain the force gradients into the network averaged over the
+/// minibatch, and take one Adam step. Returns the minibatch mean loss.
+/// Factored out so the pipelined and synchronous drivers run the exact
+/// same math (their curves are bitwise-identical, asserted in
+/// `rust/tests/integration_pipeline.rs`).
+fn sticks_minibatch_update(
+    sb: &mut SceneBatch,
+    rng: &mut Pcg32,
+    net: &mut Mlp,
+    opt: &mut Adam,
+    batch: usize,
+) -> f64 {
+    let targets: Vec<Vec3> = (0..batch)
+        .map(|_| Vec3::new(rng.range(0.2, 0.8), 0.0, rng.range(-0.4, 0.4)))
+        .collect();
+    let res = {
+        let net_ref: &Mlp = net;
         let targets_ref = &targets;
-        let res = sb.rollout_grad_lockstep(
+        sb.rollout_grad_lockstep(
             EP_STEPS,
             |_| Vec::with_capacity(EP_STEPS),
             |traces: &mut Vec<(MlpTrace, Vec<f64>)>, i, s, sim| {
@@ -182,18 +183,75 @@ pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f
                 seed_g.rigid_q[3][5] = 2.0 * (p.z - t.z);
                 (loss, seed_g)
             },
-        );
-        // Chain the force gradients into the network, averaged over the
-        // minibatch.
-        let mut grad = vec![0.0; net.n_params()];
-        let inv_b = 1.0 / batch as f64;
-        for (i, traces) in res.states.iter().enumerate() {
-            sticks_chain_grads(&net, traces, &res.grads[i], inv_b, &mut grad);
-        }
-        opt.step(&mut net.params, &grad);
-        curve.push(res.mean_loss());
+        )
+    };
+    // Chain the force gradients into the network, averaged over the
+    // minibatch.
+    let mut grad = vec![0.0; net.n_params()];
+    let inv_b = 1.0 / batch as f64;
+    for (i, traces) in res.states.iter().enumerate() {
+        sticks_chain_grads(net, traces, &res.grads[i], inv_b, &mut grad);
     }
-    curve
+    opt.step(&mut net.params, &grad);
+    res.mean_loss()
+}
+
+/// Minibatched "ours" training, *pipelined*: every update rolls out
+/// `batch` episodes with independent random targets through a
+/// [`SceneBatch`] in lockstep (forward zone solves pooled across the
+/// minibatch per fail-safe pass; batched backward included) and
+/// averages the policy gradients into one Adam step — while update
+/// *k+1*'s scene construction runs on pool workers as a detached job
+/// ([`BatchPipeline::generations`]). The drain barrier sits at the
+/// gradient-consuming boundary (each update's rollout+Adam step runs
+/// synchronously on the submitter), so the curve is bitwise-identical
+/// to the synchronous fallback [`train_ours_sticks_lockstep`]. Returns
+/// the mean episode loss per update.
+pub fn train_ours_sticks_batch(updates: usize, batch: usize, seed: u64) -> Vec<f64> {
+    train_ours_sticks_minibatched(updates, batch, seed, true)
+}
+
+/// Synchronous fallback: the same minibatched lockstep trainer without
+/// generation double-buffering (scene construction blocks between
+/// updates). Kept as the blocking reference path; bitwise-identical
+/// curves to [`train_ours_sticks_batch`].
+pub fn train_ours_sticks_lockstep(updates: usize, batch: usize, seed: u64) -> Vec<f64> {
+    train_ours_sticks_minibatched(updates, batch, seed, false)
+}
+
+fn train_ours_sticks_minibatched(
+    updates: usize,
+    batch: usize,
+    seed: u64,
+    pipelined: bool,
+) -> Vec<f64> {
+    let batch = batch.max(1);
+    let mut rng = Pcg32::new(seed);
+    let mut net = Mlp::new(&[5, 50, 200, 4], &mut rng);
+    let mut opt = Adam::new(net.n_params(), 3e-3);
+    let workers = Pool::machine_workers();
+    let cfg = SimConfig { record_tape: true, dt: 1.0 / 100.0, workers, ..Default::default() };
+    if pipelined {
+        // Scene construction is policy- and target-independent, so
+        // update k+1's SceneBatch builds while update k rolls out and
+        // backpropagates. Targets are still drawn inside each update,
+        // in update order — the rng sequence is untouched.
+        let pipe = BatchPipeline::new(workers);
+        let base = sticks_system();
+        let build_cfg = cfg.clone();
+        pipe.generations(
+            updates,
+            move |_g| SceneBatch::from_scene(&base, &build_cfg, batch, |_, _| {}),
+            |_g, mut sb| sticks_minibatch_update(&mut sb, &mut rng, &mut net, &mut opt, batch),
+        )
+    } else {
+        (0..updates)
+            .map(|_| {
+                let mut sb = SceneBatch::from_scene(&sticks_system(), &cfg, batch, |_, _| {});
+                sticks_minibatch_update(&mut sb, &mut rng, &mut net, &mut opt, batch)
+            })
+            .collect()
+    }
 }
 
 /// DDPG on the same environment/steps budget; per-episode final loss.

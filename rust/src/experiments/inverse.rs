@@ -4,7 +4,9 @@
 //! optimization (through the differentiable simulator) vs CMA-ES.
 
 use super::{dump_json, print_table};
+use crate::batch::pipeline::{BatchPipeline, Generation};
 use crate::batch::SceneBatch;
+use crate::util::arena::BatchArena;
 use crate::bodies::{Cloth, RigidBody, System};
 use crate::engine::backward::{backward, LossGrad};
 use crate::engine::{SimConfig, Simulation};
@@ -68,15 +70,69 @@ fn rollout(forces: &[f64], target: Vec3, record: bool) -> (f64, Simulation) {
     (loss, sim)
 }
 
-/// Batched population evaluation: one scene per candidate force
-/// sequence, all stepped through a [`SceneBatch`] in *lockstep* (the
-/// CMA-ES population / perturbation-set workload) so every fail-safe
-/// pass's zone solves pool across the whole population — one
-/// `Coordinator::zone_solve_batch` call per pass level when a shared
-/// coordinator is installed, one cross-scene pool map otherwise.
-/// Losses come back in candidate order and are bitwise-identical to
-/// sequential `loss_only`.
+/// Prepare one candidate-independent scene for the pipelined population
+/// evaluation: marble on the sheet, sharing the population's arena,
+/// settled untaped into its pocket. Candidate forces only apply during
+/// the controlled segment, which is why generation *k+1*'s settling can
+/// overlap generation *k*'s stepping without changing a single bit.
+fn prepare_settled(pipe: &BatchPipeline, n: usize, arena: &BatchArena) -> Generation<Simulation> {
+    let arena = arena.clone();
+    pipe.prepare(n, move |_| {
+        let mut sim = Simulation::new(marble_scene(), episode_cfg());
+        sim.set_arena(arena.clone());
+        sim.run(SETTLE_STEPS);
+        sim
+    })
+}
+
+/// Stream a prepared generation against `cands`: each scene's
+/// controlled rollout runs on a pool worker, its loss is evaluated on
+/// the submitter while slower scenes still step. Losses come back in
+/// candidate order, bitwise-identical to sequential [`loss_only`].
+fn stream_losses(
+    pipe: &BatchPipeline,
+    generation: Generation<Simulation>,
+    cands: &[Vec<f64>],
+    target: Vec3,
+) -> Vec<f64> {
+    pipe.stream(
+        generation,
+        |i, mut sim: Simulation| {
+            for s in 0..STEPS {
+                sim.sys.rigids[0].ext_force =
+                    Vec3::new(cands[i][2 * s], 0.0, cands[i][2 * s + 1]);
+                sim.step();
+            }
+            sim
+        },
+        |i, sim| episode_loss(&sim, &cands[i], target),
+    )
+}
+
+/// *Pipelined* population evaluation (the CMA-ES / perturbation-set
+/// workload): one scene per candidate force sequence, streamed through
+/// a [`BatchPipeline`] window so finished candidates' losses are scored
+/// on the submitter while slower candidates still step. Losses come
+/// back in candidate order and are bitwise-identical to both sequential
+/// [`loss_only`] and the lockstep fallback [`loss_only_lockstep`].
 pub fn loss_only_batch(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let pipe = BatchPipeline::new(Pool::machine_workers());
+    let arena = BatchArena::new();
+    let generation = prepare_settled(&pipe, cands.len(), &arena);
+    stream_losses(&pipe, generation, cands, target)
+}
+
+/// Synchronous fallback: the pre-pipeline *lockstep* population
+/// evaluation — all scenes advance through a blocking [`SceneBatch`],
+/// pooling every fail-safe pass's zone solves across the population
+/// (one `Coordinator::zone_solve_batch` call per pass level when a
+/// shared coordinator is installed, one cross-scene pool map
+/// otherwise). Bitwise-identical losses to [`loss_only_batch`]; prefer
+/// it when a PJRT coordinator should amortize across the population.
+pub fn loss_only_lockstep(cands: &[Vec<f64>], target: Vec3) -> Vec<f64> {
     if cands.is_empty() {
         return Vec::new();
     }
@@ -133,14 +189,23 @@ pub fn optimize_gradient_lr(target: Vec3, iters: usize, lr: f64) -> Vec<f64> {
 }
 
 /// CMA-ES baseline; returns best-so-far loss per EPISODE (each candidate
-/// evaluation is one simulation — the x-axis the paper plots). The whole
-/// population of each generation is evaluated in parallel through
-/// [`loss_only_batch`]; the curve is identical to sequential evaluation.
+/// evaluation is one simulation — the x-axis the paper plots). Each
+/// generation's population streams through a [`BatchPipeline`] window
+/// (losses scored on the submitter while slower candidates step), and
+/// the *next* generation's scenes — construction plus untaped settling,
+/// both candidate-independent — are built by detached jobs while the
+/// current generation evaluates. The drain barrier is `tell`/`ask` (the
+/// CMA-ES state update needs every loss), so the curve is identical to
+/// sequential evaluation.
 pub fn optimize_cmaes(target: Vec3, episodes: usize, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::new(seed);
     let mut es = CmaEs::new(&vec![0.0; 2 * STEPS], 0.5);
     let mut curve = Vec::new();
     let mut best = f64::MAX;
+    let pipe = BatchPipeline::new(Pool::machine_workers());
+    let arena = BatchArena::new();
+    // Generation k+1's settled scenes, building while generation k runs.
+    let mut prepared: Option<Generation<Simulation>> = None;
     loop {
         let remaining = episodes.saturating_sub(curve.len());
         if remaining == 0 {
@@ -152,7 +217,20 @@ pub fn optimize_cmaes(target: Vec3, episodes: usize, seed: u64) -> Vec<f64> {
         // behavior-identical to stopping mid-population.
         let truncated = pop.len() > remaining;
         pop.truncate(remaining);
-        let fits = loss_only_batch(&pop, target);
+        let mut generation = prepared
+            .take()
+            .unwrap_or_else(|| prepare_settled(&pipe, pop.len(), &arena));
+        generation.truncate(pop.len());
+        if !truncated && remaining > pop.len() {
+            // Double-buffer: the next generation's scenes settle on the
+            // workers while this generation's candidates stream. Sized
+            // to the episodes the budget can still afford, so a short
+            // final generation never builds (then blocking-drops)
+            // surplus settles.
+            let next_pop = es.lambda.min(remaining - pop.len());
+            prepared = Some(prepare_settled(&pipe, next_pop, &arena));
+        }
+        let fits = stream_losses(&pipe, generation, &pop, target);
         let mut scored = Vec::with_capacity(pop.len());
         for (x, l) in pop.into_iter().zip(fits) {
             best = best.min(l);
@@ -207,15 +285,20 @@ mod tests {
 
     #[test]
     fn batched_population_matches_sequential_losses() {
+        // Pipelined == lockstep == sequential, bitwise (the fig7
+        // acceptance bar; the full three-way sweep also lives in
+        // rust/tests/integration_pipeline.rs).
         let target = Vec3::new(0.3, 0.0, 0.1);
         let mut rng = Pcg32::new(2);
         let cands: Vec<Vec<f64>> = (0..3)
             .map(|_| (0..2 * STEPS).map(|_| rng.range(-0.5, 0.5)).collect())
             .collect();
-        let batched = loss_only_batch(&cands, target);
-        for (c, lb) in cands.iter().zip(&batched) {
+        let pipelined = loss_only_batch(&cands, target);
+        let lockstep = loss_only_lockstep(&cands, target);
+        for (i, c) in cands.iter().enumerate() {
             let ls = loss_only(c, target);
-            assert!(ls == *lb, "batch {lb} differs from sequential {ls}");
+            assert!(ls == pipelined[i], "pipelined {} differs from sequential {ls}", pipelined[i]);
+            assert!(ls == lockstep[i], "lockstep {} differs from sequential {ls}", lockstep[i]);
         }
     }
 

@@ -1,8 +1,11 @@
 //! Experiment drivers — one per table/figure of the paper's §7.
 //! See DESIGN.md §5 for the experiment index (E1–E11); [`registry`]
-//! lists the CLI ids. Batched drivers (fig7 [`inverse`], fig8
-//! [`control`], fig9 [`estimation`]) run their populations through
-//! [`crate::batch::SceneBatch`] and report Fig-3-style memory via
+//! lists the CLI ids. Batched drivers run their populations through
+//! the batch layer — fig7 [`inverse`] and fig8 [`control`] via the
+//! async [`crate::batch::pipeline::BatchPipeline`] (windowed streaming
+//! + generation double-buffering, lockstep kept as the synchronous
+//! fallback), fig9 [`estimation`] via lockstep
+//! [`crate::batch::SceneBatch`] — and report Fig-3-style memory via
 //! [`batch_memory_report`].
 
 use crate::util::cli::Args;

@@ -1,4 +1,13 @@
 //! DiffSim: scalable differentiable physics (ICML 2020 reproduction).
+
+// Execute the README's ```rust blocks as doctests (`cargo test --doc`),
+// so the examples in it are run, not just rendered. Invisible to
+// `cargo doc` (the cfg is only set during doctest collection).
+#[cfg(doctest)]
+#[doc = include_str!("../../README.md")]
+#[allow(dead_code)]
+struct ReadmeDoctests;
+
 pub mod baselines;
 pub mod batch;
 pub mod bodies;

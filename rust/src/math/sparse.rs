@@ -37,12 +37,30 @@ impl Triplets {
         self.entries.len()
     }
 
-    pub fn to_csr(mut self) -> Csr {
+    pub fn to_csr(self) -> Csr {
+        self.to_csr_into(Vec::new(), Vec::new(), Vec::new())
+    }
+
+    /// [`Triplets::to_csr`] assembling into caller-provided buffers
+    /// (cleared and refilled — contents are bitwise-identical to a
+    /// fresh `to_csr`). The cloth solver loans these from the scene's
+    /// [`crate::util::arena::BatchArena`] so taped steps reuse the
+    /// previous rollout's CSR allocations instead of growing new ones;
+    /// `StepRecord::recycle` hands them back.
+    pub fn to_csr_into(
+        mut self,
+        mut indices: Vec<u32>,
+        mut data: Vec<f64>,
+        mut indptr: Vec<usize>,
+    ) -> Csr {
         self.entries
             .sort_unstable_by_key(|&(i, j, _)| ((i as u64) << 32) | j as u64);
-        let mut indices: Vec<u32> = Vec::with_capacity(self.entries.len());
-        let mut data: Vec<f64> = Vec::with_capacity(self.entries.len());
-        let mut row_counts = vec![0usize; self.rows];
+        indices.clear();
+        indices.reserve(self.entries.len());
+        data.clear();
+        data.reserve(self.entries.len());
+        indptr.clear();
+        indptr.resize(self.rows + 1, 0);
         let mut iter = self.entries.drain(..).peekable();
         while let Some((i, j, mut v)) = iter.next() {
             // Merge consecutive duplicates (same i, j).
@@ -56,11 +74,11 @@ impl Triplets {
             }
             indices.push(j);
             data.push(v);
-            row_counts[i as usize] += 1;
+            indptr[i as usize + 1] += 1;
         }
-        let mut indptr = vec![0usize; self.rows + 1];
+        // Per-row counts → row offsets.
         for i in 0..self.rows {
-            indptr[i + 1] = indptr[i] + row_counts[i];
+            indptr[i + 1] += indptr[i];
         }
         Csr { rows: self.rows, cols: self.cols, indptr, indices, data }
     }
@@ -150,6 +168,25 @@ mod tests {
         assert_eq!(d[(0, 0)], 3.0);
         assert_eq!(d[(1, 2)], 5.0);
         assert_eq!(d[(2, 1)], -1.0);
+    }
+
+    #[test]
+    fn to_csr_into_reuses_buffers_with_identical_contents() {
+        let build = || {
+            let mut t = Triplets::new(4, 4);
+            t.push(2, 1, 3.0);
+            t.push(0, 3, 1.0);
+            t.push(2, 1, -0.5);
+            t.push(3, 0, 2.0);
+            t
+        };
+        let fresh = build().to_csr();
+        // Dirty, wrongly-sized reused buffers must come out identical.
+        let reused = build().to_csr_into(vec![9u32; 17], vec![7.5; 3], vec![42usize; 1]);
+        assert_eq!(fresh.indptr, reused.indptr);
+        assert_eq!(fresh.indices, reused.indices);
+        assert_eq!(fresh.data, reused.data);
+        assert_eq!((fresh.rows, fresh.cols), (reused.rows, reused.cols));
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::bodies::{Cloth, RigidBody};
 use crate::math::cg::pcg_csr;
 use crate::math::sparse::{Csr, Triplets};
 use crate::math::Vec3;
+use crate::util::arena::BatchArena;
 
 /// Outcome of a cloth implicit solve, retaining the operator for the
 /// backward pass (implicit differentiation of the linear solve).
@@ -26,14 +27,39 @@ pub struct ClothSolve {
     pub iters: usize,
 }
 
-/// One implicit-Euler velocity update for a cloth.
+/// One implicit-Euler velocity update for a cloth (plain allocation —
+/// [`cloth_implicit_step_in`] with a disabled arena).
 pub fn cloth_implicit_step(cloth: &Cloth, h: f64, gravity: Vec3) -> ClothSolve {
+    cloth_implicit_step_in(cloth, h, gravity, &BatchArena::disabled())
+}
+
+/// [`cloth_implicit_step`] with its buffers loaned from `arena`: the
+/// retained system CSR `a` and the `dv` increments (both of which a
+/// taped step keeps alive in a `ClothSolveRec` until
+/// `StepRecord::recycle` hands them back at `clear_tape`), plus the
+/// transient ∂f/∂x CSR, which is parked again before this function
+/// returns. Loans go through [`BatchArena::loan_vec`] (uncharged — the
+/// tape record accounts the retained bytes at commit), every buffer is
+/// cleared and fully rebuilt, and a disabled arena makes this exactly
+/// the plain-allocation solve — the solve is bitwise-identical in every
+/// mode.
+pub fn cloth_implicit_step_in(
+    cloth: &Cloth,
+    h: f64,
+    gravity: Vec3,
+    arena: &BatchArena,
+) -> ClothSolve {
     let n = cloth.n_nodes();
     let dim = 3 * n;
     // ∂f/∂x (SPD-clamped for solvability) and diagonal ∂f/∂v.
     let mut dfdx = Triplets::new(dim, dim);
     let dfdv_diag = cloth.force_jacobian(&mut dfdx, 0, true);
-    let jx = dfdx.to_csr();
+    let jnnz = dfdx.nnz();
+    let jx = dfdx.to_csr_into(
+        arena.loan_vec(jnnz),
+        arena.loan_vec(jnnz),
+        arena.loan_vec(dim + 1),
+    );
     // A = M − h·∂f/∂v − h²·∂f/∂x, b = h·(f0 + h·(∂f/∂x)·v0).
     let mut a_trip = Triplets::new(dim, dim);
     for i in 0..n {
@@ -48,7 +74,12 @@ pub fn cloth_implicit_step(cloth: &Cloth, h: f64, gravity: Vec3) -> ClothSolve {
             a_trip.push(r, jx.indices[k] as usize, -h * h * jx.data[k]);
         }
     }
-    let a = a_trip.to_csr();
+    let annz = a_trip.nnz();
+    let a = a_trip.to_csr_into(
+        arena.loan_vec(annz),
+        arena.loan_vec(annz),
+        arena.loan_vec(dim + 1),
+    );
     let f0 = cloth.forces(gravity);
     let mut v0 = vec![0.0; dim];
     for i in 0..n {
@@ -58,6 +89,12 @@ pub fn cloth_implicit_step(cloth: &Cloth, h: f64, gravity: Vec3) -> ClothSolve {
         v0[3 * i + 2] = v.z;
     }
     let jv = jx.matvec(&v0);
+    // The transient Jacobian's buffers go straight back on the shelf
+    // (its last use was the matvec above).
+    let Csr { indptr, indices, data, .. } = jx;
+    arena.park_vec(indptr);
+    arena.park_vec(indices);
+    arena.park_vec(data);
     let mut b = vec![0.0; dim];
     for i in 0..n {
         for c in 0..3 {
@@ -69,9 +106,8 @@ pub fn cloth_implicit_step(cloth: &Cloth, h: f64, gravity: Vec3) -> ClothSolve {
         }
     }
     let res = pcg_csr(&a, &b, 1e-9, 20 * dim.max(10));
-    let dv = (0..n)
-        .map(|i| Vec3::new(res.x[3 * i], res.x[3 * i + 1], res.x[3 * i + 2]))
-        .collect();
+    let mut dv: Vec<Vec3> = arena.loan_vec(n);
+    dv.extend((0..n).map(|i| Vec3::new(res.x[3 * i], res.x[3 * i + 1], res.x[3 * i + 2])));
     ClothSolve { dv, a, iters: res.iters }
 }
 
@@ -191,6 +227,39 @@ mod tests {
                 assert!(p.is_finite() && p.norm() < 100.0, "explosion");
             }
         }
+    }
+
+    #[test]
+    fn arena_loaned_cloth_solve_is_bitwise_identical() {
+        // Two consecutive solves on a pooled arena: the second reuses
+        // the first's parked CSR buffers and must still match the
+        // plain-allocation solve bit for bit.
+        let mut cloth = Cloth::from_grid(cloth_grid(5, 5, 1.0, 1.0), 0.2, 800.0, 2.0, 0.3);
+        cloth.pin(0);
+        let arena = BatchArena::new();
+        for round in 0..2 {
+            let plain = cloth_implicit_step(&cloth, 0.01, G);
+            let pooled = cloth_implicit_step_in(&cloth, 0.01, G, &arena);
+            // Park the retained buffers like StepRecord::recycle would,
+            // so round 1 exercises the reuse path.
+            assert_eq!(plain.a.indptr, pooled.a.indptr, "round {round}");
+            assert_eq!(plain.a.indices, pooled.a.indices, "round {round}");
+            assert_eq!(plain.a.data, pooled.a.data, "round {round}");
+            assert_eq!(plain.iters, pooled.iters, "round {round}");
+            for (i, (x, y)) in plain.dv.iter().zip(&pooled.dv).enumerate() {
+                assert!(
+                    x.x == y.x && x.y == y.y && x.z == y.z,
+                    "round {round} node {i}: plain {x:?} vs pooled {y:?}"
+                );
+            }
+            let Csr { indptr, indices, data, .. } = pooled.a;
+            arena.park_vec(indptr);
+            arena.park_vec(indices);
+            arena.park_vec(data);
+            arena.park_vec(pooled.dv);
+        }
+        let s = arena.stats();
+        assert!(s.hits > 0, "second round must reuse parked buffers: {s:?}");
     }
 
     #[test]

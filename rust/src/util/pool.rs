@@ -58,6 +58,47 @@
 //! remaining indices still run (matching the old `thread::scope` join
 //! semantics), and the first payload is re-thrown on the submitting
 //! thread once the job completes. The pool stays usable afterwards.
+//!
+//! # Detached jobs
+//!
+//! [`Pool::submit`] enqueues a single closure *without blocking*: it
+//! returns a [`JobHandle`] immediately and the closure runs on a pool
+//! worker whenever one frees up. This is the primitive under
+//! [`crate::batch::pipeline::BatchPipeline`] — the submitting thread
+//! keeps doing useful work (loss evaluation, next-generation scene
+//! construction) while scenes step elsewhere. Contracts:
+//!
+//! * **Budgets are respected.** Each handle family (a `Pool` and its
+//!   clones) carries a gate sized to the handle's worker budget: at most
+//!   `workers()` of its detached jobs execute concurrently, however many
+//!   are queued. A `Pool::shared(4)` handle therefore never occupies
+//!   more than 4 of the process runtime's threads with detached work —
+//!   which is also what keeps the live checkout count of a shared
+//!   [`crate::util::arena::BatchArena`] bounded by the budget when
+//!   scenes step as detached jobs.
+//! * **Panic-at-wait.** A panic inside a detached job is caught on the
+//!   worker and re-thrown on the caller of [`JobHandle::wait`] — never
+//!   on the worker loop, so the pool survives.
+//! * **Drop-before-wait.** Dropping a `JobHandle` without waiting
+//!   *blocks until the job finishes*, then discards its result; a panic
+//!   in a dropped job is swallowed. (This is what makes it sound for
+//!   higher layers to submit jobs that borrow stack data and drain them
+//!   on every exit path, like `thread::scope`.)
+//! * **Degeneration.** On a 1-worker (inline) handle, `submit` runs the
+//!   closure synchronously on the caller before returning — a pipeline
+//!   over an inline pool is exactly the sequential loop. On the
+//!   [`Pool::scoped`] baseline it spawns one thread per job (counted by
+//!   [`thread_spawns`]); the gate still caps concurrency.
+//! * **Never block on a handle from inside a pool task.** Waiting a
+//!   `JobHandle` (or letting one drop, which also blocks) from *inside*
+//!   any task on the same runtime — map task or detached job, same
+//!   handle family or not — can deadlock: detached jobs have no
+//!   submitter participation, so if every worker is blocked waiting,
+//!   no worker is left to execute the jobs being waited on (the gate
+//!   only makes this easier to hit, it is not required). Nested `map`s
+//!   remain deadlock-free as before (the inner submitter executes its
+//!   own job); the batch pipeline only waits on handles from the
+//!   submitting thread.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -88,8 +129,61 @@ struct TaskRef(*const (dyn Fn(usize) + Sync));
 unsafe impl Send for TaskRef {}
 unsafe impl Sync for TaskRef {}
 
+/// What a job executes per index: a borrowed closure (maps, where the
+/// submitter blocks until completion) or an owned one (detached
+/// [`Pool::submit`] jobs, which outlive their submission site).
+enum Task {
+    Borrowed(TaskRef),
+    Owned(Box<dyn Fn(usize) + Send + Sync>),
+}
+
+/// Per-handle-family concurrency gate for detached jobs: at most
+/// `limit` of a handle's submitted jobs execute at once, however many
+/// are queued. Maps don't use it (their per-job `limit` already caps
+/// them); workers probe with [`Gate::try_acquire`] during the queue
+/// scan, the spawn-per-call baseline blocks in [`Gate::acquire`].
+///
+/// Liveness: a full gate can only be freed by a running executor, and
+/// every executor re-scans the queue after [`Job::leave`] releases its
+/// slot — so a claimable gated job is always picked up by the releaser
+/// (or an already-awake worker) without any extra wakeup traffic.
+struct Gate {
+    limit: usize,
+    active: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(limit: usize) -> Gate {
+        Gate { limit: limit.max(1), active: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    fn try_acquire(&self) -> bool {
+        let mut a = self.active.lock().unwrap();
+        if *a < self.limit {
+            *a += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn acquire(&self) {
+        let mut a = self.active.lock().unwrap();
+        while *a >= self.limit {
+            a = self.cv.wait(a).unwrap();
+        }
+        *a += 1;
+    }
+
+    fn release(&self) {
+        *self.active.lock().unwrap() -= 1;
+        self.cv.notify_one();
+    }
+}
+
 struct Job {
-    task: TaskRef,
+    task: Task,
     n: usize,
     /// Next unclaimed index — the work-stealing cursor that keeps
     /// unequal zone sizes balanced across workers.
@@ -101,6 +195,9 @@ struct Job {
     /// shared runtime.
     active: AtomicUsize,
     limit: usize,
+    /// Detached jobs additionally hold a slot in their handle family's
+    /// gate while executing ([`Pool::submit`] budget); `None` for maps.
+    gate: Option<Arc<Gate>>,
     /// First task panic, re-thrown on the submitting thread.
     panic: Mutex<Option<Box<dyn Any + Send>>>,
     done: Mutex<bool>,
@@ -112,12 +209,24 @@ impl Job {
         self.cursor.load(Ordering::Relaxed) >= self.n
     }
 
-    /// Reserve an executor slot; fails when the job is exhausted or at
-    /// its concurrency budget.
+    /// Reserve an executor slot; fails when the job is exhausted, at
+    /// its concurrency budget, or (detached jobs) when its handle
+    /// family's gate is full.
     fn try_join(&self) -> bool {
+        if self.exhausted() {
+            return false;
+        }
+        if let Some(g) = &self.gate {
+            if !g.try_acquire() {
+                return false;
+            }
+        }
         let mut a = self.active.load(Ordering::Relaxed);
         loop {
             if a >= self.limit || self.exhausted() {
+                if let Some(g) = &self.gate {
+                    g.release();
+                }
                 return false;
             }
             match self.active.compare_exchange_weak(
@@ -134,6 +243,9 @@ impl Job {
 
     fn leave(&self) {
         self.active.fetch_sub(1, Ordering::Relaxed);
+        if let Some(g) = &self.gate {
+            g.release();
+        }
     }
 
     /// Claim and execute indices until the cursor is exhausted.
@@ -143,10 +255,13 @@ impl Job {
             if i >= self.n {
                 break;
             }
-            // SAFETY: see `TaskRef` — the submitter keeps the closure
-            // alive until every claimed index has completed.
-            let task = unsafe { &*self.task.0 };
-            if let Err(p) = catch_unwind(AssertUnwindSafe(|| task(i))) {
+            let run_index = || match &self.task {
+                // SAFETY: see `TaskRef` — the submitter keeps the
+                // closure alive until every claimed index has completed.
+                Task::Borrowed(r) => (unsafe { &*r.0 })(i),
+                Task::Owned(b) => b(i),
+            };
+            if let Err(p) = catch_unwind(AssertUnwindSafe(run_index)) {
                 let mut slot = self.panic.lock().unwrap();
                 if slot.is_none() {
                     *slot = Some(p);
@@ -261,12 +376,13 @@ fn run_on(rt: &Arc<PoolRuntime>, budget: usize, n: usize, task: &(dyn Fn(usize) 
     let task: &'static (dyn Fn(usize) + Sync) =
         unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(task) };
     let job = Arc::new(Job {
-        task: TaskRef(task as *const _),
+        task: Task::Borrowed(TaskRef(task as *const _)),
         n,
         cursor: AtomicUsize::new(0),
         completed: AtomicUsize::new(0),
         active: AtomicUsize::new(1), // the submitter's slot
         limit: budget.min(n).max(1),
+        gate: None,
         panic: Mutex::new(None),
         done: Mutex::new(false),
         done_cv: Condvar::new(),
@@ -292,11 +408,13 @@ enum Backend {
     /// One worker: run on the caller, no queue traffic.
     Inline,
     /// Spawn-per-call `thread::scope` — the pre-persistent behavior,
-    /// kept as a measurable baseline for `BENCH_pool.json`.
-    Scoped { workers: usize },
+    /// kept as a measurable baseline for `BENCH_pool.json`. The gate
+    /// budgets detached [`Pool::submit`] jobs (one spawned thread each).
+    Scoped { workers: usize, gate: Arc<Gate> },
     /// Persistent runtime (dedicated or the process-wide one) with a
-    /// per-handle concurrency budget.
-    Persistent { rt: Arc<PoolRuntime>, budget: usize },
+    /// per-handle concurrency budget; the gate enforces the same budget
+    /// for detached [`Pool::submit`] jobs across the handle family.
+    Persistent { rt: Arc<PoolRuntime>, budget: usize, gate: Arc<Gate> },
 }
 
 /// Handle to a worker pool. Cheap to clone; clones share the same
@@ -322,6 +440,7 @@ impl Pool {
                 backend: Backend::Persistent {
                     rt: Arc::new(PoolRuntime::new(workers - 1)),
                     budget: workers,
+                    gate: Arc::new(Gate::new(workers)),
                 },
             }
         }
@@ -338,7 +457,13 @@ impl Pool {
         if workers.max(1) == 1 {
             Pool { backend: Backend::Inline }
         } else {
-            Pool { backend: Backend::Persistent { rt: global_runtime().clone(), budget: workers } }
+            Pool {
+                backend: Backend::Persistent {
+                    rt: global_runtime().clone(),
+                    budget: workers,
+                    gate: Arc::new(Gate::new(workers)),
+                },
+            }
         }
     }
 
@@ -353,7 +478,8 @@ impl Pool {
     /// joins them. Kept for benchmarking the persistent runtime against;
     /// do not use on hot paths.
     pub fn scoped(workers: usize) -> Pool {
-        Pool { backend: Backend::Scoped { workers: workers.max(1) } }
+        let workers = workers.max(1);
+        Pool { backend: Backend::Scoped { workers, gate: Arc::new(Gate::new(workers)) } }
     }
 
     /// Worker count the machine supports, capped (zone solves are
@@ -374,8 +500,77 @@ impl Pool {
     pub fn workers(&self) -> usize {
         match &self.backend {
             Backend::Inline => 1,
-            Backend::Scoped { workers } => *workers,
+            Backend::Scoped { workers, .. } => *workers,
             Backend::Persistent { budget, .. } => *budget,
+        }
+    }
+
+    /// Enqueue `f` as a *detached* job and return immediately with a
+    /// completion handle (see the module docs' "Detached jobs" section
+    /// for the full contract). The closure runs on a pool worker when
+    /// one frees up; at most [`Pool::workers`] detached jobs of this
+    /// handle family execute concurrently (the budget gate). A panic in
+    /// `f` is re-thrown by [`JobHandle::wait`]; dropping the handle
+    /// waits for completion and swallows it.
+    ///
+    /// On a 1-worker handle this degenerates to synchronous execution
+    /// on the caller (the handle is returned already complete), so code
+    /// written against `submit` stays sequential-exact at budget 1.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        match &self.backend {
+            Backend::Inline => match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(t) => JobHandle {
+                    inner: Some(HandleState::Done { result: Some(t), panic: None }),
+                },
+                Err(p) => JobHandle {
+                    inner: Some(HandleState::Done { result: None, panic: Some(p) }),
+                },
+            },
+            Backend::Scoped { gate, .. } => {
+                let gate = gate.clone();
+                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                let handle = std::thread::Builder::new()
+                    .name("pool-detached".to_string())
+                    .spawn(move || {
+                        gate.acquire();
+                        let out = catch_unwind(AssertUnwindSafe(f));
+                        gate.release();
+                        match out {
+                            Ok(t) => t,
+                            Err(p) => resume_unwind(p),
+                        }
+                    })
+                    .expect("spawn detached job thread");
+                JobHandle { inner: Some(HandleState::Thread { handle }) }
+            }
+            Backend::Persistent { rt, gate, .. } => {
+                let result = Arc::new(Mutex::new(None::<T>));
+                let slot = result.clone();
+                // FnOnce → Fn: the cell is taken exactly once (n = 1).
+                let cell = Mutex::new(Some(f));
+                let task: Box<dyn Fn(usize) + Send + Sync> = Box::new(move |_i| {
+                    let f = cell.lock().unwrap().take().expect("detached task runs once");
+                    *slot.lock().unwrap() = Some(f());
+                });
+                let job = Arc::new(Job {
+                    task: Task::Owned(task),
+                    n: 1,
+                    cursor: AtomicUsize::new(0),
+                    completed: AtomicUsize::new(0),
+                    active: AtomicUsize::new(0), // no submitter participation
+                    limit: 1,
+                    gate: Some(gate.clone()),
+                    panic: Mutex::new(None),
+                    done: Mutex::new(false),
+                    done_cv: Condvar::new(),
+                });
+                rt.submit(&job);
+                JobHandle { inner: Some(HandleState::Queued { job, result }) }
+            }
         }
     }
 
@@ -412,8 +607,8 @@ impl Pool {
         }
         match &self.backend {
             Backend::Inline => unreachable!("workers() == 1 handled above"),
-            Backend::Scoped { workers } => scoped_map_mut(*workers, items, f),
-            Backend::Persistent { rt, budget } => {
+            Backend::Scoped { workers, .. } => scoped_map_mut(*workers, items, f),
+            Backend::Persistent { rt, budget, .. } => {
                 let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
                 {
                     let items_base = SendPtr(items.as_mut_ptr());
@@ -430,6 +625,81 @@ impl Pool {
                     run_on(rt, *budget, n, &runner);
                 }
                 out.into_iter().map(|o| o.expect("pool: missing result")).collect()
+            }
+        }
+    }
+}
+
+/// Completion handle for a detached [`Pool::submit`] job.
+///
+/// Invariants (documented in the module's "Detached jobs" section):
+/// [`JobHandle::wait`] blocks until the job finishes and returns its
+/// result, re-throwing the job's panic payload on the caller if it
+/// panicked; dropping the handle without waiting *blocks until the job
+/// finishes* and then discards the result (a panic in a dropped job is
+/// swallowed). Completion order between handles is whatever the workers
+/// produce — determinism is the caller's job, e.g. by waiting handles
+/// in submission order like `BatchPipeline` does.
+pub struct JobHandle<T> {
+    inner: Option<HandleState<T>>,
+}
+
+enum HandleState<T> {
+    /// Executed synchronously at submit time (1-worker inline handles).
+    Done { result: Option<T>, panic: Option<Box<dyn Any + Send>> },
+    /// Queued on a persistent runtime.
+    Queued { job: Arc<Job>, result: Arc<Mutex<Option<T>>> },
+    /// One spawned thread (the `Pool::scoped` baseline).
+    Thread { handle: std::thread::JoinHandle<T> },
+}
+
+impl<T> JobHandle<T> {
+    /// Block until the job completes; returns its result or re-throws
+    /// its panic payload on this thread (the pool stays usable).
+    pub fn wait(mut self) -> T {
+        match self.inner.take().expect("JobHandle::wait consumes the handle") {
+            HandleState::Done { result, panic } => {
+                if let Some(p) = panic {
+                    resume_unwind(p);
+                }
+                result.expect("inline detached job stored a result")
+            }
+            HandleState::Queued { job, result } => {
+                job.wait();
+                if let Some(p) = job.panic.lock().unwrap().take() {
+                    resume_unwind(p);
+                }
+                let out = result.lock().unwrap().take();
+                out.expect("detached job stored a result")
+            }
+            HandleState::Thread { handle } => match handle.join() {
+                Ok(t) => t,
+                Err(p) => resume_unwind(p),
+            },
+        }
+    }
+
+    /// Non-blocking completion probe (a `true` answer means `wait`
+    /// would return without blocking).
+    pub fn is_done(&self) -> bool {
+        match self.inner.as_ref() {
+            None => true,
+            Some(HandleState::Done { .. }) => true,
+            Some(HandleState::Queued { job, .. }) => *job.done.lock().unwrap(),
+            Some(HandleState::Thread { handle }) => handle.is_finished(),
+        }
+    }
+}
+
+impl<T> Drop for JobHandle<T> {
+    fn drop(&mut self) {
+        if let Some(state) = self.inner.take() {
+            match state {
+                HandleState::Done { .. } => {}
+                HandleState::Queued { job, .. } => job.wait(),
+                HandleState::Thread { handle } => {
+                    let _ = handle.join();
+                }
             }
         }
     }
@@ -688,6 +958,110 @@ mod tests {
             thread_spawns() - s1 >= 300,
             "scoped baseline must spawn per call"
         );
+    }
+
+    #[test]
+    fn submit_returns_result_at_wait() {
+        let p = Pool::new(3);
+        let hs: Vec<JobHandle<usize>> = (0..8).map(|i| p.submit(move || i * i)).collect();
+        let out: Vec<usize> = hs.into_iter().map(|h| h.wait()).collect();
+        assert_eq!(out, (0..8).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_inline_pool_runs_synchronously() {
+        // A 1-worker handle degenerates to sequential execution: the
+        // side effect is visible before wait() is ever called.
+        let p = Pool::new(1);
+        let flag = Arc::new(AtomicUsize::new(0));
+        let f2 = flag.clone();
+        let h = p.submit(move || f2.fetch_add(1, Ordering::SeqCst));
+        assert_eq!(flag.load(Ordering::SeqCst), 1, "inline submit executes eagerly");
+        assert!(h.is_done());
+        assert_eq!(h.wait(), 0);
+    }
+
+    #[test]
+    fn submit_panic_rethrown_at_wait_pool_survives() {
+        let p = Pool::new(3);
+        let ok = p.submit(|| 7usize);
+        let bad = p.submit(|| -> usize { panic!("detached boom") });
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| bad.wait()));
+        let payload = r.expect_err("panic must surface at wait");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("detached boom"), "payload: {msg}");
+        assert_eq!(ok.wait(), 7);
+        // The pool keeps serving maps and submits afterwards.
+        assert_eq!(p.map(6, |i| i + 1), (1..7).collect::<Vec<_>>());
+        assert_eq!(p.submit(|| 11usize).wait(), 11);
+    }
+
+    #[test]
+    fn drop_before_wait_blocks_until_done_and_swallows_panics() {
+        let p = Pool::new(3);
+        let done = Arc::new(AtomicUsize::new(0));
+        let d2 = done.clone();
+        let h = p.submit(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            d2.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(h); // must block until the job has actually run
+        assert_eq!(done.load(Ordering::SeqCst), 1, "drop returned before the job finished");
+        // A dropped panicking job must not unwind anywhere.
+        let h: JobHandle<()> = p.submit(|| panic!("swallowed"));
+        drop(h);
+        assert_eq!(p.map(4, |i| i), (0..4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_budget_gate_caps_detached_concurrency() {
+        // A budget-2 handle on the (large) shared runtime must never
+        // have more than 2 of its detached jobs executing at once.
+        let p = Pool::shared(2);
+        let live = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<JobHandle<()>> = (0..12)
+            .map(|_| {
+                let live = live.clone();
+                let peak = peak.clone();
+                p.submit(move || {
+                    let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                    peak.fetch_max(now, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(2));
+                    live.fetch_sub(1, Ordering::SeqCst);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.wait();
+        }
+        assert!(
+            peak.load(Ordering::SeqCst) <= 2,
+            "budget 2 exceeded by detached jobs: peak {}",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn submit_on_scoped_baseline_spawns_and_completes() {
+        let p = Pool::scoped(2);
+        let s0 = thread_spawns();
+        let hs: Vec<JobHandle<usize>> = (0..4).map(|i| p.submit(move || 10 * i)).collect();
+        let out: Vec<usize> = hs.into_iter().map(|h| h.wait()).collect();
+        assert_eq!(out, vec![0, 10, 20, 30]);
+        assert!(thread_spawns() - s0 >= 4, "scoped submit spawns per job");
+    }
+
+    #[test]
+    fn detached_jobs_and_maps_share_the_runtime() {
+        let p = Pool::new(4);
+        let h = p.submit(|| {
+            std::thread::sleep(Duration::from_millis(5));
+            41usize
+        });
+        let m = p.map(32, |i| i * 2);
+        assert_eq!(m, (0..32).map(|i| i * 2).collect::<Vec<_>>());
+        assert_eq!(h.wait() + 1, 42);
     }
 
     #[test]

@@ -496,6 +496,54 @@ fn arena_reuse_kicks_in_after_warmup_4x64() {
 }
 
 #[test]
+fn cloth_tape_csr_buffers_recycle_through_the_arena() {
+    // PR-4 roadmap follow-up: ClothSolveRec's CSR buffers (system +
+    // Jacobian), dfdv, and dv are loaned from the arena at taping time
+    // and handed back by StepRecord::recycle at clear_tape. The scene
+    // here is cloth-only (no rigid contacts → no zone traffic), so the
+    // hit-rate growth across rollouts isolates the cloth recycling
+    // path. The first rollout mostly misses (its tape retains every
+    // loan); the second starts by clearing those tapes, so its loans
+    // must hit the recycled buffers.
+    let tracker = Arc::new(MemTracker::new());
+    let arena = BatchArena::pooled_with(64 << 20, tracker);
+    let mut cfg = cloth_cfg();
+    cfg.workers = 2;
+    let mut batch = SceneBatch::from_scene(&cloth_pull_system(), &cfg, 2, |_, _| {});
+    batch.set_arena(arena.clone());
+    let mut rollout = |batch: &mut SceneBatch| {
+        batch.rollout_grad_lockstep(
+            6,
+            |_| (),
+            |_, _i, _s, sim| {
+                sim.sys.cloths[0].ext_force[8] = Vec3::new(0.3, 0.0, 0.0);
+            },
+            |_, sim, _| {
+                let mut seed = LossGrad::zeros(sim);
+                seed.cloth_x[0][8].x = 1.0;
+                (sim.sys.cloths[0].x[8].x, seed)
+            },
+        )
+    };
+    let r1 = rollout(&mut batch);
+    let s1 = arena.stats();
+    assert!(s1.takes > 0, "taped cloth solves must loan from the arena: {s1:?}");
+    let r2 = rollout(&mut batch); // clears rollout 1's tapes → recycles
+    let s2 = arena.stats();
+    assert!(
+        s2.hits > s1.hits,
+        "recycled cloth CSR buffers produced no new hits: {s1:?} -> {s2:?}"
+    );
+    assert!(s2.hit_rate() > 0.0);
+    // Rollout 2 continues from rollout 1's end state; recycling must
+    // never corrupt it (bitwise neutrality itself is asserted by
+    // `arena_pooling_is_bitwise_neutral_for_rollout_gradients`).
+    for l in r1.losses.iter().chain(&r2.losses) {
+        assert!(l.is_finite(), "loss went non-finite: {l}");
+    }
+}
+
+#[test]
 fn batch_tapes_register_tape_bytes_and_release_on_clear() {
     // The MemTracker-registration bugfix: batched taped rollouts must
     // report their tape bytes under MemCategory::Tape (previously batch

@@ -1,0 +1,196 @@
+//! Async pipelined batch stepping (`batch::pipeline`): bitwise parity
+//! of the pipelined drivers against the lockstep and sequential paths
+//! (trajectories, fig7 losses, fig8 gradient-driven curves), the
+//! panic-drain contract, and the bounded in-flight window.
+
+use diffsim::batch::pipeline::BatchPipeline;
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{RigidBody, System};
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::experiments::{control, inverse};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, unit_box};
+use diffsim::util::pool::Pool;
+use diffsim::util::rng::Pcg32;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Ground + one falling cube; different vx values give the scenes
+/// different contact histories (uneven per-scene step cost — the
+/// workload shape pipelining targets).
+fn drop_system(vx: f64) -> System {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, 0.8, 0.0))
+            .with_velocity(Vec3::new(vx, 0.0, 0.0)),
+    );
+    sys
+}
+
+fn cfg_1w() -> SimConfig {
+    SimConfig { dt: 1.0 / 100.0, workers: 1, ..Default::default() }
+}
+
+#[test]
+fn pipelined_scene_rollouts_bitwise_match_sequential_and_lockstep() {
+    // The same scenes stepped three ways — streamed through the
+    // pipeline window, in a blocking lockstep batch, and sequentially —
+    // must agree bit for bit.
+    let vxs = [0.0, 0.4, -0.3, 1.1];
+    let steps = 50;
+    let pipe = BatchPipeline::new(4).with_window(2);
+    let piped: Vec<Simulation> = pipe.map_windowed(
+        vxs.len(),
+        |i| {
+            let mut sim = Simulation::new(drop_system(vxs[i]), cfg_1w());
+            sim.run(steps);
+            sim
+        },
+        |_i, sim| sim,
+    );
+    let cfg = SimConfig { dt: 1.0 / 100.0, workers: 4, ..Default::default() };
+    let mut lock = SceneBatch::from_scene(&drop_system(0.0), &cfg, vxs.len(), |i, sys| {
+        sys.rigids[1] = sys.rigids[1]
+            .clone()
+            .with_position(Vec3::new(0.0, 0.8, 0.0))
+            .with_velocity(Vec3::new(vxs[i], 0.0, 0.0));
+    });
+    lock.run_lockstep(steps);
+    for (i, &vx) in vxs.iter().enumerate() {
+        let mut solo = Simulation::new(drop_system(vx), cfg_1w());
+        solo.run(steps);
+        for k in 0..6 {
+            assert!(
+                piped[i].sys.rigids[1].q[k] == solo.sys.rigids[1].q[k],
+                "scene {i} q[{k}]: pipelined {} vs sequential {}",
+                piped[i].sys.rigids[1].q[k],
+                solo.sys.rigids[1].q[k]
+            );
+            assert!(
+                piped[i].sys.rigids[1].qdot[k] == solo.sys.rigids[1].qdot[k],
+                "scene {i} qdot[{k}]: pipelined vs sequential"
+            );
+            assert!(
+                lock.sim(i).sys.rigids[1].q[k] == solo.sys.rigids[1].q[k],
+                "scene {i} q[{k}]: lockstep vs sequential"
+            );
+        }
+    }
+}
+
+#[test]
+fn fig7_losses_pipelined_lockstep_sequential_bitwise() {
+    // The acceptance bar: the pipelined fig7 population evaluation
+    // produces bitwise-identical losses to the lockstep fallback and to
+    // per-candidate sequential evaluation.
+    let target = Vec3::new(0.35, 0.0, 0.15);
+    let mut rng = Pcg32::new(5);
+    let cands: Vec<Vec<f64>> = (0..3)
+        .map(|_| (0..2 * inverse::STEPS).map(|_| rng.range(-0.4, 0.4)).collect())
+        .collect();
+    let pipelined = inverse::loss_only_batch(&cands, target);
+    let lockstep = inverse::loss_only_lockstep(&cands, target);
+    assert_eq!(pipelined.len(), cands.len());
+    for (i, c) in cands.iter().enumerate() {
+        let sequential = inverse::loss_only(c, target);
+        assert!(
+            pipelined[i] == sequential,
+            "candidate {i}: pipelined {} vs sequential {sequential}",
+            pipelined[i]
+        );
+        assert!(
+            lockstep[i] == sequential,
+            "candidate {i}: lockstep {} vs sequential {sequential}",
+            lockstep[i]
+        );
+    }
+}
+
+#[test]
+fn fig8_curves_pipelined_matches_lockstep_bitwise() {
+    // Double-buffered scene construction must not change a bit of the
+    // fig8 training trajectory. The curve is a fixpoint of the whole
+    // gradient chain (rollout → backward → Adam → next rollout under
+    // the updated policy), so exact equality across several updates is
+    // only possible if every per-update gradient matched bitwise.
+    let pipelined = control::train_ours_sticks_batch(3, 2, 9);
+    let blocking = control::train_ours_sticks_lockstep(3, 2, 9);
+    assert_eq!(pipelined.len(), blocking.len());
+    for (u, (a, b)) in pipelined.iter().zip(&blocking).enumerate() {
+        assert!(a == b, "update {u}: pipelined {a} vs lockstep {b}");
+    }
+}
+
+#[test]
+fn panic_in_one_scene_drains_and_rethrows_without_poisoning_the_pool() {
+    // One scene's job panics mid-stream: the payload must re-surface at
+    // that scene's wait, every other in-flight job must drain before
+    // the unwind leaves the pipeline call, and the shared pool must
+    // keep serving work afterwards.
+    let pipe = BatchPipeline::new(4).with_window(2);
+    let completed = AtomicUsize::new(0);
+    let r = catch_unwind(AssertUnwindSafe(|| {
+        pipe.map_windowed(
+            6,
+            |i| {
+                if i == 2 {
+                    panic!("scene 2 diverged");
+                }
+                let mut sim = Simulation::new(drop_system(0.2 * i as f64), cfg_1w());
+                sim.run(10);
+                completed.fetch_add(1, Ordering::SeqCst);
+                sim.sys.rigids[1].translation().y
+            },
+            |_i, y| y,
+        )
+    }));
+    let payload = r.expect_err("the scene panic must reach the submitter");
+    let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+    assert!(msg.contains("scene 2 diverged"), "payload: {msg}");
+    // Drained: nothing is still stepping after the unwind.
+    let settled = completed.load(Ordering::SeqCst);
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    assert_eq!(
+        completed.load(Ordering::SeqCst),
+        settled,
+        "scene jobs outlived the pipeline drain"
+    );
+    // The pool survives for both maps and fresh pipelines.
+    assert_eq!(Pool::shared(4).map(6, |i| i + 1), (1..7).collect::<Vec<_>>());
+    let again =
+        pipe.map_windowed(3, |i| i * 2, |_i, v| v);
+    assert_eq!(again, vec![0, 2, 4]);
+}
+
+#[test]
+fn in_flight_scenes_never_exceed_the_window() {
+    // Budget 8, window 3: the window (not the budget) must be the
+    // binding constraint on concurrently-live scenes.
+    let live = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let pipe = BatchPipeline::new(8).with_window(3);
+    assert_eq!(pipe.window(), 3);
+    let out = pipe.map_windowed(
+        12,
+        |i| {
+            let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+            peak.fetch_max(now, Ordering::SeqCst);
+            let mut sim = Simulation::new(drop_system(0.1 * i as f64), cfg_1w());
+            sim.run(5);
+            live.fetch_sub(1, Ordering::SeqCst);
+            i
+        },
+        |_i, v| v,
+    );
+    assert_eq!(out, (0..12).collect::<Vec<_>>());
+    assert!(
+        peak.load(Ordering::SeqCst) <= 3,
+        "window 3 exceeded: {} scenes were live at once",
+        peak.load(Ordering::SeqCst)
+    );
+}
