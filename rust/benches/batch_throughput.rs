@@ -11,7 +11,7 @@ use diffsim::bodies::{RigidBody, System};
 use diffsim::engine::{SimConfig, Simulation};
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, unit_box};
-use diffsim::util::bench::{merge_section, time, Bench};
+use diffsim::util::bench::{check_trace_jsonl, merge_section, time, Bench};
 use diffsim::util::json::Json;
 use diffsim::util::pool::{thread_spawns, Pool};
 
@@ -190,5 +190,51 @@ fn main() {
         pp.set(label, row);
     }
     merge_section("BENCH_pool.json", "pipeline", pp);
-    b.finish();
+
+    // ---- trace smoke (→ BENCH_trace.json) ----
+    // Lockstep a 2-scene batch with the registry enabled and a JSONL
+    // trace installed, validate the emitted file against the schema
+    // checker, and merge the registry snapshot. This is the CI gate
+    // against the trace path silently emitting nothing (or garbage).
+    let trace_path = "bench_output/batch_throughput_trace.jsonl";
+    let _ = std::fs::create_dir_all("bench_output");
+    let trace_steps = if smoke { 8 } else { 32 };
+    diffsim::obs::enable();
+    match diffsim::obs::Trace::to_file(trace_path) {
+        Ok(tr) => {
+            let cfg = SimConfig { workers, dt: 1.0 / 100.0, ..Default::default() };
+            let mut tb = SceneBatch::from_scene(&small_system(), &cfg, 2, |i, sys| {
+                let body = sys.rigids[1].clone();
+                sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+            });
+            tb.set_trace(Some(tr));
+            tb.run_lockstep(trace_steps);
+            tb.set_trace(None); // drops the last handle → flush
+            let mut tj = Json::obj();
+            tj.set("scenes", 2usize).set("steps", trace_steps);
+            let check = check_trace_jsonl(trace_path);
+            match &check {
+                Ok(n) => {
+                    b.metric("trace/events", *n as f64, "events");
+                    tj.set("trace_events", *n).set("trace_schema_ok", true);
+                }
+                Err(e) => {
+                    eprintln!("trace schema check FAILED: {e}");
+                    tj.set("trace_schema_ok", false).set("trace_error", e.as_str());
+                }
+            }
+            tj.set("summary", diffsim::obs::summary());
+            merge_section("BENCH_trace.json", "batch_throughput", tj);
+            diffsim::obs::disable();
+            b.finish();
+            if check.is_err() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("trace smoke skipped: cannot create {trace_path}: {e}");
+            diffsim::obs::disable();
+            b.finish();
+        }
+    }
 }

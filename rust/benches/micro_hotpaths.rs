@@ -3,10 +3,12 @@
 //! dense), cloth implicit solve, pool dispatch (persistent vs
 //! spawn-per-call, → `BENCH_pool.json`), and the PJRT call overhead.
 //! Run with `--test` for the CI smoke config.
+use diffsim::batch::SceneBatch;
 use diffsim::bodies::{Cloth, RigidBody, System};
 use diffsim::collision::zones::build_zones;
 use diffsim::collision::{detect, surfaces_from_system};
 use diffsim::diff::implicit::{backward_dense, backward_qr};
+use diffsim::engine::SimConfig;
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere, unit_box};
 use diffsim::solver::implicit_euler::cloth_implicit_step;
@@ -60,6 +62,48 @@ fn main() {
         .set("map8_persistent_speedup", s_scoped.mean() / s_pers.mean().max(1e-12))
         .set("map8_persistent_spawns_per_call", pers_spawns_per_call)
         .set("map8_spawn_per_call_spawns_per_call", scoped_spawns_per_call);
+
+    // Telemetry overhead: the acceptance lockstep config (4 scenes ×
+    // 64 steps, small scene) with the registry disabled vs enabled.
+    // Disabled must be within noise of the pre-telemetry baseline —
+    // every instrumentation point is one relaxed atomic load.
+    let tele_steps = if smoke { 8 } else { 64 };
+    let tele_iters = if smoke { 1 } else { 5 };
+    let mut tsys = System::new();
+    tsys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    tsys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.8, 0.0)),
+    );
+    let tele_cfg = SimConfig { workers: w, dt: 1.0 / 100.0, ..Default::default() };
+    let run_lockstep = || {
+        let mut sb = SceneBatch::from_scene(&tsys, &tele_cfg, 4, |i, sys| {
+            let body = sys.rigids[1].clone();
+            sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+        });
+        sb.run_lockstep(tele_steps);
+    };
+    diffsim::obs::disable();
+    run_lockstep(); // warmup
+    let s_dis = time(0, tele_iters, || run_lockstep());
+    diffsim::obs::enable();
+    run_lockstep(); // warmup under the enabled registry
+    let s_en = time(0, tele_iters, || run_lockstep());
+    diffsim::obs::disable();
+    let overhead = s_en.mean() / s_dis.mean().max(1e-12);
+    b.report("telemetry/lockstep4x64 disabled", &s_dis);
+    b.report("telemetry/lockstep4x64 enabled", &s_en);
+    b.metric("telemetry/enabled_overhead", overhead, "x");
+    pj.set("telemetry_lockstep4_steps", tele_steps)
+        .set("telemetry_disabled_s", s_dis.mean())
+        .set("telemetry_enabled_s", s_en.mean())
+        .set("telemetry_enabled_overhead", overhead)
+        .set(
+            "telemetry_disabled_steps_per_s",
+            (4 * tele_steps) as f64 / s_dis.mean().max(1e-12),
+        );
     merge_section("BENCH_pool.json", "micro_hotpaths", pj);
 
     // BVH over a 1280-face mesh.

@@ -160,6 +160,18 @@ impl SceneBatch {
         &self.arena
     }
 
+    /// Install a JSONL trace sink on every scene: scene `i` writes its
+    /// events tagged `scene: i` (via [`Trace::for_scene`]), so one file
+    /// carries the whole batch and per-scene streams are separable by
+    /// filtering. `None` removes all sinks (flushing the file once the
+    /// last handle drops). Purely observational — see
+    /// [`Simulation::set_trace`].
+    pub fn set_trace(&mut self, trace: Option<crate::util::telemetry::Trace>) {
+        for (i, sim) in self.sims.iter_mut().enumerate() {
+            sim.set_trace(trace.as_ref().map(|t| t.for_scene(i)));
+        }
+    }
+
     /// Clone one scene config into `n` scenes, applying a per-scene
     /// override (parameter perturbations, population candidates, …).
     /// `cfg.workers` sizes the *batch* pool; each scene's own zone pool

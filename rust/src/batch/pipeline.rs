@@ -71,8 +71,10 @@
 //!   pool task" rule); nested `map`s inside a scene job remain fine.
 
 use crate::util::pool::{JobHandle, Pool};
+use crate::util::telemetry;
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Erase the borrow lifetime of a scene job so it can be submitted as a
 /// detached pool job.
@@ -201,19 +203,37 @@ impl BatchPipeline {
         C: FnMut(usize, T) -> R,
     {
         let mut out = Vec::with_capacity(n);
-        let mut inflight: VecDeque<JobHandle<T>> = VecDeque::new();
+        // Each in-flight entry carries its submission time when the
+        // telemetry registry is enabled (None otherwise), feeding the
+        // `pipeline.submit_to_consume` latency histogram without any
+        // clock reads in disabled mode.
+        let mut inflight: VecDeque<(JobHandle<T>, Option<Instant>)> = VecDeque::new();
+        let mut consume_front =
+            |inflight: &mut VecDeque<(JobHandle<T>, Option<Instant>)>, out: &mut Vec<R>| {
+                let (h, t0) = inflight.pop_front().expect("window >= 1");
+                let t = h.wait();
+                if let Some(t0) = t0 {
+                    telemetry::hist("pipeline.submit_to_consume")
+                        .record(t0.elapsed().as_secs_f64());
+                }
+                let done = out.len();
+                let r = consume(done, t);
+                out.push(r);
+            };
         for i in 0..n {
             if inflight.len() >= self.window {
-                let t = inflight.pop_front().expect("window >= 1").wait();
-                let done = out.len();
-                out.push(consume(done, t));
+                consume_front(&mut inflight, &mut out);
             }
-            inflight.push_back(submit_next(i));
+            let enabled = telemetry::enabled();
+            let t0 = if enabled { Some(Instant::now()) } else { None };
+            inflight.push_back((submit_next(i), t0));
+            if enabled {
+                telemetry::counter("pipeline.scenes").incr();
+                telemetry::hist("pipeline.window_occupancy").record(inflight.len() as f64);
+            }
         }
-        while let Some(h) = inflight.pop_front() {
-            let t = h.wait();
-            let done = out.len();
-            out.push(consume(done, t));
+        while !inflight.is_empty() {
+            consume_front(&mut inflight, &mut out);
         }
         out
     }

@@ -56,22 +56,39 @@ impl CoordMetrics {
         }
     }
 
+    /// `items / slots` as JSON, or `null` when no slots were shipped.
+    /// The f64 accessors above return 0.0 in that case (callers doing
+    /// arithmetic want a number), but emitting `0.0` in reports reads as
+    /// "terrible occupancy" after an all-fallback dispatch when the
+    /// truth is "no batched dispatch happened" — so JSON says `null`.
+    fn occupancy_json(items: usize, slots: usize) -> Json {
+        if slots == 0 {
+            Json::Null
+        } else {
+            Json::from(items as f64 / slots as f64)
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("zone_pjrt_calls", self.zone_pjrt_calls)
             .set("zone_items", self.zone_items)
             .set("zone_slots", self.zone_slots)
-            .set("zone_occupancy", self.zone_occupancy())
+            .set("zone_occupancy", Self::occupancy_json(self.zone_items, self.zone_slots))
             .set("zone_native_fallback", self.zone_native_fallback)
             .set("zone_solve_dispatches", self.zone_solve_dispatches)
             .set("zone_solve_pjrt_calls", self.zone_solve_pjrt_calls)
             .set("zone_solve_items", self.zone_solve_items)
             .set("zone_solve_slots", self.zone_solve_slots)
-            .set("zone_solve_occupancy", self.zone_solve_occupancy())
+            .set(
+                "zone_solve_occupancy",
+                Self::occupancy_json(self.zone_solve_items, self.zone_solve_slots),
+            )
             .set("zone_solve_native_fallback", self.zone_solve_native_fallback)
             .set("rigid_pjrt_calls", self.rigid_pjrt_calls)
             .set("rigid_items", self.rigid_items)
-            .set("rigid_occupancy", self.rigid_occupancy());
+            .set("rigid_slots", self.rigid_slots)
+            .set("rigid_occupancy", Self::occupancy_json(self.rigid_items, self.rigid_slots));
         j
     }
 }
@@ -105,5 +122,28 @@ mod tests {
         assert!(j.get("zone_solve_dispatches").is_some());
         assert!(j.get("zone_solve_occupancy").is_some());
         assert!(j.get("rigid_items").is_some());
+    }
+
+    #[test]
+    fn occupancy_null_after_all_fallback_dispatch() {
+        // An all-fallback dispatch counts items but ships zero slots:
+        // the JSON report must say `null` ("no batched dispatch"), not
+        // 0/0 → 0.0 ("terrible occupancy") or NaN.
+        let m = CoordMetrics {
+            zone_solve_dispatches: 1,
+            zone_solve_native_fallback: 5,
+            ..Default::default()
+        };
+        let j = m.to_json();
+        assert_eq!(j.get("zone_occupancy"), Some(&Json::Null));
+        assert_eq!(j.get("zone_solve_occupancy"), Some(&Json::Null));
+        assert_eq!(j.get("rigid_occupancy"), Some(&Json::Null));
+        // Round-trips through the writer/parser as literal null.
+        let back = Json::parse(&j.to_string()).expect("valid json");
+        assert_eq!(back.get("zone_solve_occupancy"), Some(&Json::Null));
+        // With slots shipped, occupancy is the plain ratio again.
+        let m = CoordMetrics { zone_solve_items: 3, zone_solve_slots: 8, ..m };
+        let occ = m.to_json().get("zone_solve_occupancy").and_then(|v| v.as_f64());
+        assert_eq!(occ, Some(0.375));
     }
 }

@@ -82,6 +82,7 @@ impl Coordinator {
                 None => {
                     // Native fallback for oversize zones.
                     self.metrics.lock().unwrap().zone_native_fallback += 1;
+                    obs_add("coord.zone_native_fallback", 1);
                     let bw = backward_qr(it.problem, it.solution, it.grad_z);
                     out[i] = bw.grad_q;
                 }
@@ -104,6 +105,10 @@ impl Coordinator {
                         m.zone_pjrt_calls += 1;
                         m.zone_items += chunk.len();
                         m.zone_slots += bucket.batch;
+                        drop(m);
+                        obs_add("coord.zone_pjrt_calls", 1);
+                        obs_add("coord.zone_items", chunk.len());
+                        obs_add("coord.zone_slots", bucket.batch);
                     }
                     Err(e) => {
                         // PJRT trouble: degrade to native, keep running.
@@ -111,6 +116,7 @@ impl Coordinator {
                         let mut m = self.metrics.lock().unwrap();
                         m.zone_native_fallback += chunk.len();
                         drop(m);
+                        obs_add("coord.zone_native_fallback", chunk.len());
                         for &i in chunk {
                             let it = &items[i];
                             out[i] = backward_qr(it.problem, it.solution, it.grad_z).grad_q;
@@ -185,6 +191,7 @@ impl Coordinator {
             return Vec::new();
         }
         self.metrics.lock().unwrap().zone_solve_dispatches += 1;
+        obs_add("coord.zone_solve_dispatches", 1);
         let avail = self.available_buckets(&self.runtime.zone_solve_buckets, zone_solve_name);
         let mut out: Vec<Option<ZoneSolution>> = problems.iter().map(|_| None).collect();
         let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
@@ -200,6 +207,7 @@ impl Coordinator {
         }
         if !native.is_empty() {
             self.metrics.lock().unwrap().zone_solve_native_fallback += native.len();
+            obs_add("coord.zone_solve_native_fallback", native.len());
             let sols = pool.map(native.len(), |j| problems[native[j]].solve());
             for (&i, sol) in native.iter().zip(sols) {
                 out[i] = Some(sol);
@@ -222,12 +230,17 @@ impl Coordinator {
                         m.zone_solve_pjrt_calls += 1;
                         m.zone_solve_items += chunk.len();
                         m.zone_solve_slots += bucket.batch;
+                        drop(m);
+                        obs_add("coord.zone_solve_pjrt_calls", 1);
+                        obs_add("coord.zone_solve_items", chunk.len());
+                        obs_add("coord.zone_solve_slots", bucket.batch);
                     }
                     Err(e) => {
                         // PJRT trouble: degrade to native (full AL
                         // solves, so on the pool), keep running.
                         crate::warnlog!("pjrt zone solve failed ({e:#}); native fallback");
                         self.metrics.lock().unwrap().zone_solve_native_fallback += chunk.len();
+                        obs_add("coord.zone_solve_native_fallback", chunk.len());
                         let sols = pool.map(chunk.len(), |j| problems[chunk[j]].solve());
                         for (&i, sol) in chunk.iter().zip(sols) {
                             out[i] = Some(sol);
@@ -288,6 +301,7 @@ impl Coordinator {
                 lambda,
                 converged: viol < 1e-6,
                 outer_iters: 0,
+                gn_iters: 0,
                 max_violation: viol,
             });
         }
@@ -351,6 +365,10 @@ impl Coordinator {
             m.rigid_pjrt_calls += 1;
             m.rigid_items += take;
             m.rigid_slots += bucket;
+            drop(m);
+            obs_add("coord.rigid_pjrt_calls", 1);
+            obs_add("coord.rigid_items", take);
+            obs_add("coord.rigid_slots", bucket);
             start += take;
         }
         Ok((xs, jacs))
@@ -363,6 +381,17 @@ impl Coordinator {
             .iter()
             .map(|it| backward_dense(it.problem, it.solution, it.grad_z).grad_q)
             .collect()
+    }
+}
+
+/// Mirror a [`CoordMetrics`] increment into the process-wide telemetry
+/// registry under `coord.<field>` (skipping zero adds so unused metrics
+/// never intern a counter). The mutex-guarded struct stays the
+/// per-coordinator source of truth; the registry aggregates across
+/// coordinators for [`crate::util::telemetry::summary`].
+fn obs_add(name: &str, n: usize) {
+    if n > 0 {
+        crate::util::telemetry::counter(name).add(n as u64);
     }
 }
 

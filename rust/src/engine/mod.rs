@@ -19,8 +19,11 @@ use crate::solver::implicit_euler::{cloth_implicit_step, cloth_implicit_step_in,
 use crate::solver::lcp::merge_zones;
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
 use crate::util::arena::BatchArena;
+use crate::util::json::Json;
 use crate::util::memory::MemCategory;
 use crate::util::pool::Pool;
+use crate::util::telemetry::{self, Trace};
+use std::time::Instant;
 
 /// How zone-solve backward passes are computed (§6 / Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -87,6 +90,10 @@ pub struct StepStats {
     pub resolve_passes: usize,
     pub detect: DetectStats,
     pub cg_iters: usize,
+    /// Accepted Gauss–Newton steps summed over every zone solve of
+    /// every fail-safe pass this step (solver-side ground truth the
+    /// telemetry trace is checked against).
+    pub gn_iters: usize,
 }
 
 /// The simulation: owns the system, steps it forward, records the tape.
@@ -108,6 +115,13 @@ pub struct Simulation {
     pub zone_hook: Option<Box<dyn Fn(&[ZoneProblem]) -> Vec<ZoneSolution> + Send + Sync>>,
     /// PJRT coordinator (batched zone backwards / vertex transforms).
     pub coordinator: Option<std::sync::Arc<crate::coordinator::Coordinator>>,
+    /// Per-rollout JSONL trace sink: when set, every staged step
+    /// primitive writes one schema-versioned event per call. Installed
+    /// via [`Simulation::set_trace`] (or inherited from
+    /// [`telemetry::install_global_trace`] at construction, which is
+    /// how `--trace` reaches driver-built scenes). Purely
+    /// observational — trajectories are bitwise-unchanged.
+    trace: Option<Trace>,
 }
 
 /// In-flight state of one staged forward step, produced by
@@ -143,7 +157,64 @@ impl Simulation {
         // with batch stepping and gradient gathers, and no OS threads
         // are spawned on the stepping hot path.
         let pool = Pool::shared(cfg.workers);
-        Simulation { sys, cfg, tape: Vec::new(), steps: 0, last_stats: StepStats::default(), pool, arena: BatchArena::disabled(), zone_hook: None, coordinator: None }
+        Simulation {
+            sys,
+            cfg,
+            tape: Vec::new(),
+            steps: 0,
+            last_stats: StepStats::default(),
+            pool,
+            arena: BatchArena::disabled(),
+            zone_hook: None,
+            coordinator: None,
+            trace: telemetry::default_trace(),
+        }
+    }
+
+    /// Install (or remove) this scene's JSONL trace sink. Every staged
+    /// step primitive then writes one event per call (span close) with
+    /// its duration and stage payload; see
+    /// [`crate::util::telemetry::Trace`]. Passing `None` drops the
+    /// handle, which flushes the file once the last clone goes.
+    pub fn set_trace(&mut self, trace: Option<Trace>) {
+        self.trace = trace;
+    }
+
+    /// The trace sink currently installed, if any.
+    pub fn trace(&self) -> Option<&Trace> {
+        self.trace.as_ref()
+    }
+
+    /// Clock origin for an instrumented stage: `Some` only when this
+    /// call will be reported (a trace sink is installed or the registry
+    /// is enabled) — disabled-mode cost is this one check.
+    fn obs_begin(&self) -> Option<Instant> {
+        if self.trace.is_some() || telemetry::enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close an instrumented stage: record the duration into the
+    /// registry histogram `step.<stage>` (when enabled) and write one
+    /// trace event (when a sink is installed), letting `fill` attach
+    /// the stage payload.
+    fn obs_end(&self, stage: &str, t0: Option<Instant>, fill: impl FnOnce(&mut Json)) {
+        let t0 = match t0 {
+            Some(t) => t,
+            None => return,
+        };
+        let dur = t0.elapsed().as_secs_f64();
+        if telemetry::enabled() {
+            telemetry::hist(&format!("step.{stage}")).record(dur);
+        }
+        if let Some(tr) = &self.trace {
+            let mut ev = Json::obj();
+            ev.set("span", stage).set("step", self.steps).set("dur_s", dur);
+            fill(&mut ev);
+            tr.write_event(ev);
+        }
     }
 
     /// Replace this scene's worker pool (injection point for dedicated
@@ -192,6 +263,7 @@ impl Simulation {
 
     /// Stage 1 — unconstrained velocity update (Eq. 3).
     pub fn integrate(&self) -> StepState {
+        let t0 = self.obs_begin();
         let h = self.cfg.dt;
         let g = self.cfg.gravity;
         let mut stats = StepStats::default();
@@ -246,6 +318,12 @@ impl Simulation {
                 cloth_ext.push(c.ext_force.clone());
             }
         }
+        if telemetry::enabled() {
+            telemetry::counter("solver.cg_iters").add(stats.cg_iters as u64);
+        }
+        self.obs_end("integrate", t0, |ev| {
+            ev.set("cg_iters", stats.cg_iters);
+        });
         StepState {
             stats,
             rigid_recs,
@@ -264,6 +342,7 @@ impl Simulation {
 
     /// Stage 2 — candidate positions q̄ = q₀ + h·q̇₁.
     pub fn candidates(&self, st: &mut StepState) {
+        let t0 = self.obs_begin();
         let h = self.cfg.dt;
         st.rigid_qbar = self
             .sys
@@ -291,12 +370,14 @@ impl Simulation {
                     .collect()
             })
             .collect();
+        self.obs_end("candidates", t0, |_| {});
     }
 
     /// Stage 3 — one fail-safe pass of continuous collision detection and
     /// impact-zone construction at the current candidates. Returns the
     /// built zone problems; empty means the resolution loop is finished.
     pub fn detect_and_zone(&self, st: &mut StepState, pass: usize) -> Vec<ZoneProblem> {
+        let t0 = self.obs_begin();
         let rigid_x1: Vec<Vec<Vec3>> = self
             .sys
             .rigids
@@ -338,6 +419,9 @@ impl Simulation {
             zones = merge_zones(&zones).into_iter().collect();
         }
         if zones.is_empty() {
+            self.obs_end("detect_and_zone", t0, |ev| {
+                ev.set("pass", pass).set("impacts", impacts.len()).set("zones", 0usize);
+            });
             return Vec::new();
         }
         st.stats.resolve_passes = pass + 1;
@@ -365,6 +449,9 @@ impl Simulation {
             })
             .collect();
         self.arena.uncharge(MemCategory::Contacts, zbytes);
+        self.obs_end("detect_and_zone", t0, |ev| {
+            ev.set("pass", pass).set("impacts", impacts.len()).set("zones", problems.len());
+        });
         problems
     }
 
@@ -372,11 +459,20 @@ impl Simulation {
     /// or the scene's thread pool). Batch callers substitute a
     /// cross-scene batched solve here instead.
     pub fn solve_zones(&self, problems: &[ZoneProblem]) -> Vec<ZoneSolution> {
-        if let Some(hook) = &self.zone_hook {
+        let t0 = self.obs_begin();
+        let sols = if let Some(hook) = &self.zone_hook {
             hook(problems)
         } else {
             self.pool.map(problems.len(), |i| problems[i].solve())
+        };
+        if t0.is_some() {
+            let contacts: usize = problems.iter().map(|p| p.constraints.len()).sum();
+            let gn: usize = sols.iter().map(|s| s.gn_iters).sum();
+            self.obs_end("solve_zones", t0, |ev| {
+                ev.set("zones", problems.len()).set("contacts", contacts).set("gn_iters", gn);
+            });
         }
+        sols
     }
 
     /// Stage 5 — scatter a pass's resolved coordinates back into the
@@ -389,8 +485,16 @@ impl Simulation {
         solutions: Vec<ZoneSolution>,
         pass: usize,
     ) -> f64 {
+        let t0 = self.obs_begin();
+        let (obs_zones, obs_contacts) = if t0.is_some() {
+            (problems.len(), problems.iter().map(|p| p.constraints.len()).sum::<usize>())
+        } else {
+            (0, 0)
+        };
+        let mut pass_gn = 0usize;
         let mut max_disp: f64 = 0.0;
         for (zp, sol) in problems.into_iter().zip(solutions) {
+            pass_gn += sol.gn_iters;
             for (a, b) in sol.q.iter().zip(&zp.q0) {
                 max_disp = max_disp.max((a - b).abs());
             }
@@ -408,6 +512,20 @@ impl Simulation {
                 self.arena.park_vec(lambda);
             }
         }
+        st.stats.gn_iters += pass_gn;
+        if telemetry::enabled() {
+            telemetry::counter("solver.gn_iters").add(pass_gn as u64);
+            telemetry::counter("solver.zones_solved").add(obs_zones as u64);
+            telemetry::counter("solver.contacts").add(obs_contacts as u64);
+            telemetry::counter("solver.failsafe_passes").incr();
+        }
+        self.obs_end("scatter", t0, |ev| {
+            ev.set("pass", pass)
+                .set("zones", obs_zones)
+                .set("contacts", obs_contacts)
+                .set("gn_iters", pass_gn)
+                .set("max_disp", max_disp);
+        });
         max_disp
     }
 
@@ -424,6 +542,7 @@ impl Simulation {
     /// would. (Not applied while taping: the clamp is off the gradient
     /// chain; taped episodes use gentle contacts.)
     pub fn commit(&mut self, st: StepState) {
+        let t0 = self.obs_begin();
         let h = self.cfg.dt;
         let StepState {
             stats,
@@ -571,6 +690,16 @@ impl Simulation {
             self.arena.charge(MemCategory::Tape, rec.bytes);
             self.tape.push(rec);
         }
+        if telemetry::enabled() {
+            telemetry::counter("engine.steps").incr();
+        }
+        self.obs_end("commit", t0, |ev| {
+            ev.set("impacts", stats.impacts)
+                .set("zones", stats.zones)
+                .set("passes", stats.resolve_passes)
+                .set("cg_iters", stats.cg_iters)
+                .set("gn_iters", stats.gn_iters);
+        });
         self.steps += 1;
         self.last_stats = stats;
     }

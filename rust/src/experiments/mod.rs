@@ -35,10 +35,25 @@ pub fn registry_help() -> String {
         .join("\n")
 }
 
-/// Dispatch `diffsim experiment <id> ...`.
+/// Dispatch `diffsim experiment <id> ...`. With `--trace <path>`, the
+/// telemetry registry is enabled and a process-wide JSONL trace sink is
+/// installed for the duration of the run (every `Simulation` the driver
+/// constructs inherits it with a fresh scene id); afterwards the
+/// registry snapshot is written to `bench_output/telemetry_summary.json`.
 pub fn run_from_cli(args: &Args) -> Result<()> {
     let id = args.positional.get(1).map(String::as_str).unwrap_or("");
-    match id {
+    let tracing = match args.get("trace") {
+        Some(path) => {
+            crate::util::telemetry::enable();
+            let t = crate::util::telemetry::Trace::to_file(path)
+                .map_err(|e| anyhow::anyhow!("creating trace file {path}: {e}"))?;
+            crate::util::telemetry::install_global_trace(Some(t));
+            println!("[tracing to {path}]");
+            true
+        }
+        None => false,
+    };
+    let result = match id {
         "fig3-objects" => scalability::run_objects(args),
         "fig3-scale" => scalability::run_scale(args),
         "table1" => ablation_lcp::run(args),
@@ -50,7 +65,15 @@ pub fn run_from_cli(args: &Args) -> Result<()> {
         "fig9" => estimation::run(args),
         "fig10" => interop::run(args),
         other => bail!("unknown experiment '{other}'; available:\n{}", registry_help()),
+    };
+    if tracing {
+        // Drop the global sink first (flushes once the drivers' per-sim
+        // clones are gone), snapshot while still enabled, then disable.
+        crate::util::telemetry::install_global_trace(None);
+        dump_json("telemetry_summary", &crate::util::telemetry::summary())?;
+        crate::util::telemetry::disable();
     }
+    result
 }
 
 pub mod ablation_fd;

@@ -22,3 +22,9 @@ pub mod ml;
 pub mod runtime;
 pub mod solver;
 pub mod util;
+
+/// Observability facade: the process-wide telemetry registry
+/// ([`util::telemetry`]) under its conventional short name, so call
+/// sites read `diffsim::obs::span("…")` / `diffsim::obs::counter("…")`
+/// / `diffsim::obs::Trace`.
+pub use util::telemetry as obs;

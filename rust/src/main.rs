@@ -1,8 +1,8 @@
 //! DiffSim CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! diffsim run --scene scene.json [--steps N] [--pjrt] [--print-every K]
-//! diffsim experiment <id> [options]    # see experiments::registry
+//! diffsim run --scene scene.json [--steps N] [--pjrt] [--print-every K] [--trace out.jsonl]
+//! diffsim experiment <id> [options] [--trace out.jsonl]
 //! diffsim info                         # artifact + build info
 //! ```
 
@@ -36,8 +36,8 @@ fn real_main() -> Result<()> {
 fn print_help() {
     println!(
         "diffsim — scalable differentiable physics (ICML 2020 reproduction)\n\n\
-         USAGE:\n  diffsim run --scene <file.json> [--steps N] [--pjrt]\n  \
-         diffsim experiment <id> [--sizes a,b,c] [--out file.json]\n  \
+         USAGE:\n  diffsim run --scene <file.json> [--steps N] [--pjrt] [--trace out.jsonl]\n  \
+         diffsim experiment <id> [--sizes a,b,c] [--out file.json] [--trace out.jsonl]\n  \
          diffsim info\n\nEXPERIMENTS:\n{}",
         diffsim::experiments::registry_help()
     );
@@ -56,6 +56,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         )));
         sim.cfg.diff_mode = diffsim::engine::DiffMode::Pjrt;
     }
+    let tracing = match args.get("trace") {
+        Some(path) => {
+            diffsim::obs::enable();
+            let tr = diffsim::obs::Trace::to_file(path)
+                .with_context(|| format!("creating trace file {path}"))?;
+            sim.set_trace(Some(tr));
+            println!("[tracing to {path}]");
+            true
+        }
+        None => false,
+    };
     let steps = args.usize_or("steps", 300);
     let print_every = args.usize_or("print-every", 50);
     let t = Timer::start();
@@ -80,6 +91,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         steps as f64 / t.seconds(),
         memory::fmt_bytes(memory::peak_rss_bytes())
     );
+    if tracing {
+        sim.set_trace(None); // drops the last handle → flush
+        let st = &sim.last_stats;
+        println!(
+            "[trace] last step: cg_iters {} gn_iters {} passes {}",
+            st.cg_iters, st.gn_iters, st.resolve_passes
+        );
+        diffsim::obs::disable();
+    }
     Ok(())
 }
 

@@ -72,6 +72,11 @@ pub struct ZoneSolution {
     pub lambda: Vec<f64>,
     pub converged: bool,
     pub outer_iters: usize,
+    /// Accepted Gauss–Newton steps summed over all outer AL rounds —
+    /// the solver-health number the telemetry layer aggregates
+    /// (`solver.gn_iters`; 0 for solutions produced off the native
+    /// path, e.g. PJRT forward solves).
+    pub gn_iters: usize,
     /// max(0, −C_j) at the solution.
     pub max_violation: f64,
 }
@@ -246,6 +251,7 @@ impl ZoneProblem {
         let mut dq = scratch::f64s(0, 0.0);
         let mut grad = scratch::f64s(0, 0.0);
         let mut trial: Vec<f64> = Vec::with_capacity(self.n);
+        let mut gn_iters = 0usize;
         for outer in 0..max_outer {
             // Inner Gauss–Newton minimization of the AL function.
             for _ in 0..25 {
@@ -323,6 +329,7 @@ impl ZoneProblem {
                 if !accepted {
                     break; // stationary for this μ
                 }
+                gn_iters += 1;
                 let step_norm = alpha * crate::math::dense::norm(&step);
                 if step_norm < 1e-12 * (1.0 + crate::math::dense::norm(&q)) {
                     break;
@@ -342,6 +349,7 @@ impl ZoneProblem {
                     lambda,
                     converged: true,
                     outer_iters: outer + 1,
+                    gn_iters,
                     max_violation: viol,
                 };
             }
@@ -356,7 +364,14 @@ impl ZoneProblem {
         }
         self.eval_into(&q, c.as_vec());
         let viol = c.iter().map(|&x| (-x).max(0.0)).fold(0.0, f64::max);
-        ZoneSolution { q, lambda, converged: viol < 1e-6, outer_iters: max_outer, max_violation: viol }
+        ZoneSolution {
+            q,
+            lambda,
+            converged: viol < 1e-6,
+            outer_iters: max_outer,
+            gn_iters,
+            max_violation: viol,
+        }
     }
 
     /// Characteristic mass for scaling penalties/tolerances.

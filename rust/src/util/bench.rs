@@ -82,6 +82,53 @@ pub fn merge_section(path: &str, section: &str, rows: Json) {
     }
 }
 
+/// Validate a telemetry trace file (one JSON event per line, schema
+/// [`crate::util::telemetry::TRACE_SCHEMA_VERSION`]): every non-empty
+/// line must parse, carry the right `v`, a string `span`, a numeric
+/// `step`, and a non-negative `dur_s`. Returns the event count; an
+/// empty or absent trace is an error (the CI smoke step exists to catch
+/// exactly the silently-emitted-nothing failure).
+pub fn check_trace_jsonl(path: &str) -> Result<usize, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("{path}: unreadable trace: {e}"))?;
+    let mut events = 0usize;
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let ev = Json::parse(line)
+            .map_err(|e| format!("{path}:{}: invalid json: {e}", lineno + 1))?;
+        let v = ev.get("v").and_then(Json::as_usize).map(|x| x as u64);
+        if v != Some(crate::util::telemetry::TRACE_SCHEMA_VERSION) {
+            return Err(format!(
+                "{path}:{}: schema version {v:?}, expected {}",
+                lineno + 1,
+                crate::util::telemetry::TRACE_SCHEMA_VERSION
+            ));
+        }
+        if ev.get("span").and_then(Json::as_str).is_none() {
+            return Err(format!("{path}:{}: missing string field 'span'", lineno + 1));
+        }
+        if ev.get("step").and_then(Json::as_f64).is_none() {
+            return Err(format!("{path}:{}: missing numeric field 'step'", lineno + 1));
+        }
+        match ev.get("dur_s").and_then(Json::as_f64) {
+            Some(d) if d >= 0.0 => {}
+            other => {
+                return Err(format!(
+                    "{path}:{}: 'dur_s' must be a non-negative number, got {other:?}",
+                    lineno + 1
+                ))
+            }
+        }
+        events += 1;
+    }
+    if events == 0 {
+        return Err(format!("{path}: trace contains no events"));
+    }
+    Ok(events)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

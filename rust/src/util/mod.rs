@@ -19,4 +19,5 @@ pub mod pool;
 pub mod quick;
 pub mod scratch;
 pub mod rng;
+pub mod telemetry;
 pub mod timer;

@@ -100,21 +100,44 @@
 //!   own job); the batch pipeline only waits on handles from the
 //!   submitting thread.
 
+use crate::util::telemetry::{self, Counter, Gauge, Hist};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Process-wide count of OS threads spawned by the pool layer —
-/// persistent workers and spawn-per-call baseline threads alike.
-static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+/// persistent workers and spawn-per-call baseline threads alike. Lives
+/// in the telemetry registry as `pool.thread_spawns`; this cached
+/// handle keeps the increment a single relaxed add.
+fn spawn_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| telemetry::counter("pool.thread_spawns"))
+}
+
+/// Jobs submitted to the persistent runtime and not yet completed
+/// (`pool.jobs_in_flight`); only jobs submitted while the registry is
+/// enabled are tracked, and each tracked job decrements on completion
+/// regardless of later toggles, so the gauge never drifts.
+fn inflight_gauge() -> &'static Gauge {
+    static G: OnceLock<Gauge> = OnceLock::new();
+    G.get_or_init(|| telemetry::gauge("pool.jobs_in_flight"))
+}
+
+/// Queue depth observed at each persistent-runtime submission
+/// (`pool.queue_depth`), recorded only while the registry is enabled.
+fn queue_depth_hist() -> &'static Hist {
+    static H: OnceLock<Hist> = OnceLock::new();
+    H.get_or_init(|| telemetry::hist("pool.queue_depth"))
+}
 
 /// Total OS threads the pool layer has ever spawned. Benches read the
 /// delta across a measured phase to prove "zero spawns per step after
-/// warmup" for the persistent runtime.
+/// warmup" for the persistent runtime. Thin wrapper over the
+/// `pool.thread_spawns` registry counter.
 pub fn thread_spawns() -> u64 {
-    THREAD_SPAWNS.load(Ordering::Relaxed)
+    spawn_counter().get()
 }
 
 // ---------------------------------------------------------------- jobs
@@ -202,6 +225,10 @@ struct Job {
     panic: Mutex<Option<Box<dyn Any + Send>>>,
     done: Mutex<bool>,
     done_cv: Condvar,
+    /// Whether this job was counted in `pool.jobs_in_flight` at
+    /// submission (registry enabled then); completion decrements
+    /// exactly when set, independent of the flag's current state.
+    tracked: bool,
 }
 
 impl Job {
@@ -270,6 +297,9 @@ impl Job {
             // AcqRel: the final increment synchronizes with every prior
             // executor's release, so the submitter observes all writes.
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                if self.tracked {
+                    inflight_gauge().add(-1);
+                }
                 *self.done.lock().unwrap() = true;
                 self.done_cv.notify_all();
             }
@@ -313,7 +343,7 @@ impl PoolRuntime {
         let handles = (0..workers)
             .map(|k| {
                 let sh = shared.clone();
-                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                spawn_counter().incr();
                 std::thread::Builder::new()
                     .name(format!("pool-worker-{k}"))
                     .spawn(move || worker_loop(&sh))
@@ -326,7 +356,11 @@ impl PoolRuntime {
     fn submit(&self, job: &Arc<Job>) {
         let mut q = self.shared.queue.lock().unwrap();
         q.jobs.push_back(job.clone());
+        let depth = q.jobs.len();
         drop(q);
+        if telemetry::enabled() {
+            queue_depth_hist().record(depth as f64);
+        }
         self.shared.cv.notify_all();
     }
 }
@@ -375,6 +409,10 @@ fn run_on(rt: &Arc<PoolRuntime>, budget: usize, n: usize, task: &(dyn Fn(usize) 
     // until `completed == n` (see `TaskRef`).
     let task: &'static (dyn Fn(usize) + Sync) =
         unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(task) };
+    let tracked = telemetry::enabled();
+    if tracked {
+        inflight_gauge().add(1);
+    }
     let job = Arc::new(Job {
         task: Task::Borrowed(TaskRef(task as *const _)),
         n,
@@ -386,6 +424,7 @@ fn run_on(rt: &Arc<PoolRuntime>, budget: usize, n: usize, task: &(dyn Fn(usize) 
         panic: Mutex::new(None),
         done: Mutex::new(false),
         done_cv: Condvar::new(),
+        tracked,
     });
     rt.submit(&job);
     job.run();
@@ -532,7 +571,7 @@ impl Pool {
             },
             Backend::Scoped { gate, .. } => {
                 let gate = gate.clone();
-                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                spawn_counter().incr();
                 let handle = std::thread::Builder::new()
                     .name("pool-detached".to_string())
                     .spawn(move || {
@@ -556,6 +595,10 @@ impl Pool {
                     let f = cell.lock().unwrap().take().expect("detached task runs once");
                     *slot.lock().unwrap() = Some(f());
                 });
+                let tracked = telemetry::enabled();
+                if tracked {
+                    inflight_gauge().add(1);
+                }
                 let job = Arc::new(Job {
                     task: Task::Owned(task),
                     n: 1,
@@ -567,6 +610,7 @@ impl Pool {
                     panic: Mutex::new(None),
                     done: Mutex::new(false),
                     done_cv: Condvar::new(),
+                    tracked,
                 });
                 rt.submit(&job);
                 JobHandle { inner: Some(HandleState::Queued { job, result }) }
@@ -728,7 +772,7 @@ where
                 let cursor = &cursor;
                 let f = &f;
                 let base = &base;
-                THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+                spawn_counter().incr();
                 scope.spawn(move || {
                     let mut local = Vec::new();
                     loop {

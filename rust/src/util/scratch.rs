@@ -25,8 +25,10 @@
 //! ```
 
 use crate::math::dense::Mat;
+use crate::util::telemetry::{self, Counter};
 use std::cell::RefCell;
 use std::ops::{Deref, DerefMut};
+use std::sync::OnceLock;
 
 /// Retained buffers per kind; beyond this, returned buffers are freed
 /// (the engine's working set is a handful of mats + packing buffers per
@@ -53,6 +55,22 @@ pub fn stats() -> (u64, u64) {
         let s = s.borrow();
         (s.takes, s.reuses)
     })
+}
+
+/// Process-wide mirrors of the per-thread take/reuse counts, living in
+/// the telemetry registry as `scratch.takes` / `scratch.reuses` (the
+/// per-store fields above stay authoritative for per-thread tests).
+/// Cached handles: one `OnceLock` load + a relaxed add per take.
+fn counters() -> &'static (Counter, Counter) {
+    static C: OnceLock<(Counter, Counter)> = OnceLock::new();
+    C.get_or_init(|| (telemetry::counter("scratch.takes"), telemetry::counter("scratch.reuses")))
+}
+
+/// Process-wide (takes, reuses) across all threads, as accumulated in
+/// the telemetry registry.
+pub fn process_stats() -> (u64, u64) {
+    let (t, r) = counters();
+    (t.get(), r.get())
 }
 
 macro_rules! buf_kind {
@@ -109,12 +127,15 @@ macro_rules! buf_kind {
         /// Take a scratch buffer of `len` copies of `fill` from the
         /// calling thread's arena (allocating only on cold start).
         pub fn $take(len: usize, fill: $elem) -> $guard {
+            let (p_takes, p_reuses) = counters();
+            p_takes.incr();
             let mut v = STORE.with(|s| {
                 let mut s = s.borrow_mut();
                 s.takes += 1;
                 match s.$field.pop() {
                     Some(v) => {
                         s.reuses += 1;
+                        p_reuses.incr();
                         v
                     }
                     None => Vec::new(),
@@ -162,12 +183,15 @@ impl Drop for MatBuf {
 /// Take a zeroed `rows × cols` scratch matrix from the calling thread's
 /// arena.
 pub fn mat(rows: usize, cols: usize) -> MatBuf {
+    let (p_takes, p_reuses) = counters();
+    p_takes.incr();
     let mut m = STORE.with(|s| {
         let mut s = s.borrow_mut();
         s.takes += 1;
         match s.mats.pop() {
             Some(m) => {
                 s.reuses += 1;
+                p_reuses.incr();
                 m
             }
             None => Mat::zeros(0, 0),
@@ -209,6 +233,24 @@ mod tests {
         let m = mat(5, 3);
         assert_eq!((m.rows, m.cols), (5, 3));
         assert!(m.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn process_stats_mirror_per_thread_counts() {
+        let (pt0, pr0) = process_stats();
+        let (t0, r0) = stats();
+        {
+            let _a = f64s(8, 0.0);
+            let _m = mat(2, 2);
+        }
+        let _b = f64s(8, 0.0);
+        let (t1, r1) = stats();
+        let (pt1, pr1) = process_stats();
+        assert!(t1 - t0 >= 3);
+        // The registry mirror accumulates across all threads, so it
+        // saw at least this thread's activity.
+        assert!(pt1 - pt0 >= t1 - t0);
+        assert!(pr1 - pr0 >= r1 - r0);
     }
 
     #[test]

@@ -1,0 +1,656 @@
+//! Process-wide telemetry: named counters, gauges, and histogram
+//! timers, lightweight spans over the staged step primitives, and a
+//! per-rollout JSONL trace writer.
+//!
+//! This is the unified observability layer the scattered one-off
+//! counters report through: [`crate::coordinator::metrics::CoordMetrics`]
+//! increments mirror into `coord.*` counters, the
+//! [`crate::util::pool`] thread-spawn global and queue depth live here
+//! as `pool.*`, [`crate::util::scratch`] reuse stats as `scratch.*`,
+//! and [`summary`] folds in the [`crate::util::arena`] process stats
+//! and the global [`crate::util::memory::MemTracker`] as sections of
+//! one snapshot.
+//!
+//! # Overhead contract
+//!
+//! * **Disabled** (the default): every instrumentation point is one
+//!   relaxed atomic load ([`enabled`]). [`span`] returns an inert guard
+//!   — no allocation, no registry lookup, no clock read.
+//! * **Enabled**: recording is lock-free (atomic adds plus CAS loops
+//!   for float accumulation); the registry mutex is taken only to
+//!   intern a metric *name*, and the hot paths cache their handles.
+//! * **Generation-checked**: [`enable`] bumps a generation; a span
+//!   opened under one generation and closed under another is discarded,
+//!   so toggling mid-flight never records torn intervals.
+//! * **Observational only**: nothing here feeds back into stepping —
+//!   trajectories and gradients are bitwise-identical with telemetry
+//!   on, off, or mid-toggle.
+//!
+//! # Trace export
+//!
+//! A [`Trace`] is an `Arc`-shared JSONL sink: each staged step
+//! primitive writes one schema-versioned event per call (span close)
+//! with its duration and stage-specific payload (zones, contacts,
+//! GN/CG iteration counts). Install per-rollout via
+//! `Simulation::set_trace` / `SceneBatch::set_trace` (scenes share the
+//! file, tagged by scene id), or process-wide via `--trace <path>` on
+//! the experiment binaries ([`install_global_trace`]). Dropping the
+//! last handle flushes the file. Tracing is independent of the
+//! registry enable flag: a sim with a trace installed always writes
+//! events, while registry counters/histograms accumulate only when
+//! [`enabled`].
+
+use crate::util::json::Json;
+use crate::util::timer::{quant_bucket, quantile_from_buckets, QUANT_BUCKETS};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Version stamped on every JSONL trace event (`"v"`) and on
+/// [`summary`] (`"schema_version"`). Bump on breaking schema changes.
+pub const TRACE_SCHEMA_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// Enable flag
+// ---------------------------------------------------------------------
+
+/// 0 = disabled; otherwise the current enable generation.
+static ENABLED_GEN: AtomicU64 = AtomicU64::new(0);
+static NEXT_GEN: AtomicU64 = AtomicU64::new(1);
+
+/// Is registry recording on? One relaxed load — the entire disabled-
+/// mode cost of an instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED_GEN.load(Ordering::Relaxed) != 0
+}
+
+/// Turn registry recording on; returns the fresh generation. Spans
+/// opened under an older generation are discarded at close.
+pub fn enable() -> u64 {
+    let g = NEXT_GEN.fetch_add(1, Ordering::Relaxed);
+    ENABLED_GEN.store(g, Ordering::Relaxed);
+    g
+}
+
+/// Turn registry recording off. In-flight spans are discarded at close.
+pub fn disable() {
+    ENABLED_GEN.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------
+// Metric cells
+// ---------------------------------------------------------------------
+
+/// Monotonic event counter. Cloning shares the cell; handles stay
+/// valid for the process lifetime.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn incr(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down level indicator (queue depth, jobs in flight).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Lock-free histogram cell: count/sum/min/max plus the fixed
+/// log-spaced buckets shared with [`crate::util::timer::Stats`], so
+/// snapshot p50/p90/p99 come from one quantile implementation. Floats
+/// are accumulated with CAS loops on their bit patterns — no mutex on
+/// the record path.
+struct HistCell {
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+    min_bits: AtomicU64,
+    max_bits: AtomicU64,
+    buckets: [AtomicU64; QUANT_BUCKETS],
+}
+
+/// Handle to a registered histogram (durations in seconds, or any
+/// non-negative value — occupancies, depths).
+#[derive(Clone)]
+pub struct Hist(Arc<HistCell>);
+
+fn cas_f64(cell: &AtomicU64, fold: impl Fn(f64) -> Option<f64>) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while let Some(new) = fold(f64::from_bits(cur)) {
+        match cell.compare_exchange_weak(cur, new.to_bits(), Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => break,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+impl Hist {
+    pub fn record(&self, x: f64) {
+        let c = &self.0;
+        c.count.fetch_add(1, Ordering::Relaxed);
+        cas_f64(&c.sum_bits, |cur| Some(cur + x));
+        cas_f64(&c.min_bits, |cur| if x < cur { Some(x) } else { None });
+        cas_f64(&c.max_bits, |cur| if x > cur { Some(x) } else { None });
+        c.buckets[quant_bucket(x)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    fn min(&self) -> f64 {
+        f64::from_bits(self.0.min_bits.load(Ordering::Relaxed))
+    }
+
+    fn max(&self) -> f64 {
+        f64::from_bits(self.0.max_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        let buckets: Vec<u64> =
+            self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        quantile_from_buckets(&buckets, self.count(), q, self.min(), self.max())
+    }
+
+    /// Snapshot as a JSON object (count/total/mean/min/max/p50/p90/p99).
+    /// Non-finite values (empty histogram min/max) serialize as null.
+    pub fn snapshot_json(&self) -> Json {
+        let n = self.count();
+        let mut j = Json::obj();
+        j.set("count", n).set("total", self.sum());
+        j.set("mean", if n == 0 { 0.0 } else { self.sum() / n as f64 });
+        j.set("min", self.min()).set("max", self.max());
+        j.set("p50", self.quantile(0.50));
+        j.set("p90", self.quantile(0.90));
+        j.set("p99", self.quantile(0.99));
+        j
+    }
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+#[derive(Default)]
+struct Registry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    gauges: Mutex<BTreeMap<String, Gauge>>,
+    hists: Mutex<BTreeMap<String, Hist>>,
+}
+
+fn registry() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+/// Intern (or look up) a named counter. Hot paths should cache the
+/// returned handle; the lookup takes the registry mutex.
+pub fn counter(name: &str) -> Counter {
+    registry()
+        .counters
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| Counter(Arc::new(AtomicU64::new(0))))
+        .clone()
+}
+
+/// Intern (or look up) a named gauge.
+pub fn gauge(name: &str) -> Gauge {
+    registry()
+        .gauges
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| Gauge(Arc::new(AtomicI64::new(0))))
+        .clone()
+}
+
+/// Intern (or look up) a named histogram.
+pub fn hist(name: &str) -> Hist {
+    registry()
+        .hists
+        .lock()
+        .unwrap()
+        .entry(name.to_string())
+        .or_insert_with(|| {
+            Hist(Arc::new(HistCell {
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+                min_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+                max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            }))
+        })
+        .clone()
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+/// RAII timer over a registry histogram: created by [`span`], records
+/// its elapsed seconds into the named histogram on drop. When the
+/// registry is disabled at creation the guard is inert — no clock, no
+/// allocation, no registry touch — and a generation change between
+/// enter and exit discards the sample.
+pub struct Span {
+    rec: Option<(Instant, Hist, u64)>,
+}
+
+impl Span {
+    /// Whether this span will record on drop (modulo generation churn).
+    pub fn is_recording(&self) -> bool {
+        self.rec.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((t0, h, g)) = self.rec.take() {
+            if ENABLED_GEN.load(Ordering::Relaxed) == g {
+                h.record(t0.elapsed().as_secs_f64());
+            }
+        }
+    }
+}
+
+/// Open a span over histogram `name`. Disabled mode returns an inert
+/// guard without evaluating anything else.
+pub fn span(name: &str) -> Span {
+    let g = ENABLED_GEN.load(Ordering::Relaxed);
+    if g == 0 {
+        return Span { rec: None };
+    }
+    Span { rec: Some((Instant::now(), hist(name), g)) }
+}
+
+// ---------------------------------------------------------------------
+// JSONL trace writer
+// ---------------------------------------------------------------------
+
+struct TraceFile {
+    w: Mutex<std::io::BufWriter<std::fs::File>>,
+}
+
+impl Drop for TraceFile {
+    fn drop(&mut self) {
+        if let Ok(mut w) = self.w.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Per-rollout JSONL trace sink. Cheap to clone; clones share the
+/// underlying file (one event per line, appended under a mutex, so a
+/// batch of scenes can interleave safely). Dropping the last clone
+/// flushes.
+#[derive(Clone)]
+pub struct Trace {
+    file: Arc<TraceFile>,
+    scene: usize,
+}
+
+impl Trace {
+    /// Create (truncating) a trace file at `path`.
+    pub fn to_file(path: impl AsRef<Path>) -> std::io::Result<Trace> {
+        let f = std::fs::File::create(path)?;
+        Ok(Trace {
+            file: Arc::new(TraceFile { w: Mutex::new(std::io::BufWriter::new(f)) }),
+            scene: 0,
+        })
+    }
+
+    /// A handle to the same file whose events are tagged `scene: id` —
+    /// how `SceneBatch` gives each scene its identity in a shared trace.
+    pub fn for_scene(&self, id: usize) -> Trace {
+        Trace { file: self.file.clone(), scene: id }
+    }
+
+    pub fn scene(&self) -> usize {
+        self.scene
+    }
+
+    /// Append one event line. The schema version (`"v"`) and this
+    /// handle's scene id are stamped on; callers provide `span`,
+    /// `step`, `dur_s`, and stage-specific payload.
+    pub fn write_event(&self, mut event: Json) {
+        event.set("v", TRACE_SCHEMA_VERSION).set("scene", self.scene);
+        if let Ok(mut w) = self.file.w.lock() {
+            let _ = w.write_all(event.to_string().as_bytes());
+            let _ = w.write_all(b"\n");
+        }
+    }
+
+    pub fn flush(&self) {
+        if let Ok(mut w) = self.file.w.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+/// Process-default trace sink + scene id dispenser, so `--trace` on a
+/// binary reaches Simulations constructed deep inside drivers.
+static GLOBAL_TRACE: Mutex<Option<Trace>> = Mutex::new(None);
+static NEXT_SCENE: AtomicU64 = AtomicU64::new(0);
+
+/// Install (or clear) the process-default trace sink and reset the
+/// scene id dispenser. Simulations constructed afterwards pick it up
+/// automatically with a fresh scene id each. Clearing drops the global
+/// handle, which flushes the file once the last per-sim clone goes.
+pub fn install_global_trace(t: Option<Trace>) {
+    NEXT_SCENE.store(0, Ordering::Relaxed);
+    *GLOBAL_TRACE.lock().unwrap() = t;
+}
+
+/// A clone of the global sink with a fresh scene id, if one is
+/// installed — what `Simulation::new` starts from.
+pub fn default_trace() -> Option<Trace> {
+    let g = GLOBAL_TRACE.lock().unwrap();
+    g.as_ref().map(|t| t.for_scene(NEXT_SCENE.fetch_add(1, Ordering::Relaxed) as usize))
+}
+
+// ---------------------------------------------------------------------
+// Summary snapshot
+// ---------------------------------------------------------------------
+
+/// `items / slots` as a JSON number, or null when no padded slots were
+/// ever shipped — after an all-fallback dispatch there is no occupancy
+/// to report, and 0/0 must not render as 0.0 (or NaN).
+fn occupancy_json(items: u64, slots: u64) -> Json {
+    if slots == 0 {
+        Json::Null
+    } else {
+        Json::Num(items as f64 / slots as f64)
+    }
+}
+
+fn counter_value(name: &str) -> u64 {
+    registry().counters.lock().unwrap().get(name).map(|c| c.get()).unwrap_or(0)
+}
+
+fn memory_section() -> Json {
+    use crate::util::memory::{self, MemCategory};
+    let t = memory::global();
+    let mut j = Json::obj();
+    j.set("current_bytes", t.current()).set("peak_bytes", t.peak());
+    for c in MemCategory::ALL {
+        j.set(&format!("peak_{}_bytes", c.label()), t.peak_cat(c));
+    }
+    j.set("peak_rss_bytes", memory::peak_rss_bytes());
+    j
+}
+
+fn arena_section() -> Json {
+    let s = crate::util::arena::process_stats();
+    let mut j = Json::obj();
+    j.set("takes", s.takes)
+        .set("hits", s.hits)
+        .set("misses", s.misses)
+        .set("parks", s.parks)
+        .set("evictions", s.evictions)
+        .set("retained_bytes", s.retained_bytes)
+        .set("retained_buffers", s.retained_buffers)
+        .set("hit_rate", s.hit_rate());
+    j
+}
+
+fn coordinator_section() -> Json {
+    let mut j = Json::obj();
+    for name in [
+        "coord.zone_pjrt_calls",
+        "coord.zone_native_fallback",
+        "coord.zone_solve_dispatches",
+        "coord.zone_solve_pjrt_calls",
+        "coord.zone_solve_native_fallback",
+        "coord.rigid_pjrt_calls",
+    ] {
+        j.set(name.trim_start_matches("coord."), counter_value(name));
+    }
+    j.set(
+        "zone_occupancy",
+        occupancy_json(counter_value("coord.zone_items"), counter_value("coord.zone_slots")),
+    );
+    j.set(
+        "zone_solve_occupancy",
+        occupancy_json(
+            counter_value("coord.zone_solve_items"),
+            counter_value("coord.zone_solve_slots"),
+        ),
+    );
+    j.set(
+        "rigid_occupancy",
+        occupancy_json(counter_value("coord.rigid_items"), counter_value("coord.rigid_slots")),
+    );
+    j
+}
+
+/// One JSON snapshot of the whole registry: every counter, gauge, and
+/// histogram (with p50/p90/p99), plus the absorbed sections — scratch
+/// and pool convenience views, process arena stats, the global memory
+/// tracker, and the coordinator counters with null-safe occupancies.
+/// This is what the bench harness merges into `BENCH_trace.json`.
+pub fn summary() -> Json {
+    let mut j = Json::obj();
+    j.set("schema_version", TRACE_SCHEMA_VERSION).set("enabled", enabled());
+    let mut cj = Json::obj();
+    for (k, c) in registry().counters.lock().unwrap().iter() {
+        cj.set(k, c.get());
+    }
+    j.set("counters", cj);
+    let mut gj = Json::obj();
+    for (k, g) in registry().gauges.lock().unwrap().iter() {
+        gj.set(k, g.get());
+    }
+    j.set("gauges", gj);
+    let mut hj = Json::obj();
+    for (k, h) in registry().hists.lock().unwrap().iter() {
+        hj.set(k, h.snapshot_json());
+    }
+    j.set("spans", hj);
+    let mut sj = Json::obj();
+    sj.set("takes", counter_value("scratch.takes"))
+        .set("reuses", counter_value("scratch.reuses"));
+    j.set("scratch", sj);
+    let mut pj = Json::obj();
+    pj.set("thread_spawns", crate::util::pool::thread_spawns())
+        .set("jobs_in_flight", gauge("pool.jobs_in_flight").get());
+    j.set("pool", pj);
+    j.set("arena", arena_section());
+    j.set("memory", memory_section());
+    j.set("coordinator", coordinator_section());
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Enable-state tests share the process-global flag; serialize them
+    /// (and recover from a poisoned lock so one failure doesn't cascade).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn counters_gauges_hists_register_and_accumulate() {
+        let c = counter("test.telemetry.alpha");
+        let before = c.get();
+        c.add(3);
+        c.incr();
+        // Interning the same name returns the same cell.
+        assert_eq!(counter("test.telemetry.alpha").get(), before + 4);
+        let g = gauge("test.telemetry.gauge");
+        g.add(5);
+        g.add(-2);
+        assert_eq!(gauge("test.telemetry.gauge").get(), g.get());
+        let j = summary();
+        assert!(j.get("counters").unwrap().get("test.telemetry.alpha").is_some());
+        for k in ["gauges", "spans", "scratch", "pool", "arena", "memory", "coordinator"] {
+            assert!(j.get(k).is_some(), "summary missing section {k}");
+        }
+        // The snapshot round-trips through the JSON writer/parser.
+        let t = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(t.usize_or("schema_version", 0) as u64, TRACE_SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn hist_moments_and_quantiles() {
+        let h = hist("test.telemetry.hist");
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-4);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - 0.505).abs() < 1e-9);
+        let p50 = h.quantile(0.5);
+        // Oracle p50 = 5.0e-3; bucket estimation is within one ratio.
+        assert!(p50 > 5.0e-3 / 2.0 && p50 < 5.0e-3 * 2.0, "p50 {p50}");
+        let j = h.snapshot_json();
+        assert_eq!(j.usize_or("count", 0), 100);
+        assert!(j.f64_or("p99", 0.0) >= j.f64_or("p50", 1.0));
+        assert!((j.f64_or("min", 0.0) - 1e-4).abs() < 1e-12);
+        assert!((j.f64_or("max", 0.0) - 1e-2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _l = test_lock();
+        disable();
+        let h = hist("test.telemetry.noop");
+        let n0 = h.count();
+        {
+            let s = span("test.telemetry.noop");
+            assert!(!s.is_recording());
+        }
+        assert_eq!(h.count(), n0, "disabled span must not record");
+        // Disabled spans touch nothing: a name only ever used while
+        // disabled is never interned (no allocation on enter/exit).
+        {
+            let _s = span("test.telemetry.never.interned");
+        }
+        assert!(
+            !registry().hists.lock().unwrap().contains_key("test.telemetry.never.interned"),
+            "disabled span must not intern its name"
+        );
+    }
+
+    #[test]
+    fn enabled_spans_record_and_generation_discards_stale() {
+        let _l = test_lock();
+        enable();
+        let h = hist("test.telemetry.span");
+        let n0 = h.count();
+        {
+            let s = span("test.telemetry.span");
+            assert!(s.is_recording());
+        }
+        assert_eq!(h.count(), n0 + 1);
+        // A span straddling a disable is discarded at close.
+        let s = span("test.telemetry.span");
+        disable();
+        drop(s);
+        assert_eq!(h.count(), n0 + 1, "stale-generation span must be discarded");
+        // …and one straddling a re-enable (new generation) likewise.
+        enable();
+        let s = span("test.telemetry.span");
+        enable();
+        drop(s);
+        assert_eq!(h.count(), n0 + 1, "re-enabled generation must discard older spans");
+        disable();
+    }
+
+    #[test]
+    fn occupancy_nulls_instead_of_nan() {
+        assert_eq!(occupancy_json(0, 0), Json::Null);
+        assert_eq!(occupancy_json(5, 0), Json::Null);
+        assert_eq!(occupancy_json(3, 4), Json::Num(0.75));
+        // Through the writer: no NaN ever reaches the file.
+        let mut j = Json::obj();
+        j.set("occ", occupancy_json(0, 0));
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn trace_writer_roundtrips_and_passes_schema_check() {
+        let path = std::env::temp_dir().join("diffsim_telemetry_roundtrip.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        {
+            let t = Trace::to_file(&path).unwrap();
+            let t3 = t.for_scene(3);
+            let mut ev = Json::obj();
+            ev.set("span", "integrate").set("step", 0usize).set("dur_s", 1.5e-4);
+            t.write_event(ev);
+            let mut ev = Json::obj();
+            ev.set("span", "scatter").set("step", 0usize).set("dur_s", 2.0e-4).set(
+                "zones", 2usize,
+            );
+            t3.write_event(ev);
+        } // drop flushes
+        let n = crate::util::bench::check_trace_jsonl(&path).unwrap();
+        assert_eq!(n, 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<Json> = text.lines().map(|l| Json::parse(l).unwrap()).collect();
+        assert_eq!(lines[0].usize_or("scene", 99), 0);
+        assert_eq!(lines[0].str_or("span", ""), "integrate");
+        assert_eq!(lines[1].usize_or("scene", 99), 3);
+        assert_eq!(lines[1].usize_or("v", 0) as u64, TRACE_SCHEMA_VERSION);
+        assert_eq!(lines[1].usize_or("zones", 0), 2);
+        // The checker rejects schema violations.
+        std::fs::write(&path, "{\"span\": \"x\"}\n").unwrap();
+        assert!(crate::util::bench::check_trace_jsonl(&path).is_err());
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(crate::util::bench::check_trace_jsonl(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn global_trace_hands_out_scene_ids() {
+        let _l = test_lock();
+        let path = std::env::temp_dir().join("diffsim_telemetry_global.jsonl");
+        let path_s = path.to_str().unwrap().to_string();
+        install_global_trace(Some(Trace::to_file(&path_s).unwrap()));
+        let a = default_trace().unwrap();
+        let b = default_trace().unwrap();
+        assert_eq!((a.scene(), b.scene()), (0, 1));
+        install_global_trace(None);
+        assert!(default_trace().is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+}

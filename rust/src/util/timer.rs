@@ -1,7 +1,64 @@
-//! Timing + statistics helpers shared by the bench harness and the
-//! coordinator's metrics.
+//! Timing + statistics helpers shared by the bench harness, the
+//! coordinator's metrics, and the telemetry registry
+//! ([`crate::util::telemetry`]): [`Stats`] carries Welford moments plus
+//! a fixed-bucket histogram, so span timers and bench rows share one
+//! p50/p90/p99 implementation (the bucket scheme is exported for the
+//! registry's lock-free cells).
 
 use std::time::Instant;
+
+/// Number of fixed log-spaced quantile buckets shared by [`Stats`] and
+/// the telemetry registry's histogram cells.
+pub const QUANT_BUCKETS: usize = 64;
+
+/// Lower edge of bucket 0. Values at or below it land in bucket 0.
+const QUANT_MIN: f64 = 1e-9;
+
+/// Decades covered by the bucket range: `1e-9 ..= 1e7` spans sub-ns
+/// span timings up to multi-day durations (and, reused for counts,
+/// anything up to 1e7).
+const QUANT_DECADES: f64 = 16.0;
+
+/// Per-bucket geometric growth factor (`10^(16/64) ≈ 1.778`) — the
+/// worst-case multiplicative error of a bucket-estimated quantile.
+pub fn quant_ratio() -> f64 {
+    10f64.powf(QUANT_DECADES / QUANT_BUCKETS as f64)
+}
+
+/// Bucket index for a (positive) sample. Non-positive and NaN samples
+/// land in bucket 0; oversized ones clamp to the last bucket.
+pub fn quant_bucket(x: f64) -> usize {
+    if !(x > QUANT_MIN) {
+        return 0;
+    }
+    let i = ((x / QUANT_MIN).log10() * (QUANT_BUCKETS as f64 / QUANT_DECADES)).floor() as isize;
+    i.clamp(0, QUANT_BUCKETS as isize - 1) as usize
+}
+
+/// Geometric midpoint of bucket `i` — the value a quantile estimate
+/// reports for a rank that falls in that bucket.
+pub fn quant_bucket_mid(i: usize) -> f64 {
+    QUANT_MIN * 10f64.powf(QUANT_DECADES * (i as f64 + 0.5) / QUANT_BUCKETS as f64)
+}
+
+/// Estimate quantile `q` (in `[0, 1]`) from fixed-bucket counts using
+/// the nearest-rank definition, clamped to the observed `[min, max]`.
+/// `n` must equal the sum of `buckets`. Returns 0 for an empty
+/// histogram.
+pub fn quantile_from_buckets(buckets: &[u64], n: u64, q: f64, min: f64, max: f64) -> f64 {
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        cum += c;
+        if cum >= rank {
+            return quant_bucket_mid(i).clamp(min, max);
+        }
+    }
+    max
+}
 
 /// Simple stopwatch.
 pub struct Timer {
@@ -22,7 +79,8 @@ impl Timer {
     }
 }
 
-/// Online mean/std/min/max accumulator (Welford).
+/// Online mean/std/min/max accumulator (Welford) with a fixed-bucket
+/// histogram for quantile estimation and parallel merge.
 #[derive(Clone, Debug, Default)]
 pub struct Stats {
     pub n: usize,
@@ -30,11 +88,21 @@ pub struct Stats {
     m2: f64,
     pub min: f64,
     pub max: f64,
+    /// Lazily sized to [`QUANT_BUCKETS`] on first push, so `Default`
+    /// stays allocation-free.
+    buckets: Vec<u64>,
 }
 
 impl Stats {
     pub fn new() -> Stats {
-        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+        Stats {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            buckets: Vec::new(),
+        }
     }
 
     pub fn push(&mut self, x: f64) {
@@ -44,6 +112,56 @@ impl Stats {
         self.m2 += d * (x - self.mean);
         self.min = self.min.min(x);
         self.max = self.max.max(x);
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; QUANT_BUCKETS];
+        }
+        self.buckets[quant_bucket(x)] += 1;
+    }
+
+    /// Fold `other` into `self` as if every sample of `other` had been
+    /// pushed here (parallel Welford merge; exact for n/mean/m2/min/max,
+    /// bucket-exact for quantiles).
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * n1 * n2 / (n1 + n2);
+        self.mean += d * n2 / (n1 + n2);
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        if self.buckets.is_empty() {
+            self.buckets = vec![0; QUANT_BUCKETS];
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+    }
+
+    /// Nearest-rank quantile estimate from the fixed buckets, accurate
+    /// to within one bucket ratio ([`quant_ratio`]) and clamped to the
+    /// observed `[min, max]`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        quantile_from_buckets(&self.buckets, self.n as u64, q, self.min, self.max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
     }
 
     pub fn mean(&self) -> f64 {
@@ -104,6 +222,83 @@ mod tests {
         let s = Stats::from_slice(&[3.0]);
         assert_eq!(s.mean(), 3.0);
         assert_eq!(s.std(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_concatenation() {
+        let xs: Vec<f64> = (0..50).map(|i| ((i * 37 % 101) as f64) * 0.1 + 0.05).collect();
+        let (left, right) = xs.split_at(20);
+        let mut merged = Stats::from_slice(left);
+        merged.merge(&Stats::from_slice(right));
+        let whole = Stats::from_slice(&xs);
+        assert_eq!(merged.n, whole.n);
+        assert!((merged.mean() - whole.mean()).abs() < 1e-12);
+        assert!((merged.std() - whole.std()).abs() < 1e-12);
+        assert_eq!(merged.min, whole.min);
+        assert_eq!(merged.max, whole.max);
+        assert_eq!(merged.quantile(0.5), whole.quantile(0.5));
+        // Merging into an empty accumulator copies; merging an empty
+        // one is a no-op.
+        let mut e = Stats::new();
+        e.merge(&whole);
+        assert!((e.std() - whole.std()).abs() < 1e-12);
+        let mut w = whole.clone();
+        w.merge(&Stats::new());
+        assert_eq!(w.n, whole.n);
+        assert_eq!(w.mean(), whole.mean());
+    }
+
+    #[test]
+    fn quantiles_match_sorted_oracle() {
+        // Log-uniform-ish durations spanning 1us..10ms — the regime the
+        // bucket layout is designed for.
+        let xs: Vec<f64> = (0..500)
+            .map(|i| {
+                let u = (i * 197 % 500) as f64 / 500.0;
+                1e-6 * 10f64.powf(4.0 * u)
+            })
+            .collect();
+        let s = Stats::from_slice(&xs);
+        let mut sorted = xs.clone();
+        sorted.sort_by(f64::total_cmp);
+        let ratio = quant_ratio();
+        for &q in &[0.5, 0.9, 0.99] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let oracle = sorted[rank - 1];
+            let est = s.quantile(q);
+            // The estimate is exactly the midpoint of the bucket the
+            // oracle value falls in (same bucket function both sides)…
+            assert_eq!(est, quant_bucket_mid(quant_bucket(oracle)).clamp(s.min, s.max));
+            // …which bounds the multiplicative error by one bucket
+            // ratio against the true sorted-vector answer.
+            assert!(est >= s.min && est <= s.max);
+            assert!(
+                est / oracle <= ratio && oracle / est <= ratio,
+                "q={q}: est {est} vs oracle {oracle} (allowed ratio {ratio})"
+            );
+        }
+        // Empty and degenerate inputs stay finite.
+        assert_eq!(Stats::new().quantile(0.5), 0.0);
+        let one = Stats::from_slice(&[2.5e-3]);
+        assert_eq!(one.quantile(0.5), 2.5e-3); // clamped to [min, max]
+    }
+
+    #[test]
+    fn bucket_layout_is_monotone_and_clamped() {
+        assert_eq!(quant_bucket(0.0), 0);
+        assert_eq!(quant_bucket(-1.0), 0);
+        assert_eq!(quant_bucket(f64::NAN), 0);
+        assert_eq!(quant_bucket(1e99), QUANT_BUCKETS - 1);
+        let mut prev = 0;
+        for e in -8..7 {
+            let b = quant_bucket(10f64.powi(e));
+            assert!(b >= prev, "bucket index must be monotone in the sample");
+            prev = b;
+        }
+        // Midpoints sit inside their bucket: same bucket round-trip.
+        for i in 0..QUANT_BUCKETS {
+            assert_eq!(quant_bucket(quant_bucket_mid(i)), i);
+        }
     }
 
     #[test]

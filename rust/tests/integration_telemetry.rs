@@ -1,0 +1,142 @@
+//! Telemetry integration: the JSONL trace emitted by an instrumented
+//! rollout must agree *exactly* with the solver-side counters — span
+//! counts per stage, GN/CG iteration totals — and the registry must
+//! accumulate while enabled and stay silent while disabled.
+
+use diffsim::bodies::{RigidBody, System};
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, unit_box};
+use diffsim::obs;
+use diffsim::util::json::Json;
+use std::sync::Mutex;
+
+/// Serialize the tests that toggle the process-wide enable flag.
+static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+fn enable_lock() -> std::sync::MutexGuard<'static, ()> {
+    ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Frozen ground slab + one cube dropping into resting contact: a
+/// hand-steppable scene whose every step is either free flight (no
+/// passes) or contact resolution (≥ 1 pass with GN iterations).
+fn two_body_scene() -> Simulation {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(10.0, 0.5, 10.0)))
+            .with_position(Vec3::new(0.0, -0.5, 0.0)),
+    );
+    sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.55, 0.0)));
+    Simulation::new(sys, SimConfig { dt: 1.0 / 100.0, workers: 1, ..Default::default() })
+}
+
+#[test]
+fn trace_span_counts_match_solver_counters_exactly() {
+    let path = std::env::temp_dir().join("diffsim_itest_trace_exact.jsonl");
+    let path_s = path.to_str().unwrap().to_string();
+    let _ = std::fs::remove_file(&path);
+
+    let steps = 40usize;
+    let mut sim = two_body_scene();
+    sim.set_trace(Some(obs::Trace::to_file(&path_s).unwrap()));
+    let (mut passes_total, mut cg_total, mut gn_total) = (0usize, 0usize, 0usize);
+    for _ in 0..steps {
+        sim.step();
+        passes_total += sim.last_stats.resolve_passes;
+        cg_total += sim.last_stats.cg_iters;
+        gn_total += sim.last_stats.gn_iters;
+    }
+    sim.set_trace(None); // flush
+
+    let events: Vec<Json> = std::fs::read_to_string(&path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| Json::parse(l).unwrap())
+        .collect();
+    let count = |stage: &str| events.iter().filter(|e| e.str_or("span", "") == stage).count();
+    let sum = |stage: &str, field: &str| -> usize {
+        events
+            .iter()
+            .filter(|e| e.str_or("span", "") == stage)
+            .map(|e| e.usize_or(field, 0))
+            .sum()
+    };
+
+    // Once-per-step stages: exactly one event each per step.
+    assert_eq!(count("integrate"), steps);
+    assert_eq!(count("candidates"), steps);
+    assert_eq!(count("commit"), steps);
+    // Once-per-resolution-pass stages: exactly one event per counted
+    // fail-safe pass.
+    assert_eq!(count("solve_zones"), passes_total);
+    assert_eq!(count("scatter"), passes_total);
+    // Detection runs once per pass, plus the empty pass that terminates
+    // a step's loop (absent when the loop exits on max_disp instead) —
+    // and at least once every step.
+    let detect = count("detect_and_zone");
+    assert!(detect >= passes_total, "detect {detect} < passes {passes_total}");
+    assert!(detect >= steps, "detect {detect} < steps {steps}");
+    assert!(detect <= passes_total + steps, "detect {detect} > passes+steps");
+    // Iteration totals in the trace equal the solver-reported ones.
+    assert_eq!(sum("integrate", "cg_iters"), cg_total);
+    assert_eq!(sum("scatter", "gn_iters"), gn_total);
+    assert_eq!(sum("commit", "gn_iters"), gn_total);
+    assert_eq!(sum("commit", "cg_iters"), cg_total);
+    assert_eq!(sum("commit", "passes"), passes_total);
+    // The scene did make contact: some GN work happened.
+    assert!(passes_total > 0, "cube never made contact");
+    assert!(gn_total > 0, "contact steps must report GN iterations");
+    // Every event is schema-versioned and tagged with this sim's scene.
+    for e in &events {
+        assert_eq!(e.usize_or("v", 0), 1);
+        assert_eq!(e.usize_or("scene", 99), 0);
+        assert!(e.f64_or("dur_s", -1.0) >= 0.0);
+    }
+    // And the file passes the bench harness's schema checker.
+    assert_eq!(diffsim::util::bench::check_trace_jsonl(&path_s).unwrap(), events.len());
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn registry_counters_accumulate_when_enabled() {
+    let _l = enable_lock();
+    let steps = 30usize;
+    let c_steps = obs::counter("engine.steps");
+    let c_gn = obs::counter("solver.gn_iters");
+    let h_int = obs::hist("step.integrate");
+    let (s0, g0, h0) = (c_steps.get(), c_gn.get(), h_int.count());
+    obs::enable();
+    let mut sim = two_body_scene();
+    sim.run(steps);
+    let gn_reported: usize = sim.last_stats.gn_iters; // last step only
+    obs::disable();
+    // ≥, not ==: the registry is process-global and other tests in this
+    // binary may be stepping concurrently.
+    assert!(c_steps.get() - s0 >= steps as u64);
+    assert!(h_int.count() - h0 >= steps as u64);
+    assert!(c_gn.get() - g0 >= gn_reported as u64);
+    // Disabled again: stepping no longer moves the counters beyond
+    // other threads' activity — our own sim adds nothing.
+    let mut quiet = two_body_scene();
+    let before = c_steps.get();
+    quiet.run(5);
+    // Can't assert == because of concurrency, but our sim's own commit
+    // path checked enabled() per step; sanity-check the flag is off.
+    assert!(!obs::enabled());
+    let _ = before;
+}
+
+#[test]
+fn summary_has_sections_and_roundtrips() {
+    let j = obs::summary();
+    for k in
+        ["schema_version", "counters", "gauges", "spans", "scratch", "pool", "arena", "memory",
+         "coordinator"]
+    {
+        assert!(j.get(k).is_some(), "summary missing {k}");
+    }
+    let back = Json::parse(&j.to_string()).expect("summary serializes to valid json");
+    assert_eq!(back.usize_or("schema_version", 0), 1);
+}
