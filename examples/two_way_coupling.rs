@@ -19,7 +19,9 @@ fn main() -> anyhow::Result<()> {
         cloth.pin(c);
     }
     sys.add_cloth(cloth);
-    sys.add_rigid(RigidBody::from_mesh(bunny(0.22, 1), 0.6).with_position(Vec3::new(-0.35, 0.3, 0.0)));
+    sys.add_rigid(
+        RigidBody::from_mesh(bunny(0.22, 1), 0.6).with_position(Vec3::new(-0.35, 0.3, 0.0)),
+    );
     sys.add_rigid(
         RigidBody::from_mesh(armadillo(0.22, 1), 0.6).with_position(Vec3::new(0.35, 0.3, 0.0)),
     );

@@ -242,7 +242,8 @@ impl Mpm {
                         let dpos = Vec3::new(a as f64 - fx.x, b as f64 - fx.y, cc as f64 - fx.z);
                         let gv = self.grid_v[idx(gi as usize, gj as usize, gk as usize)];
                         new_v += gv * weight;
-                        new_c = new_c + Mat3::from_outer((gv * (4.0 * inv_dx * weight)).outer(dpos * dx));
+                        let gv_w = gv * (4.0 * inv_dx * weight);
+                        new_c = new_c + Mat3::from_outer(gv_w.outer(dpos * dx));
                     }
                 }
             }
@@ -324,7 +325,8 @@ mod tests {
     fn momentum_roughly_conserved_in_free_flight() {
         // No walls hit, short horizon: P2G/G2P transfer conserves
         // momentum up to gravity.
-        let mut m = Mpm::new(MpmConfig { n_grid: 32, dt: 1e-4, gravity: 0.0, ..Default::default() });
+        let mut m =
+            Mpm::new(MpmConfig { n_grid: 32, dt: 1e-4, gravity: 0.0, ..Default::default() });
         m.add_box(
             Vec3::new(0.4, 0.4, 0.4),
             Vec3::new(0.6, 0.6, 0.6),

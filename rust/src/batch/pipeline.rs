@@ -70,6 +70,9 @@
 //!   jobs (see the pool docs' "never block on a handle from inside a
 //!   pool task" rule); nested `map`s inside a scene job remain fine.
 
+// lint:allow-file(wallclock: Instant reads are telemetry-gated — zero
+// clock calls with the registry disabled — and only feed latency
+// histograms, never simulation numerics)
 use crate::util::pool::{JobHandle, Pool};
 use crate::util::telemetry;
 use std::collections::VecDeque;
@@ -86,7 +89,9 @@ use std::time::Instant;
 unsafe fn erase_job<'a, T>(
     job: Box<dyn FnOnce() -> T + Send + 'a>,
 ) -> Box<dyn FnOnce() -> T + Send + 'static> {
-    std::mem::transmute(job)
+    // SAFETY: lifetime erasure only (same layout); the caller upholds
+    // the drain contract in this function's doc.
+    unsafe { std::mem::transmute(job) }
 }
 
 /// A generation of scene seeds being built ahead of time by detached

@@ -111,10 +111,12 @@ impl Cloth {
     /// diff layer passes `false` for the exact Jacobian.
     pub fn force_jacobian(&self, dfdx: &mut Triplets, offset: usize, spd_clamp: bool) -> Vec<f64> {
         for (e, &l0) in self.topo.edges.iter().zip(&self.rest_len) {
-            self.spring_jacobian(self.k_stretch, l0, e.v[0] as usize, e.v[1] as usize, dfdx, offset, spd_clamp);
+            let (v0, v1) = (e.v[0] as usize, e.v[1] as usize);
+            self.spring_jacobian(self.k_stretch, l0, v0, v1, dfdx, offset, spd_clamp);
         }
         for (bp, &l0) in self.topo.bend_pairs.iter().zip(&self.bend_rest) {
-            self.spring_jacobian(self.k_bend, l0, bp.opp[0] as usize, bp.opp[1] as usize, dfdx, offset, spd_clamp);
+            let (o0, o1) = (bp.opp[0] as usize, bp.opp[1] as usize);
+            self.spring_jacobian(self.k_bend, l0, o0, o1, dfdx, offset, spd_clamp);
         }
         (0..self.n_nodes())
             .map(|i| if self.pinned[i] { 0.0 } else { -self.damping * self.node_mass[i] })

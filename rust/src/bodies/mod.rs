@@ -71,7 +71,9 @@ impl System {
     /// World velocity of a surface node.
     pub fn node_vel(&self, n: NodeRef) -> Vec3 {
         match n {
-            NodeRef::Rigid { body, vert } => self.rigids[body as usize].vertex_velocity(vert as usize),
+            NodeRef::Rigid { body, vert } => {
+                self.rigids[body as usize].vertex_velocity(vert as usize)
+            }
             NodeRef::Cloth { cloth, node } => self.cloths[cloth as usize].v[node as usize],
         }
     }

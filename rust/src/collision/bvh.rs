@@ -43,7 +43,13 @@ impl Bvh {
         bvh
     }
 
-    fn build_range(&mut self, aabbs: &[Aabb], centers: &[crate::math::Vec3], lo: usize, hi: usize) -> usize {
+    fn build_range(
+        &mut self,
+        aabbs: &[Aabb],
+        centers: &[crate::math::Vec3],
+        lo: usize,
+        hi: usize,
+    ) -> usize {
         let idx = self.nodes.len();
         let mut bb = Aabb::empty();
         for &p in &self.order[lo..hi] {
@@ -119,7 +125,9 @@ impl Bvh {
                 (true, true) => {
                     for &pa in self.leaf_prims(i) {
                         for &pb in other.leaf_prims(j) {
-                            if self.prim_aabbs[pa as usize].overlaps(&other.prim_aabbs[pb as usize]) {
+                            if self.prim_aabbs[pa as usize]
+                                .overlaps(&other.prim_aabbs[pb as usize])
+                            {
                                 out.push((pa, pb));
                             }
                         }

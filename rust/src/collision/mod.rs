@@ -22,6 +22,7 @@ use crate::util::arena::{ArenaVec, BatchArena};
 use crate::util::memory::MemCategory;
 use aabb::Aabb;
 use bvh::Bvh;
+// lint:allow(hash-iter: membership-only HashSets (narrowphase dedup) — never iterated)
 use std::collections::HashSet;
 
 /// Which body a surface belongs to.
@@ -78,7 +79,10 @@ impl Surface {
         fixed: bool,
         thickness: f64,
     ) -> Surface {
-        // Unique edges + face→edge map.
+        // Unique edges + face→edge map. The map is lookup-only: edge
+        // ids and the `edges` list are assigned in face-scan order, so
+        // hash order never reaches any output.
+        // lint:allow(hash-iter: entry-lookup only, outputs are scan-ordered)
         let mut edge_map = std::collections::HashMap::new();
         let mut edges: Vec<[u32; 2]> = Vec::new();
         let mut face_edges = Vec::with_capacity(faces.len());
@@ -266,7 +270,12 @@ fn body_of(n: NodeRef) -> BodyId {
 /// Writes into `out` (assumed empty) so the output list can be a reused
 /// arena buffer.
 fn dedup_vf_into(impacts: &[Impact], out: &mut Vec<Impact>) {
+    // Entry-lookup only, never iterated: `out` keeps the input scan
+    // order (first occurrence wins the slot; earliest t overwrites in
+    // place), so hash order cannot reach the impact list.
+    // lint:allow(hash-iter: entry-lookup only, out keeps input order)
     let mut best: std::collections::HashMap<(NodeRef, BodyId, [i64; 3]), usize> =
+        // lint:allow(hash-iter: continuation of the annotated decl above)
         std::collections::HashMap::new();
     for &im in impacts {
         let is_vf = im.w[3] == 1.0;
@@ -304,7 +313,11 @@ fn narrowphase_pair(
     stats: &mut DetectStats,
 ) {
     let same = std::ptr::eq(a, b);
+    // Membership probes only (impacts are emitted in face-pair scan
+    // order); the sets are never iterated.
+    // lint:allow(hash-iter: membership-only, never iterated)
     let mut vf_seen: HashSet<(u32, u32, bool)> = HashSet::new();
+    // lint:allow(hash-iter: membership-only, never iterated)
     let mut ee_seen: HashSet<(u32, u32)> = HashSet::new();
     for &(fa, fb) in face_pairs {
         if !a.aabbs[fa as usize].overlaps(&b.aabbs[fb as usize]) {

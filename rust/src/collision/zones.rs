@@ -16,7 +16,11 @@
 
 use super::Impact;
 use crate::bodies::{NodeRef, System};
-use std::collections::HashMap;
+// BTreeMap (not HashMap): zone grouping feeds the parallel dispatch
+// order, so even intermediate containers iterate deterministically —
+// the PR-2 `zone_backward_batch` bug class, now enforced tree-wide by
+// `cargo xtask lint` (hash-iter).
+use std::collections::BTreeMap;
 
 /// Union–find with path compression + union by size.
 #[derive(Clone, Debug, Default)]
@@ -138,7 +142,7 @@ pub fn zones_bytes(zones: &[ImpactZone]) -> usize {
 /// movable entities). Impacts touching only fixed entities are dropped.
 pub fn build_zones(sys: &System, impacts: &[Impact]) -> Vec<ImpactZone> {
     // Map entity -> dense id.
-    let mut ids: HashMap<Entity, usize> = HashMap::new();
+    let mut ids: BTreeMap<Entity, usize> = BTreeMap::new();
     let mut ents: Vec<Entity> = Vec::new();
     let mut impact_entities: Vec<Vec<usize>> = Vec::with_capacity(impacts.len());
     for im in impacts {
@@ -162,8 +166,10 @@ pub fn build_zones(sys: &System, impacts: &[Impact]) -> Vec<ImpactZone> {
             uf.union(w[0], w[1]);
         }
     }
-    // Group impacts by the root of their first movable entity.
-    let mut zones: HashMap<usize, ImpactZone> = HashMap::new();
+    // Group impacts by the root of their first movable entity; keyed
+    // by dense root id, so `into_values` below already walks zones in
+    // a scheduling-independent order before the final sort.
+    let mut zones: BTreeMap<usize, ImpactZone> = BTreeMap::new();
     for (k, im) in impacts.iter().enumerate() {
         let Some(&first) = impact_entities[k].first() else {
             continue; // all-fixed impact: nothing to optimize
@@ -252,8 +258,16 @@ mod tests {
         }
         // Impacts: (0,1) and (2,3) — two independent zones.
         let impacts = vec![
-            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
-            make_impact(&sys, NodeRef::Rigid { body: 2, vert: 0 }, NodeRef::Rigid { body: 3, vert: 0 }),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 0, vert: 0 },
+                NodeRef::Rigid { body: 1, vert: 0 },
+            ),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 2, vert: 0 },
+                NodeRef::Rigid { body: 3, vert: 0 },
+            ),
         ];
         let zones = build_zones(&sys, &impacts);
         assert_eq!(zones.len(), 2);
@@ -271,9 +285,21 @@ mod tests {
             sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
         }
         let impacts = vec![
-            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
-            make_impact(&sys, NodeRef::Rigid { body: 1, vert: 1 }, NodeRef::Rigid { body: 2, vert: 0 }),
-            make_impact(&sys, NodeRef::Rigid { body: 2, vert: 1 }, NodeRef::Rigid { body: 3, vert: 0 }),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 0, vert: 0 },
+                NodeRef::Rigid { body: 1, vert: 0 },
+            ),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 1, vert: 1 },
+                NodeRef::Rigid { body: 2, vert: 0 },
+            ),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 2, vert: 1 },
+                NodeRef::Rigid { body: 3, vert: 0 },
+            ),
         ];
         let zones = build_zones(&sys, &impacts);
         assert_eq!(zones.len(), 1);
@@ -291,8 +317,16 @@ mod tests {
         sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
         // Both cubes touch only the ground: two zones, not one.
         let impacts = vec![
-            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 0 }, NodeRef::Rigid { body: 1, vert: 0 }),
-            make_impact(&sys, NodeRef::Rigid { body: 0, vert: 1 }, NodeRef::Rigid { body: 2, vert: 0 }),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 0, vert: 0 },
+                NodeRef::Rigid { body: 1, vert: 0 },
+            ),
+            make_impact(
+                &sys,
+                NodeRef::Rigid { body: 0, vert: 1 },
+                NodeRef::Rigid { body: 2, vert: 0 },
+            ),
         ];
         let zones = build_zones(&sys, &impacts);
         assert_eq!(zones.len(), 2);
@@ -310,9 +344,17 @@ mod tests {
         sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
         let impacts = vec![
             // Pinned cloth node (fixed) against rigid 0 → zone of just the body.
-            make_impact(&sys, NodeRef::Cloth { cloth: 0, node: 0 }, NodeRef::Rigid { body: 0, vert: 0 }),
+            make_impact(
+                &sys,
+                NodeRef::Cloth { cloth: 0, node: 0 },
+                NodeRef::Rigid { body: 0, vert: 0 },
+            ),
             // Free cloth node against rigid 0 → merges into the body's zone.
-            make_impact(&sys, NodeRef::Cloth { cloth: 0, node: 4 }, NodeRef::Rigid { body: 0, vert: 1 }),
+            make_impact(
+                &sys,
+                NodeRef::Cloth { cloth: 0, node: 4 },
+                NodeRef::Rigid { body: 0, vert: 1 },
+            ),
         ];
         let zones = build_zones(&sys, &impacts);
         assert_eq!(zones.len(), 1);
@@ -334,5 +376,41 @@ mod tests {
             NodeRef::Rigid { body: 1, vert: 0 },
         )];
         assert!(build_zones(&sys, &impacts).is_empty());
+    }
+
+    /// `build_zones` must be a pure function of its inputs: zone
+    /// grouping feeds the parallel dispatch order, so a container with
+    /// nondeterministic iteration order anywhere inside it would
+    /// reorder zone solves across runs (the PR-2 `zone_backward_batch`
+    /// bug class). Repeated runs must agree exactly — with `HashMap`
+    /// grouping this fails, because each instance draws a fresh random
+    /// hash seed.
+    #[test]
+    fn build_zones_is_run_to_run_deterministic() {
+        let mut sys = System::new();
+        for k in 0..8 {
+            sys.add_rigid(
+                RigidBody::from_mesh(unit_box(), 1.0)
+                    .with_position(Vec3::new(1.5 * k as f64, 0.0, 0.0)),
+            );
+        }
+        // Unequal clusters — {0,1,2}, {3,4}, {5}, {6,7} — so grouping
+        // and the size-major sort both have real decisions to make.
+        let pairs = [(0, 1), (1, 2), (0, 2), (3, 4), (5, 5), (6, 7)];
+        let impacts: Vec<Impact> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                make_impact(
+                    &sys,
+                    NodeRef::Rigid { body: a, vert: 0 },
+                    NodeRef::Rigid { body: b, vert: 1 },
+                )
+            })
+            .collect();
+        let reference = format!("{:?}", build_zones(&sys, &impacts));
+        for run in 0..32 {
+            let again = format!("{:?}", build_zones(&sys, &impacts));
+            assert_eq!(again, reference, "zone grouping diverged on run {run}");
+        }
     }
 }

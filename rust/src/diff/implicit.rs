@@ -248,7 +248,9 @@ mod tests {
             RigidBody::frozen_from_mesh(box_mesh(Vec3::new(5.0, 0.5, 5.0)))
                 .with_position(Vec3::new(0.0, -0.5, 0.0)),
         );
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)),
+        );
         let mut rigid_q: Vec<[f64; 6]> = sys.rigids.iter().map(|b| b.q).collect();
         rigid_q[1][4] = 0.5 - depth;
         let x1: Vec<Vec<Vec3>> = (0..2)
@@ -365,7 +367,11 @@ mod tests {
         let mut grad_zx = vec![0.0; zp.n];
         grad_zx[off + 3] = 1.0;
         let bwx = backward_qr(&zp, &sol, &grad_zx);
-        assert!((bwx.grad_q[off + 3] - 1.0).abs() < 1e-6, "tangential grad = {}", bwx.grad_q[off + 3]);
+        assert!(
+            (bwx.grad_q[off + 3] - 1.0).abs() < 1e-6,
+            "tangential grad = {}",
+            bwx.grad_q[off + 3]
+        );
     }
 
     #[test]

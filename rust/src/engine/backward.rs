@@ -410,7 +410,9 @@ mod tests {
         // y_T = y₀ + Σ v_s·h with v updated by gravity only:
         // ∂y_T/∂y₀ = 1, ∂y_T/∂v₀ = T·h.
         let mut sys = System::new();
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 50.0, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 50.0, 0.0)),
+        );
         let mut sim = Simulation::new(sys, taped_cfg());
         let n = 20;
         sim.run(n);
@@ -483,7 +485,9 @@ mod tests {
         // projection absorbs it.
         let mut sys = System::new();
         sys.add_rigid(ground());
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)),
+        );
         let mut sim = Simulation::new(sys, taped_cfg());
         sim.run(120); // long enough to settle
         assert!((sim.sys.rigids[1].translation().y - 0.5).abs() < 0.02);
@@ -503,7 +507,9 @@ mod tests {
         // tangential motion unconstrained ⇒ ∂x_T/∂x₀ = 1.
         let mut sys = System::new();
         sys.add_rigid(ground());
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.7, 0.0)),
+        );
         let mut sim = Simulation::new(sys, taped_cfg());
         sim.run(80);
         let mut seed = LossGrad::zeros(&sim);

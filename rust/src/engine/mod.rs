@@ -23,6 +23,9 @@ use crate::util::json::Json;
 use crate::util::memory::MemCategory;
 use crate::util::pool::Pool;
 use crate::util::telemetry::{self, Trace};
+// lint:allow-file(wallclock: Instant reads live in obs_begin/obs_end,
+// are telemetry-gated (None when the registry is disabled), and feed
+// only stage-duration traces — never simulation numerics)
 use std::time::Instant;
 
 /// How zone-solve backward passes are computed (§6 / Table 2).
@@ -762,7 +765,9 @@ mod tests {
     fn cube_falls_and_rests_on_ground() {
         let mut sys = System::new();
         sys.add_rigid(ground());
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)),
+        );
         let mut sim = Simulation::new(sys, SimConfig::default());
         sim.run(300);
         let b = &sim.sys.rigids[1];
@@ -778,8 +783,12 @@ mod tests {
     fn two_cubes_stack() {
         let mut sys = System::new();
         sys.add_rigid(ground());
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.6, 0.0)));
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.07, 1.9, 0.03)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.6, 0.0)),
+        );
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.07, 1.9, 0.03)),
+        );
         let mut sim = Simulation::new(sys, SimConfig::default());
         sim.run(400);
         let y1 = sim.sys.rigids[1].translation().y;
@@ -845,7 +854,9 @@ mod tests {
     fn tape_records_steps_and_bytes() {
         let mut sys = System::new();
         sys.add_rigid(ground());
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.55, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.55, 0.0)),
+        );
         let mut sim = Simulation::new(sys, SimConfig { record_tape: true, ..Default::default() });
         sim.run(20);
         assert_eq!(sim.tape.len(), 20);

@@ -111,6 +111,11 @@ mod tests {
         assert!(l1 < g1, "local {l1} vs global {g1} at n=9");
         assert!(l2 < g2, "local {l2} vs global {g2} at n=36");
         // The paper's headline: the gap widens with scene complexity.
-        assert!(g2 / l2 > g1 / l1 * 0.8, "speedup should (roughly) widen: {} -> {}", g1 / l1, g2 / l2);
+        assert!(
+            g2 / l2 > g1 / l1 * 0.8,
+            "speedup should (roughly) widen: {} -> {}",
+            g1 / l1,
+            g2 / l2
+        );
     }
 }

@@ -257,7 +257,8 @@ fn train_ours_sticks_minibatched(
 /// DDPG on the same environment/steps budget; per-episode final loss.
 pub fn train_ddpg_sticks(episodes: usize, seed: u64) -> Vec<f64> {
     let mut rng = Pcg32::new(seed);
-    let mut agent = Ddpg::new(5, 4, DdpgConfig { action_scale: FMAX, ..Default::default() }, &mut rng);
+    let cfg = DdpgConfig { action_scale: FMAX, ..Default::default() };
+    let mut agent = Ddpg::new(5, 4, cfg, &mut rng);
     let mut losses = Vec::new();
     for _ in 0..episodes {
         let target = Vec3::new(rng.range(0.2, 0.8), 0.0, rng.range(-0.4, 0.4));

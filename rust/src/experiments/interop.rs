@@ -66,7 +66,9 @@ pub fn diffsim_grad(forces: &[f64]) -> Vec<f64> {
             .with_position(Vec3::new(0.0, -0.5, 0.0)),
     );
     for &x in &X0 {
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(x, 0.501, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(x, 0.501, 0.0)),
+        );
     }
     let mut sim = Simulation::new(
         sys,

@@ -1,5 +1,12 @@
 //! DiffSim: scalable differentiable physics (ICML 2020 reproduction).
 
+// Raw operations inside `unsafe fn` bodies must sit in explicit
+// `unsafe {}` blocks, each carrying its own `// SAFETY:` justification
+// (the latter enforced tree-wide by `cargo xtask lint`). Also set via
+// [workspace.lints] in Cargo.toml; stated here so the policy holds even
+// for builds that bypass the workspace manifest.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 // Execute the README's ```rust blocks as doctests (`cargo test --doc`),
 // so the examples in it are run, not just rendered. Invisible to
 // `cargo doc` (the cfg is only set during doctest collection).

@@ -187,7 +187,8 @@ mod tests {
             let a = random_mat(g) + Mat3::identity() * 3.0; // keep well-conditioned
             if a.det().abs() > 1e-3 {
                 let prod = a * a.inverse();
-                assert!((prod - Mat3::identity()).fro() < 1e-8, "fro={}", (prod - Mat3::identity()).fro());
+                let err = (prod - Mat3::identity()).fro();
+                assert!(err < 1e-8, "fro={err}");
             }
         });
     }

@@ -2,7 +2,12 @@
 //! (the two vertices opposite a shared edge) for the cloth bending model.
 
 use super::TriMesh;
-use std::collections::HashMap;
+// BTreeMap (not HashMap): topology construction orders `edges`, which
+// downstream becomes cloth spring/bend element order — part of the
+// deterministic dispatch surface the `hash-iter` xtask lint protects.
+// (The map is lookup-only today, so this is belt-and-braces, not a fix
+// of an observed divergence: `edges` is appended in face-scan order.)
+use std::collections::BTreeMap;
 
 /// A unique undirected edge with its incident faces.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -27,7 +32,7 @@ pub struct Topology {
 }
 
 pub fn build_topology(mesh: &TriMesh) -> Topology {
-    let mut edge_map: HashMap<(u32, u32), usize> = HashMap::new();
+    let mut edge_map: BTreeMap<(u32, u32), usize> = BTreeMap::new();
     let mut edges: Vec<Edge> = Vec::new();
     for (fi, f) in mesh.faces.iter().enumerate() {
         for k in 0..3 {
@@ -111,6 +116,21 @@ mod tests {
         let t = build_topology(&m);
         for e in &t.edges {
             assert_ne!(e.faces[0], e.faces[1]);
+        }
+    }
+
+    /// Edge and bend-pair *order* must be identical across repeated
+    /// builds: cloth assembles its spring and bending elements in
+    /// `edges` order, so any iteration-order nondeterminism here would
+    /// reorder force accumulation and break bitwise reproducibility.
+    #[test]
+    fn topology_order_is_run_to_run_deterministic() {
+        for mesh in [unit_box(), icosphere(1.0, 2), cloth_grid(5, 4, 1.0, 1.0)] {
+            let reference = format!("{:?}", build_topology(&mesh));
+            for run in 0..16 {
+                let again = format!("{:?}", build_topology(&mesh));
+                assert_eq!(again, reference, "topology order diverged on run {run}");
+            }
         }
     }
 }

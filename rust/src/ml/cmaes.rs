@@ -89,7 +89,18 @@ impl CmaEs {
     /// Update from (candidate, fitness) pairs; LOWER fitness is better.
     pub fn tell(&mut self, mut scored: Vec<(Vec<f64>, f64)>) {
         assert_eq!(scored.len(), self.lambda);
-        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // Total order, no NaN panic: a diverged rollout's NaN fitness
+        // ranks strictly last regardless of its sign bit (raw
+        // `total_cmp` would sort -NaN *first*, poisoning the mean), so
+        // it can never enter the recombination weights. Formerly
+        // `partial_cmp(..).unwrap()`, which panicked on the first NaN —
+        // the float-ord xtask lint keeps that from coming back.
+        scored.sort_by(|a, b| match (a.1.is_nan(), b.1.is_nan()) {
+            (false, false) => a.1.total_cmp(&b.1),
+            (true, true) => std::cmp::Ordering::Equal,
+            (false, true) => std::cmp::Ordering::Less,
+            (true, false) => std::cmp::Ordering::Greater,
+        });
         let old_mean = self.mean.clone();
         // New mean.
         let mut new_mean = vec![0.0; self.dim];
@@ -233,5 +244,37 @@ mod tests {
             es.tell(scored);
         }
         assert!(es.sigma < 0.3, "sigma did not adapt: {}", es.sigma);
+    }
+
+    /// Regression for the `tell` ranking: NaN fitness (a diverged
+    /// rollout) must neither panic — the old
+    /// `partial_cmp(..).unwrap()` did — nor contaminate the update,
+    /// whatever the NaN's sign bit (`total_cmp` alone ranks -NaN ahead
+    /// of every finite value).
+    #[test]
+    fn tell_survives_nan_fitness() {
+        for nan in [f64::NAN, -f64::NAN] {
+            let mut rng = Pcg32::new(7);
+            let mut es = CmaEs::with_lambda(&[0.2, -0.1, 0.3], 0.5, 8);
+            let pop = es.ask(&mut rng);
+            let scored: Vec<(Vec<f64>, f64)> = pop
+                .into_iter()
+                .enumerate()
+                .map(|(k, x)| {
+                    let fit = if k == 2 { nan } else { k as f64 };
+                    (x, fit)
+                })
+                .collect();
+            es.tell(scored);
+            assert!(
+                es.mean.iter().all(|m| m.is_finite()),
+                "NaN fitness leaked into the mean: {:?}",
+                es.mean
+            );
+            assert!(es.sigma.is_finite() && es.sigma > 0.0, "sigma corrupted: {}", es.sigma);
+            // The optimizer keeps working after the bad generation.
+            let pop = es.ask(&mut rng);
+            assert!(pop.iter().flatten().all(|x| x.is_finite()));
+        }
     }
 }

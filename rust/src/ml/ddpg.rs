@@ -220,7 +220,8 @@ mod tests {
     #[test]
     fn actions_bounded() {
         let mut rng = Pcg32::new(2);
-        let mut agent = Ddpg::new(3, 2, DdpgConfig { action_scale: 0.7, ..Default::default() }, &mut rng);
+        let cfg = DdpgConfig { action_scale: 0.7, ..Default::default() };
+        let mut agent = Ddpg::new(3, 2, cfg, &mut rng);
         for _ in 0..50 {
             let s = rng.normal_vec(3);
             let a = agent.act_explore(&s, &mut rng);

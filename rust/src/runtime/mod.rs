@@ -42,12 +42,14 @@ struct PjrtState {
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
-// The PJRT C API client and loaded executables are thread-safe; the
-// `xla` wrapper types just hold raw pointers and may not carry the auto
-// traits. `Runtime` is shared behind `Arc` across the engine's worker
-// threads (coordinator calls, batched multi-scene backwards).
+// SAFETY: the PJRT C API client and loaded executables are documented
+// thread-safe; the `xla` wrappers just hold raw pointers and may not
+// carry the auto traits. `Runtime` is shared behind `Arc` across the
+// worker threads, and the executable cache has its own `Mutex`.
 #[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtState {}
+// SAFETY: see `Send` above — shared references only expose the client
+// and `&PjRtLoadedExecutable`, whose concurrent use the C API permits.
 #[cfg(feature = "pjrt")]
 unsafe impl Sync for PjrtState {}
 
@@ -96,8 +98,9 @@ impl Runtime {
     /// builds).
     pub fn load(dir: &Path) -> Result<Runtime> {
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} (run `make artifacts`)", manifest_path.display())
+        })?;
         let j = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
         let mut specs = HashMap::new();
         for a in j.get("artifacts").and_then(Json::as_arr).context("manifest: artifacts[]")? {
@@ -144,7 +147,14 @@ impl Runtime {
                     .collect()
             })
             .unwrap_or_default();
-        Runtime::finish_load(dir, specs, rigid_batches, zone_buckets, zone_solve_buckets, cloth_grids)
+        Runtime::finish_load(
+            dir,
+            specs,
+            rigid_batches,
+            zone_buckets,
+            zone_solve_buckets,
+            cloth_grids,
+        )
     }
 
     #[cfg(feature = "pjrt")]

@@ -477,7 +477,8 @@ fn constraint_from_impact(
                 let x = match node {
                     NodeRef::Rigid { body, vert } => {
                         let qb = rigid_q[body as usize];
-                        euler::transform_point(&qb, sys.rigids[body as usize].mesh0.verts[vert as usize])
+                        let v0 = sys.rigids[body as usize].mesh0.verts[vert as usize];
+                        euler::transform_point(&qb, v0)
                     }
                     NodeRef::Cloth { cloth, node } => cloth_x[cloth as usize][node as usize],
                 };
@@ -504,7 +505,9 @@ mod tests {
             RigidBody::frozen_from_mesh(box_mesh(Vec3::new(5.0, 0.5, 5.0)))
                 .with_position(Vec3::new(0.0, -0.5, 0.0)),
         );
-        sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)));
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)),
+        );
         // Candidate: cube sunk to y = 0.3 (bottom at -0.2 → 0.2 below ground).
         let mut rigid_q = [[0.0f64; 6]; 2].to_vec();
         rigid_q[0] = sys.rigids[0].q;

@@ -168,10 +168,10 @@ impl Drop for Inner {
     fn drop(&mut self) {
         if let Ok(sh) = self.shelves.get_mut() {
             self.tracker.free_cat(MemCategory::ArenaRetained, sh.retained_bytes);
-            P_RETAINED_BYTES
-                .fetch_sub(sh.retained_bytes.min(P_RETAINED_BYTES.load(Ordering::Relaxed)), Ordering::Relaxed);
-            P_RETAINED_BUFS
-                .fetch_sub(sh.retained_buffers.min(P_RETAINED_BUFS.load(Ordering::Relaxed)), Ordering::Relaxed);
+            let cur_bytes = P_RETAINED_BYTES.load(Ordering::Relaxed);
+            P_RETAINED_BYTES.fetch_sub(sh.retained_bytes.min(cur_bytes), Ordering::Relaxed);
+            let cur_bufs = P_RETAINED_BUFS.load(Ordering::Relaxed);
+            P_RETAINED_BUFS.fetch_sub(sh.retained_buffers.min(cur_bufs), Ordering::Relaxed);
         }
     }
 }
@@ -328,10 +328,10 @@ impl BatchArena {
                 let mut v = *boxed.downcast::<Vec<T>>().expect("shelf keyed by TypeId");
                 let bytes = v.capacity() * size_of::<T>();
                 self.tracker.free_cat(MemCategory::ArenaRetained, bytes);
-                P_RETAINED_BYTES
-                    .fetch_sub(bytes.min(P_RETAINED_BYTES.load(Ordering::Relaxed)), Ordering::Relaxed);
-                P_RETAINED_BUFS
-                    .fetch_sub(1usize.min(P_RETAINED_BUFS.load(Ordering::Relaxed)), Ordering::Relaxed);
+                let cur_bytes = P_RETAINED_BYTES.load(Ordering::Relaxed);
+                P_RETAINED_BYTES.fetch_sub(bytes.min(cur_bytes), Ordering::Relaxed);
+                let cur_bufs = P_RETAINED_BUFS.load(Ordering::Relaxed);
+                P_RETAINED_BUFS.fetch_sub(1usize.min(cur_bufs), Ordering::Relaxed);
                 inner.hits.fetch_add(1, Ordering::Relaxed);
                 P_HITS.fetch_add(1, Ordering::Relaxed);
                 v.clear();

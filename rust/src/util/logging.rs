@@ -60,21 +60,33 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
 #[macro_export]
 macro_rules! info {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! warnlog {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
 }
 
 #[macro_export]
 macro_rules! debuglog {
     ($($arg:tt)*) => {
-        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
     };
 }
 

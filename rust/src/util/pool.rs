@@ -99,18 +99,52 @@
 //!   remain deadlock-free as before (the inner submitter executes its
 //!   own job); the batch pipeline only waits on handles from the
 //!   submitting thread.
+//!
+//! # Verification
+//!
+//! The protocol above is model-checked and instrumented (see
+//! ARCHITECTURE.md §"Correctness & static analysis"):
+//!
+//! * **loom** — build with `RUSTFLAGS="--cfg loom"` (and the `loom`
+//!   dev-dependency uncommented in Cargo.toml) and the `sync` shim
+//!   below swaps every `Mutex`/`Condvar`/`Arc`/atomic for loom's
+//!   model-checked doubles; `loom_tests` then exhausts interleavings of
+//!   the submission queue, `Gate` budget, and `JobHandle` drop/wait
+//!   paths. The `Scoped` baseline and `HandleState::Thread` stay on
+//!   real `std::thread` and are not modeled.
+//! * **Miri** — `rust/tests/miri_unsafe_core.rs` drives the pointer
+//!   erasure (`TaskRef`, `SendPtr`, `batch::pipeline::erase_job`)
+//!   through dedicated `Pool::new` runtimes under the interpreter.
+//! * **TSan** — the CI `tsan` lane runs the pipeline/batch integration
+//!   tests under `-Zsanitizer=thread`.
 
+#[cfg(not(loom))]
 use crate::util::telemetry::{self, Counter, Gauge, Hist};
 use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::OnceLock;
+
+/// Synchronization layer: `std::sync` normally, loom's model-checked
+/// doubles under `--cfg loom` so the model tests exercise the exact
+/// queue/gate/completion protocol shipped here (not a copy of it).
+#[cfg(not(loom))]
+mod sync {
+    pub use std::sync::atomic::{AtomicUsize, Ordering};
+    pub use std::sync::{Arc, Condvar, Mutex};
+}
+#[cfg(loom)]
+mod sync {
+    pub use loom::sync::atomic::{AtomicUsize, Ordering};
+    pub use loom::sync::{Arc, Condvar, Mutex};
+}
+use sync::{Arc, AtomicUsize, Condvar, Mutex, Ordering};
 
 /// Process-wide count of OS threads spawned by the pool layer —
 /// persistent workers and spawn-per-call baseline threads alike. Lives
 /// in the telemetry registry as `pool.thread_spawns`; this cached
 /// handle keeps the increment a single relaxed add.
+#[cfg(not(loom))]
 fn spawn_counter() -> &'static Counter {
     static C: OnceLock<Counter> = OnceLock::new();
     C.get_or_init(|| telemetry::counter("pool.thread_spawns"))
@@ -120,6 +154,7 @@ fn spawn_counter() -> &'static Counter {
 /// (`pool.jobs_in_flight`); only jobs submitted while the registry is
 /// enabled are tracked, and each tracked job decrements on completion
 /// regardless of later toggles, so the gauge never drifts.
+#[cfg(not(loom))]
 fn inflight_gauge() -> &'static Gauge {
     static G: OnceLock<Gauge> = OnceLock::new();
     G.get_or_init(|| telemetry::gauge("pool.jobs_in_flight"))
@@ -127,6 +162,7 @@ fn inflight_gauge() -> &'static Gauge {
 
 /// Queue depth observed at each persistent-runtime submission
 /// (`pool.queue_depth`), recorded only while the registry is enabled.
+#[cfg(not(loom))]
 fn queue_depth_hist() -> &'static Hist {
     static H: OnceLock<Hist> = OnceLock::new();
     H.get_or_init(|| telemetry::hist("pool.queue_depth"))
@@ -137,19 +173,57 @@ fn queue_depth_hist() -> &'static Hist {
 /// warmup" for the persistent runtime. Thin wrapper over the
 /// `pool.thread_spawns` registry counter.
 pub fn thread_spawns() -> u64 {
+    #[cfg(loom)]
+    return 0;
+    #[cfg(not(loom))]
     spawn_counter().get()
+}
+
+// Telemetry touchpoints, no-ops under loom: the registry uses real
+// process-global OnceLock/atomics, which loom's scheduler must not see
+// (loom only models its own primitives, and globals outlive a model).
+fn note_thread_spawn() {
+    #[cfg(not(loom))]
+    spawn_counter().incr();
+}
+
+fn note_inflight(delta: i64) {
+    #[cfg(not(loom))]
+    inflight_gauge().add(delta);
+    #[cfg(loom)]
+    let _ = delta;
+}
+
+fn note_queue_depth(depth: usize) {
+    #[cfg(not(loom))]
+    if telemetry::enabled() {
+        queue_depth_hist().record(depth as f64);
+    }
+    #[cfg(loom)]
+    let _ = depth;
+}
+
+fn obs_enabled() -> bool {
+    #[cfg(loom)]
+    return false;
+    #[cfg(not(loom))]
+    telemetry::enabled()
 }
 
 // ---------------------------------------------------------------- jobs
 
 /// Type- and lifetime-erased `Fn(usize)` executing one index of a map.
 ///
-/// SAFETY: sound because the submitter blocks in [`run_on`] until
+/// Sound because the submitter blocks in [`run_on`] until
 /// `completed == n`, so the referenced closure and output slots outlive
 /// every dereference; workers never touch the pointer once the cursor
 /// is exhausted.
 struct TaskRef(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared calls from any thread are fine)
+// and the struct doc's liveness argument holds: the submitter outlives
+// every worker dereference, so sending/sharing the raw pointer is sound.
 unsafe impl Send for TaskRef {}
+// SAFETY: see `Send` above — `&TaskRef` only exposes `&dyn Fn + Sync`.
 unsafe impl Sync for TaskRef {}
 
 /// What a job executes per index: a borrowed closure (maps, where the
@@ -298,7 +372,7 @@ impl Job {
             // executor's release, so the submitter observes all writes.
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
                 if self.tracked {
-                    inflight_gauge().add(-1);
+                    note_inflight(-1);
                 }
                 *self.done.lock().unwrap() = true;
                 self.done_cv.notify_all();
@@ -326,12 +400,33 @@ struct Shared {
     cv: Condvar,
 }
 
+/// Worker threads are real OS threads normally and loom threads under
+/// the model checker (loom has no named-thread `Builder`, hence the
+/// split helper).
+#[cfg(not(loom))]
+type WorkerHandle = std::thread::JoinHandle<()>;
+#[cfg(loom)]
+type WorkerHandle = loom::thread::JoinHandle<()>;
+
+#[cfg(not(loom))]
+fn spawn_worker(k: usize, sh: Arc<Shared>) -> WorkerHandle {
+    std::thread::Builder::new()
+        .name(format!("pool-worker-{k}"))
+        .spawn(move || worker_loop(&sh))
+        .expect("spawn pool worker")
+}
+
+#[cfg(loom)]
+fn spawn_worker(_k: usize, sh: Arc<Shared>) -> WorkerHandle {
+    loom::thread::spawn(move || worker_loop(&sh))
+}
+
 /// A set of persistent worker threads. Dropped (last handle) → shutdown
 /// flag + condvar broadcast; workers drain claimable work, exit, and are
 /// joined.
 struct PoolRuntime {
     shared: Arc<Shared>,
-    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    handles: Mutex<Vec<WorkerHandle>>,
 }
 
 impl PoolRuntime {
@@ -342,12 +437,8 @@ impl PoolRuntime {
         });
         let handles = (0..workers)
             .map(|k| {
-                let sh = shared.clone();
-                spawn_counter().incr();
-                std::thread::Builder::new()
-                    .name(format!("pool-worker-{k}"))
-                    .spawn(move || worker_loop(&sh))
-                    .expect("spawn pool worker")
+                note_thread_spawn();
+                spawn_worker(k, shared.clone())
             })
             .collect();
         PoolRuntime { shared, handles: Mutex::new(handles) }
@@ -358,9 +449,7 @@ impl PoolRuntime {
         q.jobs.push_back(job.clone());
         let depth = q.jobs.len();
         drop(q);
-        if telemetry::enabled() {
-            queue_depth_hist().record(depth as f64);
-        }
+        note_queue_depth(depth);
         self.shared.cv.notify_all();
     }
 }
@@ -405,13 +494,14 @@ fn worker_loop(sh: &Shared) {
 /// the submitting thread participating; blocks until every index has
 /// completed, then re-throws the first task panic, if any.
 fn run_on(rt: &Arc<PoolRuntime>, budget: usize, n: usize, task: &(dyn Fn(usize) + Sync)) {
-    // Lifetime erasure; sound because this function does not return
-    // until `completed == n` (see `TaskRef`).
+    // SAFETY: lifetime erasure only — this function does not return
+    // until `completed == n`, so the 'static reference never outlives
+    // the actual borrow (see `TaskRef`).
     let task: &'static (dyn Fn(usize) + Sync) =
         unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(task) };
-    let tracked = telemetry::enabled();
+    let tracked = obs_enabled();
     if tracked {
-        inflight_gauge().add(1);
+        note_inflight(1);
     }
     let job = Arc::new(Job {
         task: Task::Borrowed(TaskRef(task as *const _)),
@@ -571,7 +661,7 @@ impl Pool {
             },
             Backend::Scoped { gate, .. } => {
                 let gate = gate.clone();
-                spawn_counter().incr();
+                note_thread_spawn();
                 let handle = std::thread::Builder::new()
                     .name("pool-detached".to_string())
                     .spawn(move || {
@@ -595,9 +685,9 @@ impl Pool {
                     let f = cell.lock().unwrap().take().expect("detached task runs once");
                     *slot.lock().unwrap() = Some(f());
                 });
-                let tracked = telemetry::enabled();
+                let tracked = obs_enabled();
                 if tracked {
-                    inflight_gauge().add(1);
+                    note_inflight(1);
                 }
                 let job = Arc::new(Job {
                     task: Task::Owned(task),
@@ -749,10 +839,14 @@ impl<T> Drop for JobHandle<T> {
     }
 }
 
-/// Shared base pointer; safe to hand to executors because every index
-/// is visited by exactly one executor (cursor) and T: Send.
+/// Shared base pointer for parallel indexed writes.
 struct SendPtr<T>(*mut T);
+// SAFETY: every index is claimed by exactly one executor (the atomic
+// cursor), so `base.add(i)` never aliases across threads, and `T: Send`
+// makes moving each element's ownership to its executor sound.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: see `Send` above — executors share `&SendPtr` but write only
+// through their exclusively-claimed offsets.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// The old scoped implementation, kept verbatim as the spawn-per-call
@@ -772,7 +866,7 @@ where
                 let cursor = &cursor;
                 let f = &f;
                 let base = &base;
-                spawn_counter().incr();
+                note_thread_spawn();
                 scope.spawn(move || {
                     let mut local = Vec::new();
                     loop {
@@ -822,7 +916,7 @@ where
     run_on(global_runtime(), workers, n, &|i| f(i));
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Mutex;
@@ -1126,5 +1220,163 @@ mod tests {
             "budget 2 exceeded: peak {}",
             peak.load(Ordering::SeqCst)
         );
+    }
+}
+
+/// Loom model tests: exhaustive interleaving checks of the submission
+/// queue, `Gate` budget, and `JobHandle` completion protocol. They use
+/// the *production* types — the `sync` shim swaps the primitives, not
+/// the logic. Run (CI `loom` lane; needs the `loom` dev-dependency
+/// uncommented in Cargo.toml):
+///
+/// ```text
+/// RUSTFLAGS="--cfg loom" cargo test --release --lib loom_
+/// ```
+///
+/// Thread budget: loom models at most 4 threads, so every model keeps
+/// `spawned + main <= 4`. Preemptions are bounded (see `model`) — the
+/// standard loom trade: nearly all real bugs surface within bound 2.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    fn model<F>(f: F)
+    where
+        F: Fn() + Sync + Send + 'static,
+    {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(2);
+        b.check(f);
+    }
+
+    /// Gate invariant #1: with `limit = 2` and three acquirers, no
+    /// interleaving ever sees three holders at once.
+    #[test]
+    fn loom_gate_budget_never_exceeded() {
+        model(|| {
+            let gate = Arc::new(Gate::new(2));
+            let live = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..3)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    let live = Arc::clone(&live);
+                    loom::thread::spawn(move || {
+                        gate.acquire();
+                        let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                        assert!(now <= 2, "gate budget exceeded: {now} holders");
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        gate.release();
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// Gate invariant #2: no lost wakeups — on a full `limit = 1` gate,
+    /// a blocked `acquire` always completes once the holder releases
+    /// (the join hangs, and loom flags the deadlock, if a wakeup is
+    /// ever dropped).
+    #[test]
+    fn loom_gate_no_lost_wakeup() {
+        model(|| {
+            let gate = Arc::new(Gate::new(1));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    loom::thread::spawn(move || {
+                        gate.acquire();
+                        gate.release();
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        });
+    }
+
+    /// `try_acquire` never oversubscribes: two probes against a full
+    /// `limit = 1` gate admit at most one holder.
+    #[test]
+    fn loom_gate_try_acquire_respects_limit() {
+        model(|| {
+            let gate = Arc::new(Gate::new(1));
+            let got = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let gate = Arc::clone(&gate);
+                    let got = Arc::clone(&got);
+                    loom::thread::spawn(move || {
+                        if gate.try_acquire() {
+                            got.fetch_add(1, Ordering::SeqCst);
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert!(got.load(Ordering::SeqCst) <= 1, "try_acquire oversubscribed");
+        });
+    }
+
+    /// The map path end to end on a 1-worker runtime (submitter
+    /// participating): every index runs exactly once, `run_on` returns
+    /// only after both did, and shutdown joins cleanly. Exercises the
+    /// work-stealing cursor, the completed-counter release sequence,
+    /// and the `done` handshake under every interleaving.
+    #[test]
+    fn loom_map_runs_each_index_once_and_completes() {
+        model(|| {
+            let rt = Arc::new(PoolRuntime::new(1));
+            let hits = Arc::new(AtomicUsize::new(0));
+            {
+                let hits = Arc::clone(&hits);
+                let task = move |_i: usize| {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                };
+                run_on(&rt, 2, 2, &task);
+            }
+            assert_eq!(hits.load(Ordering::SeqCst), 2, "each index must run exactly once");
+            drop(rt);
+        });
+    }
+
+    /// `JobHandle` drop-while-running: dropping the handle of a
+    /// detached job must block until the job has actually executed
+    /// (the side effect is visible after `drop`), under every
+    /// interleaving of submitter and worker.
+    #[test]
+    fn loom_job_handle_drop_blocks_until_complete() {
+        model(|| {
+            let p = Pool::new(2); // one worker thread + the submitter
+            let flag = Arc::new(AtomicUsize::new(0));
+            let f2 = Arc::clone(&flag);
+            let h = p.submit(move || {
+                f2.store(1, Ordering::SeqCst);
+            });
+            drop(h);
+            assert_eq!(
+                flag.load(Ordering::SeqCst),
+                1,
+                "drop returned before the detached job finished"
+            );
+            drop(p);
+        });
+    }
+
+    /// `JobHandle::wait` returns the job's result (the queued-state
+    /// result slot is fully synchronized with the worker's write).
+    #[test]
+    fn loom_job_handle_wait_returns_result() {
+        model(|| {
+            let p = Pool::new(2);
+            let h = p.submit(|| 41usize);
+            assert_eq!(h.wait(), 41);
+            drop(p);
+        });
     }
 }

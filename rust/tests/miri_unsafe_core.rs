@@ -1,0 +1,233 @@
+//! Miri lane over the pointer-erasure and RAII-reuse core — the code
+//! whose correctness rests on `unsafe` (`TaskRef`, `SendPtr`,
+//! `erase_job`) or on buffer-recycling invariants (scratch, arena).
+//!
+//! Run with:
+//!
+//! ```text
+//! MIRIFLAGS=-Zmiri-disable-isolation cargo +nightly miri test --test miri_unsafe_core
+//! ```
+//!
+//! Every pool here is a dedicated `Pool::new` (its `PoolRuntime` joins
+//! its workers on drop), never `Pool::shared`/`Pool::global`: the
+//! process-wide runtime's workers outlive `main`, which Miri reports as
+//! a thread leak. Sizes are tiny on purpose — Miri runs each access
+//! under full borrow tracking, so the point is to cross every unsafe
+//! boundary, not to load it.
+
+use diffsim::batch::BatchPipeline;
+use diffsim::util::arena::BatchArena;
+use diffsim::util::memory::{MemCategory, MemTracker};
+use diffsim::util::pool::Pool;
+use diffsim::util::scratch;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+// ------------------------------------------------------------- Pool
+// `Pool::map` borrows the closure via `TaskRef` (a transmuted
+// `&'static dyn Fn`) and `map_mut` writes results through `SendPtr`
+// raw-pointer bases. These tests make Miri walk both paths.
+
+#[test]
+fn pool_map_borrowed_task_round_trip() {
+    let pool = Pool::new(3);
+    let bias = 10usize; // captured by reference through the erased task
+    let out = pool.map(7, |i| i * i + bias);
+    assert_eq!(out, (0..7).map(|i| i * i + bias).collect::<Vec<_>>());
+}
+
+#[test]
+fn pool_map_mut_disjoint_writes() {
+    let pool = Pool::new(2);
+    let mut items: Vec<u64> = (0..9).collect();
+    let doubled = pool.map_mut(&mut items, |i, x| {
+        *x *= 2;
+        *x + i as u64
+    });
+    assert_eq!(items, (0..9).map(|x| x * 2).collect::<Vec<u64>>());
+    assert_eq!(doubled, (0..9).map(|x| 2 * x + x).collect::<Vec<u64>>());
+}
+
+#[test]
+fn pool_submit_wait_returns_result() {
+    let pool = Pool::new(2);
+    let h = pool.submit(|| 6 * 7);
+    assert_eq!(h.wait(), 42);
+}
+
+#[test]
+fn pool_submit_drop_blocks_until_job_ran() {
+    let pool = Pool::new(2);
+    let ran = Arc::new(AtomicUsize::new(0));
+    {
+        let ran = ran.clone();
+        let h = pool.submit(move || {
+            ran.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(h); // must block until the job completed
+    }
+    assert_eq!(ran.load(Ordering::SeqCst), 1);
+}
+
+#[test]
+fn pool_nested_maps_share_one_runtime() {
+    let pool = Pool::new(2);
+    let inner = pool.clone();
+    let out = pool.map(3, |i| inner.map(2, |j| i * 10 + j).iter().sum::<usize>());
+    assert_eq!(out, vec![1, 21, 41]);
+}
+
+// --------------------------------------------------- BatchPipeline
+// `map_windowed`/`stream` erase the `'env` lifetime of borrowed work
+// closures (`erase_job`) on the promise that `drive_window` drains
+// every handle. Miri checks the promise: a dangling borrow in any
+// drained job is an instant use-after-free report.
+
+#[test]
+fn pipeline_map_windowed_borrowed_closure() {
+    let pipe = BatchPipeline::with_pool(Pool::new(2)).with_window(2);
+    let weights: Vec<f64> = (0..6).map(|i| 1.0 + i as f64).collect();
+    let out = pipe.map_windowed(6, |i| weights[i] * 2.0, |_i, v| v);
+    assert_eq!(out, weights.iter().map(|w| w * 2.0).collect::<Vec<_>>());
+}
+
+#[test]
+fn pipeline_prepare_then_stream() {
+    let pipe = BatchPipeline::with_pool(Pool::new(2)).with_window(2);
+    let generation = pipe.prepare(5, |i| vec![i as f64; 3]);
+    let scale = 0.5f64; // borrowed by the erased work closure
+    let out = pipe.stream(
+        generation,
+        |i, seed| seed.iter().sum::<f64>() * scale + i as f64,
+        |_i, v| v,
+    );
+    let expect: Vec<f64> = (0..5).map(|i| (i as f64) * 3.0 * 0.5 + i as f64).collect();
+    assert_eq!(out, expect);
+}
+
+#[test]
+fn pipeline_generation_dropped_without_stream_drains() {
+    let pipe = BatchPipeline::with_pool(Pool::new(2));
+    let built = Arc::new(AtomicUsize::new(0));
+    {
+        let built = built.clone();
+        let generation = pipe.prepare(4, move |_i| {
+            built.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(generation); // handle drops block until each build ran
+    }
+    assert_eq!(built.load(Ordering::SeqCst), 4);
+}
+
+#[test]
+fn pipeline_generations_double_buffer() {
+    let pipe = BatchPipeline::with_pool(Pool::new(2));
+    let out = pipe.generations(4, |g| g * 3, |g, state| state + g);
+    assert_eq!(out, vec![0, 4, 8, 12]);
+}
+
+// ---------------------------------------------------------- scratch
+// Thread-local RAII buffers: drop parks the allocation, the next take
+// reuses it. Miri verifies the park/reuse hand-off never resurrects a
+// stale borrow and always reinitializes contents.
+
+#[test]
+fn scratch_f64_reuse_is_reinitialized() {
+    {
+        let mut a = scratch::f64s(8, 1.0);
+        a[3] = 99.0;
+    } // parked here
+    let b = scratch::f64s(8, 0.0);
+    assert_eq!(b.len(), 8);
+    assert!(b.iter().all(|&x| x == 0.0), "stale scratch contents leaked");
+}
+
+#[test]
+fn scratch_f32_refill_and_fill_with() {
+    let mut buf = scratch::f32s(4, 2.0);
+    buf.refill(6, 0.5);
+    assert_eq!(&buf[..], &[0.5; 6]);
+    buf.fill_with((0..3).map(|i| i as f32));
+    assert_eq!(&buf[..], &[0.0, 1.0, 2.0]);
+}
+
+#[test]
+fn scratch_mat_checkout_is_zeroed() {
+    {
+        let mut m = scratch::mat(3, 3);
+        m[(1, 2)] = 5.0;
+    } // parked here
+    let m = scratch::mat(2, 4);
+    for i in 0..2 {
+        for j in 0..4 {
+            assert_eq!(m[(i, j)], 0.0);
+        }
+    }
+}
+
+// ------------------------------------------------------------ arena
+// `BatchArena` shelves recycle `Vec` allocations across checkouts with
+// byte-charge accounting; Miri checks the raw park/take plumbing and
+// the RAII guard's charge/uncharge symmetry.
+
+#[test]
+fn arena_vec_checkout_park_reuse() {
+    let arena = BatchArena::pooled_with(1 << 20, Arc::new(MemTracker::new()));
+    let cat = MemCategory::Solver;
+    {
+        let mut v = arena.vec::<f64>(8, cat);
+        v.extend([1.0, 2.0, 3.0]);
+        assert!(arena.tracker().current_cat(cat) > 0);
+    } // guard drop: uncharges and parks the allocation
+    assert_eq!(arena.tracker().current_cat(cat), 0);
+    let v2 = arena.vec::<f64>(4, cat);
+    assert!(v2.is_empty(), "reused checkout must come back cleared");
+    assert!(v2.capacity() >= 4);
+}
+
+#[test]
+fn arena_loan_f64_zeroed_round_trip() {
+    let arena = BatchArena::pooled_with(1 << 20, Arc::new(MemTracker::new()));
+    let cat = MemCategory::Tape;
+    let mut v = arena.loan_f64_zeroed(6, cat);
+    assert_eq!(v, vec![0.0; 6]);
+    v[0] = 7.0;
+    arena.retire_f64(v, 6, cat);
+    assert_eq!(arena.tracker().current_cat(cat), 0);
+    // The retired allocation comes back zeroed on the next loan.
+    let v2 = arena.loan_f64_zeroed(6, cat);
+    assert_eq!(v2, vec![0.0; 6]);
+    arena.retire_f64(v2, 6, cat);
+}
+
+#[test]
+fn arena_loan_vec_park_vec_uncharged() {
+    let arena = BatchArena::pooled_with(1 << 20, Arc::new(MemTracker::new()));
+    let mut v: Vec<u32> = arena.loan_vec(5);
+    v.extend(0..5u32);
+    arena.park_vec(v);
+    let v2: Vec<u32> = arena.loan_vec(3);
+    assert!(v2.is_empty());
+}
+
+#[test]
+fn arena_disabled_still_loans() {
+    let arena = BatchArena::disabled();
+    let v = arena.loan_f64_zeroed(4, MemCategory::Contacts);
+    assert_eq!(v, vec![0.0; 4]);
+    arena.retire_f64(v, 4, MemCategory::Contacts);
+}
+
+// ---------------------------------------------- pool × arena × scratch
+// The composite shape the engine actually runs: worker threads using
+// thread-local scratch while writing results through `SendPtr`.
+
+#[test]
+fn workers_use_scratch_while_writing_through_sendptr() {
+    let pool = Pool::new(3);
+    let out = pool.map(6, |i| {
+        let buf = scratch::f64s(4, i as f64);
+        buf.iter().sum::<f64>()
+    });
+    assert_eq!(out, (0..6).map(|i| 4.0 * i as f64).collect::<Vec<_>>());
+}

@@ -1,0 +1,734 @@
+//! The invariant pass: named, individually-suppressable rules over
+//! `rust/src`, matched line-by-line on a lexed view of each file
+//! (string literals and comments blanked out, `#[cfg(test)]` regions
+//! tracked so test-only code is exempt from the determinism rules).
+//!
+//! Suppression syntax (checked against the *raw* line, so it lives in
+//! a comment on the flagged line or the line directly above):
+//!
+//! ```text
+//! // lint:allow(rule-name: justification)          — this line / next line
+//! // lint:allow-file(rule-name: justification)     — whole file
+//! ```
+//!
+//! Several rules may be named, comma-separated, before the colon.
+//! A justification is required by convention (reviewed, not parsed).
+
+use std::fmt;
+
+/// A named invariant. The catalog is documented in ARCHITECTURE.md
+/// §"Correctness & static analysis"; keep the two in sync.
+pub struct Rule {
+    pub name: &'static str,
+    pub desc: &'static str,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "float-ord",
+        desc: "no raw float `partial_cmp` — use `f64::total_cmp` (NaN-total, deterministic)",
+    },
+    Rule {
+        name: "hash-iter",
+        desc: "no HashMap/HashSet in dispatch/solver/collision paths — iteration order is \
+               nondeterministic; use BTreeMap or sorted keys",
+    },
+    Rule {
+        name: "thread-spawn",
+        desc: "no thread spawning outside util/pool.rs — all parallelism goes through Pool",
+    },
+    Rule {
+        name: "wallclock",
+        desc: "no Instant/SystemTime in numeric paths — wall-clock reads belong in \
+               util/timer.rs and util/telemetry.rs",
+    },
+    Rule {
+        name: "safety-comment",
+        desc: "every `unsafe` block/fn/impl needs a `// SAFETY:` comment within 5 lines above",
+    },
+    Rule {
+        name: "static-mut",
+        desc: "no `static mut` — use atomics, OnceLock, or thread-locals",
+    },
+];
+
+/// Directories where HashMap/HashSet *presence* is flagged (the PR-2
+/// bug class: hash-ordered iteration feeding dispatch or contact
+/// ordering). Elsewhere hash containers are fine.
+const HASH_SCOPED_DIRS: &[&str] =
+    &["/collision/", "/solver/", "/coordinator/", "/engine/", "/batch/"];
+
+/// Files allowed to read wall clocks: the observability layer itself.
+const WALLCLOCK_EXEMPT: &[&str] = &["util/timer.rs", "util/telemetry.rs"];
+
+/// The one file allowed to spawn threads.
+const SPAWN_EXEMPT: &[&str] = &["util/pool.rs"];
+
+#[derive(Debug)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {} (suppress: `// lint:allow({}: why)`)",
+            self.file, self.line, self.rule, self.msg, self.rule
+        )
+    }
+}
+
+/// Run every rule over one file. `rel` is the repo-relative path with
+/// forward slashes (used for the per-directory rule scoping).
+pub fn check_file(rel: &str, source: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = source.lines().collect();
+    let code = strip_comments_and_strings(source);
+    let in_test = test_regions(&raw, &code);
+    let file_allows = collect_allows(&raw, "lint:allow-file(");
+
+    let mut out = Vec::new();
+    let mut push = |rule: &'static str, line_idx: usize, msg: String| {
+        out.push(Violation { file: rel.to_string(), line: line_idx + 1, rule, msg });
+    };
+
+    for i in 0..raw.len() {
+        let line = code.get(i).map(String::as_str).unwrap_or("");
+        let allowed = |rule: &str| {
+            file_allows.iter().any(|a| a == rule)
+                || line_allows(&raw, i).iter().any(|a| a == rule)
+        };
+        let test_line = in_test[i];
+
+        if !test_line && !allowed("float-ord") && word_hit(line, "partial_cmp") {
+            push("float-ord", i, "raw float `partial_cmp`; use `f64::total_cmp`".into());
+        }
+
+        if !test_line
+            && !allowed("hash-iter")
+            && HASH_SCOPED_DIRS.iter().any(|d| rel.contains(d))
+            && (word_hit(line, "HashMap") || word_hit(line, "HashSet"))
+        {
+            push(
+                "hash-iter",
+                i,
+                "hash container in an ordering-sensitive path; use BTreeMap/sorted keys".into(),
+            );
+        }
+
+        if !test_line
+            && !allowed("thread-spawn")
+            && !SPAWN_EXEMPT.iter().any(|f| rel.ends_with(f))
+            && (line.contains("thread::spawn")
+                || line.contains("thread::scope")
+                || line.contains("thread::Builder"))
+        {
+            push("thread-spawn", i, "thread spawn outside util/pool.rs; use Pool".into());
+        }
+
+        if !test_line
+            && !allowed("wallclock")
+            && !WALLCLOCK_EXEMPT.iter().any(|f| rel.ends_with(f))
+            && (word_hit(line, "Instant") || word_hit(line, "SystemTime"))
+        {
+            push("wallclock", i, "wall-clock read in a numeric path".into());
+        }
+
+        if !allowed("safety-comment") && unsafe_site(line) && !has_safety_nearby(&raw, i) {
+            push(
+                "safety-comment",
+                i,
+                "`unsafe` without a `// SAFETY:` comment within 5 lines above".into(),
+            );
+        }
+
+        if !allowed("static-mut") && static_mut_hit(line) {
+            push("static-mut", i, "`static mut` is banned; use atomics or OnceLock".into());
+        }
+    }
+    out
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Substring match with identifier-boundary checks on both ends, so
+/// `Instant` does not hit `InstantaneousFoo` and `partial_cmp` does
+/// not hit `my_partial_cmp_wrapper`.
+fn word_hit(code: &str, needle: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(p) = code[start..].find(needle) {
+        let p = start + p;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let end = p + needle.len();
+        let after_ok = end >= bytes.len() || !is_ident(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// `static` immediately followed by the `mut` keyword.
+fn static_mut_hit(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(p) = code[start..].find("static") {
+        let p = start + p;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let tail = code[p + "static".len()..].trim_start();
+        let mut_kw = tail.strip_prefix("mut").is_some_and(|rest| {
+            rest.is_empty() || !is_ident(rest.as_bytes()[0])
+        });
+        if before_ok && mut_kw {
+            return true;
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// Does this (stripped) line open an `unsafe` block, fn, impl, trait,
+/// or extern block? `unsafe` as a bare fn-pointer type (`unsafe
+/// fn(usize)`) is not a site; neither is the word inside strings or
+/// comments (already blanked).
+fn unsafe_site(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(p) = code[start..].find("unsafe") {
+        let p = start + p;
+        let before_ok = p == 0 || !is_ident(bytes[p - 1]);
+        let after = &code[p + "unsafe".len()..];
+        let after_ok = after.is_empty() || !is_ident(after.as_bytes()[0]);
+        if before_ok && after_ok {
+            let t = after.trim_start();
+            let opens_block = t.starts_with('{') || t.is_empty();
+            let declares = t.strip_prefix("fn ").is_some()
+                || t == "impl"
+                || t.starts_with("impl ")
+                || t.starts_with("impl<")
+                || t == "trait"
+                || t.starts_with("trait ")
+                || t.starts_with("extern ")
+                || t.starts_with("extern\"");
+            if opens_block || declares {
+                return true;
+            }
+        }
+        start = p + 1;
+    }
+    false
+}
+
+/// A `SAFETY:` marker anywhere on the flagged raw line or the 5 raw
+/// lines above it (doc comments count: `/// SAFETY:` on an `unsafe
+/// fn` states the caller contract).
+fn has_safety_nearby(raw: &[&str], i: usize) -> bool {
+    (0..=5).any(|d| i >= d && raw[i - d].contains("SAFETY:"))
+}
+
+/// Names listed in `marker(name, name: justification)` occurrences on
+/// one raw line.
+fn marker_names(raw_line: &str, marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = raw_line;
+    while let Some(p) = rest.find(marker) {
+        let after = &rest[p + marker.len()..];
+        let Some(close) = after.find(')') else { break };
+        let inside = &after[..close];
+        let names = inside.split(':').next().unwrap_or("");
+        out.extend(names.split(',').map(|n| n.trim().to_string()));
+        rest = &after[close + 1..];
+    }
+    out
+}
+
+fn collect_allows(raw: &[&str], marker: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    for line in raw {
+        out.extend(marker_names(line, marker));
+    }
+    out
+}
+
+/// Rules suppressed for line `i`: `lint:allow(...)` on the line
+/// itself or on the line directly above.
+fn line_allows(raw: &[&str], i: usize) -> Vec<String> {
+    let mut out = marker_names(raw[i], "lint:allow(");
+    if i > 0 {
+        out.extend(marker_names(raw[i - 1], "lint:allow("));
+    }
+    out
+}
+
+/// Blank out comments and string/char literals, preserving the line
+/// structure and column positions (stripped chars become spaces), so
+/// downstream rules only ever see real code tokens.
+fn strip_comments_and_strings(src: &str) -> Vec<String> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            out.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && chars.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    cur.push(' ');
+                    cur.push(' ');
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(1);
+                    cur.push(' ');
+                    cur.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.push(' ');
+                    i += 1;
+                } else if c == 'r'
+                    && (i == 0 || !chars[i - 1].is_alphanumeric() && chars[i - 1] != '_')
+                {
+                    // Possible raw string: r"..." or r#"..."# (any #s).
+                    let mut j = i + 1;
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if chars.get(j) == Some(&'"') {
+                        st = St::RawStr(hashes);
+                        for _ in i..=j {
+                            cur.push(' ');
+                        }
+                        i = j + 1;
+                    } else {
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal vs lifetime.
+                    if chars.get(i + 1) == Some(&'\\') {
+                        // Quote, backslash, escaped char consumed; then
+                        // scan to the closing quote (covers \x41, \u{..}).
+                        let mut j = i + 3;
+                        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        for _ in i..=j.min(chars.len().saturating_sub(1)) {
+                            cur.push(' ');
+                        }
+                        i = j + 1;
+                    } else if chars.get(i + 2) == Some(&'\'') && chars.get(i + 1) != Some(&'\'') {
+                        cur.push_str("   ");
+                        i += 3;
+                    } else {
+                        // Lifetime (or stray quote): keep, it is code.
+                        cur.push(c);
+                        i += 1;
+                    }
+                } else {
+                    cur.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.push(' ');
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if c == '*' && chars.get(i + 1) == Some(&'/') {
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    cur.push(' ');
+                    cur.push(' ');
+                    i += 2;
+                } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                    st = St::BlockComment(depth + 1);
+                    cur.push(' ');
+                    cur.push(' ');
+                    i += 2;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    cur.push(' ');
+                    if chars.get(i + 1).is_some_and(|&n| n != '\n') {
+                        cur.push(' ');
+                        i += 1;
+                    }
+                    i += 1;
+                } else if c == '"' {
+                    st = St::Code;
+                    cur.push(' ');
+                    i += 1;
+                } else {
+                    cur.push(' ');
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        for _ in 0..=hashes as usize {
+                            cur.push(' ');
+                        }
+                        i += 1 + hashes as usize;
+                        st = St::Code;
+                        continue;
+                    }
+                }
+                cur.push(' ');
+                i += 1;
+            }
+        }
+    }
+    out.push(cur);
+    out
+}
+
+/// Mark the line ranges of `#[cfg(test)] mod ...` (and any cfg
+/// attribute naming `test`, e.g. `#[cfg(all(loom, test))]`) by brace
+/// tracking on the stripped view. Only attributes followed by a `mod`
+/// within 3 lines open a region; `#[cfg(test)]` on a lone item (a
+/// `use`, a single fn) exempts just the lines up to the item's close.
+fn test_regions(raw: &[&str], code: &[String]) -> Vec<bool> {
+    let n = raw.len();
+    let mut in_test = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        let t = raw[i].trim_start();
+        let is_test_cfg = t.starts_with("#[cfg(") && t.contains("test");
+        if !is_test_cfg {
+            i += 1;
+            continue;
+        }
+        // Find the start of the gated item: skip pure attribute lines
+        // (an attribute sharing its line with the item — `#[cfg(test)]
+        // mod t {` — counts as the item line, spotted by its brace).
+        let mut item = i;
+        while item < n {
+            let tt = raw[item].trim_start();
+            let cl = code.get(item).map(String::as_str).unwrap_or("");
+            if tt.starts_with("#[") && !cl.contains('{') {
+                item += 1;
+            } else {
+                break;
+            }
+        }
+        if item >= n || item > i + 3 {
+            i += 1;
+            continue;
+        }
+        // Brace-track from the item line to its closing brace (or to
+        // the `;` for brace-less items like `use`).
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = item;
+        while j < n {
+            in_test[j] = true;
+            let line = code.get(j).map(String::as_str).unwrap_or("");
+            for ch in line.chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            if !opened && line.contains(';') {
+                break;
+            }
+            j += 1;
+        }
+        for k in i..item {
+            in_test[k] = true;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<&'static str> {
+        check_file(rel, src).into_iter().map(|v| v.rule).collect()
+    }
+
+    /// Join snippet lines into a source string (keeps these tests
+    /// inside the repo's own line-length budget).
+    fn src(lines: &[&str]) -> String {
+        let mut s = lines.join("\n");
+        s.push('\n');
+        s
+    }
+
+    #[test]
+    fn float_ord_fires_on_partial_cmp() {
+        let bad = src(&[
+            "fn f(xs: &mut Vec<f64>) {",
+            "    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());",
+            "}",
+        ]);
+        assert_eq!(rules_fired("rust/src/ml/opt.rs", &bad), vec!["float-ord"]);
+        let good = "fn f(xs: &mut Vec<f64>) {\n    xs.sort_by(|a, b| a.total_cmp(b));\n}\n";
+        assert!(rules_fired("rust/src/ml/opt.rs", good).is_empty());
+    }
+
+    #[test]
+    fn float_ord_ignores_comments_and_strings() {
+        let src = "// partial_cmp is banned\nfn f() { let _ = \"partial_cmp\"; }\n";
+        assert!(rules_fired("rust/src/ml/opt.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hash_iter_fires_only_in_scoped_dirs() {
+        let bad = src(&[
+            "use std::collections::HashMap;",
+            "fn f() { let m: HashMap<u32, u32> = HashMap::new(); }",
+        ]);
+        let fired = rules_fired("rust/src/collision/foo.rs", &bad);
+        assert!(fired.iter().all(|r| *r == "hash-iter") && !fired.is_empty());
+        // Same code outside the scoped dirs is fine.
+        assert!(rules_fired("rust/src/util/foo.rs", &bad).is_empty());
+    }
+
+    #[test]
+    fn thread_spawn_fires_outside_pool() {
+        let bad = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_fired("rust/src/solver/lcp.rs", bad), vec!["thread-spawn"]);
+        assert!(rules_fired("rust/src/util/pool.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn wallclock_fires_outside_telemetry() {
+        let bad = "use std::time::Instant;\nfn f() { let t = Instant::now(); }\n";
+        let fired = rules_fired("rust/src/solver/lcp.rs", bad);
+        assert_eq!(fired, vec!["wallclock", "wallclock"]);
+        assert!(rules_fired("rust/src/util/timer.rs", bad).is_empty());
+        assert!(rules_fired("rust/src/util/telemetry.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_fires_on_bare_unsafe() {
+        let bad = "fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_fired("rust/src/util/pool.rs", bad), vec!["safety-comment"]);
+        let good = src(&[
+            "fn f(p: *const u32) -> u32 {",
+            "    // SAFETY: caller guarantees p is valid.",
+            "    unsafe { *p }",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/util/pool.rs", &good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_fires_on_unsafe_impl() {
+        let bad = "struct P(*mut u8);\nunsafe impl Send for P {}\n";
+        assert_eq!(rules_fired("rust/src/util/pool.rs", bad), vec!["safety-comment"]);
+        let doc = src(&[
+            "struct P(*mut u8);",
+            "/// SAFETY: P is only handed to one thread at a time.",
+            "unsafe impl Send for P {}",
+        ]);
+        assert!(rules_fired("rust/src/util/pool.rs", &doc).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_skips_fn_pointer_types() {
+        let src = "type Hook = unsafe fn(usize);\n";
+        // `unsafe fn(` is a type, not a declaration site.
+        assert!(rules_fired("rust/src/util/pool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn static_mut_fires() {
+        let bad = "static mut COUNTER: u64 = 0;\n";
+        assert_eq!(rules_fired("rust/src/util/foo.rs", bad), vec!["static-mut"]);
+        let good = "static COUNTER: AtomicU64 = AtomicU64::new(0);\n";
+        assert!(rules_fired("rust/src/util/foo.rs", good).is_empty());
+    }
+
+    #[test]
+    fn line_allow_suppresses_on_same_and_previous_line() {
+        let same = src(&[
+            "fn f(a: f64, b: f64) {",
+            "    let _ = a.partial_cmp(&b); // lint:allow(float-ord: NaN-free)",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/ml/opt.rs", &same).is_empty());
+        let above = src(&[
+            "fn f(a: f64, b: f64) {",
+            "    // lint:allow(float-ord: NaN-free by construction)",
+            "    let _ = a.partial_cmp(&b);",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/ml/opt.rs", &above).is_empty());
+    }
+
+    #[test]
+    fn file_allow_suppresses_everywhere() {
+        let code = src(&[
+            "// lint:allow-file(wallclock: telemetry-gated timings only)",
+            "use std::time::Instant;",
+            "fn f() { let _ = Instant::now(); }",
+        ]);
+        assert!(rules_fired("rust/src/solver/lcp.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn allow_lists_multiple_rules() {
+        let code = src(&[
+            "fn f(a: f64, b: f64) {",
+            "    // lint:allow(float-ord, wallclock: both fine here)",
+            "    let _ = a.partial_cmp(&b);",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/ml/opt.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn test_regions_are_exempt_from_determinism_rules() {
+        let code = src(&[
+            "fn prod() {}",
+            "",
+            "#[cfg(test)]",
+            "mod tests {",
+            "    use std::collections::HashSet;",
+            "    #[test]",
+            "    fn t() {",
+            "        let _ = std::time::Instant::now();",
+            "        let _: HashSet<u32> = HashSet::new();",
+            "    }",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/collision/foo.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn test_region_ends_at_closing_brace() {
+        let code = src(&[
+            "#[cfg(test)]",
+            "mod tests {",
+            "    fn t() {}",
+            "}",
+            "",
+            "fn prod(a: f64, b: f64) {",
+            "    let _ = a.partial_cmp(&b);",
+            "}",
+        ]);
+        assert_eq!(rules_fired("rust/src/ml/opt.rs", &code), vec!["float-ord"]);
+    }
+
+    #[test]
+    fn cfg_test_on_lone_use_does_not_swallow_following_code() {
+        let code = src(&[
+            "#[cfg(test)]",
+            "use std::collections::HashSet;",
+            "fn prod(a: f64, b: f64) {",
+            "    let _ = a.partial_cmp(&b);",
+            "}",
+        ]);
+        assert_eq!(rules_fired("rust/src/collision/foo.rs", &code), vec!["float-ord"]);
+    }
+
+    #[test]
+    fn loom_cfg_counts_as_test_region() {
+        let code = src(&[
+            "#[cfg(all(loom, test))]",
+            "mod loom_tests {",
+            "    fn t() { let _ = std::time::Instant::now(); }",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/util/foo.rs", &code).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_stripped() {
+        let src = "fn f() -> (&'static str, char) { (r#\"partial_cmp \" quote\"#, '\"') }\n";
+        assert!(rules_fired("rust/src/ml/opt.rs", src).is_empty());
+    }
+
+    #[test]
+    fn every_rule_has_a_catalog_entry() {
+        // The Display impl points users at the rule name; make sure
+        // every name the checker can emit exists in RULES.
+        let emitted = [
+            "float-ord",
+            "hash-iter",
+            "thread-spawn",
+            "wallclock",
+            "safety-comment",
+            "static-mut",
+        ];
+        for name in emitted {
+            assert!(RULES.iter().any(|r| r.name == name), "missing catalog entry: {name}");
+        }
+    }
+
+    /// The real tree must be clean: this is the same check CI runs as
+    /// a hard gate, wired as a unit test so `cargo test -p xtask`
+    /// alone catches regressions.
+    #[test]
+    fn tree_is_clean() {
+        let root = crate::default_root();
+        let src = root.join("rust").join("src");
+        assert!(src.is_dir(), "expected rust/src under {}", root.display());
+        let mut files = Vec::new();
+        crate::collect_rs(&src, &mut files);
+        files.sort();
+        assert!(!files.is_empty());
+        let mut violations = Vec::new();
+        for path in &files {
+            let source = std::fs::read_to_string(path).expect("read source file");
+            let rel = path
+                .strip_prefix(&root)
+                .unwrap_or(path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            violations.extend(check_file(&rel, &source));
+        }
+        let rendered: Vec<String> = violations.iter().map(|v| v.to_string()).collect();
+        assert!(violations.is_empty(), "tree has lint violations:\n{}", rendered.join("\n"));
+    }
+}

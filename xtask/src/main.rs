@@ -1,0 +1,144 @@
+//! Repo automation tasks, invoked as `cargo xtask <command>`.
+//!
+//! The only command today is `lint`: a tree-wide invariant pass over
+//! `rust/src` that enforces the correctness rules catalogued in
+//! ARCHITECTURE.md §"Correctness & static analysis". It is a CI hard
+//! gate; run it locally before pushing:
+//!
+//! ```text
+//! cargo xtask lint            # check the tree (exit 1 on violations)
+//! cargo xtask lint --list     # print the rule catalog
+//! cargo xtask lint --root DIR # lint DIR/rust/src instead of the repo
+//! ```
+//!
+//! The pass is deliberately line-level lexing (comments and string
+//! literals stripped, `#[cfg(test)]` regions tracked) rather than a
+//! full parse: zero dependencies, so it builds offline and cannot
+//! rot the main crate's dependency graph.
+
+mod lint;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint_cmd(&args[1..]),
+        None | Some("--help") | Some("-h") | Some("help") => {
+            print_help();
+            ExitCode::SUCCESS
+        }
+        Some(other) => {
+            eprintln!("xtask: unknown command `{other}`\n");
+            print_help();
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn print_help() {
+    eprintln!("usage: cargo xtask <command>\n");
+    eprintln!("commands:");
+    eprintln!("  lint [--root DIR] [--list]   invariant pass over rust/src (CI hard gate)");
+}
+
+fn lint_cmd(args: &[String]) -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut list = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--list" => list = true,
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(dir) => root = Some(PathBuf::from(dir)),
+                    None => {
+                        eprintln!("xtask lint: --root needs a directory argument");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            other => {
+                eprintln!("xtask lint: unknown flag `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+        i += 1;
+    }
+
+    if list {
+        for rule in lint::RULES {
+            println!("{:<16} {}", rule.name, rule.desc);
+        }
+        return ExitCode::SUCCESS;
+    }
+
+    let root = root.unwrap_or_else(default_root);
+    let src = root.join("rust").join("src");
+    if !src.is_dir() {
+        eprintln!("xtask lint: no rust/src under {}", root.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut files = Vec::new();
+    collect_rs(&src, &mut files);
+    files.sort();
+
+    let mut violations = Vec::new();
+    for path in &files {
+        let source = match std::fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("xtask lint: reading {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let rel = path
+            .strip_prefix(&root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        violations.extend(lint::check_file(&rel, &source));
+    }
+
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    if violations.is_empty() {
+        println!("xtask lint: {} files checked, 0 violations", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "xtask lint: {} violation(s) in {} files checked",
+            violations.len(),
+            files.len()
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// The xtask crate sits directly under the repo root, so the tree to
+/// lint is the manifest dir's parent. `--root` overrides for tests.
+fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask/ sits under the repo root")
+        .to_path_buf()
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
