@@ -3,7 +3,7 @@
 //! dense), cloth implicit solve, pool dispatch (persistent vs
 //! spawn-per-call, → `BENCH_pool.json`), and the PJRT call overhead.
 //! Run with `--test` for the CI smoke config.
-use diffsim::batch::SceneBatch;
+use diffsim::batch::{FaultPolicy, SceneBatch};
 use diffsim::bodies::{Cloth, RigidBody, System};
 use diffsim::collision::zones::build_zones;
 use diffsim::collision::{detect, surfaces_from_system};
@@ -104,6 +104,31 @@ fn main() {
             "telemetry_disabled_steps_per_s",
             (4 * tele_steps) as f64 / s_dis.mean().max(1e-12),
         );
+    // Fault-layer overhead: the same lockstep config under the default
+    // FailFast policy (the original unguarded stage bodies — the
+    // bitwise-parity path) vs Isolate (per-scene containment:
+    // catch_unwind + finite gates around every stage). The injection
+    // hooks themselves are `const false` without `--features
+    // faultinject` and compile out, so FailFast must stay within noise
+    // of a tree without the fault layer.
+    let run_policy = |policy: FaultPolicy| {
+        let mut sb = SceneBatch::from_scene(&tsys, &tele_cfg, 4, |i, sys| {
+            let body = sys.rigids[1].clone();
+            sys.rigids[1] = body.with_velocity(Vec3::new(0.1 * i as f64, 0.0, 0.0));
+        });
+        sb.set_fault_policy(policy);
+        sb.run_lockstep(tele_steps);
+    };
+    run_policy(FaultPolicy::FailFast); // warmup
+    let s_ff = time(0, tele_iters, || run_policy(FaultPolicy::FailFast));
+    let s_iso = time(0, tele_iters, || run_policy(FaultPolicy::Isolate));
+    let fault_overhead = s_iso.mean() / s_ff.mean().max(1e-12);
+    b.report("fault/lockstep4 failfast", &s_ff);
+    b.report("fault/lockstep4 isolate", &s_iso);
+    b.metric("fault/isolate_overhead", fault_overhead, "x");
+    pj.set("fault_failfast_s", s_ff.mean())
+        .set("fault_isolate_s", s_iso.mean())
+        .set("fault_isolate_overhead", fault_overhead);
     merge_section("BENCH_pool.json", "micro_hotpaths", pj);
 
     // BVH over a 1280-face mesh.

@@ -58,6 +58,7 @@ pub fn backward_batch(pool: &Pool, sims: &[Simulation], seeds: &[LossGrad]) -> V
 /// Lockstep PJRT backward: one coordinator call per (step, pass) level
 /// covering every scene's zone group at that level.
 fn backward_lockstep(sims: &[Simulation], seeds: &[LossGrad]) -> Vec<Grads> {
+    // lint:allow(no-bare-unwrap: backward_batch's lockstep gate checked is_some)
     let coord = sims[0].coordinator.as_ref().expect("lockstep requires a coordinator");
     backward_lockstep_with(sims, seeds, &|items| coord.zone_backward_batch(items))
 }

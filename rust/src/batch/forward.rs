@@ -33,9 +33,10 @@
 //! arena stays consistent.
 
 use crate::coordinator::Coordinator;
-use crate::engine::{Simulation, StepState};
+use crate::engine::{SceneError, Simulation, StepState};
 use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
 use crate::util::pool::Pool;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 
 /// The one coordinator every scene shares, if they all hold the same
@@ -139,9 +140,217 @@ pub(crate) fn step_lockstep(pool: &Pool, sims: &mut [Simulation]) {
     let slots: Vec<Mutex<Option<StepState>>> =
         states.into_iter().map(|st| Mutex::new(Some(st))).collect();
     pool.map_mut(sims, |i, sim| {
+        // lint:allow(no-bare-unwrap: fail-fast path — a worker panic here must abort)
         let st = slots[i].lock().unwrap().take().expect("step state consumed once");
         sim.commit(st);
     });
+}
+
+/// Fault-isolating variant of [`step_lockstep`]: scenes flagged in
+/// `skip` sit the step out entirely, and a scene that fails any stage
+/// — a worker panic, non-finite state, CCD garbage, or a divergent
+/// zone solution — is dropped from the step without committing, so its
+/// state stays exactly at the last good step (the staged step is
+/// transactional: only `commit` mutates the simulation). Healthy
+/// scenes are unaffected and commit normally. Returns one
+/// `Option<SceneError>` slot per scene; `None` means the scene either
+/// stepped cleanly or was skipped.
+///
+/// The lockstep barrier makes one stage genuinely shared: the batched
+/// union zone solve. A panic inside it cannot be attributed to a
+/// single scene, so every scene participating in that solve is failed
+/// (each still rolls back untouched). Scene-attributable failures —
+/// stage panics, per-scene finite checks — fail only their own scene.
+pub(crate) fn try_step_lockstep(
+    pool: &Pool,
+    sims: &mut [Simulation],
+    skip: &[bool],
+) -> Vec<Option<SceneError>> {
+    let n = sims.len();
+    let mut errors: Vec<Option<SceneError>> = (0..n).map(|_| None).collect();
+    if n == 0 {
+        return errors;
+    }
+    let coord = shared_coordinator(sims);
+    // Stages 1–2 per scene, panics and non-finite states contained.
+    let mut states: Vec<Option<StepState>> = Vec::with_capacity(n);
+    {
+        let skip_ref: &[bool] = skip;
+        let staged: Vec<Option<Result<StepState, SceneError>>> = pool.map_mut(sims, |i, sim| {
+            if skip_ref[i] {
+                return None;
+            }
+            let step = sim.steps;
+            Some(
+                match catch_unwind(AssertUnwindSafe(|| {
+                    let mut st = sim.integrate();
+                    sim.candidates(&mut st);
+                    st
+                })) {
+                    Ok(st) if st.is_finite() => Ok(st),
+                    Ok(_) => Err(SceneError::NonFinite { what: "integrated candidates", step }),
+                    Err(p) => Err(SceneError::from_panic(p.as_ref())),
+                },
+            )
+        });
+        for (i, r) in staged.into_iter().enumerate() {
+            match r {
+                None => states.push(None),
+                Some(Ok(st)) => states.push(Some(st)),
+                Some(Err(e)) => {
+                    errors[i] = Some(e);
+                    states.push(None);
+                }
+            }
+        }
+    }
+    let max_passes = sims.iter().map(|s| s.cfg.max_resolve_passes).max().unwrap_or(0);
+    let mut done: Vec<bool> = states.iter().map(|s| s.is_none()).collect();
+    for pass in 0..max_passes {
+        // Stage 3 per scene, contained. A failed build retires nothing
+        // (the panic unwound before the problems existed); the scene's
+        // candidate state is simply abandoned.
+        let built: Vec<Result<Vec<ZoneProblem>, SceneError>> = {
+            let sims_ref: &[Simulation] = sims;
+            let done_ref: &[bool] = &done;
+            pool.map_mut(&mut states, |i, slot| {
+                let Some(st) = slot.as_mut() else { return Ok(Vec::new()) };
+                if done_ref[i] || pass >= sims_ref[i].cfg.max_resolve_passes {
+                    return Ok(Vec::new());
+                }
+                catch_unwind(AssertUnwindSafe(|| sims_ref[i].detect_and_zone(st, pass)))
+                    .map_err(|p| SceneError::from_panic(p.as_ref()))
+            })
+        };
+        let mut problems_per: Vec<Vec<ZoneProblem>> = Vec::with_capacity(n);
+        for (i, r) in built.into_iter().enumerate() {
+            match r {
+                Ok(probs) => {
+                    if probs.is_empty() {
+                        done[i] = true;
+                        problems_per.push(Vec::new());
+                    } else if probs.iter().any(|p| !p.is_finite()) {
+                        let step = sims[i].steps;
+                        sims[i].abandon_pass(probs, Vec::new());
+                        errors[i] = Some(SceneError::CcdFailure { step });
+                        states[i] = None;
+                        done[i] = true;
+                        problems_per.push(Vec::new());
+                    } else {
+                        problems_per.push(probs);
+                    }
+                }
+                Err(e) => {
+                    errors[i] = Some(e);
+                    states[i] = None;
+                    done[i] = true;
+                    problems_per.push(Vec::new());
+                }
+            }
+        }
+        // Stage 4 — the lockstep barrier, same pooling as the fail-fast
+        // path, with the batched solve contained as a unit.
+        let mut solutions_per: Vec<Vec<ZoneSolution>> = (0..n).map(|_| Vec::new()).collect();
+        let mut union: Vec<(usize, usize)> = Vec::new();
+        for (i, probs) in problems_per.iter().enumerate() {
+            if probs.is_empty() {
+                continue;
+            }
+            if sims[i].zone_hook.is_some() {
+                match catch_unwind(AssertUnwindSafe(|| sims[i].solve_zones(probs))) {
+                    Ok(sols) => solutions_per[i] = sols,
+                    // Problems are retired in the verdict loop below.
+                    Err(p) => errors[i] = Some(SceneError::from_panic(p.as_ref())),
+                }
+            } else {
+                for k in 0..probs.len() {
+                    union.push((i, k));
+                }
+            }
+        }
+        if !union.is_empty() {
+            let refs: Vec<&ZoneProblem> =
+                union.iter().map(|&(i, k)| &problems_per[i][k]).collect();
+            let solved = catch_unwind(AssertUnwindSafe(|| match &coord {
+                Some(c) => c.zone_solve_batch(&refs, pool),
+                None => pool.map(refs.len(), |j| refs[j].solve()),
+            }));
+            match solved {
+                Ok(sols) => {
+                    for (&(i, _), sol) in union.iter().zip(sols) {
+                        solutions_per[i].push(sol);
+                    }
+                }
+                Err(p) => {
+                    let e = SceneError::from_panic(p.as_ref());
+                    for &(i, _) in &union {
+                        if errors[i].is_none() {
+                            errors[i] = Some(e.clone());
+                        }
+                    }
+                }
+            }
+        }
+        // Stage 5 per scene: verdict + scatter, contained.
+        for (i, (probs, sols)) in problems_per.into_iter().zip(solutions_per).enumerate() {
+            if probs.is_empty() {
+                continue;
+            }
+            if errors[i].is_some() {
+                sims[i].abandon_pass(probs, sols);
+                states[i] = None;
+                done[i] = true;
+                continue;
+            }
+            if sols.len() != probs.len() || sols.iter().any(|s| !s.is_finite()) {
+                let step = sims[i].steps;
+                let zones = probs.len();
+                sims[i].abandon_pass(probs, sols);
+                errors[i] = Some(SceneError::ZoneDivergence { step, pass, zones });
+                states[i] = None;
+                done[i] = true;
+                continue;
+            }
+            let Some(st) = states[i].as_mut() else { continue };
+            match catch_unwind(AssertUnwindSafe(|| sims[i].scatter(st, probs, sols, pass))) {
+                Ok(max_disp) => {
+                    if max_disp < 1e-9 {
+                        done[i] = true;
+                    }
+                }
+                Err(p) => {
+                    errors[i] = Some(SceneError::from_panic(p.as_ref()));
+                    states[i] = None;
+                    done[i] = true;
+                }
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+    }
+    // Stage 6 per scene: final finite gate, then commit. Only scenes
+    // whose slot survived every stage reach this point.
+    let slots: Vec<Mutex<Option<StepState>>> = states.into_iter().map(Mutex::new).collect();
+    let committed: Vec<Option<Result<(), SceneError>>> = pool.map_mut(sims, |i, sim| {
+        let st = slots[i].lock().unwrap_or_else(|e| e.into_inner()).take()?;
+        let step = sim.steps;
+        if !st.is_finite() {
+            return Some(Err(SceneError::NonFinite { what: "resolved coordinates", step }));
+        }
+        Some(match catch_unwind(AssertUnwindSafe(|| sim.commit(st))) {
+            Ok(()) => Ok(()),
+            Err(p) => Err(SceneError::from_panic(p.as_ref())),
+        })
+    });
+    for (i, r) in committed.into_iter().enumerate() {
+        if let Some(Err(e)) = r {
+            if errors[i].is_none() {
+                errors[i] = Some(e);
+            }
+        }
+    }
+    errors
 }
 
 #[cfg(test)]
@@ -195,6 +404,66 @@ mod tests {
             }
             assert_eq!(sims[i].steps, solo.steps);
         }
+    }
+
+    #[test]
+    fn try_step_lockstep_matches_step_lockstep_bitwise() {
+        let mut guarded: Vec<Simulation> = [0.0, 0.7].iter().map(|&vx| drop_scene(vx)).collect();
+        let mut plain: Vec<Simulation> = [0.0, 0.7].iter().map(|&vx| drop_scene(vx)).collect();
+        let pool = Pool::global();
+        let skip = vec![false; 2];
+        for _ in 0..50 {
+            let errs = try_step_lockstep(&pool, &mut guarded, &skip);
+            assert!(errs.iter().all(|e| e.is_none()), "healthy scenes must not error: {errs:?}");
+            step_lockstep(&pool, &mut plain);
+        }
+        for i in 0..2 {
+            for k in 0..6 {
+                assert_eq!(
+                    guarded[i].sys.rigids[1].q[k].to_bits(),
+                    plain[i].sys.rigids[1].q[k].to_bits(),
+                    "scene {i} q[{k}] must be bitwise-identical"
+                );
+                assert_eq!(
+                    guarded[i].sys.rigids[1].qdot[k].to_bits(),
+                    plain[i].sys.rigids[1].qdot[k].to_bits(),
+                    "scene {i} qdot[{k}] must be bitwise-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn try_step_lockstep_isolates_a_poisoned_scene() {
+        let mut sims: Vec<Simulation> = [0.0, 0.7].iter().map(|&vx| drop_scene(vx)).collect();
+        let pool = Pool::global();
+        let skip = vec![false; 2];
+        for _ in 0..3 {
+            try_step_lockstep(&pool, &mut sims, &skip);
+        }
+        let poisoned_q = sims[0].sys.rigids[1].q;
+        sims[0].sys.rigids[1].ext_force = Vec3::new(f64::NAN, 0.0, 0.0);
+        let errs = try_step_lockstep(&pool, &mut sims, &skip);
+        assert!(
+            matches!(errs[0], Some(SceneError::NonFinite { step: 3, .. })),
+            "poisoned scene must fail its stage-2 finite gate: {errs:?}"
+        );
+        assert!(errs[1].is_none(), "healthy neighbor must step cleanly");
+        assert_eq!(sims[0].steps, 3, "failed scene must not commit");
+        assert_eq!(sims[1].steps, 4, "healthy scene must advance");
+        for k in 0..6 {
+            assert_eq!(
+                sims[0].sys.rigids[1].q[k].to_bits(),
+                poisoned_q[k].to_bits(),
+                "failed scene's state must be untouched at q[{k}]"
+            );
+        }
+        // A skipped scene sits the next step out entirely.
+        sims[0].sys.rigids[1].ext_force = Vec3::new(0.0, 0.0, 0.0);
+        let errs = try_step_lockstep(&pool, &mut sims, &[true, false]);
+        assert!(errs.iter().all(|e| e.is_none()));
+        assert_eq!(sims[0].steps, 3, "skipped scene must not advance");
+        assert_eq!(sims[1].steps, 5);
     }
 
     #[test]

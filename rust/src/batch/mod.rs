@@ -66,15 +66,48 @@ pub use pipeline::{BatchPipeline, Generation};
 use crate::bodies::System;
 use crate::diff::tape::Grads;
 use crate::engine::backward::LossGrad;
-use crate::engine::{SimConfig, Simulation};
+use crate::engine::{SceneError, SimConfig, Simulation};
 use crate::util::arena::BatchArena;
 use crate::util::pool::Pool;
+use crate::util::telemetry;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// How a batch responds when one scene's step fails (a worker panic,
+/// non-finite state, CCD failure, or zone-solve divergence — see
+/// [`SceneError`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FaultPolicy {
+    /// Propagate: a scene failure unwinds out of the batch call, exactly
+    /// as before fault containment existed. The default.
+    #[default]
+    FailFast,
+    /// Contain: the failing scene is quarantined with its error and step
+    /// index while healthy scenes keep stepping. The failed step never
+    /// commits, so the quarantined scene rests at its last good state.
+    Isolate,
+    /// Contain, but first run the engine's fail-safe ladder
+    /// ([`Simulation::step_recovering`]) on the failing scene; the scene
+    /// is quarantined only if the ladder also gives up.
+    Retry,
+}
+
+/// Why and when a scene was pulled from its batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quarantined {
+    /// The failure that ended the scene's participation.
+    pub error: SceneError,
+    /// The scene's committed step count at quarantine time (the failing
+    /// step rolled back, so this is the last good step).
+    pub step: usize,
+}
 
 /// A batch of independent scenes advanced in lockstep.
 pub struct SceneBatch {
     sims: Vec<Simulation>,
     pool: Pool,
     arena: BatchArena,
+    policy: FaultPolicy,
+    quarantine: Vec<Option<Quarantined>>,
 }
 
 /// Result of a taped batch rollout: per-scene losses, gradients, and the
@@ -121,7 +154,14 @@ impl SceneBatch {
     /// any arena they held) — pooling is content-neutral, so this never
     /// changes trajectories; use [`SceneBatch::set_arena`] to opt out.
     pub fn new(sims: Vec<Simulation>, workers: usize) -> SceneBatch {
-        let mut sb = SceneBatch { sims, pool: Pool::shared(workers), arena: BatchArena::new() };
+        let quarantine = (0..sims.len()).map(|_| None).collect();
+        let mut sb = SceneBatch {
+            sims,
+            pool: Pool::shared(workers),
+            arena: BatchArena::new(),
+            policy: FaultPolicy::default(),
+            quarantine,
+        };
         let arena = sb.arena.clone();
         for sim in &mut sb.sims {
             sim.set_arena(arena.clone());
@@ -233,15 +273,109 @@ impl SceneBatch {
         }
     }
 
+    /// Set how the batch responds to per-scene failures. Under
+    /// [`FaultPolicy::FailFast`] (the default) every stepping entry
+    /// point runs its original, unguarded body — bitwise-identical
+    /// behavior and cost. `Isolate`/`Retry` switch `step`, `run`,
+    /// `step_lockstep`, `run_lockstep`, `rollout`, and
+    /// `rollout_lockstep` to fault-contained variants; the
+    /// gradient paths (`rollout_grad*`) always fail fast, since a
+    /// half-taped population has no usable batched gradient.
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.policy = policy;
+    }
+
+    /// The batch's current [`FaultPolicy`].
+    pub fn fault_policy(&self) -> FaultPolicy {
+        self.policy
+    }
+
+    /// Scenes currently quarantined, as `(scene index, record)` pairs.
+    pub fn quarantined(&self) -> impl Iterator<Item = (usize, &Quarantined)> + '_ {
+        self.quarantine.iter().enumerate().filter_map(|(i, q)| q.as_ref().map(|r| (i, r)))
+    }
+
+    /// Is scene `i` quarantined?
+    pub fn is_quarantined(&self, i: usize) -> bool {
+        self.quarantine[i].is_some()
+    }
+
+    /// Release scene `i` from quarantine (after repairing it through
+    /// [`SceneBatch::sims_mut`], say) and return its record. The scene
+    /// rejoins stepping on the next call.
+    pub fn clear_quarantine(&mut self, i: usize) -> Option<Quarantined> {
+        let rec = self.quarantine[i].take();
+        self.update_quarantine_gauge();
+        rec
+    }
+
+    fn quarantine_scene(&mut self, i: usize, error: SceneError) {
+        if self.quarantine[i].is_none() {
+            self.quarantine[i] = Some(Quarantined { error, step: self.sims[i].steps });
+        }
+        self.update_quarantine_gauge();
+    }
+
+    fn update_quarantine_gauge(&self) {
+        if telemetry::enabled() {
+            let n = self.quarantine.iter().filter(|q| q.is_some()).count();
+            telemetry::gauge("batch.quarantined").set(n as i64);
+        }
+    }
+
     /// Advance every scene one step, in parallel.
     pub fn step(&mut self) {
-        self.pool.map_mut(&mut self.sims, |_, sim| sim.step());
+        match self.policy {
+            FaultPolicy::FailFast => self.pool.map_mut(&mut self.sims, |_, sim| sim.step()),
+            _ => self.step_guarded(1),
+        }
     }
 
     /// Advance every scene `steps` steps. Scenes are independent, so
     /// each worker runs its scenes' full horizon without barriers.
     pub fn run(&mut self, steps: usize) {
-        self.pool.map_mut(&mut self.sims, |_, sim| sim.run(steps));
+        match self.policy {
+            FaultPolicy::FailFast => self.pool.map_mut(&mut self.sims, |_, sim| sim.run(steps)),
+            _ => self.step_guarded(steps),
+        }
+    }
+
+    /// Scene-parallel stepping with per-scene containment: quarantined
+    /// scenes sit out, panics are caught on the worker, and a scene
+    /// that fails (after the retry ladder, under [`FaultPolicy::Retry`])
+    /// is quarantined at its last committed step while the rest of the
+    /// batch finishes its horizon.
+    fn step_guarded(&mut self, steps: usize) {
+        let retry = self.policy == FaultPolicy::Retry;
+        let skip: Vec<bool> = self.quarantine.iter().map(|q| q.is_some()).collect();
+        let errs: Vec<Option<SceneError>> = {
+            let skip_ref: &[bool] = &skip;
+            self.pool.map_mut(&mut self.sims, |i, sim| {
+                if skip_ref[i] {
+                    return None;
+                }
+                for _ in 0..steps {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        if retry {
+                            sim.step_recovering()
+                        } else {
+                            sim.try_step()
+                        }
+                    }));
+                    match r {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => return Some(e),
+                        Err(p) => return Some(SceneError::from_panic(p.as_ref())),
+                    }
+                }
+                None
+            })
+        };
+        for (i, e) in errs.into_iter().enumerate() {
+            if let Some(e) = e {
+                self.quarantine_scene(i, e);
+            }
+        }
     }
 
     /// The coordinator every scene shares, if they all hold the same
@@ -261,7 +395,39 @@ impl SceneBatch {
     /// bitwise-identical to [`SceneBatch::step`] and sequential
     /// single-scene stepping.
     pub fn step_lockstep(&mut self) {
-        forward::step_lockstep(&self.pool, &mut self.sims);
+        match self.policy {
+            FaultPolicy::FailFast => forward::step_lockstep(&self.pool, &mut self.sims),
+            _ => self.step_lockstep_guarded(),
+        }
+    }
+
+    /// Lockstep stepping with per-scene containment (see
+    /// [`forward::try_step_lockstep`]): quarantined scenes sit out, and
+    /// a scene that fails a stage rolls back without committing. Under
+    /// [`FaultPolicy::Retry`] the failed scene then runs the engine's
+    /// solo fail-safe ladder — legitimate because the rolled-back state
+    /// is exactly what the lockstep step started from, and solo vs
+    /// batched native zone solves are bitwise-identical.
+    fn step_lockstep_guarded(&mut self) {
+        let skip: Vec<bool> = self.quarantine.iter().map(|q| q.is_some()).collect();
+        let errs = forward::try_step_lockstep(&self.pool, &mut self.sims, &skip);
+        let retry = self.policy == FaultPolicy::Retry;
+        for (i, e) in errs.into_iter().enumerate() {
+            let Some(e) = e else { continue };
+            let final_err = if retry {
+                let sim = &mut self.sims[i];
+                match catch_unwind(AssertUnwindSafe(|| sim.step_recovering())) {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e2)) => Some(e2),
+                    Err(p) => Some(SceneError::from_panic(p.as_ref())),
+                }
+            } else {
+                Some(e)
+            };
+            if let Some(e) = final_err {
+                self.quarantine_scene(i, e);
+            }
+        }
     }
 
     /// Advance every scene `steps` steps in lockstep (see
@@ -282,14 +448,62 @@ impl SceneBatch {
         I: Fn(usize) -> S + Sync,
         C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
     {
-        self.pool.map_mut(&mut self.sims, |i, sim| {
-            let mut state = init(i);
-            for s in 0..steps {
-                control(&mut state, i, s, sim);
-                sim.step();
+        if self.policy == FaultPolicy::FailFast {
+            return self.pool.map_mut(&mut self.sims, |i, sim| {
+                let mut state = init(i);
+                for s in 0..steps {
+                    control(&mut state, i, s, sim);
+                    sim.step();
+                }
+                state
+            });
+        }
+        // Guarded: a scene that fails (controller panic or step error,
+        // post-ladder under Retry) stops rolling out and is quarantined;
+        // its state is returned as of the failure. Quarantined scenes
+        // return `init(i)` untouched.
+        let retry = self.policy == FaultPolicy::Retry;
+        let skip: Vec<bool> = self.quarantine.iter().map(|q| q.is_some()).collect();
+        let results: Vec<(S, Option<SceneError>)> = {
+            let skip_ref: &[bool] = &skip;
+            self.pool.map_mut(&mut self.sims, |i, sim| {
+                let mut state = init(i);
+                if skip_ref[i] {
+                    return (state, None);
+                }
+                let mut err = None;
+                for s in 0..steps {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        control(&mut state, i, s, sim);
+                        if retry {
+                            sim.step_recovering()
+                        } else {
+                            sim.try_step()
+                        }
+                    }));
+                    match r {
+                        Ok(Ok(())) => {}
+                        Ok(Err(e)) => {
+                            err = Some(e);
+                            break;
+                        }
+                        Err(p) => {
+                            err = Some(SceneError::from_panic(p.as_ref()));
+                            break;
+                        }
+                    }
+                }
+                (state, err)
+            })
+        };
+        let mut states = Vec::with_capacity(results.len());
+        for (i, (state, e)) in results.into_iter().enumerate() {
+            states.push(state);
+            if let Some(e) = e {
+                self.quarantine_scene(i, e);
             }
-            state
-        })
+        }
+        states
     }
 
     /// Lockstep variant of [`SceneBatch::rollout`]: the per-scene
@@ -305,20 +519,49 @@ impl SceneBatch {
         I: Fn(usize) -> S + Sync,
         C: Fn(&mut S, usize, usize, &mut Simulation) + Sync,
     {
+        let guarded = self.policy != FaultPolicy::FailFast;
         let slots: Vec<std::sync::Mutex<S>> =
             (0..self.sims.len()).map(|i| std::sync::Mutex::new(init(i))).collect();
         for s in 0..steps {
             {
                 let slots = &slots;
                 let control = &control;
-                self.pool.map_mut(&mut self.sims, |i, sim| {
-                    let mut state = slots[i].lock().unwrap();
-                    control(&mut *state, i, s, sim);
-                });
+                if guarded {
+                    // Contained controller pass: quarantined scenes are
+                    // skipped, a panicking controller quarantines its
+                    // scene (state as of the last completed call).
+                    let skip: Vec<bool> =
+                        self.quarantine.iter().map(|q| q.is_some()).collect();
+                    let skip_ref: &[bool] = &skip;
+                    let errs: Vec<Option<SceneError>> =
+                        self.pool.map_mut(&mut self.sims, |i, sim| {
+                            if skip_ref[i] {
+                                return None;
+                            }
+                            let mut state =
+                                slots[i].lock().unwrap_or_else(|e| e.into_inner());
+                            catch_unwind(AssertUnwindSafe(|| control(&mut *state, i, s, sim)))
+                                .err()
+                                .map(|p| SceneError::from_panic(p.as_ref()))
+                        });
+                    for (i, e) in errs.into_iter().enumerate() {
+                        if let Some(e) = e {
+                            self.quarantine_scene(i, e);
+                        }
+                    }
+                } else {
+                    self.pool.map_mut(&mut self.sims, |i, sim| {
+                        let mut state = slots[i].lock().unwrap_or_else(|e| e.into_inner());
+                        control(&mut *state, i, s, sim);
+                    });
+                }
             }
             self.step_lockstep();
         }
-        slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        slots
+            .into_iter()
+            .map(|m| m.into_inner().unwrap_or_else(|e| e.into_inner()))
+            .collect()
     }
 
     /// Taped batch rollout + batched backward. Tapes are cleared, taping
@@ -391,11 +634,17 @@ impl SceneBatch {
             sim.cfg.record_tape = true;
             sim.clear_tape();
         }
+        // Gradient rollouts always fail fast — a half-taped population
+        // has no usable batched gradient, so containment is forced off
+        // for the duration of the forward.
+        let prior_policy = self.policy;
+        self.policy = FaultPolicy::FailFast;
         let states = if lockstep {
             self.rollout_lockstep(steps, init, control)
         } else {
             self.rollout(steps, init, control)
         };
+        self.policy = prior_policy;
         let pool = &self.pool;
         let sims = &self.sims;
         let seeded: Vec<(f64, LossGrad)> =

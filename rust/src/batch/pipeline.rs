@@ -73,9 +73,12 @@
 // lint:allow-file(wallclock: Instant reads are telemetry-gated — zero
 // clock calls with the registry disabled — and only feed latency
 // histograms, never simulation numerics)
+use super::FaultPolicy;
+use crate::engine::SceneError;
 use crate::util::pool::{JobHandle, Pool};
 use crate::util::telemetry;
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -130,6 +133,7 @@ impl<S> Generation<S> {
 pub struct BatchPipeline {
     pool: Pool,
     window: usize,
+    policy: FaultPolicy,
 }
 
 impl BatchPipeline {
@@ -138,7 +142,7 @@ impl BatchPipeline {
     /// budget (a wider window cannot add concurrency, only queueing).
     pub fn new(workers: usize) -> BatchPipeline {
         let w = workers.max(1);
-        BatchPipeline { pool: Pool::shared(w), window: w }
+        BatchPipeline { pool: Pool::shared(w), window: w, policy: FaultPolicy::default() }
     }
 
     /// Pipeline over an explicit pool handle (dedicated [`Pool::new`]
@@ -146,7 +150,33 @@ impl BatchPipeline {
     /// the window defaults to the handle's budget.
     pub fn with_pool(pool: Pool) -> BatchPipeline {
         let w = pool.workers().max(1);
-        BatchPipeline { pool, window: w }
+        BatchPipeline { pool, window: w, policy: FaultPolicy::default() }
+    }
+
+    /// Builder-style fault-policy override (see
+    /// [`BatchPipeline::set_fault_policy`]).
+    pub fn with_fault_policy(mut self, policy: FaultPolicy) -> BatchPipeline {
+        self.policy = policy;
+        self
+    }
+
+    /// Set how the `*_checked` streaming entry points respond to a
+    /// panicking scene job. Under [`FaultPolicy::FailFast`] (the
+    /// default) they behave exactly like their unchecked twins — the
+    /// panic drains the window and rethrows. `Isolate` and `Retry` both
+    /// contain the panic and hand `consume` an `Err(SceneError)` in the
+    /// failing scene's slot; the pipeline cannot re-run an opaque job
+    /// (its side effects are unknown), so retry semantics live inside
+    /// the scene closure — roll out with
+    /// [`Simulation::step_recovering`](crate::engine::Simulation::step_recovering)
+    /// or under [`super::SceneBatch`]'s `Retry` policy there.
+    pub fn set_fault_policy(&mut self, policy: FaultPolicy) {
+        self.policy = policy;
+    }
+
+    /// The pipeline's current [`FaultPolicy`].
+    pub fn fault_policy(&self) -> FaultPolicy {
+        self.policy
     }
 
     /// Builder-style window override (clamped to ≥ 1).
@@ -215,6 +245,7 @@ impl BatchPipeline {
         let mut inflight: VecDeque<(JobHandle<T>, Option<Instant>)> = VecDeque::new();
         let mut consume_front =
             |inflight: &mut VecDeque<(JobHandle<T>, Option<Instant>)>, out: &mut Vec<R>| {
+                // lint:allow(no-bare-unwrap: callers only consume while inflight is non-empty)
                 let (h, t0) = inflight.pop_front().expect("window >= 1");
                 let t = h.wait();
                 if let Some(t0) = t0 {
@@ -291,6 +322,7 @@ impl BatchPipeline {
         self.drive_window(
             n,
             |i| {
+                // lint:allow(no-bare-unwrap: drive_window submits exactly n = handles.len())
                 let seed = seeds.next().expect("one seed handle per scene").wait();
                 let job: Box<dyn FnOnce() -> T + Send + '_> =
                     Box::new(move || work_ref(i, seed));
@@ -301,6 +333,60 @@ impl BatchPipeline {
                 self.pool.submit(job)
             },
             consume,
+        )
+    }
+
+    /// Fault-contained [`BatchPipeline::map_windowed`]: `consume` gets
+    /// `Ok(t)` for scenes whose job completed and — when the policy is
+    /// not [`FaultPolicy::FailFast`] — `Err(e)` for scenes whose job
+    /// panicked, with the payload recovered via
+    /// [`SceneError::from_panic`]. A contained panic costs nothing to
+    /// its neighbors: the window keeps flowing and every other scene is
+    /// consumed normally. Under `FailFast` this is exactly
+    /// `map_windowed` (the panic drains and rethrows).
+    pub fn map_windowed_checked<T, R, W, C>(&self, n: usize, work: W, mut consume: C) -> Vec<R>
+    where
+        T: Send + 'static,
+        W: Fn(usize) -> T + Sync,
+        C: FnMut(usize, Result<T, SceneError>) -> R,
+    {
+        if self.policy == FaultPolicy::FailFast {
+            return self.map_windowed(n, work, |i, t| consume(i, Ok(t)));
+        }
+        let work_ref = &work;
+        self.map_windowed(
+            n,
+            move |i| catch_unwind(AssertUnwindSafe(|| work_ref(i))),
+            |i, r| consume(i, r.map_err(|p| SceneError::from_panic(p.as_ref()))),
+        )
+    }
+
+    /// Fault-contained [`BatchPipeline::stream`]: like
+    /// [`BatchPipeline::map_windowed_checked`], but over a prepared
+    /// [`Generation`] of seeds. Seed *construction* jobs are not
+    /// contained (they run before the policy applies — wait the
+    /// generation explicitly if builders can fail); the per-scene
+    /// `work` jobs are.
+    pub fn stream_checked<S, T, R, W, C>(
+        &self,
+        generation: Generation<S>,
+        work: W,
+        mut consume: C,
+    ) -> Vec<R>
+    where
+        S: Send + 'static,
+        T: Send + 'static,
+        W: Fn(usize, S) -> T + Sync,
+        C: FnMut(usize, Result<T, SceneError>) -> R,
+    {
+        if self.policy == FaultPolicy::FailFast {
+            return self.stream(generation, work, |i, t| consume(i, Ok(t)));
+        }
+        let work_ref = &work;
+        self.stream(
+            generation,
+            move |i, seed| catch_unwind(AssertUnwindSafe(|| work_ref(i, seed))),
+            |i, r| consume(i, r.map_err(|p| SceneError::from_panic(p.as_ref()))),
         )
     }
 
@@ -328,6 +414,7 @@ impl BatchPipeline {
             None
         };
         for g in 0..n {
+            // lint:allow(no-bare-unwrap: loop refills `next` for every g < n)
             let state = next.take().expect("a handle exists for every generation").wait();
             if g + 1 < n {
                 let b = build.clone();
@@ -440,6 +527,86 @@ mod tests {
             },
         );
         assert_eq!(out, vec![1, 4, 7, 10, 13]);
+    }
+
+    #[test]
+    fn checked_stream_contains_two_panics_in_the_same_window() {
+        // Scenes 2 and 3 land in the same in-flight window (window 2)
+        // and both panic: both payloads must surface as per-scene
+        // errors, every other scene must be consumed normally, and the
+        // pool must stay usable afterwards.
+        let pipe = BatchPipeline::new(4).with_window(2).with_fault_policy(FaultPolicy::Isolate);
+        let out = pipe.map_windowed_checked(
+            8,
+            |i| {
+                if i == 2 {
+                    panic!("scene 2 exploded");
+                }
+                if i == 3 {
+                    panic!("scene 3 exploded");
+                }
+                std::thread::sleep(Duration::from_millis(1));
+                i * 10
+            },
+            |i, r| (i, r),
+        );
+        assert_eq!(out.len(), 8);
+        for (i, r) in &out {
+            match *i {
+                2 | 3 => {
+                    let Err(SceneError::WorkerPanic { payload }) = r else {
+                        panic!("scene {i} should have a contained panic, got {r:?}");
+                    };
+                    assert!(
+                        payload.contains(&format!("scene {i} exploded")),
+                        "payload for scene {i}: {payload}"
+                    );
+                }
+                _ => assert_eq!(r.as_ref().ok(), Some(&(i * 10)), "scene {i}"),
+            }
+        }
+        // The pool is not poisoned and the pipeline is reusable.
+        assert_eq!(pipe.pool().map(5, |i| i * 2), vec![0, 2, 4, 6, 8]);
+        let again = pipe.map_windowed_checked(3, |i| i, |_i, r| r.is_ok());
+        assert_eq!(again, vec![true, true, true]);
+    }
+
+    #[test]
+    fn checked_under_fail_fast_is_the_unchecked_path() {
+        let pipe = BatchPipeline::new(2);
+        assert_eq!(pipe.fault_policy(), FaultPolicy::FailFast);
+        let out = pipe.map_windowed_checked(4, |i| i + 1, |_i, r| r);
+        assert_eq!(out.into_iter().collect::<Result<Vec<_>, _>>(), Ok(vec![1, 2, 3, 4]));
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pipe.map_windowed_checked(
+                4,
+                |i| {
+                    if i == 1 {
+                        panic!("boom");
+                    }
+                    i
+                },
+                |_i, r| r,
+            )
+        }));
+        assert!(r.is_err(), "fail-fast checked must rethrow like the unchecked path");
+        // Seeded generations flow through stream_checked the same way.
+        let generation = pipe.prepare(3, |i| i * 7);
+        let mut isolating = BatchPipeline::new(2);
+        isolating.set_fault_policy(FaultPolicy::Retry);
+        let out = isolating.stream_checked(
+            generation,
+            |i, seed| {
+                if i == 1 {
+                    panic!("seeded scene 1 exploded");
+                }
+                seed + 1
+            },
+            |_i, r| r,
+        );
+        assert_eq!(out[0], Ok(1));
+        assert!(matches!(&out[1], Err(SceneError::WorkerPanic { .. })), "got {:?}", out[1]);
+        assert_eq!(out[2], Ok(15));
     }
 
     #[test]

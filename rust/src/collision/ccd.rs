@@ -18,6 +18,13 @@ pub fn cubic_roots_01(c3: f64, c2: f64, c1: f64, c0: f64) -> Vec<f64> {
     if !(c3.is_finite() && c2.is_finite() && c1.is_finite() && c0.is_finite()) {
         return Vec::new();
     }
+    // Named fault-injection site: an armed `ccd` firing drops the roots
+    // (a conservative miss — the fail-safe re-detection passes and the
+    // thickness margin are the backstops, which is exactly what the
+    // chaos suite exercises). Constant `false` without the feature.
+    if crate::util::faultinject::should_fire(crate::util::faultinject::site::CCD) {
+        return Vec::new();
+    }
     let f = |t: f64| ((c3 * t + c2) * t + c1) * t + c0;
     // Critical points of the cubic: roots of 3c₃t² + 2c₂t + c₁.
     let mut knots = vec![0.0, 1.0];

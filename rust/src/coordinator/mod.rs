@@ -192,7 +192,17 @@ impl Coordinator {
         }
         self.metrics.lock().unwrap().zone_solve_dispatches += 1;
         obs_add("coord.zone_solve_dispatches", 1);
-        let avail = self.available_buckets(&self.runtime.zone_solve_buckets, zone_solve_name);
+        // Named fault-injection site: an armed `coord.dispatch` firing
+        // takes the bucket layer down for this batched solve — no
+        // bucket matches, so every zone routes through the counted
+        // native fallback below. Constant `false` without the feature.
+        let avail = if crate::util::faultinject::should_fire(
+            crate::util::faultinject::site::COORD_DISPATCH,
+        ) {
+            Vec::new()
+        } else {
+            self.available_buckets(&self.runtime.zone_solve_buckets, zone_solve_name)
+        };
         let mut out: Vec<Option<ZoneSolution>> = problems.iter().map(|_| None).collect();
         let mut groups: std::collections::BTreeMap<(usize, usize), Vec<usize>> =
             std::collections::BTreeMap::new();

@@ -17,7 +17,7 @@ use crate::math::sparse::Triplets;
 use crate::math::{euler, Vec3};
 use crate::solver::implicit_euler::{cloth_implicit_step, cloth_implicit_step_in, rigid_step_damped};
 use crate::solver::lcp::merge_zones;
-use crate::solver::zone_solver::{ZoneProblem, ZoneSolution};
+use crate::solver::zone_solver::{SolveOpts, ZoneProblem, ZoneSolution};
 use crate::util::arena::BatchArena;
 use crate::util::json::Json;
 use crate::util::memory::MemCategory;
@@ -27,6 +27,61 @@ use crate::util::telemetry::{self, Trace};
 // are telemetry-gated (None when the registry is disabled), and feed
 // only stage-duration traces — never simulation numerics)
 use std::time::Instant;
+
+/// A contained per-scene failure: what went wrong stepping one scene,
+/// and at which step. This is the error type the fault-containment
+/// layer threads from the solver up through [`Simulation::try_step`],
+/// the lockstep batch, and the pipelined paths, so
+/// [`crate::batch::SceneBatch`] can quarantine the failed scene while
+/// healthy scenes finish (see [`crate::batch::FaultPolicy`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SceneError {
+    /// A state quantity (integrated velocity, candidate or resolved
+    /// coordinates) became non-finite. The failed step was rolled back;
+    /// the committed state is still the last good one.
+    NonFinite { what: &'static str, step: usize },
+    /// A zone solve produced a divergent solution (non-finite
+    /// coordinates or violation) at the given fail-safe pass.
+    ZoneDivergence { step: usize, pass: usize, zones: usize },
+    /// Collision detection / zoning produced non-finite contact data,
+    /// so the zone problems cannot be solved soundly.
+    CcdFailure { step: usize },
+    /// A worker panicked while stepping the scene; the payload is the
+    /// panic message when it was a string.
+    WorkerPanic { payload: String },
+}
+
+impl std::fmt::Display for SceneError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SceneError::NonFinite { what, step } => {
+                write!(f, "non-finite {what} at step {step}")
+            }
+            SceneError::ZoneDivergence { step, pass, zones } => {
+                write!(f, "zone solve diverged at step {step} pass {pass} ({zones} zone(s))")
+            }
+            SceneError::CcdFailure { step } => {
+                write!(f, "collision detection produced non-finite contact data at step {step}")
+            }
+            SceneError::WorkerPanic { payload } => write!(f, "worker panicked: {payload}"),
+        }
+    }
+}
+
+impl std::error::Error for SceneError {}
+
+impl SceneError {
+    /// Convert a caught panic payload (from `catch_unwind`) into the
+    /// typed error, preserving string messages.
+    pub fn from_panic(payload: &(dyn std::any::Any + Send)) -> SceneError {
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        SceneError::WorkerPanic { payload: msg }
+    }
+}
 
 /// How zone-solve backward passes are computed (§6 / Table 2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,6 +120,10 @@ pub struct SimConfig {
     /// Rigid-body angular damping (s⁻¹). Small default prevents
     /// frictionless resting stacks from accumulating spin creep.
     pub angular_damping: f64,
+    /// Fail-safe ladder rungs [`Simulation::step_recovering`] may climb
+    /// after a failed step: 1 = boosted re-solve, 2 = + half-dt
+    /// substeps. 0 disables recovery (a failed step is returned as-is).
+    pub recovery_budget: usize,
 }
 
 impl Default for SimConfig {
@@ -79,6 +138,7 @@ impl Default for SimConfig {
             record_tape: false,
             workers: 1,
             angular_damping: 0.2,
+            recovery_budget: 2,
         }
     }
 }
@@ -97,6 +157,12 @@ pub struct StepStats {
     /// every fail-safe pass this step (solver-side ground truth the
     /// telemetry trace is checked against).
     pub gn_iters: usize,
+    /// Zone solves this step that finished with `converged: false`
+    /// (their solutions were still applied — the fail-safe loop's
+    /// re-detection is the backstop). Mirrored into the
+    /// `solver.zone_nonconverged` obs counter with a rate-limited
+    /// warning; a sustained non-zero rate is a solver-health signal.
+    pub zone_nonconverged: usize,
 }
 
 /// The simulation: owns the system, steps it forward, records the tape.
@@ -151,6 +217,55 @@ pub struct StepState {
     /// Surfaces are built once per step; later passes only update the
     /// candidate positions and refit the BVHs (perf: §Perf L3-1).
     surfs: Option<Vec<crate::collision::Surface>>,
+}
+
+impl StepState {
+    /// Are all integrated velocities and candidate coordinates finite?
+    /// The fallible step paths' commit gate: checked (pure observation,
+    /// no numeric effect) before [`Simulation::commit`] so a poisoned
+    /// step is rolled back instead of committed. Empty stages (e.g.
+    /// before [`Simulation::candidates`]) count as finite.
+    pub fn is_finite(&self) -> bool {
+        all_finite_6(&self.rigid_vhalf)
+            && all_finite_v3(&self.cloth_vhalf)
+            && all_finite_6(&self.rigid_qbar)
+            && all_finite_v3(&self.cloth_xbar)
+    }
+}
+
+/// Committed-state snapshot for the retry ladder's multi-commit
+/// remedies: enough to roll a substep pair back as a unit
+/// (coordinates, velocities, external forces, counters, tape length).
+struct Checkpoint {
+    rigid: Vec<([f64; 6], [f64; 6], Vec3)>,
+    cloth: Vec<(Vec<Vec3>, Vec<Vec3>, Vec<Vec3>)>,
+    steps: usize,
+    last_stats: StepStats,
+    tape_len: usize,
+}
+
+fn all_finite_6(v: &[[f64; 6]]) -> bool {
+    v.iter().all(|a| a.iter().all(|x| x.is_finite()))
+}
+
+fn all_finite_v3(v: &[Vec<Vec3>]) -> bool {
+    v.iter().all(|c| c.iter().all(|p| p.is_finite()))
+}
+
+/// Rate-limited "zone solve(s) finished non-converged" warning: logs the
+/// first occurrence, then only when the process-wide running total
+/// crosses a power of two — O(log N) lines for N events.
+fn warn_nonconverged(n: usize) {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEEN: AtomicU64 = AtomicU64::new(0);
+    let prev = SEEN.fetch_add(n as u64, Ordering::Relaxed);
+    let now = prev + n as u64;
+    if prev == 0 || now.ilog2() > prev.max(1).ilog2() {
+        crate::warnlog!(
+            "{n} zone solve(s) finished non-converged ({now} total); \
+             solutions applied, fail-safe re-detection is the backstop"
+        );
+    }
 }
 
 impl Simulation {
@@ -262,6 +377,202 @@ impl Simulation {
             }
         }
         self.commit(st);
+    }
+
+    /// One fallible, *transactional* step attempt: the staged loop of
+    /// [`Simulation::step`] with cheap soundness gates between stages —
+    /// non-finite integrated velocities or candidates, non-finite zone
+    /// problem data (CCD failure), divergent zone solutions, non-finite
+    /// resolved coordinates. On `Err` nothing was committed: the
+    /// coordinates, velocities, forces, tape, and step counter are
+    /// exactly as before the call (the implicit last-good checkpoint),
+    /// so the caller can retry ([`Simulation::step_recovering`]) or
+    /// quarantine the scene ([`crate::batch::FaultPolicy`]).
+    ///
+    /// The gates are pure observation (reads only), so on the `Ok` path
+    /// the committed state is bitwise-identical to [`Simulation::step`].
+    pub fn try_step(&mut self) -> Result<(), SceneError> {
+        self.try_step_with(&SolveOpts::default())
+    }
+
+    /// [`Simulation::try_step`] with explicit zone-solve tuning — the
+    /// retry ladder's entry point for boosted re-solves.
+    pub fn try_step_with(&mut self, opts: &SolveOpts) -> Result<(), SceneError> {
+        let step = self.steps;
+        let mut st = self.integrate();
+        if !(all_finite_6(&st.rigid_vhalf) && all_finite_v3(&st.cloth_vhalf)) {
+            return Err(SceneError::NonFinite { what: "integrated velocity", step });
+        }
+        self.candidates(&mut st);
+        if !(all_finite_6(&st.rigid_qbar) && all_finite_v3(&st.cloth_xbar)) {
+            return Err(SceneError::NonFinite { what: "candidate positions", step });
+        }
+        for pass in 0..self.cfg.max_resolve_passes {
+            let problems = self.detect_and_zone(&mut st, pass);
+            if problems.is_empty() {
+                break;
+            }
+            if problems.iter().any(|p| !p.is_finite()) {
+                self.abandon_pass(problems, Vec::new());
+                return Err(SceneError::CcdFailure { step });
+            }
+            let solutions = self.solve_zones_with(&problems, opts);
+            if solutions.iter().any(|s| !s.is_finite()) {
+                let zones = problems.len();
+                self.abandon_pass(problems, solutions);
+                return Err(SceneError::ZoneDivergence { step, pass, zones });
+            }
+            let max_disp = self.scatter(&mut st, problems, solutions, pass);
+            if max_disp < 1e-9 {
+                break;
+            }
+        }
+        if !st.is_finite() {
+            return Err(SceneError::NonFinite { what: "resolved coordinates", step });
+        }
+        self.commit(st);
+        Ok(())
+    }
+
+    /// Hand an aborted pass's zone buffers back to the arena. Solutions
+    /// (when present) were never scattered; problems were never retired.
+    /// Earlier committed-to-tape passes of the aborted step are dropped
+    /// with the `StepState` — their Solver charges were already released
+    /// at scatter and never re-charged to Tape, so accounting balances.
+    pub(crate) fn abandon_pass(&self, problems: Vec<ZoneProblem>, solutions: Vec<ZoneSolution>) {
+        for zp in problems {
+            zp.retire(&self.arena);
+        }
+        for sol in solutions {
+            self.arena.park_vec(sol.q);
+            self.arena.park_vec(sol.lambda);
+        }
+    }
+
+    /// [`Simulation::try_step`] plus the solver fail-safe ladder: on a
+    /// failed attempt the step is rolled back to the last-good state
+    /// and retried with escalating remedies, bounded by
+    /// `cfg.recovery_budget` rungs —
+    ///
+    /// 1. re-solve the step with a boosted AL penalty and extra
+    ///    Tikhonov regularization ([`SolveOpts`]), and
+    /// 2. re-run the step as two half-`dt` substeps with the boosted
+    ///    solver (a recovered substep pair advances `steps` by 2 and,
+    ///    when taping, pushes two `h/2` records — the backward handles
+    ///    per-record `h`).
+    ///
+    /// Every escalation is counted in obs: `fault.rollbacks`,
+    /// `fault.retries`, `fault.mu_boosts`, `fault.substeps`,
+    /// `fault.recovered`, `fault.giveups`.
+    pub fn step_recovering(&mut self) -> Result<(), SceneError> {
+        match self.try_step() {
+            Ok(()) => Ok(()),
+            Err(e) => self.recover(e),
+        }
+    }
+
+    fn recover(&mut self, mut last: SceneError) -> Result<(), SceneError> {
+        fn bump(name: &str) {
+            if telemetry::enabled() {
+                telemetry::counter(name).incr();
+            }
+        }
+        bump("fault.rollbacks");
+        let boosted = SolveOpts { mu_scale: 100.0, extra_reg: 1e-6 };
+        let budget = self.cfg.recovery_budget;
+        // Rung 1 — boosted re-solve at full dt.
+        if budget >= 1 {
+            bump("fault.retries");
+            bump("fault.mu_boosts");
+            match self.try_step_with(&boosted) {
+                Ok(()) => {
+                    bump("fault.recovered");
+                    return Ok(());
+                }
+                Err(e) => {
+                    bump("fault.rollbacks");
+                    last = e;
+                }
+            }
+        }
+        // Rung 2 — two half-dt substeps with the boosted solver. The
+        // first substep commits, so an explicit checkpoint guards the
+        // pair: if the second fails, both are rolled back.
+        if budget >= 2 {
+            bump("fault.retries");
+            bump("fault.substeps");
+            let ck = self.checkpoint();
+            let dt = self.cfg.dt;
+            self.cfg.dt = 0.5 * dt;
+            let mut ok = true;
+            for _ in 0..2 {
+                if let Err(e) = self.try_step_with(&boosted) {
+                    last = e;
+                    ok = false;
+                    break;
+                }
+            }
+            self.cfg.dt = dt;
+            if ok {
+                bump("fault.recovered");
+                return Ok(());
+            }
+            bump("fault.rollbacks");
+            self.restore(ck);
+        }
+        bump("fault.giveups");
+        Err(last)
+    }
+
+    /// Snapshot the committed dynamic state (coordinates, velocities,
+    /// external forces, counters, tape length) so a multi-commit remedy
+    /// can be rolled back as a unit.
+    fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            rigid: self.sys.rigids.iter().map(|b| (b.q, b.qdot, b.ext_force)).collect(),
+            cloth: self
+                .sys
+                .cloths
+                .iter()
+                .map(|c| (c.x.clone(), c.v.clone(), c.ext_force.clone()))
+                .collect(),
+            steps: self.steps,
+            last_stats: self.last_stats,
+            tape_len: self.tape.len(),
+        }
+    }
+
+    /// Restore a [`Simulation::checkpoint`]: dynamic state and counters
+    /// roll back, and tape records pushed since are popped and recycled.
+    fn restore(&mut self, ck: Checkpoint) {
+        for (b, (q, qdot, f)) in self.sys.rigids.iter_mut().zip(&ck.rigid) {
+            b.q = *q;
+            b.qdot = *qdot;
+            b.ext_force = *f;
+        }
+        for (c, (x, v, f)) in self.sys.cloths.iter_mut().zip(&ck.cloth) {
+            c.x.clone_from(x);
+            c.v.clone_from(v);
+            c.ext_force.clone_from(f);
+        }
+        self.steps = ck.steps;
+        self.last_stats = ck.last_stats;
+        while self.tape.len() > ck.tape_len {
+            if let Some(rec) = self.tape.pop() {
+                self.arena.uncharge(MemCategory::Tape, rec.bytes);
+                rec.recycle(&self.arena);
+            }
+        }
+    }
+
+    /// Run `n` steps through [`Simulation::step_recovering`], stopping
+    /// at the first unrecovered failure (returned with the 0-based
+    /// iteration it happened on; earlier steps remain committed).
+    pub fn try_run(&mut self, n: usize) -> Result<(), (usize, SceneError)> {
+        for k in 0..n {
+            self.step_recovering().map_err(|e| (k, e))?;
+        }
+        Ok(())
     }
 
     /// Stage 1 — unconstrained velocity update (Eq. 3).
@@ -400,6 +711,7 @@ impl Simulation {
                 self.cfg.thickness,
             ));
         } else {
+            // lint:allow(no-bare-unwrap: the is_none branch above just built it)
             let ss = st.surfs.as_mut().expect("checked above");
             let nr = self.sys.rigids.len();
             for (i, x1) in rigid_x1.into_iter().enumerate() {
@@ -409,6 +721,7 @@ impl Simulation {
                 ss[nr + c].update_candidates(x1.clone(), self.cfg.thickness);
             }
         }
+        // lint:allow(no-bare-unwrap: both branches above leave surfs populated)
         let surfs = st.surfs.as_ref().expect("surfaces built above");
         // Candidate/contact lists come from (and return to) the scene's
         // arena; impacts are bitwise-identical to plain `detect`.
@@ -462,11 +775,23 @@ impl Simulation {
     /// or the scene's thread pool). Batch callers substitute a
     /// cross-scene batched solve here instead.
     pub fn solve_zones(&self, problems: &[ZoneProblem]) -> Vec<ZoneSolution> {
+        self.solve_zones_with(problems, &SolveOpts::default())
+    }
+
+    /// [`Simulation::solve_zones`] with explicit [`SolveOpts`] — the
+    /// retry ladder passes boosted opts here. A zone hook, when
+    /// installed, takes precedence and ignores the opts (it owns its
+    /// own solver configuration).
+    pub fn solve_zones_with(
+        &self,
+        problems: &[ZoneProblem],
+        opts: &SolveOpts,
+    ) -> Vec<ZoneSolution> {
         let t0 = self.obs_begin();
         let sols = if let Some(hook) = &self.zone_hook {
             hook(problems)
         } else {
-            self.pool.map(problems.len(), |i| problems[i].solve())
+            self.pool.map(problems.len(), |i| problems[i].solve_with(opts))
         };
         if t0.is_some() {
             let contacts: usize = problems.iter().map(|p| p.constraints.len()).sum();
@@ -495,9 +820,13 @@ impl Simulation {
             (0, 0)
         };
         let mut pass_gn = 0usize;
+        let mut pass_nonconv = 0usize;
         let mut max_disp: f64 = 0.0;
         for (zp, sol) in problems.into_iter().zip(solutions) {
             pass_gn += sol.gn_iters;
+            if !sol.converged {
+                pass_nonconv += 1;
+            }
             for (a, b) in sol.q.iter().zip(&zp.q0) {
                 max_disp = max_disp.max((a - b).abs());
             }
@@ -516,6 +845,16 @@ impl Simulation {
             }
         }
         st.stats.gn_iters += pass_gn;
+        if pass_nonconv > 0 {
+            // Non-converged solutions used to vanish silently; surface
+            // them (StepStats + obs + rate-limited warning) without
+            // changing what is done with them.
+            st.stats.zone_nonconverged += pass_nonconv;
+            if telemetry::enabled() {
+                telemetry::counter("solver.zone_nonconverged").add(pass_nonconv as u64);
+            }
+            warn_nonconverged(pass_nonconv);
+        }
         if telemetry::enabled() {
             telemetry::counter("solver.gn_iters").add(pass_gn as u64);
             telemetry::counter("solver.zones_solved").add(obs_zones as u64);
@@ -848,6 +1187,65 @@ mod tests {
         assert!((p1 - p0).norm() < 1e-3 * (1.0 + p0.norm()), "Δp = {:?}", p1 - p0);
         // They did collide (velocities changed).
         assert!((sim.sys.rigids[0].linear_velocity().x - 2.0).abs() > 0.5);
+    }
+
+    #[test]
+    fn try_step_trajectory_is_bitwise_step() {
+        // The soundness gates are reads only: a healthy scene stepped
+        // through the fallible path must match the infallible one bit
+        // for bit.
+        let build = || {
+            let mut sys = System::new();
+            sys.add_rigid(ground());
+            sys.add_rigid(
+                RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.8, 0.0)),
+            );
+            Simulation::new(sys, SimConfig::default())
+        };
+        let mut a = build();
+        let mut b = build();
+        for _ in 0..120 {
+            a.step();
+            b.try_step().expect("healthy scene");
+        }
+        for k in 0..6 {
+            assert_eq!(a.sys.rigids[1].q[k].to_bits(), b.sys.rigids[1].q[k].to_bits());
+            assert_eq!(a.sys.rigids[1].qdot[k].to_bits(), b.sys.rigids[1].qdot[k].to_bits());
+        }
+        assert_eq!(a.steps, b.steps);
+    }
+
+    #[test]
+    fn try_step_rolls_back_on_nonfinite_and_ladder_gives_up() {
+        let mut sys = System::new();
+        sys.add_rigid(ground());
+        sys.add_rigid(
+            RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 1.0, 0.0)),
+        );
+        let mut sim = Simulation::new(sys, SimConfig::default());
+        sim.run(3);
+        let q_before = sim.sys.rigids[1].q;
+        let qdot_before = sim.sys.rigids[1].qdot;
+        let steps_before = sim.steps;
+        // Poison the external force: every integrate now produces
+        // non-finite velocities, so no remedy can help.
+        sim.sys.rigids[1].ext_force = Vec3::new(f64::NAN, 0.0, 0.0);
+        let err = sim.try_step().expect_err("NaN force must fail the step");
+        assert!(matches!(err, SceneError::NonFinite { step, .. } if step == steps_before));
+        // Nothing committed: state and counters are the last good ones.
+        assert_eq!(sim.sys.rigids[1].q, q_before);
+        assert_eq!(sim.sys.rigids[1].qdot, qdot_before);
+        assert_eq!(sim.steps, steps_before);
+        // The full ladder also fails (the poison persists), still
+        // without committing anything.
+        let err = sim.step_recovering().expect_err("ladder cannot fix a poisoned input");
+        assert!(matches!(err, SceneError::NonFinite { .. }));
+        assert_eq!(sim.sys.rigids[1].q, q_before);
+        assert_eq!(sim.steps, steps_before);
+        // Clearing the poison makes the same scene step again.
+        sim.sys.rigids[1].ext_force = Vec3::default();
+        sim.step_recovering().expect("healthy again");
+        assert_eq!(sim.steps, steps_before + 1);
     }
 
     #[test]

@@ -27,6 +27,13 @@ pub fn parse_obj(text: &str) -> Result<TriMesh> {
                         .parse()
                         .with_context(|| format!("line {}: bad vertex coord", ln + 1))?;
                 }
+                // `"inf"`/`"NaN"` parse as valid f64s, but a non-finite
+                // vertex poisons every downstream mass/inertia/BVH
+                // computation — reject it here with the line number
+                // instead of letting NaNs leak into the engine.
+                if !(c[0].is_finite() && c[1].is_finite() && c[2].is_finite()) {
+                    bail!("line {}: non-finite vertex coordinate", ln + 1);
+                }
                 verts.push(Vec3::new(c[0], c[1], c[2]));
             }
             Some("f") => {
@@ -125,6 +132,19 @@ mod tests {
         assert!(parse_obj("f 1 2 3\n").is_err()); // no verts
         assert!(parse_obj("v 0 0\n").is_err()); // short vertex
         assert!(parse_obj("v 0 0 0\nf 0 1 2\n").is_err()); // 0-based
+    }
+
+    #[test]
+    fn rejects_non_finite_coords_with_line_context() {
+        // Rust's f64 parser accepts these spellings, so without the
+        // explicit gate they'd flow straight into mass properties.
+        for bad in ["inf", "-inf", "NaN", "infinity"] {
+            let text = format!("v 0 0 0\nv 1 {bad} 0\nv 0 1 0\nf 1 2 3\n");
+            let err = parse_obj(&text).expect_err(bad);
+            let msg = format!("{err:#}");
+            assert!(msg.contains("line 2"), "error should name the line: {msg}");
+            assert!(msg.contains("non-finite"), "error should say why: {msg}");
+        }
     }
 
     #[test]

@@ -142,6 +142,7 @@ pub fn rigid_step_damped(
             }
             mr.lu_solve(&rhs)
         })
+        // lint:allow(no-bare-unwrap: regularized SPD mass matrix cannot be singular)
         .expect("rigid mass matrix unsolvable");
     [sol[0], sol[1], sol[2], sol[3], sol[4], sol[5]]
 }

@@ -63,6 +63,28 @@ pub struct ZoneProblem {
     pub constraints: Vec<Constraint>,
 }
 
+/// Tuning knobs for a zone solve — the engine's fail-safe retry ladder
+/// re-solves diverged zones with these escalated. [`SolveOpts::default`]
+/// selects the exact arithmetic of [`ZoneProblem::solve`]: the default
+/// path takes no extra branches through boosted code, so un-escalated
+/// solves are bitwise-identical to a tree without the knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOpts {
+    /// Multiplies the initial AL penalty μ₀ *and* its growth cap.
+    /// 1.0 = the stock schedule.
+    pub mu_scale: f64,
+    /// Extra Tikhonov regularization added to every diagonal entry of
+    /// M̂ for the duration of the solve (stabilizes near-singular zone
+    /// Hessians). 0.0 = the stock matrix, untouched.
+    pub extra_reg: f64,
+}
+
+impl Default for SolveOpts {
+    fn default() -> SolveOpts {
+        SolveOpts { mu_scale: 1.0, extra_reg: 0.0 }
+    }
+}
+
 /// Result of a zone solve.
 #[derive(Clone, Debug)]
 pub struct ZoneSolution {
@@ -79,6 +101,18 @@ pub struct ZoneSolution {
     pub gn_iters: usize,
     /// max(0, −C_j) at the solution.
     pub max_violation: f64,
+}
+
+impl ZoneSolution {
+    /// Is the solution numerically sound — finite coordinates,
+    /// multipliers, and violation? `false` marks a divergent solve the
+    /// engine's fallible paths must not scatter (the `zone.solve`
+    /// injection site forces this by setting an infinite violation).
+    pub fn is_finite(&self) -> bool {
+        self.max_violation.is_finite()
+            && self.q.iter().all(|x| x.is_finite())
+            && self.lambda.iter().all(|x| x.is_finite())
+    }
 }
 
 impl ZoneProblem {
@@ -116,6 +150,7 @@ impl ZoneProblem {
             offsets.push(n);
             n += e.dofs();
         }
+        // lint:allow(no-bare-unwrap: every constraint entity is a zone member by construction)
         let slot = |e: &Entity| zone.entities.iter().position(|x| x == e).unwrap();
         // Stacked q0 and block mass.
         let mut q0 = arena.loan_f64_zeroed(n, MemCategory::Solver);
@@ -180,6 +215,7 @@ impl ZoneProblem {
                     match *t {
                         Term::RigidVert { ent, w, p0 } => {
                             let off = self.offsets[ent];
+                            // lint:allow(no-bare-unwrap: slice is exactly 6 wide)
                             let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
                             v += w * c.n.dot(euler::transform_point(&qb, p0));
                         }
@@ -211,6 +247,7 @@ impl ZoneProblem {
                 match *t {
                     Term::RigidVert { ent, w, p0 } => {
                         let off = self.offsets[ent];
+                        // lint:allow(no-bare-unwrap: slice is exactly 6 wide)
                         let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
                         let jf = euler::jacobian(&qb, p0);
                         for col in 0..6 {
@@ -238,10 +275,49 @@ impl ZoneProblem {
     /// of reallocating ~m×n + n² doubles per Gauss–Newton iteration.
     /// Arithmetic is unchanged, so solutions stay bitwise-identical.
     pub fn solve(&self) -> ZoneSolution {
+        self.solve_with(&SolveOpts::default())
+    }
+
+    /// [`ZoneProblem::solve`] with explicit [`SolveOpts`]. With default
+    /// opts this *is* `solve` (bit for bit); the engine's retry ladder
+    /// passes boosted opts when a zone diverged.
+    ///
+    /// Fault injection: when the `faultinject` feature is on and the
+    /// `zone.solve` site is armed, the (otherwise real) solution is
+    /// reported as diverged (`converged: false`, infinite violation) so
+    /// recovery paths can be driven deterministically.
+    pub fn solve_with(&self, opts: &SolveOpts) -> ZoneSolution {
+        let mut sol = self.solve_impl(opts);
+        if crate::util::faultinject::should_fire(crate::util::faultinject::site::ZONE_SOLVE) {
+            sol.converged = false;
+            sol.max_violation = f64::INFINITY;
+        }
+        sol
+    }
+
+    fn solve_impl(&self, opts: &SolveOpts) -> ZoneSolution {
         let m = self.constraints.len();
         let mut q = self.q0.clone();
         let mut lambda = vec![0.0; m];
+        // Boosted-path state is built only when the knobs are actually
+        // turned: the default path runs the stock arithmetic on the
+        // stock matrix with no extra float ops.
+        let boosted_mass = if opts.extra_reg > 0.0 {
+            let mut mm = self.mass.clone();
+            for i in 0..self.n {
+                mm[(i, i)] += opts.extra_reg;
+            }
+            Some(mm)
+        } else {
+            None
+        };
+        let mass = boosted_mass.as_ref().unwrap_or(&self.mass);
         let mut mu = 10.0 * self.mass_scale();
+        let mut mu_cap = 1e7 * self.mass_scale();
+        if opts.mu_scale != 1.0 {
+            mu *= opts.mu_scale;
+            mu_cap *= opts.mu_scale;
+        }
         let mut prev_viol = f64::MAX;
         let tol = 1e-10;
         let max_outer = 40;
@@ -259,7 +335,7 @@ impl ZoneProblem {
                 self.jacobian_into(&q, &mut jac);
                 // grad = M(q−q0) − Jᵀ·max(0, λ − μ·c)
                 dq.fill_with(q.iter().zip(&self.q0).map(|(a, b)| a - b));
-                self.mass.matvec_into(&dq, grad.as_vec());
+                mass.matvec_into(&dq, grad.as_vec());
                 let mut active = vec![false; m];
                 for j in 0..m {
                     let force = (lambda[j] - mu * c[j]).max(0.0);
@@ -271,7 +347,7 @@ impl ZoneProblem {
                     }
                 }
                 // H = M + μ·Σ_active JᵀJ
-                h.copy_from(&self.mass);
+                h.copy_from(mass);
                 for j in 0..m {
                     if active[j] {
                         for a in 0..self.n {
@@ -301,7 +377,7 @@ impl ZoneProblem {
                     let mut d = scratch::f64s(0, 0.0);
                     d.fill_with(qq.iter().zip(&self.q0).map(|(a, b)| a - b));
                     let mut md = scratch::f64s(0, 0.0);
-                    self.mass.matvec_into(&d, md.as_vec());
+                    mass.matvec_into(&d, md.as_vec());
                     let mut val = 0.5 * crate::math::dense::dot(&d, &md);
                     for (j, &cj) in cs.iter().enumerate() {
                         let t = lambda[j] - mu * cj;
@@ -358,7 +434,7 @@ impl ZoneProblem {
                 // constraint sets drives the solution arbitrarily far
                 // from q — accepting a small residual violation is the
                 // fail-safe loop's job, not the penalty's.
-                mu = (mu * 4.0).min(1e7 * self.mass_scale());
+                mu = (mu * 4.0).min(mu_cap);
             }
             prev_viol = viol;
         }
@@ -372,6 +448,25 @@ impl ZoneProblem {
             gn_iters,
             max_violation: viol,
         }
+    }
+
+    /// Is the problem's CCD-derived data numerically sound — finite
+    /// stacked candidates and finite constraint rows (normals, weights,
+    /// rest positions, offsets)? `false` means collision detection
+    /// produced garbage and a solve would be meaningless
+    /// ([`crate::engine::SceneError::CcdFailure`]). The mass matrix is
+    /// body-derived, not CCD-derived, and is not scanned.
+    pub fn is_finite(&self) -> bool {
+        self.q0.iter().all(|x| x.is_finite())
+            && self.constraints.iter().all(|c| {
+                c.n.is_finite()
+                    && c.fixed_part.is_finite()
+                    && c.delta.is_finite()
+                    && c.terms.iter().all(|t| match *t {
+                        Term::RigidVert { w, p0, .. } => w.is_finite() && p0.is_finite(),
+                        Term::ClothNode { w, .. } => w.is_finite(),
+                    })
+            })
     }
 
     /// Characteristic mass for scaling penalties/tolerances.
@@ -554,6 +649,32 @@ mod tests {
         // Multipliers: at least one active contact, all nonnegative.
         assert!(sol.lambda.iter().any(|&l| l > 0.0));
         assert!(sol.lambda.iter().all(|&l| l >= 0.0));
+    }
+
+    #[test]
+    fn solve_with_default_opts_is_bitwise_solve() {
+        let (_sys, zp) = penetrating_cube_problem();
+        let a = zp.solve();
+        let b = zp.solve_with(&SolveOpts::default());
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.lambda, b.lambda);
+        assert_eq!(a.gn_iters, b.gn_iters);
+        assert_eq!(a.max_violation.to_bits(), b.max_violation.to_bits());
+    }
+
+    #[test]
+    fn boosted_opts_still_resolve_penetration() {
+        // The retry ladder's escalated solve must remain a valid solver:
+        // same constraint satisfaction, same qualitative answer.
+        let (_sys, zp) = penetrating_cube_problem();
+        let sol = zp.solve_with(&SolveOpts { mu_scale: 100.0, extra_reg: 1e-6 });
+        let c = zp.eval(&sol.q);
+        for (j, cj) in c.iter().enumerate() {
+            assert!(*cj > -1e-6, "constraint {j}: {cj}");
+        }
+        let ent_y = zp.entities.iter().position(|e| matches!(e, Entity::Rigid(1))).unwrap();
+        let y = sol.q[zp.offsets[ent_y] + 4];
+        assert!(y > 0.49 && y < 0.52, "resolved y = {y}");
     }
 
     #[test]

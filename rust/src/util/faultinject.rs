@@ -1,0 +1,290 @@
+//! Deterministic, seeded fault injection for the recovery paths.
+//!
+//! The engine's fault-containment layer (engine retry ladder, per-scene
+//! quarantine in `batch`, coordinator dispatch fallback, pool panic
+//! drain) only runs when something goes wrong — which healthy scenes
+//! never do. This module makes "something goes wrong" a reproducible,
+//! schedulable event so tests can drive every recovery path on demand.
+//!
+//! A handful of *named sites* are compiled into the hot paths:
+//!
+//! | site              | location                               | effect when armed            |
+//! |-------------------|----------------------------------------|------------------------------|
+//! | `zone.solve`      | `ZoneProblem::solve` tail              | solution reported diverged   |
+//! | `ccd`             | `collision::ccd::cubic_roots_01`       | conservative miss (no roots) |
+//! | `coord.dispatch`  | `Coordinator::zone_solve_batch` entry  | buckets down → native path   |
+//! | `pool.job`        | `Pool::submit` detached-job body       | job panics                   |
+//!
+//! Everything here is gated on the `faultinject` cargo feature. Without
+//! it, [`should_fire`] is a `const false` that the optimizer deletes,
+//! so release builds carry **zero** overhead and all trajectories stay
+//! bitwise-identical to a tree without the hooks. With the feature on
+//! but no plan installed, the cost is one relaxed atomic load per site
+//! visit.
+//!
+//! Schedules are deterministic: a [`FaultPlan`] arms a site either at
+//! explicit 0-based invocation indices ([`FaultPlan::arm_at`]) or with
+//! a seeded per-site PCG stream ([`FaultPlan::arm_prob`]), so a given
+//! (plan, workload) pair always fires at the same invocations.
+//!
+//! ```text
+//! let mut plan = FaultPlan::new(42);
+//! plan.arm_at(site::ZONE_SOLVE, &[0, 3]); // 1st and 4th zone solve fail
+//! faultinject::install(plan);
+//! // ... run the workload, assert fault.* counters ...
+//! faultinject::clear();
+//! ```
+
+/// Canonical site names, so call sites and tests can't drift apart on
+/// spelling. The strings (not the constants) are the identity: a plan
+/// armed with `"zone.solve"` matches [`site::ZONE_SOLVE`].
+pub mod site {
+    /// Zone solver tail — an armed firing reports the solution as
+    /// diverged (`converged: false`, violation forced above tolerance).
+    pub const ZONE_SOLVE: &str = "zone.solve";
+    /// CCD cubic root finder — an armed firing drops the candidate
+    /// roots (a conservative miss).
+    pub const CCD: &str = "ccd";
+    /// Coordinator batched-solve dispatch — an armed firing takes the
+    /// bucket layer down for that call, so every zone routes through
+    /// the counted native fallback.
+    pub const COORD_DISPATCH: &str = "coord.dispatch";
+    /// Pool detached-job body — an armed firing panics inside the job
+    /// so `JobHandle::wait` rethrows.
+    pub const POOL_JOB: &str = "pool.job";
+}
+
+#[cfg(feature = "faultinject")]
+mod imp {
+    use crate::util::rng::Pcg32;
+    use crate::util::telemetry as obs;
+    use std::collections::BTreeMap;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+
+    /// Fast-path gate: one relaxed load decides "is any plan armed at
+    /// all" before touching the mutex, so un-armed feature builds stay
+    /// cheap on the hot paths.
+    static ARMED: AtomicBool = AtomicBool::new(false);
+
+    static PLAN: Mutex<Option<PlanState>> = Mutex::new(None);
+
+    enum Schedule {
+        /// Fire at these 0-based invocation indices of the site.
+        At(Vec<u64>),
+        /// Fire each invocation independently with probability `p`,
+        /// drawn from a per-site PCG stream (deterministic per plan).
+        Prob { rng: Pcg32, p: f64 },
+    }
+
+    struct SiteState {
+        schedule: Schedule,
+        /// Invocations seen (armed or not, fired or not).
+        visits: u64,
+        /// Invocations that fired.
+        fired: u64,
+    }
+
+    struct PlanState {
+        sites: BTreeMap<&'static str, SiteState>,
+    }
+
+    /// A deterministic injection schedule: which sites fail, and at
+    /// which of their invocations. Build one, [`install`](super::install)
+    /// it, run the workload, [`clear`](super::clear).
+    pub struct FaultPlan {
+        seed: u64,
+        sites: BTreeMap<&'static str, Schedule>,
+    }
+
+    impl FaultPlan {
+        /// New empty plan. `seed` feeds the per-site PCG streams used
+        /// by [`arm_prob`](Self::arm_prob); index-armed sites ignore it.
+        pub fn new(seed: u64) -> Self {
+            FaultPlan { seed, sites: BTreeMap::new() }
+        }
+
+        /// Arm `site` to fire at exactly these 0-based invocation
+        /// indices (site-local count, starting from installation).
+        pub fn arm_at(&mut self, site: &'static str, indices: &[u64]) -> &mut Self {
+            self.sites.insert(site, Schedule::At(indices.to_vec()));
+            self
+        }
+
+        /// Arm `site` to fire each invocation independently with
+        /// probability `p`, from a stream seeded by (plan seed, site
+        /// name) — same plan, same workload ⇒ same firings.
+        pub fn arm_prob(&mut self, site: &'static str, p: f64) -> &mut Self {
+            let rng = Pcg32::with_stream(self.seed, fnv1a(site));
+            self.sites.insert(site, Schedule::Prob { rng, p });
+            self
+        }
+    }
+
+    fn fnv1a(s: &str) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in s.bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Install `plan` process-wide, replacing any previous plan and
+    /// resetting all per-site counters.
+    pub fn install(plan: FaultPlan) {
+        let state = PlanState {
+            sites: plan
+                .sites
+                .into_iter()
+                .map(|(k, schedule)| (k, SiteState { schedule, visits: 0, fired: 0 }))
+                .collect(),
+        };
+        let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        ARMED.store(!state.sites.is_empty(), Ordering::Release);
+        *slot = Some(state);
+    }
+
+    /// Remove the installed plan; every site goes quiet again.
+    pub fn clear() {
+        let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        ARMED.store(false, Ordering::Release);
+        *slot = None;
+    }
+
+    /// Should this invocation of `site` fail? Increments the site's
+    /// visit counter; on a firing, bumps the `fault.injected` obs
+    /// counter too. Always `false` when no plan is installed or the
+    /// plan doesn't arm `site`.
+    pub fn should_fire(site: &'static str) -> bool {
+        if !ARMED.load(Ordering::Acquire) {
+            return false;
+        }
+        let mut slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        let Some(state) = slot.as_mut() else { return false };
+        let Some(s) = state.sites.get_mut(site) else { return false };
+        let idx = s.visits;
+        s.visits += 1;
+        let fire = match &mut s.schedule {
+            Schedule::At(indices) => indices.contains(&idx),
+            Schedule::Prob { rng, p } => rng.uniform() < *p,
+        };
+        if fire {
+            s.fired += 1;
+            if obs::enabled() {
+                obs::counter("fault.injected").incr();
+            }
+        }
+        fire
+    }
+
+    /// How many times `site` has fired under the installed plan
+    /// (0 if none installed).
+    pub fn fired_count(site: &'static str) -> u64 {
+        let slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        slot.as_ref().and_then(|st| st.sites.get(site)).map(|s| s.fired).unwrap_or(0)
+    }
+
+    /// How many times `site` has been visited under the installed plan
+    /// (0 if none installed).
+    pub fn visit_count(site: &'static str) -> u64 {
+        let slot = PLAN.lock().unwrap_or_else(|e| e.into_inner());
+        slot.as_ref().and_then(|st| st.sites.get(site)).map(|s| s.visits).unwrap_or(0)
+    }
+}
+
+#[cfg(feature = "faultinject")]
+pub use imp::{clear, fired_count, install, should_fire, visit_count, FaultPlan};
+
+/// No-feature stub: never fires, and the constant `false` lets the
+/// optimizer delete the branch (and often the whole site) — release
+/// builds are bitwise-identical to a tree without the hooks.
+#[cfg(not(feature = "faultinject"))]
+#[inline(always)]
+pub fn should_fire(_site: &'static str) -> bool {
+    false
+}
+
+#[cfg(all(test, not(feature = "faultinject")))]
+mod noop_tests {
+    #[test]
+    fn stub_never_fires() {
+        for _ in 0..4 {
+            assert!(!super::should_fire(super::site::ZONE_SOLVE));
+            assert!(!super::should_fire(super::site::POOL_JOB));
+        }
+    }
+}
+
+#[cfg(all(test, feature = "faultinject"))]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    // The plan is process-global; tests that install one must not
+    // interleave. Integration tests serialize the same way.
+    static SEQ: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        SEQ.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn unarmed_site_never_fires() {
+        let _g = locked();
+        let mut plan = FaultPlan::new(1);
+        plan.arm_at(site::CCD, &[0]);
+        install(plan);
+        assert!(!should_fire(site::ZONE_SOLVE));
+        assert!(should_fire(site::CCD));
+        clear();
+        assert!(!should_fire(site::CCD));
+    }
+
+    #[test]
+    fn index_schedule_fires_at_exact_invocations() {
+        let _g = locked();
+        let mut plan = FaultPlan::new(7);
+        plan.arm_at(site::ZONE_SOLVE, &[1, 3]);
+        install(plan);
+        let fired: Vec<bool> = (0..5).map(|_| should_fire(site::ZONE_SOLVE)).collect();
+        assert_eq!(fired, vec![false, true, false, true, false]);
+        assert_eq!(fired_count(site::ZONE_SOLVE), 2);
+        assert_eq!(visit_count(site::ZONE_SOLVE), 5);
+        clear();
+    }
+
+    #[test]
+    fn prob_schedule_is_deterministic_per_seed() {
+        let _g = locked();
+        let run = |seed: u64| -> Vec<bool> {
+            let mut plan = FaultPlan::new(seed);
+            plan.arm_prob(site::POOL_JOB, 0.5);
+            install(plan);
+            let v = (0..32).map(|_| should_fire(site::POOL_JOB)).collect();
+            clear();
+            v
+        };
+        let a = run(42);
+        let b = run(42);
+        let c = run(43);
+        assert_eq!(a, b, "same seed must reproduce the same schedule");
+        assert_ne!(a, c, "different seeds should (overwhelmingly) differ");
+        assert!(a.iter().any(|&x| x) && a.iter().any(|&x| !x));
+    }
+
+    #[test]
+    fn reinstall_resets_counters() {
+        let _g = locked();
+        let mut plan = FaultPlan::new(3);
+        plan.arm_at(site::CCD, &[0]);
+        install(plan);
+        assert!(should_fire(site::CCD));
+        let mut plan = FaultPlan::new(3);
+        plan.arm_at(site::CCD, &[0]);
+        install(plan);
+        assert_eq!(visit_count(site::CCD), 0);
+        assert!(should_fire(site::CCD), "counter reset ⇒ index 0 fires again");
+        clear();
+    }
+}

@@ -12,6 +12,7 @@
 pub mod arena;
 pub mod bench;
 pub mod cli;
+pub mod faultinject;
 pub mod json;
 pub mod logging;
 pub mod memory;

@@ -650,6 +650,16 @@ impl Pool {
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
     {
+        // Named fault-injection site: an armed `pool.job` firing panics
+        // inside the job body, exercising the panic-at-wait drain paths.
+        // Without the `faultinject` feature `should_fire` is a constant
+        // `false` and this wrapper folds away.
+        let f = move || {
+            if crate::util::faultinject::should_fire(crate::util::faultinject::site::POOL_JOB) {
+                panic!("injected fault: pool.job");
+            }
+            f()
+        };
         match &self.backend {
             Backend::Inline => match catch_unwind(AssertUnwindSafe(f)) {
                 Ok(t) => JobHandle {

@@ -50,6 +50,12 @@ pub const RULES: &[Rule] = &[
         name: "static-mut",
         desc: "no `static mut` — use atomics, OnceLock, or thread-locals",
     },
+    Rule {
+        name: "no-bare-unwrap",
+        desc: "no bare `.unwrap()`/`.expect(...)` in engine/solver/batch non-test code — \
+               these paths feed per-scene fault containment; return a typed error \
+               (`SceneError`) or justify the invariant with a lint:allow",
+    },
 ];
 
 /// Directories where HashMap/HashSet *presence* is flagged (the PR-2
@@ -57,6 +63,13 @@ pub const RULES: &[Rule] = &[
 /// ordering). Elsewhere hash containers are fine.
 const HASH_SCOPED_DIRS: &[&str] =
     &["/collision/", "/solver/", "/coordinator/", "/engine/", "/batch/"];
+
+/// Directories where bare `.unwrap()`/`.expect(` is flagged: the fault
+/// containment layer (engine step, solvers, batch orchestration) must
+/// surface failures as typed `SceneError`s, not process aborts — a
+/// panic in one scene otherwise escapes per-scene isolation unless a
+/// `catch_unwind` happens to be in the way.
+const UNWRAP_SCOPED_DIRS: &[&str] = &["/engine/", "/solver/", "/batch/"];
 
 /// Files allowed to read wall clocks: the observability layer itself.
 const WALLCLOCK_EXEMPT: &[&str] = &["util/timer.rs", "util/telemetry.rs"];
@@ -147,6 +160,20 @@ pub fn check_file(rel: &str, source: &str) -> Vec<Violation> {
 
         if !allowed("static-mut") && static_mut_hit(line) {
             push("static-mut", i, "`static mut` is banned; use atomics or OnceLock".into());
+        }
+
+        if !test_line
+            && !allowed("no-bare-unwrap")
+            && UNWRAP_SCOPED_DIRS.iter().any(|d| rel.contains(d))
+            && (line.contains(".unwrap()") || line.contains(".expect("))
+        {
+            push(
+                "no-bare-unwrap",
+                i,
+                "bare unwrap/expect in a fault-contained path; return a typed error \
+                 (`SceneError`) or justify the invariant"
+                    .into(),
+            );
         }
     }
     out
@@ -590,6 +617,37 @@ mod tests {
     }
 
     #[test]
+    fn no_bare_unwrap_fires_in_fault_contained_dirs() {
+        let bad = src(&["fn f(x: Option<u32>) -> u32 {", "    x.unwrap()", "}"]);
+        assert_eq!(rules_fired("rust/src/engine/mod.rs", &bad), vec!["no-bare-unwrap"]);
+        let exp = "fn f(x: Option<u32>) -> u32 { x.expect(\"caller sets x\") }\n";
+        assert_eq!(rules_fired("rust/src/solver/lcp.rs", exp), vec!["no-bare-unwrap"]);
+        // Outside the scoped dirs the same code is fine.
+        assert!(rules_fired("rust/src/util/pool.rs", &bad).is_empty());
+        // Recoverable forms don't trip the substring match.
+        let ok = "fn f(x: Option<u32>) -> u32 { x.unwrap_or_else(|| 0) }\n";
+        assert!(rules_fired("rust/src/batch/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn no_bare_unwrap_exempts_tests_and_allows() {
+        let tests = src(&[
+            "#[cfg(test)]",
+            "mod tests {",
+            "    fn t(x: Option<u32>) -> u32 { x.unwrap() }",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/batch/pipeline.rs", &tests).is_empty());
+        let allowed = src(&[
+            "fn f(x: Option<u32>) -> u32 {",
+            "    // lint:allow(no-bare-unwrap: invariant — x is Some by construction)",
+            "    x.unwrap()",
+            "}",
+        ]);
+        assert!(rules_fired("rust/src/engine/mod.rs", &allowed).is_empty());
+    }
+
+    #[test]
     fn line_allow_suppresses_on_same_and_previous_line() {
         let same = src(&[
             "fn f(a: f64, b: f64) {",
@@ -700,6 +758,7 @@ mod tests {
             "wallclock",
             "safety-comment",
             "static-mut",
+            "no-bare-unwrap",
         ];
         for name in emitted {
             assert!(RULES.iter().any(|r| r.name == name), "missing catalog entry: {name}");
