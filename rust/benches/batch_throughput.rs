@@ -2,9 +2,10 @@
 //! stepping the same scenes sequentially, across batch sizes, plus the
 //! persistent-pool vs spawn-per-call comparison that gates the
 //! worker-pool runtime and the pipelined-vs-blocking comparison that
-//! gates `batch::pipeline` (results merged into `BENCH_pool.json` —
-//! sections `batch_throughput` and `pipeline` — for perf trajectory
-//! tracking; run with `--test` for the CI smoke config).
+//! gates `batch::pipeline`, and the incremental-collision refit vs
+//! rebuild-every-step headline (results merged into `BENCH_pool.json`
+//! — sections `batch_throughput`, `pipeline`, and `refit` — for perf
+//! trajectory tracking; run with `--test` for the CI smoke config).
 use diffsim::batch::pipeline::BatchPipeline;
 use diffsim::batch::SceneBatch;
 use diffsim::bodies::{RigidBody, System};
@@ -190,6 +191,38 @@ fn main() {
         pp.set(label, row);
     }
     merge_section("BENCH_pool.json", "pipeline", pp);
+
+    // ---- incremental refit vs rebuild-every-step (→ BENCH_pool.json#refit) ----
+    // Headline for the incremental collision pipeline: forward-only
+    // lockstep steps/sec with the cross-step cache (BVH refits + cull
+    // cache) versus forcing a full surface rebuild every step, on the
+    // acceptance configs (4 scenes × 64 steps small, 16 × 25
+    // contact-rich). Both arms walk bitwise-identical trajectories, so
+    // the ratio is pure pipeline overhead.
+    let mut rj = Json::obj();
+    rj.set("workers", workers);
+    for (label, base, scenes, steps) in configs {
+        let pool = Pool::shared(workers);
+        let refit_cfg = SimConfig { workers, dt: 1.0 / 100.0, ..Default::default() };
+        let rebuild_cfg = SimConfig { incremental_collision: false, ..refit_cfg.clone() };
+        let (t_refit, _) = time_lockstep(base, &refit_cfg, *scenes, *steps, pool_iters, &pool);
+        let (t_rebuild, _) =
+            time_lockstep(base, &rebuild_cfg, *scenes, *steps, pool_iters, &pool);
+        let sps_refit = (*scenes * *steps) as f64 / t_refit.max(1e-12);
+        let sps_rebuild = (*scenes * *steps) as f64 / t_rebuild.max(1e-12);
+        let speedup = t_rebuild / t_refit.max(1e-12);
+        b.metric(&format!("{label}/refit_steps_per_s"), sps_refit, "steps/s");
+        b.metric(&format!("{label}/rebuild_steps_per_s"), sps_rebuild, "steps/s");
+        b.metric(&format!("{label}/refit_speedup"), speedup, "x");
+        let mut row = Json::obj();
+        row.set("scenes", *scenes)
+            .set("steps", *steps)
+            .set("refit_steps_per_s", sps_refit)
+            .set("rebuild_steps_per_s", sps_rebuild)
+            .set("refit_speedup", speedup);
+        rj.set(label, row);
+    }
+    merge_section("BENCH_pool.json", "refit", rj);
 
     // ---- trace smoke (→ BENCH_trace.json) ----
     // Lockstep a 2-scene batch with the registry enabled and a JSONL

@@ -150,6 +150,20 @@ fn main() {
     b.report("bvh/refit 1280 faces", &time(3, scale(100), || {
         bvh.refit(&aabbs);
     }));
+    // The per-step incremental refresh: copy new positions into the
+    // surface in place, recompute face AABBs, refit the tree — zero
+    // allocation (the `&[Vec3]` signature is what keeps the cloth path
+    // from cloning x1 every pass).
+    let mut ssys = System::new();
+    ssys.add_rigid(RigidBody::from_mesh(icosphere(1.0, 3), 1.0));
+    let sx: Vec<Vec<Vec3>> = ssys.rigids.iter().map(|r| r.world_verts()).collect();
+    let mut surf = surfaces_from_system(&ssys, &sx, &[], 1e-3)
+        .into_iter()
+        .next()
+        .expect("one rigid => one surface");
+    b.report("surface/update_candidates 1280 faces", &time(3, scale(100), || {
+        surf.update_candidates(&sx[0], 1e-3);
+    }));
 
     // Full detect() on a 27-cube pile.
     let mut sys = System::new();

@@ -20,6 +20,14 @@
 //! order, so lockstep trajectories are bitwise-identical to sequential
 //! per-scene [`crate::engine::Simulation::run`].
 //!
+//! The incremental collision pipeline composes transparently: each
+//! scene's persistent [`crate::collision::CollisionState`] is adopted
+//! inside its own `detect_and_zone` call (the parked slot is a per-scene
+//! mutex precisely so this stage can run through `&Simulation` from
+//! worker threads) and handed back at its `commit`. A scene that fails
+//! any stage drops its step state — and with it the adopted cache — so
+//! quarantined scenes restart detection cold, never from stale surfaces.
+//!
 //! Memory: each stage runs through the scene's own
 //! [`crate::engine::Simulation`] primitives, so the batch's shared
 //! [`BatchArena`](crate::util::arena::BatchArena) is exercised from

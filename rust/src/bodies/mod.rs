@@ -14,7 +14,7 @@ use crate::math::Vec3;
 
 /// Identifies one surface node in the system: either a vertex of a rigid
 /// body's mesh or a cloth node. This is the unit of collision handling.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum NodeRef {
     Rigid { body: u32, vert: u32 },
     Cloth { cloth: u32, node: u32 },

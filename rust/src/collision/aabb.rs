@@ -76,6 +76,28 @@ impl Aabb {
         self.lo.x > self.hi.x
     }
 
+    /// Surface area (2·(xy + yz + zx)); 0 for empty boxes. The BVH quality
+    /// heuristic sums these per node to track refit-induced inflation.
+    pub fn surface_area(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let e = self.extent();
+        2.0 * (e.x * e.y + e.y * e.z + e.z * e.x)
+    }
+
+    /// True iff `o` lies entirely inside `self` (empty `o` is contained
+    /// everywhere). Used by the cull cache to validate padded snapshots.
+    pub fn contains(&self, o: &Aabb) -> bool {
+        o.is_empty()
+            || (self.lo.x <= o.lo.x
+                && self.lo.y <= o.lo.y
+                && self.lo.z <= o.lo.z
+                && o.hi.x <= self.hi.x
+                && o.hi.y <= self.hi.y
+                && o.hi.z <= self.hi.z)
+    }
+
     /// Swept bounds of a triangle moving linearly from `a0,b0,c0` to
     /// `a1,b1,c1`, inflated by thickness `m`.
     #[allow(clippy::too_many_arguments)]
@@ -127,6 +149,20 @@ mod tests {
         assert!(!e.overlaps(&a));
         let u = e.union(&a);
         assert_eq!(u.lo, u.hi);
+    }
+
+    #[test]
+    fn surface_area_and_contains() {
+        let unit = Aabb::from_points(&[Vec3::new(0.0, 0.0, 0.0), Vec3::new(1.0, 1.0, 1.0)]);
+        assert_eq!(unit.surface_area(), 6.0);
+        assert_eq!(Aabb::empty().surface_area(), 0.0);
+        let inner = Aabb::from_points(&[Vec3::new(0.2, 0.2, 0.2), Vec3::new(0.8, 0.8, 0.8)]);
+        assert!(unit.contains(&inner));
+        assert!(!inner.contains(&unit));
+        assert!(unit.contains(&unit)); // boundary counts as inside
+        let escaped = Aabb::from_points(&[Vec3::new(0.5, 0.5, 0.5), Vec3::new(1.5, 0.8, 0.8)]);
+        assert!(!unit.contains(&escaped));
+        assert!(unit.contains(&Aabb::empty()));
     }
 
     #[test]

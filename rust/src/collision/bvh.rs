@@ -22,6 +22,10 @@ pub struct Bvh {
     order: Vec<u32>,
     /// Primitive AABBs (exact leaf-level filtering).
     prim_aabbs: Vec<Aabb>,
+    /// Σ node surface area at the last (re)build — the quality baseline.
+    built_sa: f64,
+    /// Σ node surface area after the last refit (== `built_sa` at build).
+    cur_sa: f64,
 }
 
 const LEAF_SIZE: usize = 4;
@@ -29,18 +33,31 @@ const LEAF_SIZE: usize = 4;
 impl Bvh {
     /// Build over one AABB per primitive.
     pub fn build(aabbs: &[Aabb]) -> Bvh {
+        let mut bvh = Bvh::default();
+        bvh.rebuild(aabbs);
+        bvh
+    }
+
+    /// Rebuild in place, reusing the node/order/AABB buffers from the
+    /// previous build (the degradation-rebuild path allocates nothing
+    /// once the tree has reached steady-state capacity).
+    pub fn rebuild(&mut self, aabbs: &[Aabb]) {
         let n = aabbs.len();
-        let mut bvh = Bvh {
-            nodes: Vec::with_capacity(2 * n.max(1)),
-            order: (0..n as u32).collect(),
-            prim_aabbs: aabbs.to_vec(),
-        };
+        self.nodes.clear();
+        self.nodes.reserve(2 * n.max(1));
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        self.prim_aabbs.clear();
+        self.prim_aabbs.extend_from_slice(aabbs);
+        self.built_sa = 0.0;
+        self.cur_sa = 0.0;
         if n == 0 {
-            return bvh;
+            return;
         }
         let centers: Vec<_> = aabbs.iter().map(|b| b.center()).collect();
-        bvh.build_range(aabbs, &centers, 0, n);
-        bvh
+        self.build_range(aabbs, &centers, 0, n);
+        self.built_sa = self.nodes.iter().map(|nd| nd.aabb.surface_area()).sum();
+        self.cur_sa = self.built_sa;
     }
 
     fn build_range(
@@ -78,6 +95,7 @@ impl Bvh {
     pub fn refit(&mut self, aabbs: &[Aabb]) {
         assert_eq!(aabbs.len(), self.prim_aabbs.len(), "refit with changed topology");
         self.prim_aabbs.copy_from_slice(aabbs);
+        let mut sa = 0.0;
         for i in (0..self.nodes.len()).rev() {
             let node = &self.nodes[i];
             let bb = if node.count > 0 {
@@ -89,8 +107,65 @@ impl Bvh {
             } else {
                 self.nodes[i + 1].aabb.union(&self.nodes[node.right as usize].aabb)
             };
+            sa += bb.surface_area();
             self.nodes[i].aabb = bb;
         }
+        self.cur_sa = sa;
+    }
+
+    /// Tree-quality ratio: Σ node surface area now vs at the last
+    /// (re)build. 1.0 immediately after a build; grows as refits stretch
+    /// a stale topology over scattered primitives. The engine rebuilds a
+    /// surface's tree once this exceeds `SimConfig::bvh_degrade_ratio`.
+    pub fn quality(&self) -> f64 {
+        if self.built_sa > 0.0 {
+            self.cur_sa / self.built_sa
+        } else {
+            1.0
+        }
+    }
+
+    /// Structural invariants, panicking with a description on violation:
+    /// a root-reachable traversal visits every node exactly once, every
+    /// internal node's AABB contains both children, every leaf AABB
+    /// contains its primitives, and every primitive index appears in
+    /// exactly one leaf. Test/fuzz hook — O(n), not for the hot path.
+    pub fn check_invariants(&self) {
+        assert_eq!(self.order.len(), self.prim_aabbs.len(), "order/prim_aabbs length mismatch");
+        if self.nodes.is_empty() {
+            assert!(self.order.is_empty(), "empty tree over {} primitives", self.order.len());
+            return;
+        }
+        let mut seen_node = vec![false; self.nodes.len()];
+        let mut seen_prim = vec![false; self.prim_aabbs.len()];
+        let mut stack = vec![0usize];
+        while let Some(i) = stack.pop() {
+            assert!(i < self.nodes.len(), "child index {i} out of range");
+            assert!(!seen_node[i], "node {i} reachable twice");
+            seen_node[i] = true;
+            let node = &self.nodes[i];
+            if node.count > 0 {
+                for &p in self.leaf_prims(i) {
+                    let p = p as usize;
+                    assert!(p < self.prim_aabbs.len(), "primitive {p} out of range");
+                    assert!(!seen_prim[p], "primitive {p} in two leaves");
+                    seen_prim[p] = true;
+                    assert!(
+                        node.aabb.contains(&self.prim_aabbs[p]),
+                        "leaf {i} does not contain primitive {p}"
+                    );
+                }
+            } else {
+                let (l, r) = (i + 1, node.right as usize);
+                assert!(l < self.nodes.len() && r < self.nodes.len(), "node {i} child range");
+                assert!(node.aabb.contains(&self.nodes[l].aabb), "node {i} excludes left child");
+                assert!(node.aabb.contains(&self.nodes[r].aabb), "node {i} excludes right child");
+                stack.push(l);
+                stack.push(r);
+            }
+        }
+        assert!(seen_node.iter().all(|&s| s), "unreachable nodes in tree");
+        assert!(seen_prim.iter().all(|&s| s), "unreachable primitives in tree");
     }
 
     pub fn is_empty(&self) -> bool {
@@ -112,13 +187,21 @@ impl Bvh {
 
     /// All primitive pairs (a from self, b from other) whose AABBs overlap.
     pub fn pairs_with(&self, other: &Bvh, out: &mut Vec<(u32, u32)>) {
+        self.pairs_with_margin(other, 0.0, out);
+    }
+
+    /// [`Bvh::pairs_with`] with every `self`-side box inflated by
+    /// `margin`: all pairs whose AABBs come within `margin` of touching.
+    /// The cull cache snapshots this superset (margin = 2·pad covers
+    /// both surfaces' pads) so it stays valid while motion is bounded.
+    pub fn pairs_with_margin(&self, other: &Bvh, margin: f64, out: &mut Vec<(u32, u32)>) {
         if self.is_empty() || other.is_empty() {
             return;
         }
         let mut stack = vec![(0usize, 0usize)];
         while let Some((i, j)) = stack.pop() {
             let (a, b) = (&self.nodes[i], &other.nodes[j]);
-            if !a.aabb.overlaps(&b.aabb) {
+            if !a.aabb.inflated(margin).overlaps(&b.aabb) {
                 continue;
             }
             match (a.count > 0, b.count > 0) {
@@ -126,6 +209,7 @@ impl Bvh {
                     for &pa in self.leaf_prims(i) {
                         for &pb in other.leaf_prims(j) {
                             if self.prim_aabbs[pa as usize]
+                                .inflated(margin)
                                 .overlaps(&other.prim_aabbs[pb as usize])
                             {
                                 out.push((pa, pb));
@@ -154,20 +238,30 @@ impl Bvh {
     /// All unordered primitive pairs within this BVH whose AABBs overlap
     /// (cloth self-collision). Pairs are emitted with a < b.
     pub fn self_pairs(&self, out: &mut Vec<(u32, u32)>) {
+        self.self_pairs_margin(0.0, out);
+    }
+
+    /// [`Bvh::self_pairs`] with one side of every test inflated by
+    /// `margin` — the self-collision counterpart of
+    /// [`Bvh::pairs_with_margin`].
+    pub fn self_pairs_margin(&self, margin: f64, out: &mut Vec<(u32, u32)>) {
         if self.is_empty() {
             return;
         }
-        self.self_pairs_node(0, out);
+        self.self_pairs_node(0, margin, out);
     }
 
-    fn self_pairs_node(&self, i: usize, out: &mut Vec<(u32, u32)>) {
+    fn self_pairs_node(&self, i: usize, m: f64, out: &mut Vec<(u32, u32)>) {
         let n = &self.nodes[i];
         if n.count > 0 {
             let prims = self.leaf_prims(i);
             for a in 0..prims.len() {
                 for b in a + 1..prims.len() {
                     let (pa, pb) = (prims[a], prims[b]);
-                    if self.prim_aabbs[pa as usize].overlaps(&self.prim_aabbs[pb as usize]) {
+                    if self.prim_aabbs[pa as usize]
+                        .inflated(m)
+                        .overlaps(&self.prim_aabbs[pb as usize])
+                    {
                         out.push((pa.min(pb), pa.max(pb)));
                     }
                 }
@@ -175,39 +269,42 @@ impl Bvh {
             return;
         }
         let (l, r) = (i + 1, n.right as usize);
-        self.self_pairs_node(l, out);
-        self.self_pairs_node(r, out);
-        self.cross_pairs(l, r, out);
+        self.self_pairs_node(l, m, out);
+        self.self_pairs_node(r, m, out);
+        self.cross_pairs(l, r, m, out);
     }
 
-    fn cross_pairs(&self, i: usize, j: usize, out: &mut Vec<(u32, u32)>) {
+    fn cross_pairs(&self, i: usize, j: usize, m: f64, out: &mut Vec<(u32, u32)>) {
         let (a, b) = (&self.nodes[i], &self.nodes[j]);
-        if !a.aabb.overlaps(&b.aabb) {
+        if !a.aabb.inflated(m).overlaps(&b.aabb) {
             return;
         }
         match (a.count > 0, b.count > 0) {
             (true, true) => {
                 for &pa in self.leaf_prims(i) {
                     for &pb in self.leaf_prims(j) {
-                        if self.prim_aabbs[pa as usize].overlaps(&self.prim_aabbs[pb as usize]) {
+                        if self.prim_aabbs[pa as usize]
+                            .inflated(m)
+                            .overlaps(&self.prim_aabbs[pb as usize])
+                        {
                             out.push((pa.min(pb), pa.max(pb)));
                         }
                     }
                 }
             }
             (true, false) => {
-                self.cross_pairs(i, j + 1, out);
-                self.cross_pairs(i, b.right as usize, out);
+                self.cross_pairs(i, j + 1, m, out);
+                self.cross_pairs(i, b.right as usize, m, out);
             }
             (false, true) => {
-                self.cross_pairs(i + 1, j, out);
-                self.cross_pairs(a.right as usize, j, out);
+                self.cross_pairs(i + 1, j, m, out);
+                self.cross_pairs(a.right as usize, j, m, out);
             }
             (false, false) => {
-                self.cross_pairs(i + 1, j + 1, out);
-                self.cross_pairs(i + 1, b.right as usize, out);
-                self.cross_pairs(a.right as usize, j + 1, out);
-                self.cross_pairs(a.right as usize, b.right as usize, out);
+                self.cross_pairs(i + 1, j + 1, m, out);
+                self.cross_pairs(i + 1, b.right as usize, m, out);
+                self.cross_pairs(a.right as usize, j + 1, m, out);
+                self.cross_pairs(a.right as usize, b.right as usize, m, out);
             }
         }
     }
@@ -305,11 +402,120 @@ mod tests {
     fn empty_and_single() {
         let e = Bvh::build(&[]);
         assert!(e.is_empty());
+        e.check_invariants();
         let one = Bvh::build(&[Aabb::point(Vec3::default())]);
+        one.check_invariants();
         let mut out = Vec::new();
         one.self_pairs(&mut out);
         assert!(out.is_empty());
         e.pairs_with(&one, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn margin_pairs_match_brute_force() {
+        quick("bvh-margin-pairs", 15, |g| {
+            let a = random_aabbs(g, g.usize(1, 50), 0.8);
+            let b = random_aabbs(g, g.usize(1, 50), 0.8);
+            let m = g.f64(0.0, 0.5);
+            let (ba, bb) = (Bvh::build(&a), Bvh::build(&b));
+            let mut out = Vec::new();
+            ba.pairs_with_margin(&bb, m, &mut out);
+            let got: HashSet<_> = out.into_iter().collect();
+            let inflated: Vec<_> = a.iter().map(|x| x.inflated(m)).collect();
+            assert_eq!(got, brute_pairs(&inflated, &b));
+            // The margin set is a superset of the exact set.
+            let mut exact = Vec::new();
+            ba.pairs_with(&bb, &mut exact);
+            assert!(exact.iter().all(|p| got.contains(p)));
+        });
+    }
+
+    fn brute_self(a: &[Aabb]) -> HashSet<(u32, u32)> {
+        let mut want = HashSet::new();
+        for i in 0..a.len() {
+            for j in i + 1..a.len() {
+                if a[i].overlaps(&a[j]) {
+                    want.insert((i as u32, j as u32));
+                }
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn invariants_after_build_and_refit_sequences() {
+        quick("bvh-invariants", 15, |g| {
+            let n = g.usize(1, 120);
+            let mut a = random_aabbs(g, n, 0.8);
+            let mut bvh = Bvh::build(&a);
+            bvh.check_invariants();
+            for _ in 0..g.usize(1, 4) {
+                for bb in &mut a {
+                    let d = Vec3::new(g.f64(-2.0, 2.0), g.f64(-2.0, 2.0), g.f64(-2.0, 2.0));
+                    bb.lo += d;
+                    bb.hi += d;
+                }
+                bvh.refit(&a);
+                bvh.check_invariants();
+            }
+        });
+    }
+
+    #[test]
+    fn invariants_through_degradation_rebuild_cycles() {
+        quick("bvh-degrade-rebuild", 10, |g| {
+            let n = g.usize(8, 80);
+            let mut a = random_aabbs(g, n, 0.5);
+            let mut bvh = Bvh::build(&a);
+            assert!((bvh.quality() - 1.0).abs() < 1e-12);
+            let mut rebuilt = false;
+            for _ in 0..6 {
+                // Scatter primitives far from their build positions so the
+                // stale topology inflates and the quality ratio climbs.
+                for bb in &mut a {
+                    let d = Vec3::new(g.f64(-6.0, 6.0), g.f64(-6.0, 6.0), g.f64(-6.0, 6.0));
+                    bb.lo += d;
+                    bb.hi += d;
+                }
+                bvh.refit(&a);
+                bvh.check_invariants();
+                if bvh.quality() > 2.0 {
+                    bvh.rebuild(&a);
+                    bvh.check_invariants();
+                    assert!((bvh.quality() - 1.0).abs() < 1e-12);
+                    rebuilt = true;
+                }
+                // Queries stay exact through every refit/rebuild cycle.
+                let mut out = Vec::new();
+                bvh.self_pairs(&mut out);
+                let got: HashSet<_> = out.into_iter().collect();
+                assert_eq!(got, brute_self(&a));
+            }
+            assert!(rebuilt, "scatter never degraded the tree enough to trigger a rebuild");
+        });
+    }
+
+    #[test]
+    fn rebuild_matches_fresh_build_bitwise() {
+        quick("bvh-rebuild-parity", 10, |g| {
+            let n = g.usize(1, 90);
+            let mut a = random_aabbs(g, n, 0.7);
+            let mut reused = Bvh::build(&random_aabbs(g, n, 0.7));
+            for bb in &mut a {
+                let d = Vec3::new(g.f64(-3.0, 3.0), g.f64(-3.0, 3.0), g.f64(-3.0, 3.0));
+                bb.lo += d;
+                bb.hi += d;
+            }
+            reused.rebuild(&a);
+            let fresh = Bvh::build(&a);
+            // Identical trees ⇒ identical emission order, not just sets.
+            let mut o1 = Vec::new();
+            let mut o2 = Vec::new();
+            reused.self_pairs(&mut o1);
+            fresh.self_pairs(&mut o2);
+            assert_eq!(o1, o2);
+            assert_eq!(reused.quality().to_bits(), fresh.quality().to_bits());
+        });
     }
 }

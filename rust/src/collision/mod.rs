@@ -56,7 +56,9 @@ impl Impact {
 }
 
 /// Per-body surface snapshot used by the collision pass: start-of-step
-/// and candidate end-of-step world positions.
+/// and candidate end-of-step world positions. Surfaces live in a
+/// [`CollisionState`] that persists across steps: each step refits the
+/// BVH in place ([`Surface::update_candidates`]) instead of rebuilding.
 pub struct Surface {
     pub body: BodyId,
     pub faces: Vec<[u32; 3]>,
@@ -68,6 +70,17 @@ pub struct Surface {
     aabbs: Vec<Aabb>,
     /// Edges per face (indices into `edges`) for EE dedup.
     face_edges: Vec<[u32; 3]>,
+    /// Padded per-face AABB snapshot backing the cross-step cull cache.
+    /// Candidate lists built against these bounds stay valid (as
+    /// supersets) while every current AABB remains inside its snapshot.
+    cull_bounds: Vec<Aabb>,
+    /// Bumped whenever the snapshot is retaken; cached candidate lists
+    /// are keyed by the epochs of both surfaces they were built from.
+    epoch: u64,
+    /// True iff the snapshot was retaken during the current validation
+    /// round, i.e. `cull_bounds[f] == aabbs[f].inflated(pad)` right now —
+    /// the only moment a padded BVH query equals a snapshot-bound query.
+    fresh: bool,
 }
 
 impl Surface {
@@ -114,7 +127,20 @@ impl Surface {
             })
             .collect();
         let bvh = Bvh::build(&aabbs);
-        Surface { body, faces, edges, x0, x1, fixed, bvh, aabbs, face_edges }
+        Surface {
+            body,
+            faces,
+            edges,
+            x0,
+            x1,
+            fixed,
+            bvh,
+            aabbs,
+            face_edges,
+            cull_bounds: Vec::new(),
+            epoch: 0,
+            fresh: false,
+        }
     }
 
     fn node_ref(&self, local: u32) -> NodeRef {
@@ -128,12 +154,15 @@ impl Surface {
         self.bvh.root_aabb()
     }
 
-    /// Update the candidate end-of-step positions and refit the BVH in
-    /// place (topology unchanged) — O(n) instead of a fresh build. The
-    /// per-step hot path: fail-safe passes re-detect after zone solves.
-    pub fn update_candidates(&mut self, x1: Vec<Vec3>, thickness: f64) {
+    /// Update the candidate end-of-step positions (copied in place into
+    /// the retained buffer — no per-pass allocation) and refit the BVH
+    /// (topology unchanged) — O(n) instead of a fresh build. The
+    /// per-step hot path: fail-safe passes re-detect after zone solves,
+    /// and with the persistent cache every step after the first lands
+    /// here instead of in [`Surface::new`].
+    pub fn update_candidates(&mut self, x1: &[Vec3], thickness: f64) {
         assert_eq!(x1.len(), self.x1.len());
-        self.x1 = x1;
+        self.x1.copy_from_slice(x1);
         for (f, bb) in self.faces.iter().zip(self.aabbs.iter_mut()) {
             *bb = Aabb::swept_tri(
                 self.x0[f[0] as usize],
@@ -146,6 +175,44 @@ impl Surface {
             );
         }
         self.bvh.refit(&self.aabbs);
+    }
+
+    /// Rebuild the BVH in place (reusing its buffers) once refit
+    /// inflation has degraded the tree past `ratio`; returns whether a
+    /// rebuild happened. Tree shape never reaches the impact stream —
+    /// candidate lists are sorted before the narrow phase — so rebuilds
+    /// are bitwise-invisible and safe mid-flight.
+    pub fn rebuild_if_degraded(&mut self, ratio: f64) -> bool {
+        if self.bvh.quality() > ratio {
+            self.bvh.rebuild(&self.aabbs);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Validate the cull snapshot against the current AABBs: if any face
+    /// escaped its padded bound (or no snapshot exists yet), retake the
+    /// snapshot and bump the epoch, invalidating cached candidate lists
+    /// that involve this surface.
+    fn validate_cull(&mut self, pad: f64) {
+        let ok = self.cull_bounds.len() == self.aabbs.len()
+            && self.aabbs.iter().zip(self.cull_bounds.iter()).all(|(bb, cb)| cb.contains(bb));
+        if ok {
+            self.fresh = false;
+        } else {
+            self.resnapshot(pad);
+        }
+    }
+
+    /// Retake the padded snapshot from the current AABBs and bump the
+    /// epoch. Always sound (every AABB is trivially inside its own
+    /// inflation); marks the surface `fresh` for this validation round.
+    fn resnapshot(&mut self, pad: f64) {
+        self.cull_bounds.clear();
+        self.cull_bounds.extend(self.aabbs.iter().map(|bb| bb.inflated(pad)));
+        self.epoch += 1;
+        self.fresh = true;
     }
 }
 
@@ -182,7 +249,7 @@ pub fn surfaces_from_system(
 }
 
 /// Statistics from one detection pass (coordinator metrics / Fig. 2).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct DetectStats {
     pub body_pairs: usize,
     pub face_pairs: usize,
@@ -212,6 +279,7 @@ pub fn detect_in(
     let mut raw: ArenaVec<Impact> = arena.vec(0, MemCategory::Contacts);
     let mut stats = DetectStats::default();
     let mut face_pairs: ArenaVec<(u32, u32)> = arena.vec(0, MemCategory::Contacts);
+    let mut filtered: ArenaVec<(u32, u32)> = arena.vec(0, MemCategory::Contacts);
     for i in 0..surfaces.len() {
         for j in i + 1..surfaces.len() {
             let (a, b) = (&surfaces[i], &surfaces[j]);
@@ -224,7 +292,12 @@ pub fn detect_in(
             stats.body_pairs += 1;
             face_pairs.clear();
             a.bvh.pairs_with(&b.bvh, &mut face_pairs);
-            stats.face_pairs += face_pairs.len();
+            // Canonical order: BVH emission order depends on tree shape
+            // (refit keeps the old topology, rebuild re-splits). Sorting
+            // makes detection a pure function of the AABB set, so refit
+            // and rebuild trees — and cached superset lists — feed the
+            // narrow phase bitwise-identically.
+            face_pairs.sort_unstable();
             narrowphase_pair(a, b, &face_pairs, thickness, &mut raw, &mut stats);
         }
     }
@@ -233,15 +306,12 @@ pub fn detect_in(
         if let BodyId::Cloth(_) = s.body {
             face_pairs.clear();
             s.bvh.self_pairs(&mut face_pairs);
-            let filtered: Vec<(u32, u32)> = face_pairs
-                .iter()
-                .copied()
-                .filter(|&(fa, fb)| {
-                    let (a, b) = (s.faces[fa as usize], s.faces[fb as usize]);
-                    !a.iter().any(|v| b.contains(v))
-                })
-                .collect();
-            stats.face_pairs += filtered.len();
+            filtered.clear();
+            filtered.extend(face_pairs.iter().copied().filter(|&(fa, fb)| {
+                let (a, b) = (s.faces[fa as usize], s.faces[fb as usize]);
+                !a.iter().any(|v| b.contains(v))
+            }));
+            filtered.sort_unstable();
             narrowphase_pair(s, s, &filtered, thickness, &mut raw, &mut stats);
         }
     }
@@ -254,6 +324,248 @@ pub fn detect_in(
     dedup_vf_into(&raw, &mut impacts);
     raw.recharge();
     face_pairs.recharge();
+    filtered.recharge();
+    impacts.recharge();
+    stats.impacts = impacts.len();
+    (impacts, stats)
+}
+
+/// Per-cache event counters, drained into telemetry by the engine at
+/// each commit. Deliberately *not* part of [`DetectStats`]: cache
+/// internals must never leak into the stats the refit-vs-rebuild parity
+/// oracle compares.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheCounters {
+    /// BVH refits (one per surface per detect pass on the cached path).
+    pub refits: u64,
+    /// BVH (re)builds: initial cache builds plus degradation rebuilds.
+    pub rebuilds: u64,
+    /// Broad-phase candidate lists served from the cull cache.
+    pub cull_cache_hits: u64,
+    /// Candidate lists (re)built because a snapshot epoch moved on.
+    pub cull_cache_misses: u64,
+    /// Zone solves seeded from a previous step's parked multipliers.
+    pub warmstart_hits: u64,
+    /// Zone solves that fell back to a cold start (key or node mismatch).
+    pub warmstart_misses: u64,
+}
+
+impl CacheCounters {
+    /// Accumulate another snapshot into this one (per-step → lifetime
+    /// rollup at commit).
+    pub fn absorb(&mut self, o: CacheCounters) {
+        self.refits += o.refits;
+        self.rebuilds += o.rebuilds;
+        self.cull_cache_hits += o.cull_cache_hits;
+        self.cull_cache_misses += o.cull_cache_misses;
+        self.warmstart_hits += o.warmstart_hits;
+        self.warmstart_misses += o.warmstart_misses;
+    }
+}
+
+/// A cached broad-phase candidate list for one surface pair (`a == b`
+/// for cloth self-collision), valid while both surfaces' snapshot
+/// epochs are unchanged.
+#[derive(Default)]
+struct CachedPairs {
+    epoch_a: u64,
+    epoch_b: u64,
+    pairs: Vec<(u32, u32)>,
+}
+
+/// Parked per-constraint multipliers from the previous step's zone
+/// solves, keyed by the zone's sorted entity list (the paper's localized
+/// zones make that the natural identity). λ values are matched back to
+/// the next step's constraints by their impact node quadruples. BTreeMap
+/// keeps every lookup deterministic without hash-order caveats.
+#[derive(Default)]
+pub struct WarmStarts {
+    map: std::collections::BTreeMap<Vec<zones::Entity>, Vec<([NodeRef; 4], f64)>>,
+}
+
+impl WarmStarts {
+    /// Parked (nodes, λ) rows for the zone with this entity set, if the
+    /// previous step solved one. A changed entity set misses — the
+    /// caller falls back to a cold start.
+    pub fn get(&self, key: &[zones::Entity]) -> Option<&[([NodeRef; 4], f64)]> {
+        self.map.get(key).map(|v| v.as_slice())
+    }
+
+    pub fn insert(&mut self, key: Vec<zones::Entity>, rows: Vec<([NodeRef; 4], f64)>) {
+        self.map.insert(key, rows);
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Collision state that persists across steps (owned by the engine's
+/// `Simulation`, parked between steps): the per-body surfaces with their
+/// BVHs, the cross-step broad-phase cull cache, and the warm-start store.
+/// Everything here is an accelerator — detection output is bitwise
+/// independent of cache history (see [`detect_incremental`]).
+#[derive(Default)]
+pub struct CollisionState {
+    pub surfs: Vec<Surface>,
+    /// Candidate lists keyed by surface-index pair; validated against
+    /// the two surfaces' snapshot epochs. BTreeMap for determinism. The
+    /// retained `pairs` buffers double as the list pool: a rebuild
+    /// clears and refills in place.
+    pair_cache: std::collections::BTreeMap<(u32, u32), CachedPairs>,
+    pub warm: WarmStarts,
+    pub counters: CacheCounters,
+}
+
+impl CollisionState {
+    pub fn new(surfs: Vec<Surface>) -> CollisionState {
+        CollisionState { surfs, ..Default::default() }
+    }
+
+    /// True iff the cached surfaces still describe `sys`: same body set
+    /// in the same order, same mesh topology, same frozen flags. Pure
+    /// motion (changed `q` / cloth `x`) matches — positions are re-rolled
+    /// from committed state every step — but any topology or body-set
+    /// change forces a rebuild.
+    pub fn matches(&self, sys: &System) -> bool {
+        let nr = sys.rigids.len();
+        if self.surfs.len() != nr + sys.cloths.len() {
+            return false;
+        }
+        for (i, b) in sys.rigids.iter().enumerate() {
+            let s = &self.surfs[i];
+            if s.body != BodyId::Rigid(i as u32)
+                || s.fixed != b.frozen
+                || s.x0.len() != b.mesh0.verts.len()
+                || s.faces != b.mesh0.faces
+            {
+                return false;
+            }
+        }
+        for (c, cl) in sys.cloths.iter().enumerate() {
+            let s = &self.surfs[nr + c];
+            if s.body != BodyId::Cloth(c as u32)
+                || s.fixed
+                || s.x0.len() != cl.x.len()
+                || s.faces != cl.faces
+            {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// [`detect_in`] over a persistent [`CollisionState`], reusing cached
+/// broad-phase candidate lists across steps. A cached list is a padded
+/// superset (built from snapshot bounds via [`Bvh::pairs_with_margin`])
+/// and is valid while both surfaces' AABBs stay inside their snapshots;
+/// the narrow phase's exact per-pair AABB filter reduces any such
+/// superset to exactly the pairs a fresh query would test, in the same
+/// (sorted) order — so impacts and [`DetectStats`] are bitwise-identical
+/// to the uncached path, regardless of cache history.
+pub fn detect_incremental(
+    state: &mut CollisionState,
+    thickness: f64,
+    pad: f64,
+    arena: &BatchArena,
+) -> (ArenaVec<Impact>, DetectStats) {
+    let CollisionState { surfs, pair_cache, counters, .. } = state;
+    for s in surfs.iter_mut() {
+        s.validate_cull(pad);
+    }
+    let mut raw: ArenaVec<Impact> = arena.vec(0, MemCategory::Contacts);
+    let mut stats = DetectStats::default();
+    let mut scratch: ArenaVec<(u32, u32)> = arena.vec(0, MemCategory::Contacts);
+    let n = surfs.len();
+    for i in 0..n {
+        for j in i + 1..n {
+            if surfs[i].fixed && surfs[j].fixed {
+                continue;
+            }
+            if !surfs[i].root_aabb().overlaps(&surfs[j].root_aabb()) {
+                continue;
+            }
+            stats.body_pairs += 1;
+            let key = (i as u32, j as u32);
+            let hit = pair_cache
+                .get(&key)
+                .is_some_and(|c| c.epoch_a == surfs[i].epoch && c.epoch_b == surfs[j].epoch);
+            if hit {
+                counters.cull_cache_hits += 1;
+            } else {
+                counters.cull_cache_misses += 1;
+                // A padded list can only be built while snapshot bounds
+                // equal current-bounds-inflated-by-pad; force-resnapshot
+                // whichever side went stale. The epoch bumps invalidate
+                // that surface's other lists, which rebuild the same way.
+                if !surfs[i].fresh {
+                    surfs[i].resnapshot(pad);
+                }
+                if !surfs[j].fresh {
+                    surfs[j].resnapshot(pad);
+                }
+                let entry = pair_cache.entry(key).or_default();
+                entry.pairs.clear();
+                let (lo, hi) = surfs.split_at(j);
+                lo[i].bvh.pairs_with_margin(&hi[0].bvh, 2.0 * pad, &mut entry.pairs);
+                entry.pairs.sort_unstable();
+                entry.epoch_a = surfs[i].epoch;
+                entry.epoch_b = surfs[j].epoch;
+            }
+            narrowphase_pair(
+                &surfs[i],
+                &surfs[j],
+                &pair_cache[&key].pairs,
+                thickness,
+                &mut raw,
+                &mut stats,
+            );
+        }
+    }
+    // Cloth self-collision; the adjacency filter is topology-constant,
+    // so it is applied once at list build time.
+    for i in 0..n {
+        if !matches!(surfs[i].body, BodyId::Cloth(_)) {
+            continue;
+        }
+        let key = (i as u32, i as u32);
+        let hit = pair_cache.get(&key).is_some_and(|c| c.epoch_a == surfs[i].epoch);
+        if hit {
+            counters.cull_cache_hits += 1;
+        } else {
+            counters.cull_cache_misses += 1;
+            if !surfs[i].fresh {
+                surfs[i].resnapshot(pad);
+            }
+            scratch.clear();
+            surfs[i].bvh.self_pairs_margin(2.0 * pad, &mut scratch);
+            let entry = pair_cache.entry(key).or_default();
+            entry.pairs.clear();
+            let faces = &surfs[i].faces;
+            entry.pairs.extend(scratch.iter().copied().filter(|&(fa, fb)| {
+                let (a, b) = (faces[fa as usize], faces[fb as usize]);
+                !a.iter().any(|v| b.contains(v))
+            }));
+            entry.pairs.sort_unstable();
+            entry.epoch_a = surfs[i].epoch;
+            entry.epoch_b = surfs[i].epoch;
+        }
+        let s = &surfs[i];
+        narrowphase_pair(s, s, &pair_cache[&key].pairs, thickness, &mut raw, &mut stats);
+    }
+    let mut impacts: ArenaVec<Impact> = arena.vec(raw.len(), MemCategory::Contacts);
+    dedup_vf_into(&raw, &mut impacts);
+    raw.recharge();
+    scratch.recharge();
     impacts.recharge();
     stats.impacts = impacts.len();
     (impacts, stats)
@@ -320,9 +632,14 @@ fn narrowphase_pair(
     // lint:allow(hash-iter: membership-only, never iterated)
     let mut ee_seen: HashSet<(u32, u32)> = HashSet::new();
     for &(fa, fb) in face_pairs {
+        // Exact filter: candidate lists may be padded supersets from the
+        // cull cache; only pairs whose current swept AABBs truly overlap
+        // reach the tests (and the face_pairs stat), so every list mode
+        // — fresh, refit, cached — yields identical downstream work.
         if !a.aabbs[fa as usize].overlaps(&b.aabbs[fb as usize]) {
             continue;
         }
+        stats.face_pairs += 1;
         let tri_a = a.faces[fa as usize];
         let tri_b = b.faces[fb as usize];
         // Vertices of B against face of A.
@@ -548,6 +865,96 @@ mod tests {
         // Gap at start-of-step (cube above ground): positive.
         let gap0 = im.gap(|n| sys.node_pos(n));
         assert!(gap0 > 0.0, "gap0 = {gap0}");
+    }
+
+    fn assert_impacts_bits_eq(a: &[Impact], b: &[Impact], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: impact count");
+        for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.nodes, y.nodes, "{what}: impact {k} nodes");
+            for c in 0..4 {
+                assert_eq!(x.w[c].to_bits(), y.w[c].to_bits(), "{what}: impact {k} w[{c}]");
+            }
+            assert_eq!(x.n.x.to_bits(), y.n.x.to_bits(), "{what}: impact {k} n.x");
+            assert_eq!(x.n.y.to_bits(), y.n.y.to_bits(), "{what}: impact {k} n.y");
+            assert_eq!(x.n.z.to_bits(), y.n.z.to_bits(), "{what}: impact {k} n.z");
+            assert_eq!(x.t.to_bits(), y.t.to_bits(), "{what}: impact {k} t");
+        }
+    }
+
+    #[test]
+    fn incremental_detect_matches_plain_bitwise() {
+        // Drive a persistent CollisionState through several pseudo-steps
+        // of cube motion and compare against fresh surfaces + plain
+        // detection each time: impacts and stats must be bit-identical
+        // regardless of cache history (hits, misses, resnapshots).
+        let (sys, _x0, x1) = falling_box_system(1.0);
+        let mut cs = CollisionState::new(surfaces_from_system(&sys, &x1, &[], 1e-3));
+        assert!(cs.matches(&sys));
+        let arena = BatchArena::disabled();
+        for step in 0..8 {
+            let mut x1s = x1.clone();
+            for v in &mut x1s[1] {
+                v.y -= 0.02 * step as f64;
+            }
+            for (i, s) in cs.surfs.iter_mut().enumerate() {
+                s.update_candidates(&x1s[i], 1e-3);
+                s.rebuild_if_degraded(4.0);
+            }
+            let (inc, istats) = detect_incremental(&mut cs, 1e-3, 0.05, &arena);
+            let fresh = surfaces_from_system(&sys, &x1s, &[], 1e-3);
+            let (pl, pstats) = detect(&fresh, 1e-3);
+            assert_eq!(istats, pstats, "step {step}");
+            assert_impacts_bits_eq(&inc, &pl, &format!("step {step}"));
+        }
+        let c = cs.counters;
+        assert!(c.cull_cache_hits > 0, "no cull-cache hits across steps: {c:?}");
+        assert!(c.cull_cache_misses > 0, "first pass should miss: {c:?}");
+    }
+
+    #[test]
+    fn collision_state_matches_detects_topology_changes() {
+        let (sys, _x0, x1) = falling_box_system(1.0);
+        let cs = CollisionState::new(surfaces_from_system(&sys, &x1, &[], 1e-3));
+        assert!(cs.matches(&sys));
+        // Pure motion still matches.
+        let mut moved = sys.clone();
+        moved.rigids[1].q[4] += 0.5;
+        assert!(cs.matches(&moved));
+        // Body-set change: rebuild.
+        let mut grown = sys.clone();
+        grown.add_rigid(RigidBody::from_mesh(unit_box(), 1.0));
+        assert!(!cs.matches(&grown));
+        // Topology change on an existing body: rebuild.
+        let mut retopo = sys.clone();
+        retopo.rigids[1].mesh0.faces.swap(0, 1);
+        assert!(!cs.matches(&retopo));
+        // Frozen-flag change: rebuild.
+        let mut thawed = sys.clone();
+        thawed.rigids[0].frozen = false;
+        assert!(!cs.matches(&thawed));
+    }
+
+    #[test]
+    fn warm_starts_key_on_entity_set() {
+        use zones::Entity;
+        let mut w = WarmStarts::default();
+        assert!(w.is_empty());
+        let key = vec![Entity::Rigid(1), Entity::Rigid(2)];
+        let nodes = [
+            NodeRef::Rigid { body: 1, vert: 0 },
+            NodeRef::Rigid { body: 1, vert: 1 },
+            NodeRef::Rigid { body: 1, vert: 2 },
+            NodeRef::Rigid { body: 2, vert: 0 },
+        ];
+        w.insert(key.clone(), vec![(nodes, 3.5)]);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.get(&key), Some(&[(nodes, 3.5)][..]));
+        // A changed entity set misses — the caller cold-starts.
+        let other = vec![Entity::Rigid(1), Entity::Rigid(3)];
+        assert!(w.get(&other).is_none());
+        assert!(w.get(&key[..1]).is_none());
+        w.clear();
+        assert!(w.get(&key).is_none());
     }
 
     #[test]

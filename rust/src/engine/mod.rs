@@ -11,7 +11,10 @@ pub mod scene;
 
 use crate::bodies::System;
 use crate::collision::zones::{build_zones, zones_bytes};
-use crate::collision::{detect_in, surfaces_from_system, DetectStats};
+use crate::collision::{
+    detect_in, detect_incremental, surfaces_from_system, CacheCounters, CollisionState,
+    DetectStats, WarmStarts,
+};
 use crate::diff::tape::{ClothSolveRec, RigidSolveRec, StepRecord, ZoneRec};
 use crate::math::sparse::Triplets;
 use crate::math::{euler, Vec3};
@@ -26,6 +29,7 @@ use crate::util::telemetry::{self, Trace};
 // lint:allow-file(wallclock: Instant reads live in obs_begin/obs_end,
 // are telemetry-gated (None when the registry is disabled), and feed
 // only stage-duration traces — never simulation numerics)
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// A contained per-scene failure: what went wrong stepping one scene,
@@ -124,6 +128,25 @@ pub struct SimConfig {
     /// after a failed step: 1 = boosted re-solve, 2 = + half-dt
     /// substeps. 0 disables recovery (a failed step is returned as-is).
     pub recovery_budget: usize,
+    /// Persist collision state across steps: surfaces (and their BVHs)
+    /// survive commit, so step N+1 refits instead of rebuilding, and
+    /// broad-phase candidate lists are cached across steps. Detection
+    /// output is bitwise-identical either way — the refit-vs-rebuild
+    /// oracle in `tests/integration_refit.rs` holds it to that.
+    pub incremental_collision: bool,
+    /// Rebuild a surface's BVH (instead of refitting) once refits have
+    /// inflated its summed node surface area past this ratio of the
+    /// value at the last build ([`crate::collision::bvh::Bvh::quality`]).
+    pub bvh_degrade_ratio: f64,
+    /// Padding on the cross-step broad-phase cull snapshot: larger
+    /// values keep cached candidate lists valid across more motion at
+    /// the cost of longer (superset) lists for the narrow phase's exact
+    /// filter to discard.
+    pub cull_pad: f64,
+    /// Seed each zone solve from the previous step's parked multipliers
+    /// when the zone's (sorted) entity set matches. Changes solver
+    /// iterates — *not* bitwise-neutral — so it is opt-in; default off.
+    pub warm_start_zones: bool,
 }
 
 impl Default for SimConfig {
@@ -139,12 +162,17 @@ impl Default for SimConfig {
             workers: 1,
             angular_damping: 0.2,
             recovery_budget: 2,
+            incremental_collision: true,
+            bvh_degrade_ratio: 4.0,
+            cull_pad: 0.05,
+            warm_start_zones: false,
         }
     }
 }
 
-/// Per-step metrics (coordinator telemetry; E11).
-#[derive(Clone, Copy, Debug, Default)]
+/// Per-step metrics (coordinator telemetry; E11). `PartialEq` so the
+/// refit-vs-rebuild parity oracle can compare whole per-step records.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StepStats {
     pub impacts: usize,
     pub zones: usize,
@@ -178,6 +206,18 @@ pub struct Simulation {
     /// scenes; [`crate::batch::SceneBatch`] installs one shared pooled
     /// arena across its scenes. Content-neutral either way.
     arena: BatchArena,
+    /// Cross-step collision state, parked between steps: taken at pass 0
+    /// of the next step's detection (when `cfg.incremental_collision`
+    /// and the cached surfaces still match the system), returned at
+    /// commit. `None` between steps means the next step rebuilds — step
+    /// states dropped on error or rollback invalidate the cache for
+    /// free. A mutex (not a cell) because lockstep batch drivers run the
+    /// detection stage through `&Simulation` from worker threads.
+    collision_cache: Mutex<Option<CollisionState>>,
+    /// Lifetime totals of the per-step cache counters, rolled up at each
+    /// commit (benches and tests read these; telemetry publishes the
+    /// same numbers as `collision.*` counters).
+    collision_counters: CacheCounters,
     /// Optional external zone-solver hook; receives the problems and
     /// returns solutions (testing / alternative solvers).
     #[allow(clippy::type_complexity)]
@@ -214,9 +254,17 @@ pub struct StepState {
     rigid_qbar: Vec<[f64; 6]>,
     cloth_xbar: Vec<Vec<Vec3>>,
     zone_recs: Vec<ZoneRec>,
-    /// Surfaces are built once per step; later passes only update the
-    /// candidate positions and refit the BVHs (perf: §Perf L3-1).
-    surfs: Option<Vec<crate::collision::Surface>>,
+    /// The persistent collision state while the step is in flight:
+    /// adopted from the scene's parked cache (or freshly built) at
+    /// pass 0, refreshed in place each later pass, handed back to the
+    /// cache at commit. Dropping the step state without committing
+    /// leaves the parked slot empty, so a failed or abandoned step can
+    /// never leak stale surfaces into the next one.
+    surfs: Option<CollisionState>,
+    /// (zone entity set → multiplier rows) captured at scatter; promoted
+    /// wholesale to the cache's warm-start store at commit when
+    /// `cfg.warm_start_zones` is on.
+    warm_pending: WarmStarts,
 }
 
 impl StepState {
@@ -283,6 +331,8 @@ impl Simulation {
             last_stats: StepStats::default(),
             pool,
             arena: BatchArena::disabled(),
+            collision_cache: Mutex::new(None),
+            collision_counters: CacheCounters::default(),
             zone_hook: None,
             coordinator: None,
             trace: telemetry::default_trace(),
@@ -355,6 +405,38 @@ impl Simulation {
     /// The buffer arena this scene checks per-step allocations out of.
     pub fn arena(&self) -> &BatchArena {
         &self.arena
+    }
+
+    /// Drop the parked cross-step collision state: the next step
+    /// rebuilds surfaces from scratch. Detection output is
+    /// cache-independent, so this is never *required* for soundness —
+    /// topology/body-set changes are caught by
+    /// [`CollisionState::matches`] and positions are re-rolled from
+    /// committed state every step — but it is the explicit hook for
+    /// tests and for callers that want a guaranteed cold pipeline.
+    pub fn invalidate_collision_cache(&self) {
+        *self.collision_cache.lock().expect("collision cache lock poisoned") = None;
+    }
+
+    /// Lifetime totals of the incremental-collision counters (refits,
+    /// rebuilds, cull-cache hits/misses, warm-start hits/misses), rolled
+    /// up from the per-step state at each commit.
+    pub fn collision_counters(&self) -> CacheCounters {
+        self.collision_counters
+    }
+
+    /// Structural audit of every parked BVH
+    /// ([`crate::collision::bvh::Bvh::check_invariants`]); panics on a
+    /// malformed tree, no-op when nothing is parked. Test/debug hook —
+    /// the scenario-fuzz lane runs it between steps with the incremental
+    /// pipeline on.
+    pub fn check_collision_cache_invariants(&self) {
+        let guard = self.collision_cache.lock().expect("collision cache lock poisoned");
+        if let Some(cs) = guard.as_ref() {
+            for s in &cs.surfs {
+                s.bvh.check_invariants();
+            }
+        }
     }
 
     /// Advance one step of length `cfg.dt`: the thin sequential driver
@@ -557,6 +639,12 @@ impl Simulation {
         }
         self.steps = ck.steps;
         self.last_stats = ck.last_stats;
+        // The parked surfaces' x0/warm-start rows came from steps that
+        // are being rolled back; drop them so the rolled-back state
+        // restarts the pipeline cold. (Adoption re-rolls x0 from
+        // committed state anyway — this keeps rollback observably
+        // identical to a fresh scene rather than relying on that.)
+        self.invalidate_collision_cache();
         while self.tape.len() > ck.tape_len {
             if let Some(rec) = self.tape.pop() {
                 self.arena.uncharge(MemCategory::Tape, rec.bytes);
@@ -651,6 +739,7 @@ impl Simulation {
             // so repeated rollouts don't regrow it from scratch.
             zone_recs: if self.cfg.record_tape { self.arena.loan_vec(0) } else { Vec::new() },
             surfs: None,
+            warm_pending: WarmStarts::default(),
         }
     }
 
@@ -703,29 +792,84 @@ impl Simulation {
                 b.mesh0.verts.iter().map(|&p| r * p + t).collect()
             })
             .collect();
+        let mut just_built = false;
         if st.surfs.is_none() {
-            st.surfs = Some(surfaces_from_system(
-                &self.sys,
-                &rigid_x1,
-                &st.cloth_xbar,
-                self.cfg.thickness,
-            ));
-        } else {
-            // lint:allow(no-bare-unwrap: the is_none branch above just built it)
-            let ss = st.surfs.as_mut().expect("checked above");
+            // Pass 0: adopt the scene's parked collision state when it
+            // still describes this system; otherwise build from scratch.
+            let cached = if self.cfg.incremental_collision {
+                self.collision_cache
+                    .lock()
+                    .expect("collision cache lock poisoned")
+                    .take()
+                    .filter(|cs| cs.matches(&self.sys))
+            } else {
+                None
+            };
+            st.surfs = Some(match cached {
+                Some(mut cs) => {
+                    // Roll x0 ← committed state: exactly the positions a
+                    // fresh build would start from (`world_verts` is
+                    // r·p + t over the same inputs, so the roll is
+                    // bitwise), written into the retained buffers. This
+                    // also makes rollback sound — whatever q the system
+                    // holds now is what detection sweeps from.
+                    let nr = self.sys.rigids.len();
+                    for (i, b) in self.sys.rigids.iter().enumerate() {
+                        let r = b.rotation();
+                        let t = b.translation();
+                        for (k, &p) in b.mesh0.verts.iter().enumerate() {
+                            cs.surfs[i].x0[k] = r * p + t;
+                        }
+                    }
+                    for (c, cl) in self.sys.cloths.iter().enumerate() {
+                        cs.surfs[nr + c].x0.copy_from_slice(&cl.x);
+                    }
+                    cs
+                }
+                None => {
+                    let mut cs = CollisionState::new(surfaces_from_system(
+                        &self.sys,
+                        &rigid_x1,
+                        &st.cloth_xbar,
+                        self.cfg.thickness,
+                    ));
+                    cs.counters.rebuilds += cs.surfs.len() as u64;
+                    just_built = true;
+                    cs
+                }
+            });
+        }
+        // lint:allow(no-bare-unwrap: the is_none branch above just built it)
+        let cs = st.surfs.as_mut().expect("collision state built above");
+        if !just_built {
+            // Refresh candidates in place: O(n) BVH refits instead of
+            // fresh builds, with a rebuild for any tree the refits have
+            // degraded past the quality threshold.
             let nr = self.sys.rigids.len();
-            for (i, x1) in rigid_x1.into_iter().enumerate() {
-                ss[i].update_candidates(x1, self.cfg.thickness);
+            for (i, x1) in rigid_x1.iter().enumerate() {
+                cs.surfs[i].update_candidates(x1, self.cfg.thickness);
             }
             for (c, x1) in st.cloth_xbar.iter().enumerate() {
-                ss[nr + c].update_candidates(x1.clone(), self.cfg.thickness);
+                cs.surfs[nr + c].update_candidates(x1, self.cfg.thickness);
             }
+            let mut rebuilt = 0u64;
+            for s in cs.surfs.iter_mut() {
+                if s.rebuild_if_degraded(self.cfg.bvh_degrade_ratio) {
+                    rebuilt += 1;
+                }
+            }
+            cs.counters.refits += cs.surfs.len() as u64 - rebuilt;
+            cs.counters.rebuilds += rebuilt;
         }
-        // lint:allow(no-bare-unwrap: both branches above leave surfs populated)
-        let surfs = st.surfs.as_ref().expect("surfaces built above");
         // Candidate/contact lists come from (and return to) the scene's
-        // arena; impacts are bitwise-identical to plain `detect`.
-        let (impacts, dstats) = detect_in(surfs, self.cfg.thickness, &self.arena);
+        // arena; impacts are bitwise-identical to plain `detect` in
+        // both modes (the parity oracle in `tests/integration_refit.rs`
+        // compares whole trajectories).
+        let (impacts, dstats) = if self.cfg.incremental_collision {
+            detect_incremental(cs, self.cfg.thickness, self.cfg.cull_pad, &self.arena)
+        } else {
+            detect_in(&cs.surfs, self.cfg.thickness, &self.arena)
+        };
         if pass == 0 {
             st.stats.detect = dstats;
             st.stats.impacts = impacts.len();
@@ -751,7 +895,7 @@ impl Simulation {
         // them while the problems are being built.
         let zbytes = zones_bytes(&zones);
         self.arena.charge(MemCategory::Contacts, zbytes);
-        let problems: Vec<ZoneProblem> = zones
+        let mut problems: Vec<ZoneProblem> = zones
             .iter()
             .map(|z| {
                 ZoneProblem::build_in(
@@ -765,6 +909,36 @@ impl Simulation {
             })
             .collect();
         self.arena.uncharge(MemCategory::Contacts, zbytes);
+        if self.cfg.warm_start_zones {
+            // Seed λ₀ from the previous step's parked multipliers when
+            // the zone's sorted entity set matches; constraints are
+            // matched by their impact node quadruple (first fit, each
+            // parked row consumed at most once). Unmatched constraints
+            // start at 0 — the cold value.
+            for zp in &mut problems {
+                match cs.warm.get(&zp.entities) {
+                    Some(rows) => {
+                        cs.counters.warmstart_hits += 1;
+                        let mut used = vec![false; rows.len()];
+                        let lam: Vec<f64> = zp
+                            .constraints
+                            .iter()
+                            .map(|c| {
+                                for (k, (nodes, l)) in rows.iter().enumerate() {
+                                    if !used[k] && *nodes == c.nodes {
+                                        used[k] = true;
+                                        return *l;
+                                    }
+                                }
+                                0.0
+                            })
+                            .collect();
+                        zp.warm_lambda = Some(lam);
+                    }
+                    None => cs.counters.warmstart_misses += 1,
+                }
+            }
+        }
         self.obs_end("detect_and_zone", t0, |ev| {
             ev.set("pass", pass).set("impacts", impacts.len()).set("zones", problems.len());
         });
@@ -831,6 +1005,18 @@ impl Simulation {
                 max_disp = max_disp.max((a - b).abs());
             }
             zp.scatter(&sol, &mut st.rigid_qbar, &mut st.cloth_xbar);
+            if self.cfg.warm_start_zones {
+                // Park (nodes, λ) rows for next step's seeding; a later
+                // fail-safe pass for the same entity set overwrites —
+                // the last solve is the one worth warm-starting from.
+                let rows: Vec<([crate::bodies::NodeRef; 4], f64)> = zp
+                    .constraints
+                    .iter()
+                    .zip(&sol.lambda)
+                    .map(|(c, &l)| (c.nodes, l))
+                    .collect();
+                st.warm_pending.insert(zp.entities.clone(), rows);
+            }
             if self.cfg.record_tape {
                 // The record keeps the solver buffers alive: the Solver
                 // charge transfers to the Tape category at commit, and
@@ -896,8 +1082,34 @@ impl Simulation {
             rigid_qbar,
             cloth_xbar,
             zone_recs,
-            surfs: _,
+            surfs,
+            warm_pending,
         } = st;
+        // Return the collision state to the parked slot: drain the
+        // step's cache counters into telemetry + lifetime totals, swap
+        // in the step's parked multipliers, park the surfaces for the
+        // next step's refit (only when the incremental pipeline is on —
+        // otherwise the state dies here and every step rebuilds).
+        if let Some(mut cs) = surfs {
+            let c = std::mem::take(&mut cs.counters);
+            self.collision_counters.absorb(c);
+            if telemetry::enabled() {
+                telemetry::counter("collision.refits").add(c.refits);
+                telemetry::counter("collision.rebuilds").add(c.rebuilds);
+                telemetry::counter("collision.cull_cache_hits").add(c.cull_cache_hits);
+                telemetry::counter("collision.cull_cache_misses").add(c.cull_cache_misses);
+                telemetry::counter("collision.warmstart_hits").add(c.warmstart_hits);
+                telemetry::counter("collision.warmstart_misses").add(c.warmstart_misses);
+            }
+            if self.cfg.warm_start_zones {
+                cs.warm = warm_pending;
+            } else {
+                cs.warm.clear();
+            }
+            if self.cfg.incremental_collision {
+                *self.collision_cache.lock().expect("collision cache lock poisoned") = Some(cs);
+            }
+        }
         let ke_of = |sys: &System, rv: &[[f64; 6]], cv: &[Vec<Vec3>]| -> f64 {
             let mut e = 0.0;
             for (i, b) in sys.rigids.iter().enumerate() {

@@ -47,6 +47,9 @@ pub struct Constraint {
     pub fixed_part: f64,
     /// Contact offset δ.
     pub delta: f64,
+    /// The impact's surface-node quadruple — the constraint's identity
+    /// across steps, used to match parked multipliers when warm-starting.
+    pub nodes: [crate::bodies::NodeRef; 4],
 }
 
 /// The zone optimization problem (Eq. 6) in stacked coordinates.
@@ -61,6 +64,11 @@ pub struct ZoneProblem {
     /// Block-diagonal M̂ (dense; zones are small by construction).
     pub mass: Mat,
     pub constraints: Vec<Constraint>,
+    /// Optional initial multipliers (one per constraint) from a previous
+    /// step's parked solution. `None` (the default) reproduces the cold
+    /// start bitwise; `Some` seeds the AL outer loop so persistent
+    /// contacts converge in fewer Gauss-Newton iterations.
+    pub warm_lambda: Option<Vec<f64>>,
 }
 
 /// Tuning knobs for a zone solve — the engine's fail-safe retry ladder
@@ -193,7 +201,15 @@ impl ZoneProblem {
             .iter()
             .map(|im| constraint_from_impact(sys, im, &slot, rigid_q, cloth_x, delta))
             .collect();
-        ZoneProblem { entities: zone.entities.clone(), offsets, n, q0, mass, constraints }
+        ZoneProblem {
+            entities: zone.entities.clone(),
+            offsets,
+            n,
+            q0,
+            mass,
+            constraints,
+            warm_lambda: None,
+        }
     }
 
     /// Evaluate all constraints at stacked coordinates `q`.
@@ -298,7 +314,12 @@ impl ZoneProblem {
     fn solve_impl(&self, opts: &SolveOpts) -> ZoneSolution {
         let m = self.constraints.len();
         let mut q = self.q0.clone();
-        let mut lambda = vec![0.0; m];
+        // Warm start seeds λ only (q starts from the candidate state as
+        // always); `None` is the bitwise cold-start path.
+        let mut lambda = match &self.warm_lambda {
+            Some(w) if w.len() == m => w.clone(),
+            _ => vec![0.0; m],
+        };
         // Boosted-path state is built only when the knobs are actually
         // turned: the default path runs the stock arithmetic on the
         // stock matrix with no extra float ops.
@@ -581,7 +602,7 @@ fn constraint_from_impact(
             }
         }
     }
-    Constraint { n: im.n, terms, fixed_part, delta }
+    Constraint { n: im.n, terms, fixed_part, delta, nodes: im.nodes }
 }
 
 #[cfg(test)]
@@ -660,6 +681,41 @@ mod tests {
         assert_eq!(a.lambda, b.lambda);
         assert_eq!(a.gn_iters, b.gn_iters);
         assert_eq!(a.max_violation.to_bits(), b.max_violation.to_bits());
+    }
+
+    #[test]
+    fn warm_start_converges_faster_within_tolerance() {
+        let (_sys, zp) = penetrating_cube_problem();
+        let cold = zp.solve();
+        assert!(cold.converged);
+        // Seed the same problem with the converged multipliers: the AL
+        // outer loop should need strictly fewer GN iterations and land
+        // within tolerance of the cold solution.
+        let (_sys2, mut warm_zp) = penetrating_cube_problem();
+        warm_zp.warm_lambda = Some(cold.lambda.clone());
+        let warm = warm_zp.solve();
+        assert!(warm.converged);
+        assert!(
+            warm.gn_iters < cold.gn_iters,
+            "warm {} vs cold {} GN iterations",
+            warm.gn_iters,
+            cold.gn_iters
+        );
+        for i in 0..zp.n {
+            assert!(
+                (warm.q[i] - cold.q[i]).abs() < 1e-6,
+                "dof {i}: warm {} vs cold {}",
+                warm.q[i],
+                cold.q[i]
+            );
+        }
+        // A wrong-length seed is ignored — bitwise cold start.
+        let (_sys3, mut bad_zp) = penetrating_cube_problem();
+        bad_zp.warm_lambda = Some(vec![0.5; cold.lambda.len() + 3]);
+        let bad = bad_zp.solve();
+        assert_eq!(bad.q, cold.q);
+        assert_eq!(bad.lambda, cold.lambda);
+        assert_eq!(bad.gn_iters, cold.gn_iters);
     }
 
     #[test]

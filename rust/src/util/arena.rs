@@ -2,7 +2,9 @@
 //!
 //! A batch of N scenes ([`crate::batch::SceneBatch`]) repeats the same
 //! per-step allocations N times: collision candidate/contact lists
-//! ([`crate::collision::detect_in`]), per-zone solver state
+//! ([`crate::collision::detect_in`], and the incremental pipeline's
+//! cull-cache scratch in [`crate::collision::detect_incremental`]),
+//! per-zone solver state
 //! ([`crate::solver::zone_solver::ZoneProblem::build_in`]), and — across
 //! rollouts — tape record storage
 //! ([`crate::diff::tape::StepRecord::recycle`]). Left independent, batch

@@ -114,35 +114,60 @@ fn scenario_fuzz_isolate_smoke() {
     // Seeded mini scenario fuzz (satellite): randomized drop/stack
     // configurations must neither panic nor reach a non-finite end
     // state under FaultPolicy::Isolate — and with no faults armed,
-    // nothing may be quarantined.
+    // nothing may be quarantined. Each round now runs twice — under
+    // the incremental collision pipeline (the default) and with it
+    // off — and the two trajectories must stay bitwise-identical,
+    // with the parked BVHs passing their structural invariants after
+    // every round.
+    struct SceneParams {
+        mass: f64,
+        x0: Vec3,
+        v0: Vec3,
+        stacked: Option<f64>, // x offset of an optional second cube
+    }
     let mut rng = Pcg32::new(0xfa17);
     for round in 0..4 {
         let n_scenes = 2 + rng.below(3);
-        let mut batch = SceneBatch::from_scene(&drop_system(0.0), &cfg100(), n_scenes, |_, sys| {
-            // Base scene; per-scene randomization happens below through
-            // sims_mut so every scene sees fresh rng draws.
-            sys.rigids[1] = falling_cube(0.0);
-        });
-        for sim in batch.sims_mut() {
-            let vx = rng.range(-1.2, 1.2);
-            let y0 = rng.range(0.6, 1.4);
-            sim.sys.rigids[1] =
-                RigidBody::from_mesh(unit_box(), rng.range(0.5, 2.0))
-                    .with_position(Vec3::new(rng.range(-0.3, 0.3), y0, 0.0))
-                    .with_velocity(Vec3::new(vx, rng.range(-0.5, 0.0), 0.0));
-            // Half the scenes get a second cube stacked above — stacks
-            // exercise multi-zone passes.
-            if rng.uniform() < 0.5 {
-                sim.sys.add_rigid(
-                    RigidBody::from_mesh(unit_box(), 1.0)
-                        .with_position(Vec3::new(rng.range(-0.2, 0.2), y0 + 1.1, 0.0)),
-                );
+        let params: Vec<SceneParams> = (0..n_scenes)
+            .map(|_| {
+                let vx = rng.range(-1.2, 1.2);
+                let y0 = rng.range(0.6, 1.4);
+                SceneParams {
+                    mass: rng.range(0.5, 2.0),
+                    x0: Vec3::new(rng.range(-0.3, 0.3), y0, 0.0),
+                    v0: Vec3::new(vx, rng.range(-0.5, 0.0), 0.0),
+                    // Half the scenes get a second cube stacked above —
+                    // stacks exercise multi-zone passes.
+                    stacked: (rng.uniform() < 0.5).then(|| rng.range(-0.2, 0.2)),
+                }
+            })
+            .collect();
+        let build = |cfg: &SimConfig| {
+            let mut batch = SceneBatch::from_scene(&drop_system(0.0), cfg, n_scenes, |_, sys| {
+                sys.rigids[1] = falling_cube(0.0);
+            });
+            for (sim, p) in batch.sims_mut().iter_mut().zip(&params) {
+                sim.sys.rigids[1] = RigidBody::from_mesh(unit_box(), p.mass)
+                    .with_position(p.x0)
+                    .with_velocity(p.v0);
+                if let Some(sx) = p.stacked {
+                    sim.sys.add_rigid(
+                        RigidBody::from_mesh(unit_box(), 1.0)
+                            .with_position(Vec3::new(sx, p.x0.y + 1.1, 0.0)),
+                    );
+                }
             }
-        }
-        batch.set_fault_policy(FaultPolicy::Isolate);
-        batch.run(40);
-        for (i, sim) in batch.sims().iter().enumerate() {
-            assert!(!batch.is_quarantined(i), "round {round} scene {i} quarantined");
+            batch.set_fault_policy(FaultPolicy::Isolate);
+            batch
+        };
+        let inc_cfg = cfg100();
+        assert!(inc_cfg.incremental_collision, "incremental pipeline must be the default");
+        let mut inc = build(&inc_cfg);
+        let mut cold = build(&SimConfig { incremental_collision: false, ..cfg100() });
+        inc.run(40);
+        cold.run(40);
+        for (i, (sim, ref_sim)) in inc.sims().iter().zip(cold.sims()).enumerate() {
+            assert!(!inc.is_quarantined(i), "round {round} scene {i} quarantined");
             for (r, b) in sim.sys.rigids.iter().enumerate() {
                 for k in 0..6 {
                     assert!(
@@ -151,8 +176,53 @@ fn scenario_fuzz_isolate_smoke() {
                     );
                 }
             }
+            assert_rigid_bits_eq(
+                &sim.sys,
+                &ref_sim.sys,
+                &format!("fuzz round {round} scene {i} incremental-vs-rebuild"),
+            );
+            // The parked cross-step BVHs must satisfy their structural
+            // invariants after 40 steps of refits and rebuilds.
+            sim.check_collision_cache_invariants();
         }
     }
+}
+
+#[test]
+fn rollback_mid_rollout_invalidates_cache_and_stays_bitwise() {
+    let _x = fault_excluded();
+    // A mid-rollout rollback must leave the incremental collision
+    // pipeline observably cold: poison one scene's forces so the full
+    // retry ladder fails (`step_recovering` restores the checkpoint and
+    // drops the parked collision cache), then heal it and keep
+    // stepping. The trajectory must match — bitwise — a sim with the
+    // cache disabled that went through the identical failure.
+    let run = |incremental: bool| {
+        let cfg = SimConfig { incremental_collision: incremental, ..cfg100() };
+        let mut sim = Simulation::new(drop_system(0.0), cfg);
+        sim.run(30); // settled contact: the cache is warm and parked
+        let q_before = sim.sys.rigids[1].q;
+        sim.sys.rigids[1].ext_force = Vec3::new(f64::NAN, 0.0, 0.0);
+        sim.step_recovering().expect_err("ladder cannot fix a poisoned input");
+        assert_eq!(sim.sys.rigids[1].q, q_before, "rollback must restore state");
+        sim.sys.rigids[1].ext_force = Vec3::default();
+        for _ in 0..30 {
+            sim.step_recovering().expect("healthy again after clearing the poison");
+        }
+        sim.check_collision_cache_invariants();
+        sim
+    };
+    let inc = run(true);
+    let cold = run(false);
+    assert_rigid_bits_eq(&inc.sys, &cold.sys, "post-rollback incremental-vs-rebuild");
+    // The failed step's rollback dropped the parked cache, so the next
+    // step rebuilt every surface from scratch.
+    let c = inc.collision_counters();
+    assert!(
+        c.rebuilds >= 2 * inc.sys.rigids.len() as u64,
+        "expected a post-rollback rebuild on top of the initial build: {c:?}"
+    );
+    assert!(c.refits > 0 && c.cull_cache_hits > 0, "cache idle after recovery: {c:?}");
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,334 @@
+//! Incremental collision pipeline: the refit-vs-rebuild test oracle.
+//!
+//! The persistent cross-step collision cache (BVH refits, cull-cache
+//! candidate lists, zone warm starts) is an *accelerator*: with
+//! `warm_start_zones` off, trajectories, per-step stats, and rollout
+//! gradients must be **bitwise identical** whether the cache is enabled
+//! (`incremental_collision: true`, the default) or the pipeline
+//! rebuilds every surface from scratch each step. These tests pin that
+//! contract on rigid-stack, cloth-over-obstacle, and mixed scenes, plus
+//! the warm-start opt-in (tolerance + fewer GN iterations, never
+//! bitwise) and cache invalidation on topology changes.
+
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::engine::backward::LossGrad;
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+use diffsim::obs;
+use std::sync::Mutex;
+
+/// Serialize tests that toggle the process-wide obs enable flag.
+static ENABLE_LOCK: Mutex<()> = Mutex::new(());
+
+fn enable_lock() -> std::sync::MutexGuard<'static, ()> {
+    ENABLE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ground() -> RigidBody {
+    RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
+        .with_position(Vec3::new(0.0, -0.5, 0.0))
+}
+
+/// Ground + two stacked cubes: persistent multi-zone rigid contact.
+fn rigid_stack_system() -> System {
+    let mut sys = System::new();
+    sys.add_rigid(ground());
+    sys.add_rigid(RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.0, 0.6, 0.0)));
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0).with_position(Vec3::new(0.05, 1.75, 0.0)),
+    );
+    sys
+}
+
+/// A cloth dropping onto a frozen box: cloth-rigid contact plus large
+/// per-node motion (the BVH-degradation path's natural workload).
+fn cloth_over_obstacle_system() -> System {
+    let mut sys = System::new();
+    sys.add_rigid(
+        RigidBody::frozen_from_mesh(box_mesh(Vec3::new(0.6, 0.3, 0.6)))
+            .with_position(Vec3::new(0.0, 0.3, 0.0)),
+    );
+    let cloth = Cloth::from_grid(
+        cloth_grid(5, 5, 1.4, 1.4).translated(Vec3::new(-0.7, 0.9, -0.7)),
+        0.2,
+        500.0,
+        1.0,
+        0.5,
+    );
+    sys.add_cloth(cloth);
+    sys
+}
+
+/// Ground + falling cube + a draping cloth: rigid-rigid and cloth
+/// dynamics in one scene (the integration_batch mixed scene).
+fn mixed_system(vx: f64) -> System {
+    let mut sys = System::new();
+    sys.add_rigid(ground());
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, 0.8, 0.0))
+            .with_velocity(Vec3::new(vx, 0.0, 0.0)),
+    );
+    let cloth = Cloth::from_grid(
+        cloth_grid(4, 4, 1.0, 1.0).translated(Vec3::new(4.0, 0.4, 0.0)),
+        0.2,
+        500.0,
+        1.0,
+        0.5,
+    );
+    sys.add_cloth(cloth);
+    sys
+}
+
+fn cfg_incremental() -> SimConfig {
+    // The default: incremental_collision is on.
+    let cfg = SimConfig { dt: 1.0 / 100.0, ..Default::default() };
+    assert!(cfg.incremental_collision, "incremental pipeline must be the default");
+    cfg
+}
+
+fn cfg_rebuild() -> SimConfig {
+    SimConfig { incremental_collision: false, ..cfg_incremental() }
+}
+
+fn assert_sys_bits_eq(a: &System, b: &System, what: &str) {
+    for (i, (ra, rb)) in a.rigids.iter().zip(&b.rigids).enumerate() {
+        for k in 0..6 {
+            assert_eq!(ra.q[k].to_bits(), rb.q[k].to_bits(), "{what}: rigid {i} q[{k}]");
+            assert_eq!(ra.qdot[k].to_bits(), rb.qdot[k].to_bits(), "{what}: rigid {i} qdot[{k}]");
+        }
+    }
+    for (c, (ca, cb)) in a.cloths.iter().zip(&b.cloths).enumerate() {
+        for (n, (xa, xb)) in ca.x.iter().zip(&cb.x).enumerate() {
+            assert!(
+                xa.x.to_bits() == xb.x.to_bits()
+                    && xa.y.to_bits() == xb.y.to_bits()
+                    && xa.z.to_bits() == xb.z.to_bits(),
+                "{what}: cloth {c} node {n} x: {xa:?} vs {xb:?}"
+            );
+        }
+        for (n, (va, vb)) in ca.v.iter().zip(&cb.v).enumerate() {
+            assert!(
+                va.x.to_bits() == vb.x.to_bits()
+                    && va.y.to_bits() == vb.y.to_bits()
+                    && va.z.to_bits() == vb.z.to_bits(),
+                "{what}: cloth {c} node {n} v"
+            );
+        }
+    }
+}
+
+#[test]
+fn refit_matches_rebuild_bitwise_on_trajectories() {
+    // The tentpole oracle: full trajectories AND per-step StepStats
+    // (impact counts, detection stats, zone shapes, GN iterations) are
+    // bitwise/equal between the cached pipeline and a pipeline that
+    // rebuilds every surface each step.
+    let scenes: [(&str, fn() -> System); 3] = [
+        ("rigid-stack", rigid_stack_system),
+        ("cloth-over-obstacle", cloth_over_obstacle_system),
+        ("mixed", || mixed_system(0.4)),
+    ];
+    for (name, build) in scenes {
+        let mut inc = Simulation::new(build(), cfg_incremental());
+        let mut cold = Simulation::new(build(), cfg_rebuild());
+        for step in 0..80 {
+            inc.step();
+            cold.step();
+            assert_eq!(
+                inc.last_stats, cold.last_stats,
+                "{name}: StepStats diverged at step {step}"
+            );
+            assert_sys_bits_eq(&inc.sys, &cold.sys, &format!("{name} step {step}"));
+        }
+        // The cache did real work: surfaces were refit (not rebuilt)
+        // across steps, and broad-phase lists were served from cache.
+        let ci = inc.collision_counters();
+        let cc = cold.collision_counters();
+        assert!(ci.refits > 0, "{name}: no refits on the incremental run: {ci:?}");
+        assert!(ci.cull_cache_hits > 0, "{name}: cull cache never hit: {ci:?}");
+        assert!(
+            ci.rebuilds < cc.rebuilds,
+            "{name}: incremental must rebuild less than rebuild-every-step \
+             ({} vs {})",
+            ci.rebuilds,
+            cc.rebuilds
+        );
+        assert_eq!(cc.cull_cache_hits, 0, "{name}: cache off must never hit");
+        assert_eq!(ci.warmstart_hits, 0, "{name}: warm starts default off");
+    }
+}
+
+#[test]
+fn refit_matches_rebuild_bitwise_for_rollout_gradients() {
+    // Same oracle through the taped lockstep rollout: losses and
+    // end-to-end gradients (initial conditions) must be bitwise
+    // identical with the cache on vs off.
+    let steps = 10;
+    let vxs = [0.0, 0.5];
+    let run = |cfg: SimConfig| {
+        let mut batch = SceneBatch::from_scene(&mixed_system(0.0), &cfg, vxs.len(), |i, sys| {
+            sys.rigids[1] = RigidBody::from_mesh(unit_box(), 1.0)
+                .with_position(Vec3::new(0.0, 0.52, 0.0))
+                .with_velocity(Vec3::new(vxs[i], 0.0, 0.0));
+        });
+        let res = batch.rollout_grad_lockstep(
+            steps,
+            |_| (),
+            |_, _i, _s, _sim| {},
+            |_, sim, _| {
+                let mut seed = LossGrad::zeros(sim);
+                seed.rigid_q[1][4] = 1.0; // d(loss)/d(cube y)
+                seed.cloth_x[0][8].x = 1.0;
+                (sim.sys.rigids[1].q[4] + sim.sys.cloths[0].x[8].x, seed)
+            },
+        );
+        let q0: Vec<[f64; 6]> = res.grads.iter().map(|g| g.rigid_q0[1]).collect();
+        let v0: Vec<[f64; 6]> = res.grads.iter().map(|g| g.rigid_v0[1]).collect();
+        let cx0: Vec<Vec3> = res.grads.iter().map(|g| g.cloth_x0[0][8]).collect();
+        (res.losses, q0, v0, cx0)
+    };
+    let (l_inc, q_inc, v_inc, c_inc) = run(cfg_incremental());
+    let (l_cold, q_cold, v_cold, c_cold) = run(cfg_rebuild());
+    for i in 0..vxs.len() {
+        assert_eq!(l_inc[i].to_bits(), l_cold[i].to_bits(), "scene {i} loss");
+        for k in 0..6 {
+            assert_eq!(q_inc[i][k].to_bits(), q_cold[i][k].to_bits(), "scene {i} dL/dq0[{k}]");
+            assert_eq!(v_inc[i][k].to_bits(), v_cold[i][k].to_bits(), "scene {i} dL/dv0[{k}]");
+        }
+        assert_eq!(c_inc[i].x.to_bits(), c_cold[i].x.to_bits(), "scene {i} dL/dcloth_x0");
+    }
+}
+
+#[test]
+fn warm_start_stays_in_tolerance_and_reduces_gn_iters() {
+    // Warm-starting zone solves from the previous step's parked
+    // multipliers is opt-in and NOT bitwise: the contract is (a) the
+    // trajectory stays within solver tolerance of the cold run, and
+    // (b) persistent contact costs strictly fewer GN iterations.
+    let run = |warm: bool| {
+        let cfg = SimConfig { warm_start_zones: warm, ..cfg_incremental() };
+        let mut sim = Simulation::new(rigid_stack_system(), cfg);
+        sim.run(60); // settle into persistent contact
+        let mut gn = 0usize;
+        for _ in 0..60 {
+            sim.step();
+            gn += sim.last_stats.gn_iters;
+        }
+        assert!(sim.last_stats.zones > 0, "stack must stay in contact");
+        (sim, gn)
+    };
+    let (cold, gn_cold) = run(false);
+    let (warm, gn_warm) = run(true);
+    assert!(
+        gn_warm < gn_cold,
+        "warm starts must strictly reduce GN iterations in persistent \
+         contact: warm {gn_warm} vs cold {gn_cold}"
+    );
+    for (i, (bw, bc)) in warm.sys.rigids.iter().zip(&cold.sys.rigids).enumerate() {
+        for k in 0..6 {
+            assert!(
+                (bw.q[k] - bc.q[k]).abs() < 1e-5,
+                "rigid {i} q[{k}]: warm {} vs cold {}",
+                bw.q[k],
+                bc.q[k]
+            );
+        }
+    }
+    let cw = warm.collision_counters();
+    assert!(cw.warmstart_hits > 0, "persistent contact must hit the warm store: {cw:?}");
+    // The very first contact step has nothing parked: a key miss falls
+    // back to the cold start (counted, not crashed).
+    assert!(cw.warmstart_misses > 0, "first contact must miss cold: {cw:?}");
+    assert_eq!(cold.collision_counters().warmstart_hits, 0, "opt-out must never warm-start");
+}
+
+#[test]
+fn topology_change_mid_run_invalidates_cache_and_stays_bitwise() {
+    // Adding a body mid-run changes the surface set: the parked cache
+    // must be detected stale (CollisionState::matches), dropped, and
+    // rebuilt — and the trajectory must still match the
+    // rebuild-every-step pipeline bitwise through the change.
+    let mut inc = Simulation::new(mixed_system(0.2), cfg_incremental());
+    let mut cold = Simulation::new(mixed_system(0.2), cfg_rebuild());
+    inc.run(30);
+    cold.run(30);
+    assert_sys_bits_eq(&inc.sys, &cold.sys, "before topology change");
+    let rebuilds_before = inc.collision_counters().rebuilds;
+    let dropped =
+        || RigidBody::from_mesh(unit_box(), 0.8).with_position(Vec3::new(0.1, 2.0, 0.05));
+    inc.sys.add_rigid(dropped());
+    cold.sys.add_rigid(dropped());
+    inc.step();
+    cold.step();
+    // Every surface of the grown system was rebuilt from scratch.
+    let n_surfs = (inc.sys.rigids.len() + inc.sys.cloths.len()) as u64;
+    assert_eq!(
+        inc.collision_counters().rebuilds - rebuilds_before,
+        n_surfs,
+        "stale cache must be dropped and every surface rebuilt"
+    );
+    inc.run(29);
+    cold.run(29);
+    assert_sys_bits_eq(&inc.sys, &cold.sys, "after topology change");
+    // Explicit invalidation is equivalent to a cold pipeline restart:
+    // still bitwise, pipeline rebuilds once.
+    let rebuilds_before = inc.collision_counters().rebuilds;
+    inc.invalidate_collision_cache();
+    inc.step();
+    cold.step();
+    assert_sys_bits_eq(&inc.sys, &cold.sys, "after explicit invalidation");
+    assert_eq!(inc.collision_counters().rebuilds - rebuilds_before, n_surfs);
+}
+
+#[test]
+fn collision_counters_publish_to_obs_summary() {
+    // The collision.* counters drain into the telemetry registry at
+    // commit and therefore appear in obs::summary().
+    let _l = enable_lock();
+    obs::enable();
+    let mut sim = Simulation::new(
+        rigid_stack_system(),
+        SimConfig { warm_start_zones: true, ..cfg_incremental() },
+    );
+    sim.run(80);
+    obs::disable();
+    let mine = sim.collision_counters();
+    assert!(mine.refits > 0 && mine.warmstart_hits > 0, "run produced no cache work: {mine:?}");
+    let j = obs::summary();
+    let counters = j.get("counters").expect("summary has a counters section");
+    for name in [
+        "collision.refits",
+        "collision.rebuilds",
+        "collision.cull_cache_hits",
+        "collision.cull_cache_misses",
+        "collision.warmstart_hits",
+        "collision.warmstart_misses",
+    ] {
+        assert!(counters.get(name).is_some(), "summary missing {name}");
+        // ≥ 1, not ==: the registry is process-global; this sim's run
+        // moved every one of the six at least once.
+        assert!(obs::counter(name).get() > 0, "counter {name} never moved");
+    }
+    // Registry totals at least cover this sim's own contribution.
+    assert!(obs::counter("collision.refits").get() >= mine.refits);
+    assert!(obs::counter("collision.warmstart_hits").get() >= mine.warmstart_hits);
+}
+
+#[test]
+fn check_invariants_hook_passes_on_a_live_cache() {
+    // The parked BVHs must satisfy the structural invariants after any
+    // number of refit/rebuild cycles; the hook is a no-op before the
+    // first step and on a cache-off sim.
+    let mut sim = Simulation::new(cloth_over_obstacle_system(), cfg_incremental());
+    sim.check_collision_cache_invariants(); // nothing parked yet
+    for _ in 0..60 {
+        sim.step();
+        sim.check_collision_cache_invariants();
+    }
+    let mut off = Simulation::new(cloth_over_obstacle_system(), cfg_rebuild());
+    off.run(5);
+    off.check_collision_cache_invariants(); // cache off → nothing parked
+}
