@@ -9,6 +9,10 @@ use diffsim::collision::zones::build_zones;
 use diffsim::collision::{detect, surfaces_from_system};
 use diffsim::diff::implicit::{backward_dense, backward_qr};
 use diffsim::engine::SimConfig;
+use diffsim::math::cg::pcg_csr;
+use diffsim::math::dense::Mat;
+use diffsim::math::simd::{self, SimdMode};
+use diffsim::math::sparse::Triplets;
 use diffsim::math::Vec3;
 use diffsim::mesh::primitives::{box_mesh, cloth_grid, icosphere, unit_box};
 use diffsim::solver::implicit_euler::cloth_implicit_step;
@@ -212,6 +216,99 @@ fn main() {
     b.report("cloth/implicit step 33x33", &time(2, scale(10), || {
         std::hint::black_box(cloth_implicit_step(&cloth, 0.005, Vec3::new(0.0, -9.8, 0.0)));
     }));
+
+    // SIMD kernel modes: each vectorized hot kernel timed under the
+    // Scalar oracle and the Fast lane path, plus the acceptance 4×64
+    // lockstep config end to end (→ `BENCH_pool.json#simd`). The mode
+    // is process-global; benches run sequentially, so set/restore
+    // around the section is safe.
+    let prev_mode = simd::mode();
+    let mut sj = Json::obj();
+    sj.set("lane_target", simd::LANE_TARGET)
+        .set("lanes", simd::LANES as f64)
+        .set("smoke", smoke);
+    {
+        let mut pair = |b: &mut Bench,
+                        sj: &mut Json,
+                        label: &str,
+                        key: &str,
+                        warm: usize,
+                        iters: usize,
+                        f: &mut dyn FnMut()| {
+            simd::set_mode(SimdMode::Scalar);
+            let s = time(warm, iters, || f());
+            simd::set_mode(SimdMode::Fast);
+            let l = time(warm, iters, || f());
+            b.report(&format!("simd/{label} scalar"), &s);
+            b.report(&format!("simd/{label} fast"), &l);
+            let speedup = s.mean() / l.mean().max(1e-12);
+            b.metric(&format!("simd/{label} speedup"), speedup, "x");
+            sj.set(&format!("{key}_scalar_s"), s.mean())
+                .set(&format!("{key}_fast_s"), l.mean())
+                .set(&format!("{key}_speedup"), speedup);
+            (s.mean(), l.mean())
+        };
+
+        // Dense matvec at the implicit-cloth system shape (96×96).
+        let dn = 96;
+        let dense = Mat::from_vec(dn, dn, (0..dn * dn).map(|i| (i as f64 * 0.37).sin()).collect());
+        let dx: Vec<f64> = (0..dn).map(|i| (i as f64 * 0.61).cos()).collect();
+        let mut dy = Vec::new();
+        pair(&mut b, &mut sj, "matvec96", "matvec96", 3, scale(2000), &mut || {
+            dense.matvec_into(&dx, &mut dy);
+            std::hint::black_box(&dy);
+        });
+
+        // CSR matvec and the full PCG solve on an SPD 3-point
+        // Laplacian (n = 3000) — the CG inner-loop row shapes.
+        let cn = 3000;
+        let mut t = Triplets::new(cn, cn);
+        for i in 0..cn {
+            t.push(i, i, 4.0);
+            if i + 1 < cn {
+                t.push(i, i + 1, -1.0);
+                t.push(i + 1, i, -1.0);
+            }
+        }
+        let a = t.to_csr();
+        let cb: Vec<f64> = (0..cn).map(|i| (i as f64 * 0.17).sin()).collect();
+        let mut cy = vec![0.0; cn];
+        pair(&mut b, &mut sj, "csr_matvec3000", "csr_matvec3000", 3, scale(500), &mut || {
+            a.matvec_into(&cb, &mut cy);
+            std::hint::black_box(&cy);
+        });
+        pair(&mut b, &mut sj, "pcg3000", "pcg3000", 1, scale(20), &mut || {
+            std::hint::black_box(pcg_csr(&a, &cb, 1e-10, 200));
+        });
+
+        // Zone eval/jacobian on the largest 27-cube-pile zone.
+        if let Some(z) = zones.iter().max_by_key(|z| z.n_dofs()) {
+            let zp = ZoneProblem::build(&sys, z, &rigid_q, &[], 1e-3);
+            let zq: Vec<f64> = zp.q0.iter().enumerate().map(|(i, v)| v + 0.003 * i as f64).collect();
+            let mut zout = Vec::new();
+            let mut zjac = Mat::zeros(0, 0);
+            pair(&mut b, &mut sj, "zone_eval", "zone_eval", 3, scale(2000), &mut || {
+                zp.eval_into(&zq, &mut zout);
+                std::hint::black_box(&zout);
+            });
+            pair(&mut b, &mut sj, "zone_jacobian", "zone_jacobian", 3, scale(500), &mut || {
+                zp.jacobian_into(&zq, &mut zjac);
+                std::hint::black_box(&zjac);
+            });
+        }
+
+        // The acceptance headline: 4 scenes × 64 lockstep steps,
+        // scalar oracle vs Fast lanes, in steps per second.
+        let (ls_s, ls_f) =
+            pair(&mut b, &mut sj, "lockstep4x64", "lockstep4x64", 0, tele_iters, &mut || {
+                run_lockstep();
+            });
+        sj.set("lockstep4x64_steps", tele_steps as f64)
+            .set("lockstep4x64_scalar_steps_per_s", (4 * tele_steps) as f64 / ls_s.max(1e-12))
+            .set("lockstep4x64_fast_steps_per_s", (4 * tele_steps) as f64 / ls_f.max(1e-12));
+    }
+    simd::set_mode(prev_mode);
+    merge_section("BENCH_pool.json", "simd", sj);
 
     // PJRT call overhead (if artifacts exist).
     if let Ok(rt) = diffsim::runtime::Runtime::load_default() {

@@ -295,6 +295,7 @@ mod tests {
             q0: zp.q0.clone(),
             mass: zp.mass.clone(),
             constraints: zp.constraints.clone(),
+            soa: zp.soa.clone(),
             warm_lambda: zp.warm_lambda.clone(),
         }
     }

@@ -147,6 +147,17 @@ pub struct SimConfig {
     /// when the zone's (sorted) entity set matches. Changes solver
     /// iterates — *not* bitwise-neutral — so it is opt-in; default off.
     pub warm_start_zones: bool,
+    /// Math-kernel implementation selector
+    /// ([`crate::math::simd::SimdMode`]). `None` (the default) leaves
+    /// the process-wide mode alone — the `DIFFSIM_SIMD` environment
+    /// variable or the compile-time default decides. `Some(mode)` is
+    /// applied process-wide at [`Simulation::new`] *and* on entry to
+    /// every step driver, so the scene constructed/stepped last wins;
+    /// mixing scenes that pin different modes in one process is a
+    /// configuration error. `Scalar`/`Ordered` trajectories are
+    /// bitwise-identical; `Fast` is ULP-bounded per kernel (see the
+    /// [`crate::math::simd`] module docs).
+    pub simd: Option<crate::math::simd::SimdMode>,
 }
 
 impl Default for SimConfig {
@@ -166,6 +177,7 @@ impl Default for SimConfig {
             bvh_degrade_ratio: 4.0,
             cull_pad: 0.05,
             warm_start_zones: false,
+            simd: None,
         }
     }
 }
@@ -323,6 +335,9 @@ impl Simulation {
         // with batch stepping and gradient gathers, and no OS threads
         // are spawned on the stepping hot path.
         let pool = Pool::shared(cfg.workers);
+        if let Some(mode) = cfg.simd {
+            crate::math::simd::set_mode(mode);
+        }
         Simulation {
             sys,
             cfg,
@@ -439,9 +454,20 @@ impl Simulation {
         }
     }
 
+    /// Re-assert this scene's pinned kernel mode (if any) — the mode is
+    /// process-global, so a scene constructed since our last step may
+    /// have switched it.
+    #[inline]
+    fn apply_simd(&self) {
+        if let Some(mode) = self.cfg.simd {
+            crate::math::simd::set_mode(mode);
+        }
+    }
+
     /// Advance one step of length `cfg.dt`: the thin sequential driver
     /// over the staged primitives (see [`StepState`]).
     pub fn step(&mut self) {
+        self.apply_simd();
         let mut st = self.integrate();
         self.candidates(&mut st);
         // Fail-safe collision resolution over impact zones.
@@ -480,6 +506,7 @@ impl Simulation {
     /// [`Simulation::try_step`] with explicit zone-solve tuning — the
     /// retry ladder's entry point for boosted re-solves.
     pub fn try_step_with(&mut self, opts: &SolveOpts) -> Result<(), SceneError> {
+        self.apply_simd();
         let step = self.steps;
         let mut st = self.integrate();
         if !(all_finite_6(&st.rigid_vhalf) && all_finite_v3(&st.cloth_vhalf)) {

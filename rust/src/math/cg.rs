@@ -3,8 +3,28 @@
 //! Two entry points: a matrix-free CG over a linear operator closure
 //! (used by the diff layer's adjoint solves) and a Jacobi-preconditioned
 //! CG over a CSR matrix (the cloth stepper's hot path).
+//!
+//! ## Convergence and breakdown semantics
+//!
+//! Both solvers report the **relative** residual `‖r‖ / max(‖b‖,
+//! 1e-300)` and converge when it drops to `tol`, checked before the
+//! first iteration (so a zero/already-converged right-hand side returns
+//! `iters == 0` without touching the operator) and after every `x`/`r`
+//! update. Breakdown — a non-finite right-hand side, a non-finite or
+//! (numerically) zero curvature `pᵀAp`, a vanished preconditioned
+//! product `rᵀz`, or any non-finite residual mid-iteration — returns
+//! `converged: false` with the iterate accumulated so far, never a
+//! poisoned `x`: guards fire *before* the offending `alpha`/`beta`
+//! would be applied. The solver-retry ladder keys off `converged`, so
+//! breakdown must be reported, not masked.
+//!
+//! Inner-loop vector updates route through the [`simd`](super::simd)
+//! kernel layer: `x`/`r`/`p`/`z` updates are elementwise (bitwise in
+//! every mode); the `dot`/`norm` reductions follow the mode's
+//! documented reduction-order contract.
 
 use super::dense::{axpy, dot, norm};
+use super::simd;
 use super::sparse::Csr;
 
 /// Result of a CG solve.
@@ -28,27 +48,35 @@ where
     let mut ap = vec![0.0; n];
     let bnorm = norm(b).max(1e-300);
     let mut rs = dot(&r, &r);
+    if !rs.is_finite() {
+        // NaN/∞ in b: no finite residual exists; report breakdown
+        // before the operator ever runs (x is still all-zero).
+        return CgResult { x, iters: 0, residual: f64::INFINITY, converged: false };
+    }
     if rs.sqrt() / bnorm <= tol {
         return CgResult { x, iters: 0, residual: rs.sqrt() / bnorm, converged: true };
     }
     for it in 0..max_iter {
         apply(&p, &mut ap);
         let pap = dot(&p, &ap);
-        if pap.abs() < 1e-300 {
+        if !pap.is_finite() || pap.abs() < 1e-300 {
+            // Curvature breakdown (singular/indefinite direction) or a
+            // non-finite operator output: alpha would be inf/NaN.
             return CgResult { x, iters: it, residual: rs.sqrt() / bnorm, converged: false };
         }
         let alpha = rs / pap;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
         let rs_new = dot(&r, &r);
+        if !rs_new.is_finite() {
+            return CgResult { x, iters: it + 1, residual: f64::INFINITY, converged: false };
+        }
         if rs_new.sqrt() / bnorm <= tol {
             return CgResult { x, iters: it + 1, residual: rs_new.sqrt() / bnorm, converged: true };
         }
         let beta = rs_new / rs;
         rs = rs_new;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
-        }
+        simd::xpby(&r, beta, &mut p);
     }
     CgResult { x, iters: max_iter, residual: rs.sqrt() / bnorm, converged: false }
 }
@@ -64,36 +92,42 @@ pub fn pcg_csr(a: &Csr, b: &[f64], tol: f64, max_iter: usize) -> CgResult {
         .collect();
     let mut x = vec![0.0; n];
     let mut r = b.to_vec();
-    let mut z: Vec<f64> = r.iter().zip(&minv).map(|(ri, mi)| ri * mi).collect();
+    let mut z = vec![0.0; n];
+    simd::mul_into(&r, &minv, &mut z);
     let mut p = z.clone();
     let mut ap = vec![0.0; n];
     let bnorm = norm(b).max(1e-300);
     let mut rz = dot(&r, &z);
+    if !rz.is_finite() {
+        return CgResult { x, iters: 0, residual: f64::INFINITY, converged: false };
+    }
     if norm(&r) / bnorm <= tol {
         return CgResult { x, iters: 0, residual: norm(&r) / bnorm, converged: true };
     }
     for it in 0..max_iter {
         a.matvec_into(&p, &mut ap);
         let pap = dot(&p, &ap);
-        if pap.abs() < 1e-300 {
+        if !pap.is_finite() || pap.abs() < 1e-300 || rz == 0.0 {
+            // Curvature or preconditioner breakdown: alpha (rz/pap)
+            // would be non-finite, or zero with r ≠ 0 (possible when
+            // the lumped diagonal has mixed signs) — no progress.
             return CgResult { x, iters: it, residual: norm(&r) / bnorm, converged: false };
         }
         let alpha = rz / pap;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
         let rnorm = norm(&r);
+        if !rnorm.is_finite() {
+            return CgResult { x, iters: it + 1, residual: f64::INFINITY, converged: false };
+        }
         if rnorm / bnorm <= tol {
             return CgResult { x, iters: it + 1, residual: rnorm / bnorm, converged: true };
         }
-        for i in 0..n {
-            z[i] = r[i] * minv[i];
-        }
+        simd::mul_into(&r, &minv, &mut z);
         let rz_new = dot(&r, &z);
         let beta = rz_new / rz;
         rz = rz_new;
-        for i in 0..n {
-            p[i] = z[i] + beta * p[i];
-        }
+        simd::xpby(&z, beta, &mut p);
     }
     CgResult { x, iters: max_iter, residual: norm(&r) / bnorm, converged: false }
 }
@@ -156,6 +190,109 @@ mod tests {
         assert!(res.converged);
         assert_eq!(res.iters, 0);
         assert_eq!(res.x, vec![0.0, 0.0]);
+    }
+
+    /// Dense-QR oracle for A·x = b: A = Q·R ⇒ x = R⁻¹·(Qᵀ·b).
+    fn qr_oracle_solve(a: &Mat, b: &[f64]) -> Vec<f64> {
+        let (q, r) = a.qr_thin();
+        r.upper_solve(&q.matvec_t(b)).expect("SPD test matrix has full rank")
+    }
+
+    #[test]
+    fn cg_operator_matches_qr_oracle() {
+        quick("cg-vs-qr", 40, |g| {
+            let n = g.usize(1, 24);
+            let a = random_spd(g, n);
+            let b = g.vec_normal(n);
+            let oracle = qr_oracle_solve(&a, &b);
+            let res = cg_operator(|x, out| out.copy_from_slice(&a.matvec(x)), &b, 1e-13, 20 * n);
+            assert!(res.converged, "n={n} residual {}", res.residual);
+            assert_close(&res.x, &oracle, 1e-7, 1e-6, "cg vs qr oracle");
+        });
+    }
+
+    #[test]
+    fn pcg_matches_qr_oracle() {
+        quick("pcg-vs-qr", 40, |g| {
+            let n = g.usize(2, 20);
+            let dense = random_spd(g, n);
+            let mut t = Triplets::new(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    t.push(i, j, dense[(i, j)]);
+                }
+            }
+            let a = t.to_csr();
+            let b = g.vec_normal(n);
+            let oracle = qr_oracle_solve(&dense, &b);
+            let res = pcg_csr(&a, &b, 1e-13, 100 * n);
+            assert!(res.converged, "n={n} residual {}", res.residual);
+            assert_close(&res.x, &oracle, 1e-7, 1e-6, "pcg vs qr oracle");
+        });
+    }
+
+    fn csr_identity(n: usize) -> Csr {
+        let mut t = Triplets::new(n, n);
+        for i in 0..n {
+            t.push(i, i, 1.0);
+        }
+        t.to_csr()
+    }
+
+    #[test]
+    fn cg_nonfinite_rhs_reports_breakdown() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let b = [1.0, bad, 0.5];
+            let res = cg_operator(|x, out| out.copy_from_slice(x), &b, 1e-10, 10);
+            assert!(!res.converged);
+            assert_eq!(res.iters, 0, "operator must not run on a poisoned rhs");
+            assert!(res.x.iter().all(|v| v.is_finite()), "iterate stays finite");
+            let res = pcg_csr(&csr_identity(3), &b, 1e-10, 10);
+            assert!(!res.converged);
+            assert!(res.x.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn cg_nonfinite_operator_reports_breakdown() {
+        // Operator emits NaN on the first application: pᵀAp is NaN, so
+        // the guard must fire before alpha poisons x.
+        let res = cg_operator(|_, out| out.fill(f64::NAN), &[1.0, 2.0], 1e-10, 10);
+        assert!(!res.converged);
+        assert_eq!(res.iters, 0);
+        assert!(res.x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cg_zero_curvature_reports_breakdown() {
+        // The zero operator: pᵀAp = 0 exactly for the nonzero rhs.
+        let res = cg_operator(|_, out| out.fill(0.0), &[1.0, -2.0], 1e-10, 10);
+        assert!(!res.converged);
+        assert_eq!(res.iters, 0);
+        assert!(res.residual.is_finite());
+    }
+
+    #[test]
+    fn pcg_zero_rhs_converges_instantly() {
+        let res = pcg_csr(&csr_identity(4), &[0.0; 4], 1e-12, 10);
+        assert!(res.converged);
+        assert_eq!(res.iters, 0);
+        assert_eq!(res.x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn cg_exhausts_iterations_without_converging() {
+        // A needs ~n iterations for an n-dim Krylov space; capping at 1
+        // must report non-convergence with a finite residual, not panic.
+        let n = 16;
+        let raw: Vec<f64> = (0..n * n).map(|i| (i as f64 * 0.61).sin()).collect();
+        let b_mat = Mat::from_vec(n, n, raw);
+        let a = b_mat.transpose().matmul(&b_mat).add(&Mat::identity(n).scale(0.01));
+        let b = vec![1.0; n];
+        let res = cg_operator(|x, out| out.copy_from_slice(&a.matvec(x)), &b, 1e-14, 1);
+        assert!(!res.converged);
+        assert_eq!(res.iters, 1);
+        assert!(res.residual.is_finite() && res.residual > 0.0);
     }
 
     #[test]

@@ -3,6 +3,12 @@
 //! differentiation layer needs (§6 of the paper: the "W/o FD" baseline
 //! solves the (n+m) KKT system by LU; the fast path QR-factors
 //! √M̂⁻¹·∇fᵀ·Gᵀ).
+//!
+//! The BLAS-1 shapes (`dot`/`axpy`/`norm`, matvec rows) route through
+//! the [`simd`] kernel layer; the factorizations stay scalar (their
+//! inner loops are short, pivoted, and order-sensitive).
+
+use crate::math::simd;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -69,18 +75,14 @@ impl Mat {
         t
     }
 
-    /// Matrix–vector product.
+    /// Matrix–vector product. Each row is one [`simd::dot`]: sequential
+    /// scalar accumulation under `Scalar`/`Ordered`, the four-lane
+    /// reduction tree under `Fast` (per-row ULP bound as documented in
+    /// [`simd`]).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols);
-        let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut s = 0.0;
-            for j in 0..self.cols {
-                s += row[j] * x[j];
-            }
-            y[i] = s;
-        }
+        let mut y = Vec::new();
+        self.matvec_into(x, &mut y);
         y
     }
 
@@ -90,13 +92,14 @@ impl Mat {
         assert_eq!(x.len(), self.cols);
         y.clear();
         y.resize(self.rows, 0.0);
-        for i in 0..self.rows {
-            let row = self.row(i);
-            let mut s = 0.0;
-            for j in 0..self.cols {
-                s += row[j] * x[j];
+        if simd::reduce_lanes() {
+            for i in 0..self.rows {
+                y[i] = simd::dot_fast(self.row(i), x);
             }
-            y[i] = s;
+        } else {
+            for i in 0..self.rows {
+                y[i] = simd::dot_scalar(self.row(i), x);
+            }
         }
     }
 
@@ -117,16 +120,13 @@ impl Mat {
         self.data.extend_from_slice(&o.data);
     }
 
-    /// Transposed matrix–vector product Aᵀx.
+    /// Transposed matrix–vector product Aᵀx. Each row contributes one
+    /// [`simd::axpy`] — elementwise, so bitwise-identical in every mode.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows);
         let mut y = vec![0.0; self.cols];
         for i in 0..self.rows {
-            let row = self.row(i);
-            let xi = x[i];
-            for j in 0..self.cols {
-                y[j] += row[j] * xi;
-            }
+            simd::axpy(x[i], self.row(i), &mut y);
         }
         y
     }
@@ -411,23 +411,19 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// Dot product helper.
+/// Dot product helper (mode-dispatched; see [`simd::dot`]).
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    simd::dot(a, b)
 }
 
-/// y += alpha * x
+/// y += alpha * x (elementwise — bitwise-identical in every mode).
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
+    simd::axpy(alpha, x, y)
 }
 
-/// Euclidean norm.
+/// Euclidean norm (mode-dispatched reduction).
 pub fn norm(a: &[f64]) -> f64 {
-    dot(a, a).sqrt()
+    simd::norm(a)
 }
 
 #[cfg(test)]

@@ -1,12 +1,14 @@
 //! Numerical substrates: small fixed-size linear algebra ([`Vec3`],
 //! [`Mat3`]), dense factorizations ([`dense`]: LU, Cholesky, Householder
 //! QR), CSR sparse matrices ([`sparse`]), conjugate gradients ([`cg`]),
-//! and the RPY Euler-angle kinematics from the paper's appendices A–C
-//! ([`euler`]).
+//! the RPY Euler-angle kinematics from the paper's appendices A–C
+//! ([`euler`]), and the explicit-lane kernel layer with its scalar
+//! parity oracle ([`simd`]).
 pub mod cg;
 pub mod dense;
 pub mod euler;
 pub mod mat3;
+pub mod simd;
 pub mod sparse;
 pub mod vec3;
 

@@ -1,0 +1,620 @@
+//! Explicit-lane (`std::simd`-style) f64×4 math kernels with an
+//! always-compiled scalar oracle.
+//!
+//! The step loop's wall-clock is dominated by many small data-parallel
+//! kernels — Gauss–Newton residual/Jacobian evaluation, CG matvecs,
+//! cloth implicit-Euler CSR row products — all f64 over contiguous
+//! (structure-of-arrays) buffers. This module vectorizes them with an
+//! explicit four-lane [`F64x4`] type (a plain `[f64; 4]` wrapper whose
+//! lane-wise ops the compiler maps onto the target's vector unit; no
+//! `unsafe`, no nightly `std::simd`) while keeping the original scalar
+//! loops compiled in as the bitwise-parity oracle, the same baseline
+//! discipline `Pool::scoped` and the refit-vs-rebuild oracle use.
+//!
+//! ## The reduction-order contract
+//!
+//! Every kernel is classified by whether vectorization preserves the
+//! scalar summation order:
+//!
+//! * **Elementwise kernels** ([`axpy`], [`xpby`], [`mul_into`],
+//!   [`sub_into`]) compute each output element with exactly the same
+//!   floating-point ops as the scalar loop (one multiply, one add — no
+//!   FMA contraction), so the lane versions are **bitwise identical**
+//!   to the oracle in every mode.
+//! * **Reduction kernels** ([`dot`], [`norm`], dense/CSR row products)
+//!   in [`SimdMode::Fast`] accumulate four partial sums and combine
+//!   them with the fixed tree `(l0+l1) + (l2+l3)`, then fold the
+//!   `n % 4` remainder elements in scalar order. Reassociation changes
+//!   rounding: for inputs whose elementwise products are `p_i`, both
+//!   the scalar and the lane sum differ from the exact sum by at most
+//!   `n·ε·Σ|p_i|` (standard recursive-summation analysis, ε = 2⁻⁵³),
+//!   so the two paths agree to within **`2·n·ε·Σ|p_i|`** — the bound
+//!   `tests/prop_math_kernels.rs` asserts. NaN/∞ propagation classes
+//!   are preserved (a NaN or overflowing input poisons both paths).
+//!
+//! ## Mode selection
+//!
+//! The active [`SimdMode`] is a process-wide knob (one relaxed atomic
+//! load per kernel call, not per element):
+//!
+//! * [`SimdMode::Scalar`] — oracle loops everywhere (the portable
+//!   fallback; also what non-vector targets resolve to).
+//! * [`SimdMode::Ordered`] — lane kernels only where the reduction
+//!   order is preserved; trajectories stay **bitwise identical** to
+//!   `Scalar` end-to-end.
+//! * [`SimdMode::Fast`] — lane kernels everywhere (the default on
+//!   x86-64/AArch64); reductions obey the ULP contract above.
+//!
+//! Selection priority: an explicit [`set_mode`] call (which
+//! `SimConfig::simd` applies at `Simulation` construction and at every
+//! step entry) beats the `DIFFSIM_SIMD` environment variable
+//! (`scalar`/`off`/`0`, `ordered`, `fast`/`on`/`1`, `auto`), which
+//! beats the compile-time default: [`SimdMode::Fast`] when the target
+//! has a vector unit worth the lane shuffle ([`LANE_TARGET`]),
+//! [`SimdMode::Scalar`] otherwise.
+//!
+//! ```
+//! use diffsim::math::simd::{self, SimdMode};
+//! let a = [1.0, 2.0, 3.0, 4.0, 5.0];
+//! let fast = simd::dot_fast(&a, &a);
+//! let oracle = simd::dot_scalar(&a, &a);
+//! // Integer-valued inputs sum exactly: the lane tree agrees bitwise.
+//! assert_eq!(fast.to_bits(), oracle.to_bits());
+//! assert!(matches!(simd::mode(), SimdMode::Scalar | SimdMode::Ordered | SimdMode::Fast));
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Lane width of the explicit-SIMD kernels (f64×4 — one AVX2 register,
+/// two NEON/SSE2 registers).
+pub const LANES: usize = 4;
+
+/// Compile-time gate: `true` on targets whose baseline ISA includes a
+/// floating-point vector unit (x86-64 implies SSE2, AArch64 implies
+/// NEON, wasm with `simd128`). On other targets the lane layout is a
+/// pessimization, so [`default_mode`] resolves to [`SimdMode::Scalar`]
+/// there; the lane kernels themselves are portable Rust and still
+/// compile (and stay testable) everywhere.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64", target_feature = "simd128"))]
+pub const LANE_TARGET: bool = true;
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64", target_feature = "simd128")))]
+pub const LANE_TARGET: bool = false;
+
+/// Which kernel implementations the math layer dispatches to. See the
+/// [module docs](self) for the reduction-order contract per mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Scalar oracle loops everywhere (bitwise reference).
+    Scalar,
+    /// Lane kernels only where bitwise parity with `Scalar` holds.
+    Ordered,
+    /// Lane kernels everywhere; reductions reassociate (ULP-bounded).
+    Fast,
+}
+
+impl SimdMode {
+    /// Parse a `DIFFSIM_SIMD`-style selector. Accepts
+    /// `scalar`/`off`/`0` → `Scalar`, `ordered`/`bitwise` → `Ordered`,
+    /// `fast`/`on`/`simd`/`1` → `Fast`, and `auto` → the compile-time
+    /// default. Unknown strings parse to `None` (callers keep the
+    /// previous/default mode rather than guessing).
+    pub fn parse(s: &str) -> Option<SimdMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" | "off" | "0" | "false" => Some(SimdMode::Scalar),
+            "ordered" | "bitwise" => Some(SimdMode::Ordered),
+            "fast" | "on" | "simd" | "1" | "true" => Some(SimdMode::Fast),
+            "auto" | "" => Some(default_mode()),
+            _ => None,
+        }
+    }
+}
+
+/// The compile-time default: [`SimdMode::Fast`] on [`LANE_TARGET`]s,
+/// [`SimdMode::Scalar`] elsewhere.
+pub fn default_mode() -> SimdMode {
+    if LANE_TARGET {
+        SimdMode::Fast
+    } else {
+        SimdMode::Scalar
+    }
+}
+
+/// Process-wide mode cell. `UNSET` (the initial value) means "not yet
+/// resolved": the first [`mode`] call folds in `DIFFSIM_SIMD` / the
+/// compile-time default and stores the result.
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+const MODE_UNSET: u8 = u8::MAX;
+
+fn encode(m: SimdMode) -> u8 {
+    match m {
+        SimdMode::Scalar => 0,
+        SimdMode::Ordered => 1,
+        SimdMode::Fast => 2,
+    }
+}
+
+#[cold]
+fn init_mode_from_env() -> SimdMode {
+    let m = std::env::var("DIFFSIM_SIMD")
+        .ok()
+        .and_then(|s| SimdMode::parse(&s))
+        .unwrap_or_else(default_mode);
+    MODE.store(encode(m), Ordering::Relaxed);
+    m
+}
+
+/// The currently selected [`SimdMode`] (one relaxed load; resolves the
+/// `DIFFSIM_SIMD` environment override on first use).
+#[inline]
+pub fn mode() -> SimdMode {
+    match MODE.load(Ordering::Relaxed) {
+        0 => SimdMode::Scalar,
+        1 => SimdMode::Ordered,
+        2 => SimdMode::Fast,
+        _ => init_mode_from_env(),
+    }
+}
+
+/// Select the kernel mode process-wide. `SimConfig::simd` routes here
+/// (at `Simulation::new` and on every step entry), so per-scene configs
+/// win over the environment default. The knob is global — concurrently
+/// stepping scenes that request *different* modes race benignly (last
+/// store wins for subsequent kernel calls); batch drivers share one
+/// mode by construction.
+pub fn set_mode(m: SimdMode) {
+    MODE.store(encode(m), Ordering::Relaxed);
+}
+
+/// `true` when reductions should use the lane path (`Fast` only).
+#[inline]
+pub fn reduce_lanes() -> bool {
+    mode() == SimdMode::Fast
+}
+
+/// `true` when elementwise kernels should use the lane path
+/// (`Ordered` and `Fast` — bitwise-neutral either way).
+#[inline]
+pub fn elementwise_lanes() -> bool {
+    mode() != SimdMode::Scalar
+}
+
+/// Four f64 lanes with explicit elementwise ops — the `std::simd`
+/// shape on stable Rust. All ops are plain per-lane mul/add/sub (no
+/// FMA), so a lane op on element `i` rounds exactly like the scalar
+/// loop's op on element `i`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    #[inline]
+    pub fn zero() -> F64x4 {
+        F64x4([0.0; 4])
+    }
+
+    #[inline]
+    pub fn splat(v: f64) -> F64x4 {
+        F64x4([v; 4])
+    }
+
+    /// Load lanes from the first four elements of `s` (`s.len() >= 4`).
+    #[inline]
+    pub fn load(s: &[f64]) -> F64x4 {
+        F64x4([s[0], s[1], s[2], s[3]])
+    }
+
+    /// Store lanes into the first four elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f64]) {
+        out[..4].copy_from_slice(&self.0);
+    }
+
+    /// Horizontal sum with the fixed tree `(l0+l1) + (l2+l3)` — the
+    /// documented reduction order of every `Fast` kernel.
+    #[inline]
+    pub fn hsum(self) -> f64 {
+        (self.0[0] + self.0[1]) + (self.0[2] + self.0[3])
+    }
+}
+
+impl std::ops::Add for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn add(self, o: F64x4) -> F64x4 {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]])
+    }
+}
+
+impl std::ops::Sub for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn sub(self, o: F64x4) -> F64x4 {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] - b[0], a[1] - b[1], a[2] - b[2], a[3] - b[3]])
+    }
+}
+
+impl std::ops::Mul for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn mul(self, o: F64x4) -> F64x4 {
+        let (a, b) = (self.0, o.0);
+        F64x4([a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]])
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reduction kernels: dot products (dense rows, CSR rows, norms).
+// ---------------------------------------------------------------------
+
+/// Scalar-oracle dot product: strictly sequential left-to-right
+/// accumulation from 0.0 (the seed tree's summation order).
+#[inline]
+pub fn dot_scalar(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let mut s = 0.0;
+    for i in 0..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Lane dot product: four running partial sums over the `n - n % 4`
+/// prefix, [`F64x4::hsum`]'s fixed tree, then the remainder elements in
+/// scalar order. Differs from [`dot_scalar`] by at most
+/// `2·n·ε·Σ|aᵢ·bᵢ|` (see the [module docs](self)).
+#[inline]
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len().min(b.len());
+    let main = n - n % LANES;
+    let mut acc = F64x4::zero();
+    let mut i = 0;
+    while i < main {
+        acc = acc + F64x4::load(&a[i..]) * F64x4::load(&b[i..]);
+        i += LANES;
+    }
+    let mut s = acc.hsum();
+    for k in main..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// Mode-dispatched dot product ([`dot_fast`] under [`SimdMode::Fast`],
+/// [`dot_scalar`] otherwise — `Ordered` keeps reductions sequential to
+/// preserve bitwise parity).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    if reduce_lanes() {
+        dot_fast(a, b)
+    } else {
+        dot_scalar(a, b)
+    }
+}
+
+/// Euclidean norm through the mode-dispatched [`dot`].
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Scalar-oracle CSR row product Σₖ vals[k]·x[cols[k]].
+#[inline]
+pub fn csr_row_dot_scalar(vals: &[f64], cols: &[u32], x: &[f64]) -> f64 {
+    debug_assert_eq!(vals.len(), cols.len());
+    let mut s = 0.0;
+    for k in 0..vals.len() {
+        s += vals[k] * x[cols[k] as usize];
+    }
+    s
+}
+
+/// Lane CSR row product: contiguous value lanes against four gathered
+/// `x` entries, same reduction tree and remainder handling (and thus
+/// the same ULP contract) as [`dot_fast`].
+#[inline]
+pub fn csr_row_dot_fast(vals: &[f64], cols: &[u32], x: &[f64]) -> f64 {
+    debug_assert_eq!(vals.len(), cols.len());
+    let n = vals.len();
+    let main = n - n % LANES;
+    let mut acc = F64x4::zero();
+    let mut k = 0;
+    while k < main {
+        let xs = F64x4([
+            x[cols[k] as usize],
+            x[cols[k + 1] as usize],
+            x[cols[k + 2] as usize],
+            x[cols[k + 3] as usize],
+        ]);
+        acc = acc + F64x4::load(&vals[k..]) * xs;
+        k += LANES;
+    }
+    let mut s = acc.hsum();
+    for t in main..n {
+        s += vals[t] * x[cols[t] as usize];
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Elementwise kernels: bitwise-identical to their scalar oracles in
+// every mode (each element sees exactly one mul and one add/sub).
+// ---------------------------------------------------------------------
+
+/// Scalar oracle for [`axpy`]: `y[i] += alpha * x[i]`.
+#[inline]
+pub fn axpy_scalar(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    for i in 0..n {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Lane version of [`axpy`] — bitwise-identical to [`axpy_scalar`]
+/// (per-element `y[i] + alpha·x[i]`, no reduction, no FMA).
+#[inline]
+pub fn axpy_lanes(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    let main = n - n % LANES;
+    let av = F64x4::splat(alpha);
+    let mut i = 0;
+    while i < main {
+        let r = F64x4::load(&y[i..]) + av * F64x4::load(&x[i..]);
+        r.store(&mut y[i..]);
+        i += LANES;
+    }
+    for k in main..n {
+        y[k] += alpha * x[k];
+    }
+}
+
+/// Mode-dispatched `y += alpha·x` (lane path in `Ordered` and `Fast`;
+/// bitwise-neutral by the elementwise contract).
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    if elementwise_lanes() {
+        axpy_lanes(alpha, x, y)
+    } else {
+        axpy_scalar(alpha, x, y)
+    }
+}
+
+/// Scalar oracle for [`xpby`]: `y[i] = x[i] + beta * y[i]` (the CG
+/// direction update `p ← r + β·p`).
+#[inline]
+pub fn xpby_scalar(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    for i in 0..n {
+        y[i] = x[i] + beta * y[i];
+    }
+}
+
+/// Lane version of [`xpby`] — bitwise-identical to [`xpby_scalar`].
+#[inline]
+pub fn xpby_lanes(x: &[f64], beta: f64, y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len().min(y.len());
+    let main = n - n % LANES;
+    let bv = F64x4::splat(beta);
+    let mut i = 0;
+    while i < main {
+        let r = F64x4::load(&x[i..]) + bv * F64x4::load(&y[i..]);
+        r.store(&mut y[i..]);
+        i += LANES;
+    }
+    for k in main..n {
+        y[k] = x[k] + beta * y[k];
+    }
+}
+
+/// Mode-dispatched `y = x + beta·y`.
+#[inline]
+pub fn xpby(x: &[f64], beta: f64, y: &mut [f64]) {
+    if elementwise_lanes() {
+        xpby_lanes(x, beta, y)
+    } else {
+        xpby_scalar(x, beta, y)
+    }
+}
+
+/// Scalar oracle for [`mul_into`]: `out[i] = a[i] * b[i]`.
+#[inline]
+pub fn mul_into_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len().min(b.len()).min(out.len());
+    for i in 0..n {
+        out[i] = a[i] * b[i];
+    }
+}
+
+/// Lane version of [`mul_into`] — bitwise-identical to the oracle.
+#[inline]
+pub fn mul_into_lanes(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len().min(b.len()).min(out.len());
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        (F64x4::load(&a[i..]) * F64x4::load(&b[i..])).store(&mut out[i..]);
+        i += LANES;
+    }
+    for k in main..n {
+        out[k] = a[k] * b[k];
+    }
+}
+
+/// Mode-dispatched Hadamard product `out = a ∘ b` (the Jacobi
+/// preconditioner application `z = M⁻¹·r`).
+#[inline]
+pub fn mul_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    if elementwise_lanes() {
+        mul_into_lanes(a, b, out)
+    } else {
+        mul_into_scalar(a, b, out)
+    }
+}
+
+/// Scalar oracle for [`sub_into`]: `out[i] = a[i] - b[i]`.
+#[inline]
+pub fn sub_into_scalar(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len().min(b.len()).min(out.len());
+    for i in 0..n {
+        out[i] = a[i] - b[i];
+    }
+}
+
+/// Lane version of [`sub_into`] — bitwise-identical to the oracle.
+#[inline]
+pub fn sub_into_lanes(a: &[f64], b: &[f64], out: &mut [f64]) {
+    debug_assert!(a.len() == b.len() && a.len() == out.len());
+    let n = a.len().min(b.len()).min(out.len());
+    let main = n - n % LANES;
+    let mut i = 0;
+    while i < main {
+        (F64x4::load(&a[i..]) - F64x4::load(&b[i..])).store(&mut out[i..]);
+        i += LANES;
+    }
+    for k in main..n {
+        out[k] = a[k] - b[k];
+    }
+}
+
+/// Mode-dispatched elementwise difference `out = a − b` (the
+/// Gauss–Newton displacement `dq = q − q₀`).
+#[inline]
+pub fn sub_into(a: &[f64], b: &[f64], out: &mut [f64]) {
+    if elementwise_lanes() {
+        sub_into_lanes(a, b, out)
+    } else {
+        sub_into_scalar(a, b, out)
+    }
+}
+
+/// Distance between `a` and `b` in units in the last place, measured on
+/// the monotone integer number line of IEEE-754 doubles (so it spans
+/// zero and subnormals correctly). Returns 0 for `a == b` (including
+/// `+0 == -0`), `u64::MAX` when either side is NaN. Test/diagnostic
+/// helper for the reduction-kernel parity suites.
+pub fn ulp_diff(a: f64, b: f64) -> u64 {
+    if a == b {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    // Map the sign-magnitude bit pattern onto a monotone integer line:
+    // nonnegative floats keep their bits, negative floats mirror below
+    // zero. i128 arithmetic avoids overflow at the extremes.
+    fn line(x: f64) -> i128 {
+        let b = x.to_bits() as i64 as i128;
+        if b < 0 {
+            (i64::MIN as i128) - b
+        } else {
+            b
+        }
+    }
+    let d = line(a) - line(b);
+    u64::try_from(d.unsigned_abs()).unwrap_or(u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_covers_all_selectors() {
+        assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("OFF"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("0"), Some(SimdMode::Scalar));
+        assert_eq!(SimdMode::parse("ordered"), Some(SimdMode::Ordered));
+        assert_eq!(SimdMode::parse("bitwise"), Some(SimdMode::Ordered));
+        assert_eq!(SimdMode::parse("fast"), Some(SimdMode::Fast));
+        assert_eq!(SimdMode::parse(" on "), Some(SimdMode::Fast));
+        assert_eq!(SimdMode::parse("1"), Some(SimdMode::Fast));
+        assert_eq!(SimdMode::parse("auto"), Some(default_mode()));
+        assert_eq!(SimdMode::parse("warp9"), None);
+    }
+
+    #[test]
+    fn hsum_tree_order_is_fixed() {
+        // (1 + 2^-53) + (2^-53 + 0) rounds differently than sequential
+        // accumulation; pin the documented tree.
+        let e = f64::EPSILON / 2.0;
+        let v = F64x4([1.0, e, e, 0.0]);
+        assert_eq!(v.hsum().to_bits(), ((1.0 + e) + (e + 0.0)).to_bits());
+    }
+
+    #[test]
+    fn lane_ops_are_elementwise() {
+        let a = F64x4([1.0, -2.0, 3.5, 0.0]);
+        let b = F64x4([0.5, 4.0, -1.0, 9.0]);
+        assert_eq!((a + b).0, [1.5, 2.0, 2.5, 9.0]);
+        assert_eq!((a - b).0, [0.5, -6.0, 4.5, -9.0]);
+        assert_eq!((a * b).0, [0.5, -8.0, -3.5, 0.0]);
+        let mut out = [0.0; 4];
+        F64x4::splat(7.0).store(&mut out);
+        assert_eq!(out, [7.0; 4]);
+        assert_eq!(F64x4::load(&[1.0, 2.0, 3.0, 4.0, 99.0]).0, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn exact_dots_agree_bitwise() {
+        // Integer-valued data sums exactly in both orders: a cheap
+        // witness that the fast path computes the same products.
+        let a: Vec<f64> = (0..23).map(|i| (i % 7) as f64 - 3.0).collect();
+        let b: Vec<f64> = (0..23).map(|i| (i % 5) as f64).collect();
+        assert_eq!(dot_fast(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits());
+        let cols: Vec<u32> = (0..23).rev().collect();
+        assert_eq!(
+            csr_row_dot_fast(&a, &cols, &b).to_bits(),
+            csr_row_dot_scalar(&a, &cols, &b).to_bits()
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        assert_eq!(dot_fast(&[], &[]), 0.0);
+        assert_eq!(dot_scalar(&[], &[]), 0.0);
+        assert_eq!(dot_fast(&[2.0], &[3.0]), 6.0);
+        assert_eq!(csr_row_dot_fast(&[], &[], &[1.0]), 0.0);
+        let mut y: Vec<f64> = vec![];
+        axpy_lanes(2.0, &[], &mut y);
+        assert!(y.is_empty());
+    }
+
+    #[test]
+    fn ulp_diff_basics() {
+        assert_eq!(ulp_diff(1.0, 1.0), 0);
+        assert_eq!(ulp_diff(0.0, -0.0), 0);
+        assert_eq!(ulp_diff(1.0, 1.0 + f64::EPSILON), 1);
+        assert_eq!(ulp_diff(-1.0, -1.0 - f64::EPSILON), 1);
+        assert_eq!(
+            ulp_diff(f64::MIN_POSITIVE, -f64::MIN_POSITIVE),
+            ulp_diff(0.0, f64::MIN_POSITIVE) * 2
+        );
+        assert_eq!(ulp_diff(f64::NAN, 1.0), u64::MAX);
+        assert!(ulp_diff(1.0, 2.0) > 1_000_000);
+    }
+
+    #[test]
+    fn mode_cell_roundtrips() {
+        // Unit tests share the process-global cell with other lib
+        // tests; restore whatever was active when done.
+        let saved = mode();
+        set_mode(SimdMode::Ordered);
+        assert_eq!(mode(), SimdMode::Ordered);
+        assert!(elementwise_lanes());
+        assert!(!reduce_lanes());
+        set_mode(SimdMode::Fast);
+        assert!(reduce_lanes());
+        set_mode(SimdMode::Scalar);
+        assert!(!elementwise_lanes());
+        set_mode(saved);
+    }
+}

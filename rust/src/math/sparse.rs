@@ -107,15 +107,24 @@ impl Csr {
     }
 
     /// y = A·x written into a caller buffer (hot path: no allocation).
+    /// Each row is one CSR row product from the [`simd`](super::simd)
+    /// layer: sequential under `Scalar`/`Ordered`, the four-lane
+    /// value×gather reduction under `Fast` (per-row ULP bound as
+    /// documented there).
     pub fn matvec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.cols);
         assert_eq!(y.len(), self.rows);
-        for i in 0..self.rows {
-            let mut s = 0.0;
-            for k in self.indptr[i]..self.indptr[i + 1] {
-                s += self.data[k] * x[self.indices[k] as usize];
+        use super::simd;
+        if simd::reduce_lanes() {
+            for i in 0..self.rows {
+                let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+                y[i] = simd::csr_row_dot_fast(&self.data[lo..hi], &self.indices[lo..hi], x);
             }
-            y[i] = s;
+        } else {
+            for i in 0..self.rows {
+                let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+                y[i] = simd::csr_row_dot_scalar(&self.data[lo..hi], &self.indices[lo..hi], x);
+            }
         }
     }
 

@@ -9,6 +9,12 @@
 //! 6×6 per body and forces are configuration-independent (gravity,
 //! control, explicit gyroscopic term), so each body solves its own 6×6
 //! system M̂·Δq̇ = h·Q(q, q̇).
+//!
+//! Kernel modes: the CSR row products inside the PCG solve dispatch on
+//! the active [`crate::math::simd::SimdMode`] — the solve is bitwise
+//! reproducible under `Scalar`/`Ordered` and ULP-perturbed per CG
+//! iteration under `Fast` (`tests/integration_simd.rs` holds the
+//! full-step results to the documented tolerance).
 
 use crate::bodies::{Cloth, RigidBody};
 use crate::math::cg::pcg_csr;

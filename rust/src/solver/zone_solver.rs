@@ -23,7 +23,7 @@ use crate::bodies::{NodeRef, System};
 use crate::collision::zones::{entity_of, Entity, ImpactZone};
 use crate::collision::Impact;
 use crate::math::dense::Mat;
-use crate::math::{euler, Vec3};
+use crate::math::{euler, simd, Vec3};
 use crate::util::arena::BatchArena;
 use crate::util::memory::MemCategory;
 use crate::util::scratch;
@@ -52,6 +52,88 @@ pub struct Constraint {
     pub nodes: [crate::bodies::NodeRef; 4],
 }
 
+/// Structure-of-arrays view of the constraints' *cloth* terms, grouped
+/// per constraint row (CSR-style `cloth_ptr`). Cloth terms are linear —
+/// coefficient w·n against three contiguous DOFs — so the
+/// [`SimdMode::Fast`](simd::SimdMode::Fast) eval/Jacobian paths stream
+/// them through [`simd::F64x4`] lanes with the per-component products
+/// `w·n.x`, `w·n.y`, `w·n.z` precomputed once at build. Rigid terms stay
+/// in AoS form: each one runs the full Euler-angle kinematics chain and
+/// has no lane-parallel structure at zone sizes.
+#[derive(Clone, Debug, Default)]
+pub struct TermSoa {
+    /// Row pointers: constraint `j`'s cloth terms are
+    /// `cloth_off/cx/cy/cz[cloth_ptr[j]..cloth_ptr[j+1]]`.
+    pub cloth_ptr: Vec<u32>,
+    /// Stacked DOF offset of each cloth term's node (x component; the
+    /// y/z DOFs are at `+1`/`+2`).
+    pub cloth_off: Vec<u32>,
+    /// Per-term coefficient w·n.x (exactly the product the scalar
+    /// Jacobian writes).
+    pub cloth_cx: Vec<f64>,
+    /// Per-term coefficient w·n.y.
+    pub cloth_cy: Vec<f64>,
+    /// Per-term coefficient w·n.z.
+    pub cloth_cz: Vec<f64>,
+}
+
+impl TermSoa {
+    /// Build the SoA view from constraint rows (`offsets` maps entity
+    /// slots to stacked DOF offsets, as in [`ZoneProblem::offsets`]).
+    pub fn build(constraints: &[Constraint], offsets: &[usize]) -> TermSoa {
+        let mut soa = TermSoa::default();
+        soa.cloth_ptr.reserve(constraints.len() + 1);
+        soa.cloth_ptr.push(0);
+        for c in constraints {
+            for t in &c.terms {
+                if let Term::ClothNode { ent, w } = *t {
+                    soa.cloth_off.push(offsets[ent] as u32);
+                    soa.cloth_cx.push(w * c.n.x);
+                    soa.cloth_cy.push(w * c.n.y);
+                    soa.cloth_cz.push(w * c.n.z);
+                }
+            }
+            soa.cloth_ptr.push(soa.cloth_off.len() as u32);
+        }
+        soa
+    }
+
+    /// Gap contribution of constraint `j`'s cloth block at `q`:
+    /// Σ_t (cx·qx + cy·qy + cz·qz), four terms per lane step with the
+    /// [`simd`] reduction tree, remainder in scalar order.
+    fn row_dot(&self, j: usize, q: &[f64]) -> f64 {
+        let (lo, hi) = (self.cloth_ptr[j] as usize, self.cloth_ptr[j + 1] as usize);
+        let n = hi - lo;
+        let main = lo + (n - n % simd::LANES);
+        let mut acc = simd::F64x4::zero();
+        let mut k = lo;
+        while k < main {
+            let o = [
+                self.cloth_off[k] as usize,
+                self.cloth_off[k + 1] as usize,
+                self.cloth_off[k + 2] as usize,
+                self.cloth_off[k + 3] as usize,
+            ];
+            let gx = simd::F64x4([q[o[0]], q[o[1]], q[o[2]], q[o[3]]]);
+            let gy = simd::F64x4([q[o[0] + 1], q[o[1] + 1], q[o[2] + 1], q[o[3] + 1]]);
+            let gz = simd::F64x4([q[o[0] + 2], q[o[1] + 2], q[o[2] + 2], q[o[3] + 2]]);
+            acc = acc
+                + simd::F64x4::load(&self.cloth_cx[k..]) * gx
+                + simd::F64x4::load(&self.cloth_cy[k..]) * gy
+                + simd::F64x4::load(&self.cloth_cz[k..]) * gz;
+            k += simd::LANES;
+        }
+        let mut s = acc.hsum();
+        for t in main..hi {
+            let off = self.cloth_off[t] as usize;
+            s += self.cloth_cx[t] * q[off]
+                + self.cloth_cy[t] * q[off + 1]
+                + self.cloth_cz[t] * q[off + 2];
+        }
+        s
+    }
+}
+
 /// The zone optimization problem (Eq. 6) in stacked coordinates.
 pub struct ZoneProblem {
     pub entities: Vec<Entity>,
@@ -64,6 +146,10 @@ pub struct ZoneProblem {
     /// Block-diagonal M̂ (dense; zones are small by construction).
     pub mass: Mat,
     pub constraints: Vec<Constraint>,
+    /// SoA view of the cloth terms for the lane kernels — derived from
+    /// `constraints`; call [`ZoneProblem::rebuild_soa`] after mutating
+    /// them by hand.
+    pub soa: TermSoa,
     /// Optional initial multipliers (one per constraint) from a previous
     /// step's parked solution. `None` (the default) reproduces the cold
     /// start bitwise; `Some` seeds the AL outer loop so persistent
@@ -196,11 +282,12 @@ impl ZoneProblem {
             }
         }
         // Constraints from impacts.
-        let constraints = zone
+        let constraints: Vec<Constraint> = zone
             .impacts
             .iter()
             .map(|im| constraint_from_impact(sys, im, &slot, rigid_q, cloth_x, delta))
             .collect();
+        let soa = TermSoa::build(&constraints, &offsets);
         ZoneProblem {
             entities: zone.entities.clone(),
             offsets,
@@ -208,8 +295,16 @@ impl ZoneProblem {
             q0,
             mass,
             constraints,
+            soa,
             warm_lambda: None,
         }
+    }
+
+    /// Re-derive the [`TermSoa`] view after `constraints`/`offsets` were
+    /// mutated in place (tests and tape surgery; the engine paths build
+    /// problems fresh each step).
+    pub fn rebuild_soa(&mut self) {
+        self.soa = TermSoa::build(&self.constraints, &self.offsets);
     }
 
     /// Evaluate all constraints at stacked coordinates `q`.
@@ -220,8 +315,22 @@ impl ZoneProblem {
     }
 
     /// [`ZoneProblem::eval`] into a caller-provided (scratch) buffer —
-    /// same arithmetic, no allocation when the buffer has capacity.
+    /// no allocation when the buffer has capacity. Dispatches on the
+    /// active [`simd::SimdMode`]: [`ZoneProblem::eval_scalar_into`]
+    /// under `Scalar`/`Ordered` (term order preserved — bitwise),
+    /// [`ZoneProblem::eval_fast_into`] under `Fast` (SoA cloth lanes;
+    /// ULP-bounded per the [`simd`] contract).
     pub fn eval_into(&self, q: &[f64], out: &mut Vec<f64>) {
+        if simd::reduce_lanes() {
+            self.eval_fast_into(q, out)
+        } else {
+            self.eval_scalar_into(q, out)
+        }
+    }
+
+    /// Scalar oracle: terms accumulate in constraint order, exactly the
+    /// seed arithmetic.
+    pub fn eval_scalar_into(&self, q: &[f64], out: &mut Vec<f64>) {
         out.clear();
         out.extend(self.constraints
             .iter()
@@ -245,6 +354,33 @@ impl ZoneProblem {
             }));
     }
 
+    /// Lane path: rigid terms run the scalar kinematics chain in term
+    /// order, then the constraint's cloth block streams through the
+    /// [`TermSoa`] four terms per lane step. Reassociates the per-row
+    /// sum (rigid-then-cloth, lane tree), so agreement with the oracle
+    /// is ULP-bounded, not bitwise.
+    pub fn eval_fast_into(&self, q: &[f64], out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(self.constraints.len());
+        for (j, c) in self.constraints.iter().enumerate() {
+            let mut v = c.fixed_part - c.delta;
+            for t in &c.terms {
+                if let Term::RigidVert { ent, w, p0 } = *t {
+                    let off = self.offsets[ent];
+                    // lint:allow(no-bare-unwrap: slice is exactly 6 wide)
+                    let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
+                    v += w * c.n.dot(euler::transform_point(&qb, p0));
+                }
+            }
+            // Rigid-only rows skip the add entirely (also dodges the
+            // `-0.0 + 0.0` sign flip an unconditional `+ 0.0` invites).
+            if self.soa.cloth_ptr[j] < self.soa.cloth_ptr[j + 1] {
+                v += self.soa.row_dot(j, q);
+            }
+            out.push(v);
+        }
+    }
+
     /// Constraint Jacobian ∇C (m×n) at `q` — the paper's G·∇f.
     pub fn jacobian(&self, q: &[f64]) -> Mat {
         let mut jac = Mat::zeros(0, 0);
@@ -254,8 +390,22 @@ impl ZoneProblem {
 
     /// [`ZoneProblem::jacobian`] into a caller-provided (scratch)
     /// matrix — resized and zeroed before accumulation, so results are
-    /// bitwise-identical to the allocating version.
+    /// bitwise-identical to the allocating version. Dispatches like
+    /// [`ZoneProblem::eval_into`]; the fast path is *also* bitwise here
+    /// (a constraint's terms hit disjoint column blocks per node, so
+    /// reordering rigid-before-cloth never reorders adds into the same
+    /// entry, and the SoA coefficients are the very products `w·n.x`
+    /// the scalar path writes).
     pub fn jacobian_into(&self, q: &[f64], jac: &mut Mat) {
+        if simd::reduce_lanes() {
+            self.jacobian_fast_into(q, jac)
+        } else {
+            self.jacobian_scalar_into(q, jac)
+        }
+    }
+
+    /// Scalar oracle: the seed's interleaved term loop, verbatim.
+    pub fn jacobian_scalar_into(&self, q: &[f64], jac: &mut Mat) {
         let m = self.constraints.len();
         jac.reset(m, self.n);
         for (j, c) in self.constraints.iter().enumerate() {
@@ -278,6 +428,37 @@ impl ZoneProblem {
                         jac[(j, off + 2)] += w * c.n.z;
                     }
                 }
+            }
+        }
+    }
+
+    /// Lane-mode path: rigid terms as in the oracle, cloth entries
+    /// scattered straight from the precomputed [`TermSoa`] coefficients
+    /// (no per-call `w·n` recompute). Bitwise-identical to
+    /// [`ZoneProblem::jacobian_scalar_into`] — see
+    /// [`ZoneProblem::jacobian_into`].
+    pub fn jacobian_fast_into(&self, q: &[f64], jac: &mut Mat) {
+        let m = self.constraints.len();
+        jac.reset(m, self.n);
+        for (j, c) in self.constraints.iter().enumerate() {
+            for t in &c.terms {
+                if let Term::RigidVert { ent, w, p0 } = *t {
+                    let off = self.offsets[ent];
+                    // lint:allow(no-bare-unwrap: slice is exactly 6 wide)
+                    let qb: [f64; 6] = q[off..off + 6].try_into().unwrap();
+                    let jf = euler::jacobian(&qb, p0);
+                    for col in 0..6 {
+                        jac[(j, off + col)] +=
+                            w * (c.n.x * jf[0][col] + c.n.y * jf[1][col] + c.n.z * jf[2][col]);
+                    }
+                }
+            }
+            let (lo, hi) = (self.soa.cloth_ptr[j] as usize, self.soa.cloth_ptr[j + 1] as usize);
+            for t in lo..hi {
+                let off = self.soa.cloth_off[t] as usize;
+                jac[(j, off)] += self.soa.cloth_cx[t];
+                jac[(j, off + 1)] += self.soa.cloth_cy[t];
+                jac[(j, off + 2)] += self.soa.cloth_cz[t];
             }
         }
     }
@@ -355,6 +536,12 @@ impl ZoneProblem {
                 self.eval_into(&q, c.as_vec());
                 self.jacobian_into(&q, &mut jac);
                 // grad = M(q−q0) − Jᵀ·max(0, λ − μ·c)
+                // (dq/grad/H updates run on simd kernels; all are
+                // elementwise per row — `y -= x·f` ≡ `y += (−f)·x` and
+                // `μ·ja·x` left-associates onto the hoisted `μ·ja` —
+                // so the Scalar/Ordered arithmetic is the seed's, bit
+                // for bit, and Fast only reassociates the reductions
+                // inside eval/jacobian/matvec/dot.)
                 dq.fill_with(q.iter().zip(&self.q0).map(|(a, b)| a - b));
                 mass.matvec_into(&dq, grad.as_vec());
                 let mut active = vec![false; m];
@@ -362,9 +549,7 @@ impl ZoneProblem {
                     let force = (lambda[j] - mu * c[j]).max(0.0);
                     if force > 0.0 {
                         active[j] = true;
-                        for col in 0..self.n {
-                            grad[col] -= jac[(j, col)] * force;
-                        }
+                        simd::axpy(-force, jac.row(j), &mut grad);
                     }
                 }
                 // H = M + μ·Σ_active JᵀJ
@@ -376,9 +561,7 @@ impl ZoneProblem {
                             if ja == 0.0 {
                                 continue;
                             }
-                            for b in 0..self.n {
-                                h[(a, b)] += mu * ja * jac[(j, b)];
-                            }
+                            simd::axpy(mu * ja, jac.row(j), h.row_mut(a));
                         }
                     }
                 }
@@ -803,6 +986,119 @@ mod tests {
             dy_light > 3.0 * dy_heavy,
             "light moved {dy_light}, heavy moved {dy_heavy}"
         );
+    }
+
+    #[test]
+    fn eval_fast_matches_scalar_on_rigid_zone() {
+        // No cloth terms: the fast path is the same rigid chain in the
+        // same order — bitwise. (Explicit `_scalar`/`_fast` variants;
+        // the process-global mode is never touched, so this test is
+        // safe under the parallel lib-test runner.)
+        let (_sys, zp) = penetrating_cube_problem();
+        let q: Vec<f64> = zp.q0.iter().enumerate().map(|(i, &x)| x + 0.003 * i as f64).collect();
+        let (mut cs, mut cf) = (Vec::new(), Vec::new());
+        zp.eval_scalar_into(&q, &mut cs);
+        zp.eval_fast_into(&q, &mut cf);
+        assert_eq!(cs.len(), cf.len());
+        for (a, b) in cs.iter().zip(&cf) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (mut js, mut jf) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        zp.jacobian_scalar_into(&q, &mut js);
+        zp.jacobian_fast_into(&q, &mut jf);
+        assert_eq!(js, jf);
+    }
+
+    /// Synthetic all-cloth zone: `m` constraints over `nodes` cloth
+    /// nodes with `terms_per` cloth terms each — exercises the SoA lane
+    /// blocks including the `terms_per % 4 != 0` remainder.
+    fn synthetic_cloth_problem(nodes: usize, m: usize, terms_per: usize) -> ZoneProblem {
+        assert!(terms_per <= nodes);
+        let entities: Vec<Entity> = (0..nodes).map(|k| Entity::ClothNode(0, k as u32)).collect();
+        let offsets: Vec<usize> = (0..nodes).map(|k| 3 * k).collect();
+        let n = 3 * nodes;
+        let q0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.731).sin()).collect();
+        let constraints: Vec<Constraint> = (0..m)
+            .map(|j| {
+                let raw = Vec3::new(
+                    (j as f64 + 1.0).sin(),
+                    (j as f64 * 1.7 + 0.3).cos(),
+                    (j as f64 * 0.9 - 1.0).sin(),
+                );
+                let nrm = raw.normalized();
+                let terms = (0..terms_per)
+                    .map(|t| Term::ClothNode {
+                        ent: (j + 3 * t) % nodes,
+                        w: 0.25 + 0.5 * ((j + t) as f64 * 0.37).cos(),
+                    })
+                    .collect();
+                Constraint {
+                    n: nrm,
+                    terms,
+                    fixed_part: 0.01 * j as f64,
+                    delta: 1e-3,
+                    nodes: [NodeRef::Cloth { cloth: 0, node: j as u32 }; 4],
+                }
+            })
+            .collect();
+        let soa = TermSoa::build(&constraints, &offsets);
+        ZoneProblem {
+            entities,
+            offsets,
+            n,
+            q0,
+            mass: Mat::identity(n),
+            constraints,
+            soa,
+            warm_lambda: None,
+        }
+    }
+
+    #[test]
+    fn eval_fast_cloth_lanes_within_ulp_bound() {
+        // Cloth rows reassociate (per-component SoA products, lane
+        // tree) — assert the documented bound instead of bitwise, for
+        // term counts hitting full lanes, remainders, and empty rows.
+        for terms_per in [0usize, 1, 3, 4, 5, 7, 8, 11] {
+            let zp = synthetic_cloth_problem(12, 6, terms_per);
+            let q: Vec<f64> =
+                zp.q0.iter().enumerate().map(|(i, &x)| x + 0.1 * (i as f64).cos()).collect();
+            let (mut cs, mut cf) = (Vec::new(), Vec::new());
+            zp.eval_scalar_into(&q, &mut cs);
+            zp.eval_fast_into(&q, &mut cf);
+            assert_eq!(cs.len(), cf.len());
+            for (j, (a, b)) in cs.iter().zip(&cf).enumerate() {
+                // 2·n·ε·Σ|pᵢ| with n = 3 products per term and every
+                // |w·n·q| ≤ 1 by construction (plus the constant part).
+                let mag = 1.0 + 3.0 * terms_per as f64;
+                let bound = 2.0 * (3 * terms_per.max(1)) as f64 * f64::EPSILON * mag;
+                assert!(
+                    (a - b).abs() <= bound,
+                    "terms_per={terms_per} row {j}: scalar {a} fast {b} (bound {bound})"
+                );
+            }
+            // The Jacobian stays bitwise even through the SoA path.
+            let (mut js, mut jf) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+            zp.jacobian_scalar_into(&q, &mut js);
+            zp.jacobian_fast_into(&q, &mut jf);
+            assert_eq!(js, jf);
+        }
+    }
+
+    #[test]
+    fn rebuild_soa_tracks_constraint_edits() {
+        let mut zp = synthetic_cloth_problem(8, 4, 5);
+        zp.constraints.truncate(2);
+        zp.constraints[0].terms.pop();
+        zp.rebuild_soa();
+        assert_eq!(zp.soa.cloth_ptr.len(), zp.constraints.len() + 1);
+        let q = zp.q0.clone();
+        let (mut cs, mut cf) = (Vec::new(), Vec::new());
+        zp.eval_scalar_into(&q, &mut cs);
+        zp.eval_fast_into(&q, &mut cf);
+        for (a, b) in cs.iter().zip(&cf) {
+            assert!((a - b).abs() <= 1e-12 * (1.0 + a.abs()));
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! SIMD kernel modes: the end-to-end scalar-oracle parity suite.
+//!
+//! `SimConfig::simd` pins the process-wide kernel mode per scene
+//! (re-asserted at every step entry). The contract mirrored from the
+//! refit-vs-rebuild oracle:
+//!
+//! * `Ordered` (lane kernels only where summation order is preserved)
+//!   must reproduce the `Scalar` oracle **bitwise** — full 80-step
+//!   rigid+cloth trajectories, per-step `StepStats`, and taped rollout
+//!   losses/gradients.
+//! * `Fast` (reassociated reductions) is ULP-perturbed per kernel;
+//!   through contact dynamics that compounds, so full-step results are
+//!   held to a loose documented tolerance on dissipative scenes that
+//!   settle toward the same rest state, plus finiteness and
+//!   contact-activity sanity.
+//!
+//! The kernel mode is process-global: tests serialize on a file-local
+//! mutex and run each configuration to completion before the next is
+//! constructed.
+
+use diffsim::batch::SceneBatch;
+use diffsim::bodies::{Cloth, RigidBody, System};
+use diffsim::engine::backward::LossGrad;
+use diffsim::engine::{SimConfig, Simulation};
+use diffsim::math::simd::SimdMode;
+use diffsim::math::Vec3;
+use diffsim::mesh::primitives::{box_mesh, cloth_grid, unit_box};
+use std::sync::Mutex;
+
+/// Serialize tests (each sim pins the process-wide kernel mode).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn ground() -> RigidBody {
+    RigidBody::frozen_from_mesh(box_mesh(Vec3::new(20.0, 0.5, 20.0)))
+        .with_position(Vec3::new(0.0, -0.5, 0.0))
+}
+
+/// Ground + falling cube + a draping cloth: rigid-rigid and cloth
+/// dynamics in one scene (the integration_refit mixed scene).
+fn mixed_system(vx: f64) -> System {
+    let mut sys = System::new();
+    sys.add_rigid(ground());
+    sys.add_rigid(
+        RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, 0.8, 0.0))
+            .with_velocity(Vec3::new(vx, 0.0, 0.0)),
+    );
+    let cloth = Cloth::from_grid(
+        cloth_grid(4, 4, 1.0, 1.0).translated(Vec3::new(4.0, 0.4, 0.0)),
+        0.2,
+        500.0,
+        1.0,
+        0.5,
+    );
+    sys.add_cloth(cloth);
+    sys
+}
+
+fn cfg_mode(mode: SimdMode) -> SimConfig {
+    SimConfig { dt: 1.0 / 100.0, simd: Some(mode), ..Default::default() }
+}
+
+fn assert_sys_bits_eq(a: &System, b: &System, what: &str) {
+    for (i, (ra, rb)) in a.rigids.iter().zip(&b.rigids).enumerate() {
+        for k in 0..6 {
+            assert_eq!(ra.q[k].to_bits(), rb.q[k].to_bits(), "{what}: rigid {i} q[{k}]");
+            assert_eq!(ra.qdot[k].to_bits(), rb.qdot[k].to_bits(), "{what}: rigid {i} qdot[{k}]");
+        }
+    }
+    for (c, (ca, cb)) in a.cloths.iter().zip(&b.cloths).enumerate() {
+        for (n, (xa, xb)) in ca.x.iter().zip(&cb.x).enumerate() {
+            assert!(
+                xa.x.to_bits() == xb.x.to_bits()
+                    && xa.y.to_bits() == xb.y.to_bits()
+                    && xa.z.to_bits() == xb.z.to_bits(),
+                "{what}: cloth {c} node {n} x: {xa:?} vs {xb:?}"
+            );
+        }
+        for (n, (va, vb)) in ca.v.iter().zip(&cb.v).enumerate() {
+            assert!(
+                va.x.to_bits() == vb.x.to_bits()
+                    && va.y.to_bits() == vb.y.to_bits()
+                    && va.z.to_bits() == vb.z.to_bits(),
+                "{what}: cloth {c} node {n} v"
+            );
+        }
+    }
+}
+
+#[test]
+fn ordered_mode_matches_scalar_bitwise_on_trajectories() {
+    // The order-preserving lane path: 80 steps of rigid+cloth contact,
+    // coordinates, velocities, and per-step stats all bitwise.
+    let _l = mode_lock();
+    let mut scalar = Simulation::new(mixed_system(0.4), cfg_mode(SimdMode::Scalar));
+    let mut scalar_stats = Vec::new();
+    for _ in 0..80 {
+        scalar.step();
+        scalar_stats.push(scalar.last_stats);
+    }
+    let mut ordered = Simulation::new(mixed_system(0.4), cfg_mode(SimdMode::Ordered));
+    for step in 0..80 {
+        ordered.step();
+        assert_eq!(ordered.last_stats, scalar_stats[step], "StepStats diverged at step {step}");
+    }
+    assert_sys_bits_eq(&ordered.sys, &scalar.sys, "ordered vs scalar after 80 steps");
+    assert!(
+        scalar_stats.iter().any(|s| s.zones > 0),
+        "trajectory never hit contact — the parity proved nothing"
+    );
+}
+
+#[test]
+fn fast_mode_stays_within_documented_tolerance_on_trajectories() {
+    // Fast reassociates reductions: per-kernel ULP noise compounds
+    // through contact events, so the contract on a dissipative scene is
+    // settling to the same rest state within a loose tolerance — plus
+    // finiteness everywhere and real contact activity on both runs.
+    let _l = mode_lock();
+    let run = |mode: SimdMode| {
+        let mut sim = Simulation::new(mixed_system(0.0), cfg_mode(mode));
+        let mut zones = 0usize;
+        for _ in 0..80 {
+            sim.step();
+            zones += sim.last_stats.zones;
+        }
+        (sim, zones)
+    };
+    let (scalar, z_scalar) = run(SimdMode::Scalar);
+    let (fast, z_fast) = run(SimdMode::Fast);
+    assert!(z_scalar > 0 && z_fast > 0, "both runs must exercise contact");
+    let tol = 2e-3;
+    for (i, (rf, rs)) in fast.sys.rigids.iter().zip(&scalar.sys.rigids).enumerate() {
+        for k in 0..6 {
+            assert!(rf.q[k].is_finite(), "rigid {i} q[{k}] not finite under Fast");
+            assert!(
+                (rf.q[k] - rs.q[k]).abs() < tol,
+                "rigid {i} q[{k}]: fast {} vs scalar {}",
+                rf.q[k],
+                rs.q[k]
+            );
+        }
+    }
+    for (c, (cf, cs)) in fast.sys.cloths.iter().zip(&scalar.sys.cloths).enumerate() {
+        for (n, (xf, xs)) in cf.x.iter().zip(&cs.x).enumerate() {
+            assert!(
+                xf.x.is_finite() && xf.y.is_finite() && xf.z.is_finite(),
+                "cloth {c} node {n} not finite under Fast"
+            );
+            assert!(
+                (xf.x - xs.x).abs() < tol
+                    && (xf.y - xs.y).abs() < tol
+                    && (xf.z - xs.z).abs() < tol,
+                "cloth {c} node {n}: fast {xf:?} vs scalar {xs:?}"
+            );
+        }
+    }
+}
+
+/// Taped lockstep rollout under a pinned kernel mode: per-scene losses
+/// and end-to-end gradients w.r.t. initial conditions.
+fn rollout(mode: SimdMode) -> (Vec<f64>, Vec<[f64; 6]>, Vec<[f64; 6]>, Vec<Vec3>) {
+    let steps = 10;
+    let vxs = [0.0, 0.5];
+    let cfg = cfg_mode(mode);
+    let mut batch = SceneBatch::from_scene(&mixed_system(0.0), &cfg, vxs.len(), |i, sys| {
+        sys.rigids[1] = RigidBody::from_mesh(unit_box(), 1.0)
+            .with_position(Vec3::new(0.0, 0.52, 0.0))
+            .with_velocity(Vec3::new(vxs[i], 0.0, 0.0));
+    });
+    let res = batch.rollout_grad_lockstep(
+        steps,
+        |_| (),
+        |_, _i, _s, _sim| {},
+        |_, sim, _| {
+            let mut seed = LossGrad::zeros(sim);
+            seed.rigid_q[1][4] = 1.0; // d(loss)/d(cube y)
+            seed.cloth_x[0][8].x = 1.0;
+            (sim.sys.rigids[1].q[4] + sim.sys.cloths[0].x[8].x, seed)
+        },
+    );
+    let q0: Vec<[f64; 6]> = res.grads.iter().map(|g| g.rigid_q0[1]).collect();
+    let v0: Vec<[f64; 6]> = res.grads.iter().map(|g| g.rigid_v0[1]).collect();
+    let cx0: Vec<Vec3> = res.grads.iter().map(|g| g.cloth_x0[0][8]).collect();
+    (res.losses, q0, v0, cx0)
+}
+
+#[test]
+fn ordered_mode_rollout_gradients_bitwise() {
+    let _l = mode_lock();
+    let (l_s, q_s, v_s, c_s) = rollout(SimdMode::Scalar);
+    let (l_o, q_o, v_o, c_o) = rollout(SimdMode::Ordered);
+    for i in 0..l_s.len() {
+        assert_eq!(l_s[i].to_bits(), l_o[i].to_bits(), "scene {i} loss");
+        for k in 0..6 {
+            assert_eq!(q_s[i][k].to_bits(), q_o[i][k].to_bits(), "scene {i} dL/dq0[{k}]");
+            assert_eq!(v_s[i][k].to_bits(), v_o[i][k].to_bits(), "scene {i} dL/dv0[{k}]");
+        }
+        assert_eq!(c_s[i].x.to_bits(), c_o[i].x.to_bits(), "scene {i} dL/dcloth_x0");
+    }
+}
+
+#[test]
+fn fast_mode_rollout_gradients_within_tolerance() {
+    // Short (10-step) rollout: Fast's reduction noise stays far from
+    // any contact-event flip, so losses and gradients track the oracle
+    // to much better than the trajectory tolerance.
+    let _l = mode_lock();
+    let (l_s, q_s, v_s, c_s) = rollout(SimdMode::Scalar);
+    let (l_f, q_f, v_f, c_f) = rollout(SimdMode::Fast);
+    for i in 0..l_s.len() {
+        assert!(l_f[i].is_finite(), "scene {i} loss not finite under Fast");
+        assert!(
+            (l_s[i] - l_f[i]).abs() <= 1e-6 * (1.0 + l_s[i].abs()),
+            "scene {i} loss: fast {} vs scalar {}",
+            l_f[i],
+            l_s[i]
+        );
+        for k in 0..6 {
+            assert!(
+                (q_s[i][k] - q_f[i][k]).abs() <= 1e-3 * (1.0 + q_s[i][k].abs()),
+                "scene {i} dL/dq0[{k}]: fast {} vs scalar {}",
+                q_f[i][k],
+                q_s[i][k]
+            );
+            assert!(
+                (v_s[i][k] - v_f[i][k]).abs() <= 1e-3 * (1.0 + v_s[i][k].abs()),
+                "scene {i} dL/dv0[{k}]: fast {} vs scalar {}",
+                v_f[i][k],
+                v_s[i][k]
+            );
+        }
+        assert!(
+            (c_s[i].x - c_f[i].x).abs() <= 1e-3 * (1.0 + c_s[i].x.abs()),
+            "scene {i} dL/dcloth_x0: fast {} vs scalar {}",
+            c_f[i].x,
+            c_s[i].x
+        );
+    }
+}
+
+#[test]
+fn config_none_leaves_mode_untouched() {
+    // `simd: None` (the default) must not write the process-global
+    // mode: pin a mode, build+step a default-config sim, observe the
+    // pin still active.
+    let _l = mode_lock();
+    let prev = diffsim::math::simd::mode();
+    diffsim::math::simd::set_mode(SimdMode::Ordered);
+    let mut sim = Simulation::new(
+        mixed_system(0.0),
+        SimConfig { dt: 1.0 / 100.0, ..Default::default() },
+    );
+    sim.step();
+    assert_eq!(diffsim::math::simd::mode(), SimdMode::Ordered);
+    diffsim::math::simd::set_mode(prev);
+}

@@ -1,0 +1,363 @@
+//! SIMD kernels vs the scalar oracle: the bitwise/ULP parity suite.
+//!
+//! Every lane kernel in `math/simd.rs` is checked against its
+//! always-compiled scalar oracle over seeded dimension sweeps that
+//! cover full lane groups, remainder lanes (`n % 4 != 0`), and the
+//! `n = 0/1` edges, plus NaN/∞ propagation:
+//!
+//! * **Elementwise kernels** (axpy, xpby, mul_into, sub_into, Aᵀx
+//!   rows): asserted **bitwise** — each element sees the identical
+//!   mul/add, so any diff is a kernel bug, not rounding.
+//! * **Reduction kernels** (dot, norm, dense/CSR row products): in
+//!   `Fast` mode the lane tree reassociates, so agreement is held to
+//!   the documented bound `|scalar − fast| ≤ 2·n·ε·Σ|pᵢ|`, and on
+//!   well-conditioned (same-sign) data additionally to a small ULP
+//!   count via `simd::ulp_diff`. `Ordered` mode is asserted bitwise.
+//!
+//! Tests that flip the process-global mode serialize on a file-local
+//! mutex and restore the previous mode on drop (the pattern
+//! `integration_refit.rs` uses for the obs enable flag); per-kernel
+//! tests call the explicit `_scalar`/`_fast`/`_lanes` variants and
+//! never touch the global.
+
+use diffsim::math::dense::Mat;
+use diffsim::math::simd::{self, SimdMode};
+use diffsim::math::sparse::Triplets;
+use diffsim::util::quick::quick;
+use std::sync::Mutex;
+
+/// Serialize tests that set the process-wide kernel mode.
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+fn mode_lock() -> std::sync::MutexGuard<'static, ()> {
+    MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// RAII mode switch: restores the previously active mode on drop.
+struct ModeGuard(SimdMode);
+
+impl ModeGuard {
+    fn set(m: SimdMode) -> ModeGuard {
+        let prev = simd::mode();
+        simd::set_mode(m);
+        ModeGuard(prev)
+    }
+}
+
+impl Drop for ModeGuard {
+    fn drop(&mut self) {
+        simd::set_mode(self.0);
+    }
+}
+
+/// The documented fast-reduction bound: 2·n·ε·Σ|aᵢ·bᵢ|.
+fn dot_bound(a: &[f64], b: &[f64]) -> f64 {
+    let sum_abs: f64 = a.iter().zip(b).map(|(x, y)| (x * y).abs()).sum();
+    2.0 * a.len() as f64 * f64::EPSILON * sum_abs
+}
+
+/// Sweep sizes hitting every remainder class plus the 0/1 edges.
+fn sweep_len(g: &mut diffsim::util::quick::Gen) -> usize {
+    *g.pick(&[0, 1, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 31, 33, 64, 67])
+}
+
+#[test]
+fn dot_fast_within_documented_bound() {
+    quick("simd-dot-bound", 200, |g| {
+        let n = sweep_len(g);
+        let a = g.vec_normal(n);
+        let b = g.vec_normal(n);
+        let s = simd::dot_scalar(&a, &b);
+        let f = simd::dot_fast(&a, &b);
+        let bound = dot_bound(&a, &b);
+        assert!((s - f).abs() <= bound, "n={n}: scalar {s} fast {f} bound {bound}");
+    });
+}
+
+#[test]
+fn dot_fast_is_bitwise_below_one_lane() {
+    // n < 4 never enters the lane loop: the remainder fold IS the
+    // scalar loop, so sub-lane sizes must agree bitwise.
+    quick("simd-dot-sublane", 100, |g| {
+        let n = g.usize(0, 3);
+        let a = g.vec_normal(n);
+        let b = g.vec_normal(n);
+        assert_eq!(simd::dot_fast(&a, &b).to_bits(), simd::dot_scalar(&a, &b).to_bits());
+    });
+}
+
+#[test]
+fn dot_fast_ulp_small_on_same_sign_data() {
+    // With all products positive there is no cancellation: the
+    // relative error of either summation order is ≤ n·ε, so the two
+    // disagree by only a handful of ULPs — the `ulp_diff` assert the
+    // issue calls for.
+    quick("simd-dot-ulp", 100, |g| {
+        let n = sweep_len(g).max(1);
+        let a = g.vec_f64(n, 0.1, 2.0);
+        let b = g.vec_f64(n, 0.1, 2.0);
+        let s = simd::dot_scalar(&a, &b);
+        let f = simd::dot_fast(&a, &b);
+        let ulps = simd::ulp_diff(s, f);
+        assert!(ulps <= 4 * n as u64 + 4, "n={n}: {ulps} ulps between {s} and {f}");
+    });
+}
+
+#[test]
+fn csr_row_dot_fast_within_documented_bound() {
+    quick("simd-csr-row", 200, |g| {
+        let n = sweep_len(g);
+        let xlen = n + g.usize(1, 8);
+        let vals = g.vec_normal(n);
+        let x = g.vec_normal(xlen);
+        // Random (possibly repeating) gather pattern.
+        let cols: Vec<u32> = (0..n).map(|_| g.usize(0, xlen - 1) as u32).collect();
+        let s = simd::csr_row_dot_scalar(&vals, &cols, &x);
+        let f = simd::csr_row_dot_fast(&vals, &cols, &x);
+        let gathered: Vec<f64> = cols.iter().map(|&c| x[c as usize]).collect();
+        let bound = dot_bound(&vals, &gathered);
+        assert!((s - f).abs() <= bound, "n={n}: scalar {s} fast {f} bound {bound}");
+    });
+}
+
+#[test]
+fn axpy_lanes_bitwise() {
+    quick("simd-axpy", 200, |g| {
+        let n = sweep_len(g);
+        let alpha = g.f64(-3.0, 3.0);
+        let x = g.vec_normal(n);
+        let y0 = g.vec_normal(n);
+        let mut ys = y0.clone();
+        let mut yl = y0;
+        simd::axpy_scalar(alpha, &x, &mut ys);
+        simd::axpy_lanes(alpha, &x, &mut yl);
+        for i in 0..n {
+            assert_eq!(ys[i].to_bits(), yl[i].to_bits(), "n={n} i={i}");
+        }
+    });
+}
+
+#[test]
+fn xpby_lanes_bitwise() {
+    quick("simd-xpby", 200, |g| {
+        let n = sweep_len(g);
+        let beta = g.f64(-2.0, 2.0);
+        let x = g.vec_normal(n);
+        let y0 = g.vec_normal(n);
+        let mut ys = y0.clone();
+        let mut yl = y0;
+        simd::xpby_scalar(&x, beta, &mut ys);
+        simd::xpby_lanes(&x, beta, &mut yl);
+        for i in 0..n {
+            assert_eq!(ys[i].to_bits(), yl[i].to_bits(), "n={n} i={i}");
+        }
+    });
+}
+
+#[test]
+fn mul_and_sub_into_lanes_bitwise() {
+    quick("simd-mul-sub", 200, |g| {
+        let n = sweep_len(g);
+        let a = g.vec_normal(n);
+        let b = g.vec_normal(n);
+        let (mut os, mut ol) = (vec![0.0; n], vec![0.0; n]);
+        simd::mul_into_scalar(&a, &b, &mut os);
+        simd::mul_into_lanes(&a, &b, &mut ol);
+        for i in 0..n {
+            assert_eq!(os[i].to_bits(), ol[i].to_bits(), "mul n={n} i={i}");
+        }
+        simd::sub_into_scalar(&a, &b, &mut os);
+        simd::sub_into_lanes(&a, &b, &mut ol);
+        for i in 0..n {
+            assert_eq!(os[i].to_bits(), ol[i].to_bits(), "sub n={n} i={i}");
+        }
+    });
+}
+
+#[test]
+fn nan_propagates_through_both_paths() {
+    quick("simd-nan", 50, |g| {
+        let n = g.usize(1, 23);
+        let mut a = g.vec_normal(n);
+        let b = g.vec_normal(n);
+        let poison = g.usize(0, n - 1);
+        a[poison] = f64::NAN;
+        // Reductions: both orders must be poisoned (class compare; NaN
+        // payloads are not contractual).
+        assert!(simd::dot_scalar(&a, &b).is_nan());
+        assert!(simd::dot_fast(&a, &b).is_nan());
+        // Elementwise: NaN lands in exactly the poisoned slot on both
+        // paths, other slots stay bitwise-equal.
+        let y0 = g.vec_normal(n);
+        let mut ys = y0.clone();
+        let mut yl = y0;
+        simd::axpy_scalar(2.0, &a, &mut ys);
+        simd::axpy_lanes(2.0, &a, &mut yl);
+        for i in 0..n {
+            if i == poison {
+                assert!(ys[i].is_nan() && yl[i].is_nan());
+            } else {
+                assert_eq!(ys[i].to_bits(), yl[i].to_bits());
+            }
+        }
+    });
+}
+
+#[test]
+fn infinities_agree_in_class() {
+    quick("simd-inf", 50, |g| {
+        let n = g.usize(1, 23);
+        let mut a = g.vec_f64(n, 0.5, 1.5); // same-sign: no ∞−∞
+        let b = g.vec_f64(n, 0.5, 1.5);
+        a[g.usize(0, n - 1)] = f64::INFINITY;
+        let s = simd::dot_scalar(&a, &b);
+        let f = simd::dot_fast(&a, &b);
+        assert_eq!(s, f64::INFINITY);
+        assert_eq!(f, f64::INFINITY);
+        // Opposing infinities must poison both paths identically (NaN
+        // from ∞ + (−∞), whichever order it is met in).
+        let mut c = a.clone();
+        c[0] = f64::INFINITY;
+        c[n - 1] = f64::NEG_INFINITY;
+        if n > 1 {
+            assert!(simd::dot_scalar(&c, &b).is_nan());
+            assert!(simd::dot_fast(&c, &b).is_nan());
+        }
+    });
+}
+
+#[test]
+fn dense_matvec_modes_agree() {
+    let _l = mode_lock();
+    quick("simd-matvec", 60, |g| {
+        let (m, n) = (g.usize(1, 24), g.usize(1, 24));
+        let a = Mat::from_vec(m, n, g.vec_normal(m * n));
+        let x = g.vec_normal(n);
+        let ys = {
+            let _g = ModeGuard::set(SimdMode::Scalar);
+            a.matvec(&x)
+        };
+        let yo = {
+            let _g = ModeGuard::set(SimdMode::Ordered);
+            a.matvec(&x)
+        };
+        let yf = {
+            let _g = ModeGuard::set(SimdMode::Fast);
+            a.matvec(&x)
+        };
+        for i in 0..m {
+            // Ordered keeps reductions sequential: bitwise.
+            assert_eq!(ys[i].to_bits(), yo[i].to_bits(), "ordered row {i}");
+            let bound = dot_bound(a.row(i), &x);
+            assert!((ys[i] - yf[i]).abs() <= bound, "fast row {i}");
+        }
+        // Aᵀx is elementwise per row: bitwise in every mode.
+        let xt = g.vec_normal(m);
+        let ts = {
+            let _g = ModeGuard::set(SimdMode::Scalar);
+            a.matvec_t(&xt)
+        };
+        let tf = {
+            let _g = ModeGuard::set(SimdMode::Fast);
+            a.matvec_t(&xt)
+        };
+        for j in 0..n {
+            assert_eq!(ts[j].to_bits(), tf[j].to_bits(), "matvec_t col {j}");
+        }
+    });
+}
+
+#[test]
+fn csr_matvec_modes_agree() {
+    let _l = mode_lock();
+    quick("simd-csr-matvec", 60, |g| {
+        let n = g.usize(1, 30);
+        let m = g.usize(1, 30);
+        let mut t = Triplets::new(n, m);
+        for _ in 0..g.usize(0, n * m) {
+            t.push(g.usize(0, n - 1), g.usize(0, m - 1), g.f64(-2.0, 2.0));
+        }
+        let a = t.to_csr();
+        let x = g.vec_normal(m);
+        let ys = {
+            let _g = ModeGuard::set(SimdMode::Scalar);
+            a.matvec(&x)
+        };
+        let yo = {
+            let _g = ModeGuard::set(SimdMode::Ordered);
+            a.matvec(&x)
+        };
+        let yf = {
+            let _g = ModeGuard::set(SimdMode::Fast);
+            a.matvec(&x)
+        };
+        for i in 0..n {
+            assert_eq!(ys[i].to_bits(), yo[i].to_bits(), "ordered row {i}");
+            let lo = a.indptr[i];
+            let hi = a.indptr[i + 1];
+            let gathered: Vec<f64> = a.indices[lo..hi].iter().map(|&c| x[c as usize]).collect();
+            let bound = dot_bound(&a.data[lo..hi], &gathered);
+            assert!((ys[i] - yf[i]).abs() <= bound, "fast row {i}");
+        }
+    });
+}
+
+#[test]
+fn cg_solves_agree_across_modes() {
+    // The mode changes CG's rounding trajectory (different iterates,
+    // possibly different iteration counts) but both runs converge to
+    // the same tolerance — so the *solutions* agree to solver accuracy,
+    // and Ordered is bitwise with Scalar end to end.
+    let _l = mode_lock();
+    quick("simd-cg-modes", 25, |g| {
+        let n = g.usize(2, 18);
+        let b_mat = Mat::from_vec(n, n, g.vec_normal(n * n));
+        let a = b_mat.transpose().matmul(&b_mat).add(&Mat::identity(n).scale(n as f64));
+        let mut t = Triplets::new(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                t.push(i, j, a[(i, j)]);
+            }
+        }
+        let csr = t.to_csr();
+        let rhs = g.vec_normal(n);
+        let solve = |mode: SimdMode| {
+            let _g = ModeGuard::set(mode);
+            let c = diffsim::math::cg::cg_operator(
+                |x, out| out.copy_from_slice(&a.matvec(x)),
+                &rhs,
+                1e-12,
+                20 * n,
+            );
+            let p = diffsim::math::cg::pcg_csr(&csr, &rhs, 1e-12, 100 * n);
+            assert!(c.converged && p.converged, "mode {mode:?} failed to converge");
+            (c.x, p.x)
+        };
+        let (cs, ps) = solve(SimdMode::Scalar);
+        let (co, po) = solve(SimdMode::Ordered);
+        let (cf, pf) = solve(SimdMode::Fast);
+        for i in 0..n {
+            assert_eq!(cs[i].to_bits(), co[i].to_bits(), "cg ordered dof {i}");
+            assert_eq!(ps[i].to_bits(), po[i].to_bits(), "pcg ordered dof {i}");
+            let scale = 1.0 + cs[i].abs();
+            assert!((cs[i] - cf[i]).abs() <= 1e-8 * scale, "cg fast dof {i}");
+            assert!((ps[i] - pf[i]).abs() <= 1e-8 * scale, "pcg fast dof {i}");
+        }
+    });
+}
+
+#[test]
+fn env_parse_and_defaults_are_consistent() {
+    // Pure parsing — no global state. The env override itself is
+    // exercised by the CI matrix (DIFFSIM_SIMD=scalar/fast lanes).
+    assert_eq!(SimdMode::parse("scalar"), Some(SimdMode::Scalar));
+    assert_eq!(SimdMode::parse("fast"), Some(SimdMode::Fast));
+    assert_eq!(SimdMode::parse("ordered"), Some(SimdMode::Ordered));
+    assert_eq!(SimdMode::parse("auto"), Some(simd::default_mode()));
+    assert_eq!(SimdMode::parse("bogus"), None);
+    if simd::LANE_TARGET {
+        assert_eq!(simd::default_mode(), SimdMode::Fast);
+    } else {
+        assert_eq!(simd::default_mode(), SimdMode::Scalar);
+    }
+}
